@@ -1,0 +1,60 @@
+//! GLUE-proxy fine-tuning suite: all eight difficulty-graded tasks under a
+//! chosen optimizer, reporting per-task metric and the average — the
+//! Table 3/4 workload at example scale.
+//!
+//! ```sh
+//! cargo run --release --example glue_finetune -- --optimizer mkor --steps 400
+//! ```
+
+use mkor::cli::Args;
+use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::data::classification::{glue_proxy_suite, Dataset};
+use mkor::model::{Activation, Mlp};
+use mkor::optim::schedule::Constant;
+use mkor::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let opt_name = args.get_or("optimizer", "mkor");
+    let steps = args.usize_or("steps", 400);
+    let dim = args.usize_or("dim", 64);
+    let seed = args.u64_or("seed", 0);
+
+    println!("fine-tuning 8 GLUE-proxy tasks with `{opt_name}` ({steps} steps each)\n");
+    let mut table = mkor::bench_utils::Table::new(&["Task", "Accuracy", "Steps run"]);
+    let mut sum = 0.0;
+    for cfg in glue_proxy_suite(dim, seed) {
+        let name = cfg.name.clone();
+        let ds = Dataset::generate(cfg);
+        let mut rng = Rng::new(seed ^ 77);
+        let model = Mlp::new(&[dim, 64, ds.cfg.classes], Activation::Relu, &mut rng);
+        let shapes = model.shapes();
+        let opt = mkor::optim::by_name(opt_name, &shapes).expect("optimizer");
+        let mut trainer = Trainer::new(
+            model,
+            opt,
+            Box::new(Constant(args.f32_or("lr", 0.1))),
+            TrainerConfig { workers: 2, run_name: name.clone(), ..Default::default() },
+        );
+        let mut done = 0;
+        'outer: for epoch in 0..10_000 {
+            for b in ds.epoch_batches(64, epoch) {
+                if trainer.step(&b.x, &Target::Labels(b.labels.clone())).is_none() {
+                    break 'outer;
+                }
+                done += 1;
+                if done >= steps {
+                    break 'outer;
+                }
+            }
+        }
+        let test = ds.test_batch();
+        let (_, acc) = trainer.evaluate(&test.x, &Target::Labels(test.labels.clone()));
+        let acc = acc.unwrap_or(0.0);
+        sum += acc;
+        table.row(&[name, format!("{acc:.3}"), done.to_string()]);
+    }
+    table.row(&["AVERAGE".into(), format!("{:.4}", sum / 8.0), String::new()]);
+    println!("{}", table.render());
+    println!("compare averages across optimizers — the Table 3/4 bench sweeps them all.");
+}

@@ -1,0 +1,22 @@
+use mkor::bench_utils::{bench_fn, fmt_secs};
+use mkor::linalg::{ops, Matrix};
+use mkor::util::Rng;
+fn main() {
+    let mut rng = Rng::new(1);
+    for d in [256usize, 512, 1024] {
+        let a = Matrix::randn(d, d, 1.0, &mut rng);
+        let b = Matrix::randn(d, d, 1.0, &mut rng);
+        let mut c = Matrix::zeros(d, d);
+        let r = bench_fn("mm", 0.4, || ops::matmul_into(&a, &b, &mut c));
+        let gflops = 2.0 * (d as f64).powi(3) / r.median_secs / 1e9;
+        println!("matmul d={d}: {} ({gflops:.2} GF/s)", fmt_secs(r.median_secs));
+        // SM update (the MKOR factor hot path)
+        let mut inv = Matrix::rand_spd(d, 0.1, &mut rng);
+        let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        let mut scratch = vec![0.0f32; d];
+        let r = bench_fn("sm", 0.3, || mkor::optim::Mkor::sm_update(&mut inv, &v, 0.99, &mut scratch));
+        let gb = (d as f64 * d as f64 * 4.0 * 2.0) / r.median_secs / 1e9; // read+write J
+        println!("sm_update d={d}: {} ({gb:.2} GB/s effective)", fmt_secs(r.median_secs));
+        inv.blend_identity(0.5); // keep bounded
+    }
+}

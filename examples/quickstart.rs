@@ -1,0 +1,80 @@
+//! Quickstart: train the same classifier with MKOR and with SGD-momentum
+//! and compare steps-to-target — the paper's core claim in 60 seconds,
+//! no artifacts required.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::data::classification::{Dataset, TaskConfig};
+use mkor::model::{Activation, Mlp};
+use mkor::optim::schedule::Constant;
+use mkor::util::Rng;
+
+fn run(opt_name: &str, ds: &Dataset) -> (Option<usize>, f64, f64) {
+    let mut rng = Rng::new(42);
+    let model = Mlp::new(&[ds.cfg.dim, 64, 32, ds.cfg.classes], Activation::Relu, &mut rng);
+    let shapes = model.shapes();
+    let opt = mkor::optim::by_name(opt_name, &shapes).expect("optimizer");
+    let mut trainer = Trainer::new(
+        model,
+        opt,
+        Box::new(Constant(0.02)),
+        TrainerConfig {
+            workers: 4,
+            target_metric: Some(0.86),
+            run_name: format!("quickstart-{opt_name}"),
+            ..Default::default()
+        },
+    );
+    let test = ds.test_batch();
+    let t0 = std::time::Instant::now();
+    let mut steps = 0usize;
+    'outer: for epoch in 0..60 {
+        for b in ds.epoch_batches(64, epoch) {
+            if trainer.step(&b.x, &Target::Labels(b.labels.clone())).is_none() {
+                break 'outer;
+            }
+            steps += 1;
+            if steps % 8 == 0 {
+                trainer.evaluate(&test.x, &Target::Labels(test.labels.clone()));
+                if trainer.converged() {
+                    break 'outer;
+                }
+            }
+        }
+    }
+    let (_, acc) = trainer.evaluate(&test.x, &Target::Labels(test.labels.clone()));
+    let rec = trainer.finish();
+    (rec.converged_at, acc.unwrap_or(0.0), t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let mut cfg = TaskConfig::new("quickstart", 64, 4);
+    cfg.train = 4096;
+    cfg.test = 1024;
+    cfg.separation = 1.5;
+    cfg.intrinsic_rank = 12; // low-rank inputs: MKOR's favourable regime
+    let ds = Dataset::generate(cfg);
+
+    println!("task: 4-class Gaussian mixture, d=64, intrinsic rank 12, target 86% acc\n");
+    let mut table = mkor::bench_utils::Table::new(&[
+        "Optimizer",
+        "Steps to 86%",
+        "Final acc",
+        "Wall time",
+    ]);
+    for name in ["sgd", "mkor", "mkor-h"] {
+        let (steps, acc, secs) = run(name, &ds);
+        table.row(&[
+            name.to_string(),
+            steps.map_or("not reached".into(), |s| s.to_string()),
+            format!("{:.3}", acc),
+            mkor::bench_utils::fmt_secs(secs),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("MKOR should reach the target in fewer steps than SGD —");
+    println!("the steps-to-target gap is what Tables 2/3 of the paper scale up.");
+}

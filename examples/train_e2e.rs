@@ -1,0 +1,97 @@
+//! End-to-end driver: train the transformer MLM through the full
+//! three-layer stack — Rust coordinator → PJRT → AOT HLO containing the
+//! JAX model and the Pallas MKOR kernels — on the synthetic Markov–Zipf
+//! corpus, and log the loss curve.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example train_e2e -- --preset small --steps 200
+//! ```
+//!
+//! The recorded run (EXPERIMENTS.md §E2E) uses `--preset small --steps 300
+//! --workers 2`; `--preset base` is the ~100M-parameter configuration.
+
+use mkor::cli::Args;
+use mkor::data::text::{MlmBatchGen, TextConfig};
+use mkor::runtime::xla_trainer::{init_params, XlaTrainer, XlaTrainerConfig};
+use mkor::runtime::ArtifactBundle;
+use mkor::util::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let preset = args.get_or("preset", "small");
+    let steps = args.usize_or("steps", 200);
+    let workers = args.usize_or("workers", 2);
+    let seed = args.u64_or("seed", 0);
+    let out = args.get_or("out", "results/e2e.json").to_string();
+
+    let bundle = ArtifactBundle::load(Path::new(args.get_or("artifacts", "artifacts")), preset)?;
+    println!(
+        "preset `{}` on {}: {:.1}M params, {} transformer layers, {} preconditioned matrices",
+        bundle.meta.preset,
+        bundle.platform(),
+        bundle.meta.params as f64 / 1e6,
+        bundle.meta.n_layers,
+        bundle.meta.factor_dims.len(),
+    );
+
+    let mut rng = Rng::new(seed);
+    let params = init_params(&bundle.meta, &mut rng);
+    let cfg = XlaTrainerConfig {
+        workers,
+        lr: args.f32_or("lr", 0.05),
+        gamma: args.f32_or("gamma", 0.99),
+        inv_freq: args.usize_or("inv-freq", 10),
+        half_sync: true,
+        hybrid_switch_ratio: if args.flag("hybrid") { Some(0.1) } else { None },
+        ..Default::default()
+    };
+    let vocab = bundle.meta.vocab;
+    let seq_len = bundle.meta.seq_len;
+    let per_worker = bundle.meta.batch;
+    let mut trainer = XlaTrainer::new(bundle, params, cfg);
+
+    let mut gen = MlmBatchGen::new(
+        TextConfig { vocab, seed, ..Default::default() },
+        seq_len,
+        0.15,
+        seed ^ 0xE2E,
+    );
+    let eval_batch = gen.next_tokens(per_worker);
+
+    let t0 = std::time::Instant::now();
+    let mut first = None;
+    for s in 0..steps {
+        let batch = gen.next_tokens(per_worker * workers);
+        let loss = trainer.step(&batch)?;
+        first.get_or_insert(loss);
+        if s % 10 == 0 || s + 1 == steps {
+            println!("step {s:>5}  train loss {loss:.5}");
+        }
+        if (s + 1) % 50 == 0 {
+            let el = trainer.evaluate(&eval_batch)?;
+            println!("         eval  loss {el:.5}");
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let rec = &trainer.record;
+    println!(
+        "\n{} steps in {} ({} /step); loss {:.4} -> {:.4}; \
+         grad comm/step {}, rank-1 sync total {}",
+        steps,
+        mkor::bench_utils::fmt_secs(secs),
+        mkor::bench_utils::fmt_secs(secs / steps.max(1) as f64),
+        first.unwrap_or(f64::NAN),
+        rec.final_loss(),
+        mkor::bench_utils::fmt_bytes(
+            rec.steps.last().map(|r| r.grad_comm_bytes as f64).unwrap_or(0.0)
+        ),
+        mkor::bench_utils::fmt_bytes(
+            rec.steps.iter().map(|r| r.sync_comm_bytes as f64).sum()
+        ),
+    );
+    trainer.record.save_json(Path::new(&out))?;
+    println!("loss curve written to {out}");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+"""AOT lowering: JAX → HLO text artifacts + meta.json.
+
+Usage (from python/): ``python -m compile.aot --out ../artifacts [--presets tiny,small]``
+
+HLO *text* is the interchange format, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import PRESETS, Preset, factor_dims, num_params, param_specs
+from .model import make_eval_step, make_mkor_step, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_preset(p: Preset, out_dir: str) -> dict:
+    """Lower train/mkor/eval steps for one preset; returns meta dict."""
+    specs = param_specs(p)
+    fdims = factor_dims(p)
+    os.makedirs(out_dir, exist_ok=True)
+
+    param_args = [_f32(s.shape) for s in specs]
+    batch_args = [
+        _i32((p.batch, p.seq_len)),
+        _i32((p.batch, p.seq_len)),
+        _f32((p.batch, p.seq_len)),
+    ]
+
+    def write(name, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name}: {len(text) / 1e6:.1f} MB HLO text")
+
+    write("train_step", make_train_step(p), param_args + batch_args)
+
+    grad_args = [_f32(s.shape) for s in specs]
+    linv_args = [_f32((dout, dout)) for (_, dout) in fdims]
+    rinv_args = [_f32((din, din)) for (din, _) in fdims]
+    a_args = [_f32((din,)) for (din, _) in fdims]
+    g_args = [_f32((dout,)) for (_, dout) in fdims]
+    scalars = [_f32(()), _f32(())]  # gamma, flag
+    write(
+        "mkor_step",
+        make_mkor_step(p),
+        grad_args + linv_args + rinv_args + a_args + g_args + scalars,
+    )
+
+    write("eval_step", make_eval_step(p), param_args + batch_args)
+
+    meta = {
+        "preset": p.name,
+        "vocab": p.vocab,
+        "d_model": p.d_model,
+        "n_layers": p.n_layers,
+        "n_heads": p.n_heads,
+        "d_ff": p.d_ff,
+        "seq_len": p.seq_len,
+        "batch": p.batch,
+        "params": num_params(p),
+        "factor_dims": [list(d) for d in fdims],
+        "param_shapes": [list(s.shape) for s in specs],
+        "param_names": [s.name for s in specs],
+    }
+    with open(os.path.join(out_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=2)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small")
+    args = ap.parse_args()
+    for name in args.presets.split(","):
+        name = name.strip()
+        if name not in PRESETS:
+            raise SystemExit(f"unknown preset `{name}` (have {sorted(PRESETS)})")
+        p = PRESETS[name]
+        print(f"lowering preset `{name}` ({num_params(p) / 1e6:.1f}M params)")
+        lower_preset(p, os.path.join(args.out, name))
+
+
+if __name__ == "__main__":
+    main()

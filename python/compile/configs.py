@@ -1,0 +1,91 @@
+"""Model presets and the parameter-layout contract shared with Rust.
+
+This module is the single source of truth for the transformer architecture:
+``aot.py`` mirrors it into ``artifacts/<preset>/meta.json``, which is what
+the Rust runtime (``rust/src/runtime/artifact.rs``) reads. Field names and
+orderings here are load-bearing — change them and the Rust side must change
+too.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class Preset:
+    """One transformer configuration."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int  # per-worker batch the artifacts are lowered for
+
+
+PRESETS = {
+    # CI-speed smoke config (~1.1M params).
+    "tiny": Preset("tiny", vocab=1024, d_model=128, n_layers=2, n_heads=4,
+                   d_ff=512, seq_len=64, batch=8),
+    # Default end-to-end config (~13M params).
+    "small": Preset("small", vocab=4096, d_model=256, n_layers=4, n_heads=8,
+                    d_ff=1024, seq_len=128, batch=8),
+    # The ~100M-parameter configuration (BERT-Base-scale).
+    "base": Preset("base", vocab=8192, d_model=768, n_layers=12, n_heads=12,
+                   d_ff=3072, seq_len=128, batch=4),
+}
+
+
+@dataclass
+class ParamSpec:
+    """One learnable tensor."""
+
+    name: str
+    shape: Tuple[int, ...]
+    # Preconditioned by MKOR factors (the x @ W matmul weights).
+    precond: bool = False
+
+
+def param_specs(p: Preset) -> List[ParamSpec]:
+    """The flat parameter list, in artifact argument order.
+
+    The MLM decoder is weight-tied to the embedding. LayerNorm scales are
+    stored as deltas (applied as ``1 + s``) so zero-init is the identity —
+    this lets the Rust side initialize every 1-D tensor to zero.
+    """
+    specs: List[ParamSpec] = [
+        ParamSpec("embed", (p.vocab, p.d_model)),
+        ParamSpec("pos", (p.seq_len, p.d_model)),
+    ]
+    for l in range(p.n_layers):
+        for nm in ("wq", "wk", "wv", "wo"):
+            specs.append(ParamSpec(f"l{l}.{nm}", (p.d_model, p.d_model), precond=True))
+        specs.append(ParamSpec(f"l{l}.w1", (p.d_model, p.d_ff), precond=True))
+        specs.append(ParamSpec(f"l{l}.w2", (p.d_ff, p.d_model), precond=True))
+        for nm in ("ln1_s", "ln1_b", "ln2_s", "ln2_b"):
+            specs.append(ParamSpec(f"l{l}.{nm}", (p.d_model,)))
+    specs.append(ParamSpec("lnf_s", (p.d_model,)))
+    specs.append(ParamSpec("lnf_b", (p.d_model,)))
+    return specs
+
+
+def factor_dims(p: Preset) -> List[Tuple[int, int]]:
+    """(d_in, d_out) of each preconditioned matrix, in spec order."""
+    return [s.shape for s in param_specs(p) if s.precond]  # type: ignore[return-value]
+
+
+def precond_indices(p: Preset) -> List[int]:
+    """Indices into the param list of the preconditioned matrices."""
+    return [i for i, s in enumerate(param_specs(p)) if s.precond]
+
+
+def num_params(p: Preset) -> int:
+    total = 0
+    for s in param_specs(p):
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

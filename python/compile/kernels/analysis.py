@@ -1,0 +1,96 @@
+"""L1 performance analysis: VMEM footprint and MXU-utilization estimates.
+
+interpret=True gives CPU-numpy wallclock, which is *not* a TPU proxy
+(DESIGN.md §7) — so kernel performance is assessed structurally, from the
+BlockSpecs: how much VMEM does each grid step hold, how many HBM passes
+over the big operand does the schedule make, and what fraction of the MXU's
+128×128 systolic tiles do the chosen block shapes fill.
+
+Run: ``python -m compile.kernels.analysis`` (from python/), or via pytest.
+"""
+
+from dataclasses import dataclass
+
+from ..configs import PRESETS, factor_dims
+from . import precond, sm_update
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM on current TPUs
+MXU = 128
+
+
+@dataclass
+class KernelReport:
+    name: str
+    vmem_per_step: int
+    hbm_reads_of_J: float  # passes over the d×d operand
+    hbm_writes_of_J: float
+    mxu_tile_fill: float  # fraction of the 128×128 tile the blocks fill
+
+    def fits_vmem(self) -> bool:
+        return self.vmem_per_step <= VMEM_BYTES
+
+
+def sm_update_report(d: int) -> KernelReport:
+    """Eq. 5/6 through matvec + rank1_blend (sm_update.py).
+
+    Per grid step the matvec holds a BLOCK×d row tile + the d-vector; the
+    blend holds the same tile plus u. Whole-update HBM traffic on J: one
+    read (matvec) + one read + one write (blend).
+    """
+    blk = sm_update.BLOCK
+    vmem = blk * d * 4 + d * 4 + blk * 4  # J tile + v + u tile
+    # matvec is a GEVM — it cannot fill the MXU's second dimension, and
+    # the rank-1 blend is pure VPU work, so MXU fill is ~1/128: this kernel
+    # is bandwidth-bound by design (O(d^2) data, O(d^2) flops).
+    fill = min(blk, MXU) / MXU * (1.0 / MXU)
+    return KernelReport(
+        name=f"sm_update d={d}",
+        vmem_per_step=vmem,
+        hbm_reads_of_J=2.0,
+        hbm_writes_of_J=1.0,
+        mxu_tile_fill=fill,
+    )
+
+
+def matmul_report(m: int, k: int, n: int) -> KernelReport:
+    """The tiled preconditioning matmul (precond.py)."""
+    bm, bn, bk = precond.BM, precond.BN, precond.BK
+    vmem = (bm * bk + bk * bn + bm * bn) * 4
+    # Each A tile is read n/bn times, each B tile m/bm times; the output
+    # accumulates in VMEM across the k axis (single write).
+    reads = (n + bn - 1) // bn
+    fill = (min(bm, MXU) / MXU) * (min(bn, MXU) / MXU)
+    return KernelReport(
+        name=f"matmul {m}x{k}x{n}",
+        vmem_per_step=vmem,
+        hbm_reads_of_J=float(reads),
+        hbm_writes_of_J=1.0,
+        mxu_tile_fill=fill,
+    )
+
+
+def preset_report(name: str):
+    p = PRESETS[name]
+    out = []
+    dims = sorted({d for pair in factor_dims(p) for d in pair})
+    for d in dims:
+        out.append(sm_update_report(d))
+    for (din, dout) in sorted(set(factor_dims(p))):
+        out.append(matmul_report(din, din, dout))  # R⁻¹ @ grad
+        out.append(matmul_report(din, dout, dout))  # (.) @ L⁻¹
+    return out
+
+
+def main():
+    for name in PRESETS:
+        print(f"== preset {name} ==")
+        for r in preset_report(name):
+            print(
+                f"  {r.name:26s} vmem/step {r.vmem_per_step/1024:8.1f} KiB "
+                f"(fits: {r.fits_vmem()}), J passes r/w {r.hbm_reads_of_J:.0f}/"
+                f"{r.hbm_writes_of_J:.0f}, MXU tile fill {r.mxu_tile_fill:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: tiled matmul for the preconditioning step.
+
+ΔW = R⁻¹ · ∇W · L⁻¹ is two dense matmuls (Equation 2); on TPU they map to
+the 128×128 MXU systolic array, so the kernel tiles M/N/K at 128 and
+accumulates over the K grid axis in a VMEM-resident output block — the
+BlockSpec below is the HBM↔VMEM schedule a CUDA implementation expresses
+with threadblocks (DESIGN.md §7). The norm rescale (line 10) is two scalar
+reductions; XLA fuses them with the surrounding graph, so they are left at
+the jnp level.
+
+Used inside the ``mkor_step`` artifact and also for the transformer's
+dense layers in ``model.py`` so the lowered HLO genuinely contains the L1
+kernels on the model's hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tiles.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """Grid (M/BM, N/BN, K/BK); K is the innermost (sequential) axis, so the
+    output tile stays resident while partial products accumulate into it."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ b_ref[...]
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _matmul_impl(a, b):
+    """C = A @ B via the tiled Pallas kernel (arbitrary shapes, padded)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul shape mismatch {a.shape} @ {b.shape}"
+    ap = _pad_to(_pad_to(a, BM, 0), BK, 1)
+    bp = _pad_to(_pad_to(b, BK, 0), BN, 1)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // BM, np_ // BN, kp // BK)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a, b):
+    """Differentiable Pallas matmul. The K-accumulating grid kernel has no
+    JVP rule, so the VJP is supplied explicitly — and is itself two Pallas
+    matmuls (dA = dC·Bᵀ, dB = Aᵀ·dC), keeping the L1 kernel on the model's
+    backward path too."""
+    return _matmul_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, dc):
+    a, b = res
+    da = _matmul_impl(dc, b.T)
+    db = _matmul_impl(a.T, dc)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def precond(rinv, grad, linv):
+    """ΔW = R⁻¹ ∇W L⁻¹ (two MXU-tiled matmuls)."""
+    return matmul(matmul(rinv, grad), linv)
+
+
+def precond_rescaled(rinv, grad, linv, eps=1e-30):
+    """Preconditioning + the line-10 norm rescale."""
+    delta = precond(rinv, grad, linv)
+    gn = jnp.linalg.norm(grad)
+    dn = jnp.linalg.norm(delta)
+    scale = jnp.where(dn > eps, gn / jnp.maximum(dn, eps), 1.0)
+    return delta * scale

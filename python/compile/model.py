@@ -1,0 +1,183 @@
+"""L2: the transformer masked-LM and the fused MKOR optimizer graph.
+
+Everything here is build-time Python: ``aot.py`` lowers the three jitted
+entry points to HLO text once, and the Rust coordinator executes them via
+PJRT forever after.
+
+Entry points (argument/result orders are the contract with
+``rust/src/runtime/xla_trainer.rs`` — keep in sync):
+
+* ``train_step(*params, tokens, targets, mask)``
+    → ``(loss, *grads, *a_means, *g_means)``
+  Forward + backward of the MLM, plus the per-matrix rank-1 statistics of
+  Algorithm 1 lines 2–3: ``a_mean`` is the batch·seq mean of the matmul
+  input, ``g_mean`` the mean of ∂L/∂(matmul output) (captured with the
+  zero-perturbation trick — grads w.r.t. zero offsets added to each
+  pre-activation).
+
+* ``mkor_step(*grads, *linvs, *rinvs, *a_means, *g_means, gamma, flag)``
+    → ``(*deltas, *new_linvs, *new_rinvs)``
+  Lines 5–10 of Algorithm 1 for every preconditioned matrix: the Pallas
+  SM factor update (gated by ``flag``), Pallas-tiled preconditioning and
+  the norm rescale. Non-preconditioned parameters pass through (line 12).
+
+* ``eval_step(*params, tokens, targets, mask)`` → ``(loss,)``
+
+The dense layers of the transformer itself call the Pallas matmul, so the
+L1 kernels genuinely sit on the lowered hot path.
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import Preset, param_specs
+from .kernels import precond as kprecond
+from .kernels import sm_update as ksm
+
+
+def _layer_norm(x, scale_delta, bias, eps=1e-5):
+    """LayerNorm with the scale stored as a delta (applied as 1+s)."""
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * (1.0 + scale_delta) + bias
+
+
+def _dense(x, w, z):
+    """x @ w through the Pallas matmul, plus the zero-perturbation z used
+    to capture ∂L/∂(output). x: (N, d_in), w: (d_in, d_out), z: (N, d_out)."""
+    return kprecond.matmul(x, w) + z
+
+
+def forward_loss(p: Preset, params: Sequence[jax.Array], zs: Sequence[jax.Array],
+                 tokens, targets, mask):
+    """MLM loss. Returns (loss, a_inputs) where a_inputs[i] is the input to
+    preconditioned matmul i (needed for the rank-1 activation statistics)."""
+    specs = param_specs(p)
+    by_name = {s.name: params[i] for i, s in enumerate(specs)}
+    b, s = tokens.shape
+    n = b * s
+    d = p.d_model
+    h = p.n_heads
+    dh = d // h
+
+    a_inputs: List[jax.Array] = []
+    zi = iter(zs)
+
+    x = by_name["embed"][tokens] * jnp.sqrt(jnp.asarray(d, jnp.float32))
+    x = x + by_name["pos"][None, :, :]
+
+    def cap_dense(x2d, wname):
+        a_inputs.append(x2d)
+        return _dense(x2d, by_name[wname], next(zi))
+
+    for l in range(p.n_layers):
+        # --- attention ---------------------------------------------------
+        xn = _layer_norm(x, by_name[f"l{l}.ln1_s"], by_name[f"l{l}.ln1_b"])
+        x2 = xn.reshape(n, d)
+        q = cap_dense(x2, f"l{l}.wq").reshape(b, s, h, dh)
+        k = cap_dense(x2, f"l{l}.wk").reshape(b, s, h, dh)
+        v = cap_dense(x2, f"l{l}.wv").reshape(b, s, h, dh)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(
+            jnp.asarray(dh, jnp.float32)
+        )
+        att = jax.nn.softmax(att, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(n, d)
+        x = x + cap_dense(ctx, f"l{l}.wo").reshape(b, s, d)
+        # --- mlp ---------------------------------------------------------
+        xn = _layer_norm(x, by_name[f"l{l}.ln2_s"], by_name[f"l{l}.ln2_b"])
+        hdn = cap_dense(xn.reshape(n, d), f"l{l}.w1")
+        hdn = jax.nn.gelu(hdn)
+        x = x + cap_dense(hdn, f"l{l}.w2").reshape(b, s, d)
+
+    x = _layer_norm(x, by_name["lnf_s"], by_name["lnf_b"])
+    # Tied decoder.
+    logits = x.reshape(n, d) @ by_name["embed"].T  # (n, vocab)
+
+    tgt = targets.reshape(n)
+    m = mask.reshape(n)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[:, None], axis=-1)[:, 0]
+    loss = jnp.sum((logz - gold) * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss, a_inputs
+
+
+def _zero_perturbations(p: Preset):
+    """Zero arrays shaped like each preconditioned matmul's output."""
+    n = p.batch * p.seq_len
+    out = []
+    for _ in range(p.n_layers):
+        for dout in (p.d_model,) * 4 + (p.d_ff, p.d_model):
+            out.append(jnp.zeros((n, dout), jnp.float32))
+    return out
+
+
+def make_train_step(p: Preset):
+    """Build the jittable train_step for a preset."""
+
+    def train_step(*args):
+        specs = param_specs(p)
+        np_ = len(specs)
+        params = args[:np_]
+        tokens, targets, mask = args[np_], args[np_ + 1], args[np_ + 2]
+        zs = _zero_perturbations(p)
+
+        def loss_fn(params, zs):
+            loss, a_inputs = forward_loss(p, params, zs, tokens, targets, mask)
+            a_means = [a.mean(axis=0) for a in a_inputs]
+            return loss, a_means
+
+        (loss, a_means), (gparams, gzs) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1), has_aux=True
+        )(params, zs)
+        g_means = [gz.mean(axis=0) for gz in gzs]
+        return (loss, *gparams, *a_means, *g_means)
+
+    return train_step
+
+
+def make_eval_step(p: Preset):
+    def eval_step(*args):
+        specs = param_specs(p)
+        np_ = len(specs)
+        params = args[:np_]
+        tokens, targets, mask = args[np_], args[np_ + 1], args[np_ + 2]
+        zs = _zero_perturbations(p)
+        loss, _ = forward_loss(p, params, zs, tokens, targets, mask)
+        return (loss,)
+
+    return eval_step
+
+
+def make_mkor_step(p: Preset):
+    """Build the fused MKOR optimizer graph for a preset."""
+    specs = param_specs(p)
+    np_ = len(specs)
+    pidx = [i for i, s in enumerate(specs) if s.precond]
+    nm = len(pidx)
+
+    def mkor_step(*args):
+        grads = list(args[:np_])
+        linvs = list(args[np_:np_ + nm])
+        rinvs = list(args[np_ + nm:np_ + 2 * nm])
+        a_means = list(args[np_ + 2 * nm:np_ + 3 * nm])
+        g_means = list(args[np_ + 3 * nm:np_ + 4 * nm])
+        gamma = args[np_ + 4 * nm]
+        flag = args[np_ + 4 * nm + 1]
+
+        deltas = list(grads)  # line 12 default for first-order params
+        new_linvs, new_rinvs = [], []
+        for j, i in enumerate(pidx):
+            # Lines 7–8 (Pallas SM kernels), gated on the factor-step flag.
+            lu = ksm.sm_update(linvs[j], g_means[j], gamma)
+            ru = ksm.sm_update(rinvs[j], a_means[j], gamma)
+            linv = jnp.where(flag > 0.5, lu, linvs[j])
+            rinv = jnp.where(flag > 0.5, ru, rinvs[j])
+            new_linvs.append(linv)
+            new_rinvs.append(rinv)
+            # Lines 9–10 (Pallas precondition + rescale).
+            deltas[i] = kprecond.precond_rescaled(rinv, grads[i], linv)
+        return (*deltas, *new_linvs, *new_rinvs)
+
+    return mkor_step

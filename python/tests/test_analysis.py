@@ -1,0 +1,22 @@
+"""Kernel BlockSpec analysis sanity checks (the L1 perf deliverable)."""
+
+from compile.kernels.analysis import matmul_report, preset_report, sm_update_report
+
+
+def test_sm_update_fits_vmem_up_to_4k():
+    for d in (128, 1024, 3072, 4096):
+        r = sm_update_report(d)
+        assert r.fits_vmem(), f"d={d}: {r.vmem_per_step}"
+        assert r.hbm_reads_of_J == 2.0 and r.hbm_writes_of_J == 1.0
+
+
+def test_matmul_tiles_fill_mxu():
+    r = matmul_report(768, 768, 3072)
+    assert r.mxu_tile_fill == 1.0
+    assert r.fits_vmem()
+
+
+def test_all_presets_report():
+    for name in ("tiny", "small", "base"):
+        rs = preset_report(name)
+        assert rs and all(r.fits_vmem() for r in rs)

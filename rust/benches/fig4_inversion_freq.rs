@@ -1,0 +1,64 @@
+//! Figure 4 — inversion-frequency sensitivity.
+//!
+//! (a) average iteration cost vs factor-update period f for MKOR vs KAISA —
+//!     measured on the autoencoder and modeled at BERT scale;
+//! (b) convergence (final loss after a fixed budget) vs f — fresher factors
+//!     should help, and only MKOR can afford f=1.
+
+use mkor::bench_utils::{fmt_secs, Table};
+use mkor::collective::ClusterModel;
+use mkor::costmodel::complexity::OptimizerKind;
+use mkor::costmodel::timing::{amortized_step_time, DeviceModel};
+use mkor::experiments::convergence::{run_convergence, RunOpts, TaskKind};
+use mkor::model::specs;
+use std::path::Path;
+
+fn main() {
+    println!("=== Figure 4: inversion-frequency sensitivity ===\n");
+    let fs = [1usize, 5, 10, 50, 100];
+    let steps = 200usize;
+
+    let mut t = Table::new(&[
+        "f",
+        "MKOR s/step (measured)",
+        "KAISA s/step (measured)",
+        "MKOR s/step (BERT model)",
+        "KAISA s/step (BERT model)",
+        "MKOR final loss",
+        "KAISA final loss",
+    ]);
+    let spec = specs::bert_large();
+    let dev = DeviceModel::a100();
+    let cl = ClusterModel::polaris_a100();
+    for f in fs {
+        let opts = RunOpts {
+            lr: 0.05,
+            steps,
+            inv_freq: Some(f),
+            eval_every: 0,
+            hidden: vec![128, 32, 128],
+            seed: 13,
+            ..Default::default()
+        };
+        let rm = run_convergence(&TaskKind::Autoencoder, "mkor", &opts);
+        let rk = run_convergence(&TaskKind::Autoencoder, "kfac", &opts);
+        let mm = amortized_step_time(OptimizerKind::Mkor, &spec, 8, 64, &dev, &cl, f);
+        let mk = amortized_step_time(OptimizerKind::Kfac, &spec, 8, 64, &dev, &cl, f);
+        t.row(&[
+            f.to_string(),
+            fmt_secs(rm.step_secs),
+            fmt_secs(rk.step_secs),
+            fmt_secs(mm.total()),
+            fmt_secs(mk.total()),
+            format!("{:.5}", rm.final_loss()),
+            format!("{:.5}", rk.final_loss()),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = t.save_csv(Path::new("results/fig4_inversion_freq.csv"));
+    println!(
+        "shape to check (paper Fig. 4): KAISA's average step time falls\n\
+         steeply with f while MKOR's is nearly flat (a); smaller f gives\n\
+         equal-or-lower loss in the same budget (b)."
+    );
+}

@@ -1,0 +1,83 @@
+//! Figures 5 & 10 — rank-1 approximation error of the activation and
+//! input-gradient covariance matrices.
+//!
+//! Collects covariances during proxy training, measures (i) the optimal
+//! rank-1 error (Eckart–Young via power iteration) and (ii) MKOR's
+//! mean-vector rank-1 error, prints the error distributions (Fig. 5) and
+//! the error-vs-iteration trend (Fig. 10).
+
+use mkor::bench_utils::Table;
+use mkor::experiments::spectra::collect_spectra;
+use mkor::util::stats::Histogram;
+use std::path::Path;
+
+fn main() {
+    println!("=== Figures 5/10: rank-1 covariance approximation error ===\n");
+    let samples = collect_spectra(61, 10, &[128, 64], 17);
+
+    // Figure 5: error distributions per side.
+    for side in ["a", "g"] {
+        let mut h_opt = Histogram::new(0.0, 1.0, 10);
+        let mut h_mean = Histogram::new(0.0, 1.0, 10);
+        for s in samples.iter().filter(|s| s.side == side) {
+            h_opt.add(s.optimal_rank1_err);
+            h_mean.add(s.mean_rank1_err.min(0.9999));
+        }
+        let label = if side == "a" { "activations (right factor)" } else { "input gradients (left factor)" };
+        println!("--- {label}: optimal rank-1 relative-error distribution ---");
+        print!("{}", h_opt.ascii(40));
+        println!("--- {label}: MKOR mean-vector rank-1 error distribution ---");
+        print!("{}", h_mean.ascii(40));
+        println!();
+    }
+
+    // Figure 10: mean error vs iteration.
+    let mut t = Table::new(&[
+        "step",
+        "mean optimal rank-1 err",
+        "mean MKOR rank-1 err",
+        "mean cond(C)",
+    ]);
+    let steps: Vec<usize> = {
+        let mut v: Vec<usize> = samples.iter().map(|s| s.step).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    };
+    for step in steps {
+        let at: Vec<_> = samples.iter().filter(|s| s.step == step).collect();
+        let n = at.len() as f64;
+        let opt = at.iter().map(|s| s.optimal_rank1_err).sum::<f64>() / n;
+        let mean = at.iter().map(|s| s.mean_rank1_err).sum::<f64>() / n;
+        let cond = at
+            .iter()
+            .map(|s| if s.cond.is_finite() { s.cond } else { 1e12 })
+            .sum::<f64>()
+            / n;
+        t.row(&[
+            step.to_string(),
+            format!("{opt:.4}"),
+            format!("{mean:.4}"),
+            format!("{cond:.2e}"),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // CSV dump of every sample.
+    let mut csv = String::from("step,layer,side,optimal_rank1_err,mean_rank1_err,lambda_max,lambda_min,cond\n");
+    for s in &samples {
+        csv.push_str(&format!(
+            "{},{},{},{},{},{},{},{}\n",
+            s.step, s.layer, s.side, s.optimal_rank1_err, s.mean_rank1_err,
+            s.lambda_max, s.lambda_min, s.cond
+        ));
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(Path::new("results/fig5_fig10_rank1.csv"), csv).unwrap();
+    println!("samples written to results/fig5_fig10_rank1.csv");
+    println!(
+        "shape to check (paper Figs. 5/10): most optimal-rank-1 errors are\n\
+         well below 1 (covariances are low-rank), and the error *decreases*\n\
+         as training progresses (decaying eigenvalues, §8.7)."
+    );
+}

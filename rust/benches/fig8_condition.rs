@@ -1,0 +1,54 @@
+//! Figure 8 — eigenvalues and condition number of the KFAC right factor
+//! during training (ResNet-proxy on CIFAR-proxy): the numerical-fragility
+//! evidence motivating MKOR's inversion-free design.
+
+use mkor::bench_utils::Table;
+use mkor::experiments::spectra::collect_spectra;
+use std::path::Path;
+
+fn main() {
+    println!("=== Figure 8: KFAC factor spectrum during training ===\n");
+    let samples = collect_spectra(81, 20, &[96, 48], 29);
+
+    let mut t = Table::new(&[
+        "step",
+        "layer",
+        "lambda_max (AAᵀ)",
+        "lambda_min",
+        "condition number",
+    ]);
+    for s in samples.iter().filter(|s| s.side == "a") {
+        t.row(&[
+            s.step.to_string(),
+            s.layer.to_string(),
+            format!("{:.3e}", s.lambda_max),
+            format!("{:.3e}", s.lambda_min),
+            if s.cond.is_finite() { format!("{:.3e}", s.cond) } else { "inf".into() },
+        ]);
+    }
+    println!("{}", t.render());
+
+    let conds: Vec<f64> = samples
+        .iter()
+        .filter(|s| s.side == "a" && s.cond.is_finite())
+        .map(|s| s.cond)
+        .collect();
+    let geo_mean = (conds.iter().map(|c| c.ln()).sum::<f64>() / conds.len().max(1) as f64).exp();
+    println!("geometric-mean condition number: {geo_mean:.3e}");
+
+    let mut csv = String::from("step,layer,lambda_max,lambda_min,cond\n");
+    for s in samples.iter().filter(|s| s.side == "a") {
+        csv.push_str(&format!(
+            "{},{},{},{},{}\n",
+            s.step, s.layer, s.lambda_max, s.lambda_min, s.cond
+        ));
+    }
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(Path::new("results/fig8_condition.csv"), csv).unwrap();
+    println!("series written to results/fig8_condition.csv");
+    println!(
+        "shape to check (paper Fig. 8): minimum eigenvalues sit near zero so\n\
+         condition numbers are huge (≥1e6) — inverting these factors without\n\
+         damping is numerically hopeless, which is MKOR's motivation."
+    );
+}

@@ -1,0 +1,79 @@
+//! Figure 9 — strong scaling of MKOR (vs KAISA and LAMB) on BERT-Large up
+//! to 64 GPUs, from the calibrated cluster cost model, plus a *measured*
+//! in-process ring all-reduce scaling check of the payload sizes involved.
+
+use mkor::bench_utils::{bench_fn, fmt_secs, Table};
+use mkor::collective::ring::allreduce_mean;
+use mkor::collective::ClusterModel;
+use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
+use mkor::costmodel::timing::amortized_step_time;
+use mkor::costmodel::timing::DeviceModel;
+use mkor::model::specs;
+use std::path::Path;
+
+fn main() {
+    println!("=== Figure 9: strong scaling on BERT-Large ===\n");
+    let spec = specs::bert_large();
+    let dev = DeviceModel::a100();
+    let cl = ClusterModel::polaris_a100();
+    let workers = [1usize, 4, 8, 16, 32, 64];
+
+    let mut t = Table::new(&[
+        "workers",
+        "MKOR samples/s",
+        "KAISA samples/s",
+        "LAMB samples/s",
+        "MKOR sync/step",
+        "KAISA sync/step",
+    ]);
+    let mut csv = String::from("workers,mkor,kaisa,lamb\n");
+    for w in workers {
+        let thr = |kind: OptimizerKind, f: usize| {
+            let st = amortized_step_time(kind, &spec, 8, w, &dev, &cl, f);
+            8.0 * w as f64 / st.total()
+        };
+        let m = thr(OptimizerKind::Mkor, 10);
+        let k = thr(OptimizerKind::Kfac, 50);
+        let l = thr(OptimizerKind::Lamb, 1);
+        let msync = model_step_cost(OptimizerKind::Mkor, &spec).sync_bytes;
+        let ksync = model_step_cost(OptimizerKind::Kfac, &spec).sync_bytes;
+        t.row(&[
+            w.to_string(),
+            format!("{m:.1}"),
+            format!("{k:.1}"),
+            format!("{l:.1}"),
+            fmt_secs(cl.allreduce_time(msync as usize, w)),
+            fmt_secs(cl.allreduce_time(ksync as usize, w)),
+        ]);
+        csv.push_str(&format!("{w},{m},{k},{l}\n"));
+    }
+    println!("{}", t.render());
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(Path::new("results/fig9_scalability.csv"), csv).unwrap();
+
+    println!("measured in-process ring all-reduce (payload = MKOR rank-1 vs KFAC factors, one 1024-dim layer):\n");
+    let mut t2 = Table::new(&["workers", "payload", "bytes/worker", "wall time"]);
+    for w in [2usize, 4, 8] {
+        for (label, n) in [("MKOR 2d", 2 * 1024usize), ("KFAC 4d^2", 4 * 1024 * 1024)] {
+            let mut bufs: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; n]).collect();
+            let stats = allreduce_mean(&mut bufs);
+            let r = bench_fn(label, 0.15, || {
+                let mut bufs: Vec<Vec<f32>> = (0..w).map(|i| vec![i as f32; n]).collect();
+                allreduce_mean(&mut bufs)
+            });
+            t2.row(&[
+                w.to_string(),
+                label.into(),
+                mkor::bench_utils::fmt_bytes(stats.bytes_per_worker as f64),
+                fmt_secs(r.median_secs),
+            ]);
+        }
+    }
+    println!("{}", t2.render());
+    let _ = t2.save_csv(Path::new("results/fig9_ring_measured.csv"));
+    println!(
+        "shape to check (paper Fig. 9): MKOR's throughput stays near LAMB's\n\
+         and keeps scaling to 64 GPUs; KAISA's flattens as its O(d^2) factor\n\
+         sync grows with the worker count."
+    );
+}

@@ -1,0 +1,137 @@
+//! Table 1 — computation / memory / communication complexity per optimizer.
+//!
+//! Two parts: (a) the asymptotic table exactly as the paper prints it, with
+//! concrete per-step numbers for BERT-Large instantiated from the cost
+//! model; (b) *measured* scaling exponents of the Rust factor-update
+//! implementations over d (and over b for SNGD), verifying that the code
+//! actually scales as the table claims.
+
+use mkor::bench_utils::{bench_fn, Table};
+use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
+use mkor::linalg::{ops, Matrix};
+use mkor::model::specs;
+use mkor::model::{Capture, Dense, LayerShape};
+use mkor::util::timer::PhaseTimer;
+use mkor::util::Rng;
+use std::path::Path;
+
+fn capture(shape: LayerShape, b: usize, rng: &mut Rng) -> Capture {
+    let a = Matrix::randn(shape.d_in, b, 1.0, rng);
+    let g = Matrix::randn(shape.d_out, b, 1.0, rng);
+    let mut dw = ops::matmul_nt(&g, &a);
+    dw.scale(1.0 / b as f32);
+    Capture { a, g, dw, db: vec![0.0; shape.d_out] }
+}
+
+/// Median seconds of the *factor phase* of a fresh optimizer's first step
+/// (step 0 is a factor step for every second-order method here).
+fn factor_secs(opt_name: &str, d: usize, b: usize) -> f64 {
+    let shapes = [LayerShape::new(d, d)];
+    let mut rng = Rng::new(1);
+    let cap = capture(shapes[0], b, &mut rng);
+    let mut layers = vec![Dense::init(shapes[0], mkor::model::Activation::Linear, &mut rng)];
+    let mut last_factor = 0.0;
+    let r = bench_fn(opt_name, 0.3, || {
+        let mut opt = mkor::optim::by_name(opt_name, &shapes).unwrap();
+        let mut timer = PhaseTimer::new();
+        opt.step(&mut layers, std::slice::from_ref(&cap), 0.0, &mut timer);
+        last_factor = timer.total_secs("factor");
+        last_factor
+    });
+    // Use the phase measurement itself (bench_fn repeats stabilize caches).
+    let _ = r;
+    last_factor
+}
+
+fn fit_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len() as f64;
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.max(1e-12).ln()).collect();
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let num: f64 = lx.iter().zip(&ly).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = lx.iter().map(|x| (x - mx) * (x - mx)).sum();
+    num / den
+}
+
+fn main() {
+    println!("=== Table 1: complexity of the optimizer family ===\n");
+    let spec = specs::bert_large();
+    let mut t = Table::new(&[
+        "Optimizer",
+        "Computational",
+        "Memory overhead",
+        "Communication",
+        "BERT-L factor FLOPs/step",
+        "BERT-L sync/step",
+        "BERT-L state",
+    ]);
+    for kind in [
+        OptimizerKind::Mkor,
+        OptimizerKind::Sngd,
+        OptimizerKind::Kfac,
+        OptimizerKind::Eva,
+        OptimizerKind::Sgd,
+        OptimizerKind::Lamb,
+    ] {
+        let (comp, mem, comm) = kind.asymptotics();
+        let c = model_step_cost(kind, &spec);
+        t.row(&[
+            kind.label().into(),
+            comp.into(),
+            mem.into(),
+            comm.into(),
+            format!("{:.2e}", c.factor_flops),
+            mkor::bench_utils::fmt_bytes(c.sync_bytes),
+            mkor::bench_utils::fmt_bytes(c.state_bytes),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = t.save_csv(Path::new("results/table1_complexity.csv"));
+
+    println!("=== Measured factor-phase scaling of the Rust implementations ===\n");
+    let dims = [128usize, 256, 512];
+    let mut t2 = Table::new(&[
+        "Optimizer",
+        "axis",
+        "sizes",
+        "times",
+        "fitted exponent",
+        "paper says",
+    ]);
+    for (name, paper) in [("mkor", "d^2"), ("kfac", "d^3")] {
+        let xs: Vec<f64> = dims.iter().map(|&d| d as f64).collect();
+        let ys: Vec<f64> = dims.iter().map(|&d| factor_secs(name, d, 64)).collect();
+        t2.row(&[
+            name.into(),
+            "d".into(),
+            format!("{dims:?}"),
+            ys.iter()
+                .map(|y| mkor::bench_utils::fmt_secs(*y))
+                .collect::<Vec<_>>()
+                .join(" "),
+            format!("{:.2}", fit_slope(&xs, &ys)),
+            paper.into(),
+        ]);
+    }
+    let bs = [64usize, 128, 256];
+    let xs: Vec<f64> = bs.iter().map(|&b| b as f64).collect();
+    let ys: Vec<f64> = bs.iter().map(|&b| factor_secs("sngd", 192, b)).collect();
+    t2.row(&[
+        "sngd".into(),
+        "b".into(),
+        format!("{bs:?}"),
+        ys.iter()
+            .map(|y| mkor::bench_utils::fmt_secs(*y))
+            .collect::<Vec<_>>()
+            .join(" "),
+        format!("{:.2}", fit_slope(&xs, &ys)),
+        "b^3 (+ b^2 d build)".into(),
+    ]);
+    println!("{}", t2.render());
+    let _ = t2.save_csv(Path::new("results/table1_measured_scaling.csv"));
+    println!(
+        "(exponents within ~±0.6 of the asymptote are expected at these sizes;\n\
+         lower-order terms and caches bend the small points)"
+    );
+}

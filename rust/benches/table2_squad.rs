@@ -1,0 +1,102 @@
+//! Table 2 — BERT-Large on SQuAD v1.1: metric, iterations, time, speedup.
+//!
+//! Substitution (DESIGN.md §3): steps-to-target is *measured* on the
+//! text-proxy fine-tuning task; seconds-per-step at paper scale comes from
+//! the calibrated cost model (BERT-Large, 64×A100, per-optimizer inversion
+//! frequencies from §8.9: MKOR f=10, KAISA f=50). The product regenerates
+//! the Time/Speedup columns. Paper values are printed alongside.
+
+use mkor::bench_utils::Table;
+use mkor::collective::ClusterModel;
+use mkor::costmodel::complexity::OptimizerKind;
+use mkor::costmodel::timing::{amortized_step_time, DeviceModel};
+use mkor::experiments::convergence::{run_convergence, RunOpts, TaskKind};
+use mkor::model::specs;
+use std::path::Path;
+
+fn main() {
+    println!("=== Table 2: SQuAD-proxy fine-tune, BERT-Large at 64xA100 scale ===\n");
+    let task = TaskKind::TextClass { feat_dim: 64, vocab: 64 };
+    let target_loss = 3.70; // masked-token loss target (init ≈ ln 64 = 4.16)
+
+    let spec = specs::bert_large();
+    let dev = DeviceModel::a100();
+    let cl = ClusterModel::polaris_a100();
+
+    // (name, optimizer, lr, inversion frequency f, paper iters, paper hours, paper speedup)
+    let entries: [(&str, &str, f32, Option<usize>, u32, f64, f64); 5] = [
+        ("LAMB", "lamb", 0.02, None, 1536, 7.97, 1.00),
+        ("KAISA", "kfac", 0.3, Some(50), 1000, 5.71, 1.39),
+        ("MKOR", "mkor", 0.3, Some(10), 1000, 5.25, 1.51),
+        ("MKOR-H", "mkor-h", 0.3, Some(10), 600, 3.10, 2.57),
+        ("Eva", "eva", 0.3, None, 1000, 5.24, 1.52),
+    ];
+
+    let opts_base = RunOpts {
+        steps: 600,
+        eval_every: 10,
+        hidden: vec![96],
+        seed: 11,
+        ..Default::default()
+    };
+
+    let mut rows = Vec::new();
+    for (label, opt, lr, f, p_iters, p_hours, p_speed) in entries {
+        let mut opts = opts_base.clone();
+        opts.lr = lr;
+        opts.inv_freq = f;
+        let r = run_convergence(&task, opt, &opts);
+        let steps = r.steps_to_loss(target_loss);
+        let kind = OptimizerKind::parse(opt).unwrap();
+        let st = amortized_step_time(kind, &spec, 8, 64, &dev, &cl, f.unwrap_or(10));
+        let hours = steps.map(|s| {
+            // Scale proxy steps to paper iteration counts via the LAMB
+            // anchor (paper 1536 LAMB iters == our measured LAMB steps).
+            s as f64 * st.total() / 3600.0
+        });
+        rows.push((label, steps, r.final_metric().unwrap_or(0.0), hours, st.total(), p_iters, p_hours, p_speed, r.diverged));
+    }
+
+    // Speedup normalization: LAMB row is the baseline.
+    let lamb_time = rows[0].1.map(|s| s as f64 * rows[0].4);
+    let mut t = Table::new(&[
+        "Optimizer",
+        "proxy metric",
+        "steps to target",
+        "model s/step @paper scale",
+        "speedup (measured)",
+        "time @paper iters (model)",
+        "speedup @paper iters",
+        "paper iters",
+        "paper time (h)",
+        "paper speedup",
+    ]);
+    for (label, steps, metric, _hours, sstep, p_iters, p_hours, p_speed, diverged) in &rows {
+        let time = steps.map(|s| s as f64 * sstep);
+        let speed = match (&lamb_time, &time) {
+            (Some(lt), Some(tt)) => format!("{:.2}x", lt / tt),
+            _ => "-".into(),
+        };
+        t.row(&[
+            label.to_string(),
+            if *diverged { "DIVERGED".into() } else { format!("{metric:.3}") },
+            steps.map_or("-".into(), |s| s.to_string()),
+            mkor::bench_utils::fmt_secs(*sstep),
+            speed,
+            mkor::bench_utils::fmt_secs(*p_iters as f64 * sstep),
+            format!("{:.2}x", (rows[0].5 as f64 * rows[0].4) / (*p_iters as f64 * sstep)),
+            p_iters.to_string(),
+            format!("{p_hours:.2}"),
+            format!("{p_speed:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+    let _ = t.save_csv(Path::new("results/table2_squad.csv"));
+    println!(
+        "shape to check vs paper (speedup @paper iters column): MKOR-H > Eva/\n\
+         MKOR > KAISA > LAMB — the paper's ordering, driven by our measured\n\
+         per-step cost model. The measured-steps column is the honest proxy\n\
+         result: on a small MLP, LAMB's trust ratio is hard to beat and the\n\
+         rank-1 factor information adds little (see EXPERIMENTS.md §Fidelity)."
+    );
+}

@@ -1,0 +1,65 @@
+//! Table 6 — per-GPU memory (GB) for MKOR / KFAC / LAMB / SGD on
+//! BERT-Large pre-training and ResNet-50.
+//!
+//! Totals are model + gradients + optimizer state + an activation-memory
+//! estimate (sequence/spatial working set), so they are comparable to the
+//! paper's absolute figures; the load-bearing comparison is the ordering
+//! and the MKOR-vs-KFAC ratio.
+
+use mkor::bench_utils::Table;
+use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
+use mkor::model::specs::{self, ModelSpec};
+use std::path::Path;
+
+/// Rough activation working set: effective batch × Σ layer outputs × 4B ×
+/// 2 (forward + retained for backward).
+fn activation_bytes(spec: &ModelSpec) -> f64 {
+    let sum_out: usize = spec.layers.iter().map(|l| l.d_out).sum();
+    2.0 * spec.effective_batch as f64 * sum_out as f64 * 4.0
+}
+
+fn total_gb(kind: OptimizerKind, spec: &ModelSpec) -> f64 {
+    let params = spec.params() as f64;
+    let model = params * 4.0; // fp32 master weights
+    let grads = params * 4.0;
+    let opt = model_step_cost(kind, spec).state_bytes;
+    (model + grads + opt + activation_bytes(spec)) / 1e9
+}
+
+fn main() {
+    println!("=== Table 6: per-GPU memory (GB) ===\n");
+    let bert = specs::bert_large();
+    let rn = specs::resnet50();
+    let mut t = Table::new(&["Model", "MKOR", "KFAC/KAISA", "LAMB", "SGD", "paper (MKOR/KFAC/LAMB|SGD)"]);
+    t.row(&[
+        "ResNet-50".into(),
+        format!("{:.2}", total_gb(OptimizerKind::Mkor, &rn)),
+        format!("{:.2}", total_gb(OptimizerKind::Kfac, &rn)),
+        format!("{:.2}", total_gb(OptimizerKind::Lamb, &rn)),
+        format!("{:.2}", total_gb(OptimizerKind::Sgd, &rn)),
+        "3.88 / 5.83 / - | 3.01".into(),
+    ]);
+    t.row(&[
+        "BERT-Large".into(),
+        format!("{:.2}", total_gb(OptimizerKind::Mkor, &bert)),
+        format!("{:.2}", total_gb(OptimizerKind::Kfac, &bert)),
+        format!("{:.2}", total_gb(OptimizerKind::Lamb, &bert)),
+        format!("{:.2}", total_gb(OptimizerKind::Sgd, &bert)),
+        "23.34 / 29.97 / 12.80 | -".into(),
+    ]);
+    println!("{}", t.render());
+    let _ = t.save_csv(Path::new("results/table6_memory.csv"));
+
+    let mkor = total_gb(OptimizerKind::Mkor, &bert);
+    let kfac = total_gb(OptimizerKind::Kfac, &bert);
+    let lamb = total_gb(OptimizerKind::Lamb, &bert);
+    println!(
+        "BERT ratios — KFAC/MKOR: {:.2} (paper 1.28), MKOR/LAMB: {:.2} (paper 1.82)",
+        kfac / mkor,
+        mkor / lamb
+    );
+    println!(
+        "shape to check: SGD < MKOR < KFAC on both models; MKOR trims\n\
+         KFAC's overhead by roughly the paper's ~1.3-1.5x."
+    );
+}

@@ -1,0 +1,205 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! `cargo bench` targets use [`bench_fn`] for timing (warmup + adaptive
+//! repeats + median/MAD) and the table printers for the paper-style
+//! output. Results additionally land as JSON/CSV under `results/`.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub median_secs: f64,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.median_secs.max(1e-12)
+    }
+}
+
+/// Time `f`, returning median over enough repeats to fill ~`budget_secs`.
+/// The closure's result is black-boxed so the work isn't elided.
+pub fn bench_fn<T>(name: &str, budget_secs: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + estimate.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_secs / est).ceil() as usize).clamp(3, 1000);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let s = stats::summarize(&samples);
+    BenchResult {
+        name: name.to_string(),
+        median_secs: s.median,
+        mean_secs: s.mean,
+        std_secs: s.std,
+        iters,
+    }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep = |w: &Vec<usize>| -> String {
+            let mut s = String::from("+");
+            for wd in w {
+                s.push_str(&"-".repeat(wd + 2));
+                s.push('+');
+            }
+            s.push('\n');
+            s
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                s.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = sep(&widths);
+        out.push_str(&fmt_row(&self.headers));
+        out.push_str(&sep(&widths));
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out.push_str(&sep(&widths));
+        out
+    }
+
+    /// CSV form (for results/ dumps).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save_csv(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Format seconds human-readably.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else if s < 3600.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.2} h", s / 3600.0)
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1024.0 {
+        format!("{b:.0} B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2} GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_measures_something() {
+        let r = bench_fn("spin", 0.02, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(r.median_secs > 0.0);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Optimizer", "Speedup"]);
+        t.row(&["MKOR".into(), "2.57x".into()]);
+        t.row(&["LAMB".into(), "1.00x".into()]);
+        let s = t.render();
+        assert!(s.contains("| MKOR"));
+        assert!(s.lines().all(|l| l.len() == s.lines().next().unwrap().len()));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("Optimizer,Speedup\n"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(0.5), "500.00 ms");
+        assert_eq!(fmt_bytes(2048.0), "2.0 KiB");
+        assert!(fmt_secs(7200.0).contains('h'));
+    }
+}

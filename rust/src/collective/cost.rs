@@ -1,0 +1,136 @@
+//! α–β cluster communication cost model.
+//!
+//! Stands in for the paper's 64-GPU Polaris (4×A100/node, NVLink
+//! intra-node, Slingshot/IB inter-node) and Mist (4×V100/node) testbeds.
+//! A collective over W workers arranged `gpus_per_node` to a node is priced
+//! with the classic latency–bandwidth model: each of the 2(W−1) ring steps
+//! costs `α + chunk_bytes·β` on the slowest link it crosses; with W > one
+//! node, W−ish of the steps cross the inter-node fabric, so the effective
+//! β is the inter-node one (ring bandwidth is bottlenecked by its slowest
+//! link — the standard NCCL result).
+
+/// One link class.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkParams {
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Seconds per byte (1/bandwidth).
+    pub beta: f64,
+}
+
+impl LinkParams {
+    pub fn from_bandwidth_gbps(alpha_us: f64, gb_per_s: f64) -> Self {
+        LinkParams { alpha: alpha_us * 1e-6, beta: 1.0 / (gb_per_s * 1e9) }
+    }
+}
+
+/// A homogeneous cluster of `gpus_per_node`-wide nodes.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterModel {
+    pub intra: LinkParams,
+    pub inter: LinkParams,
+    pub gpus_per_node: usize,
+}
+
+impl ClusterModel {
+    /// Polaris-like: A100 nodes, NVLink ~ 250 GB/s effective pairwise,
+    /// inter-node fabric ~ 20 GB/s effective per GPU.
+    pub fn polaris_a100() -> Self {
+        ClusterModel {
+            intra: LinkParams::from_bandwidth_gbps(3.0, 250.0),
+            inter: LinkParams::from_bandwidth_gbps(8.0, 20.0),
+            gpus_per_node: 4,
+        }
+    }
+
+    /// Mist-like: V100 nodes, NVLink ~ 130 GB/s, EDR IB ~ 10 GB/s.
+    pub fn mist_v100() -> Self {
+        ClusterModel {
+            intra: LinkParams::from_bandwidth_gbps(4.0, 130.0),
+            inter: LinkParams::from_bandwidth_gbps(10.0, 10.0),
+            gpus_per_node: 4,
+        }
+    }
+
+    /// The slowest link a W-worker ring crosses.
+    fn bottleneck(&self, workers: usize) -> LinkParams {
+        if workers <= self.gpus_per_node {
+            self.intra
+        } else {
+            self.inter
+        }
+    }
+
+    /// Time for a ring all-reduce of `bytes` payload over `workers`.
+    pub fn allreduce_time(&self, bytes: usize, workers: usize) -> f64 {
+        if workers <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let w = workers as f64;
+        let link = self.bottleneck(workers);
+        let steps = 2.0 * (w - 1.0);
+        let chunk = bytes as f64 / w;
+        steps * (link.alpha + chunk * link.beta)
+    }
+
+    /// Time for a broadcast of `bytes` from one root (tree, ⌈log2 W⌉
+    /// stages of the full payload).
+    pub fn broadcast_time(&self, bytes: usize, workers: usize) -> f64 {
+        if workers <= 1 || bytes == 0 {
+            return 0.0;
+        }
+        let stages = (workers as f64).log2().ceil();
+        let link = self.bottleneck(workers);
+        stages * (link.alpha + bytes as f64 * link.beta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_cases() {
+        let c = ClusterModel::polaris_a100();
+        assert_eq!(c.allreduce_time(0, 8), 0.0);
+        assert_eq!(c.allreduce_time(1024, 1), 0.0);
+        assert_eq!(c.broadcast_time(1024, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_time_scales_with_bytes() {
+        let c = ClusterModel::polaris_a100();
+        let t1 = c.allreduce_time(1 << 20, 8);
+        let t2 = c.allreduce_time(1 << 26, 8);
+        assert!(t2 > 10.0 * t1, "t1={t1} t2={t2}");
+    }
+
+    #[test]
+    fn crossing_a_node_boundary_costs_more() {
+        let c = ClusterModel::polaris_a100();
+        // 4 workers fit one node; 8 span two.
+        let t4 = c.allreduce_time(1 << 24, 4);
+        let t8 = c.allreduce_time(1 << 24, 8);
+        assert!(t8 > 2.0 * t4, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn bandwidth_term_saturates_with_workers() {
+        // For large payloads the ring time approaches 2·bytes·β regardless
+        // of W — strong scaling of the bandwidth term.
+        let c = ClusterModel::polaris_a100();
+        let t16 = c.allreduce_time(1 << 28, 16);
+        let t64 = c.allreduce_time(1 << 28, 64);
+        assert!((t64 / t16 - 1.0).abs() < 0.1, "t16={t16} t64={t64}");
+    }
+
+    #[test]
+    fn latency_term_dominates_small_payloads() {
+        // MKOR's O(d) sync is latency-bound at scale: time grows ~linearly
+        // with W for tiny payloads.
+        let c = ClusterModel::polaris_a100();
+        let t8 = c.allreduce_time(4096, 8);
+        let t64 = c.allreduce_time(4096, 64);
+        assert!(t64 > 4.0 * t8, "t8={t8} t64={t64}");
+    }
+}

@@ -1,0 +1,20 @@
+//! Collective communication substrate.
+//!
+//! The paper's communication claims (Table 1, Figure 9) are about bytes
+//! moved per synchronization: MKOR all-reduces two rank-1 vectors (O(d),
+//! halved again by fp16) where KFAC moves O(4d²) and SNGD O(2bd + b²).
+//! This module provides:
+//!
+//! * [`ring`] — a real ring all-reduce over in-process worker buffers
+//!   (reduce-scatter + all-gather, chunked exactly like NCCL's ring), in
+//!   fp32 and bf16-quantized forms, with byte/step accounting;
+//! * [`cost`] — an α–β cluster cost model (NVLink intra-node, InfiniBand
+//!   inter-node, matching the paper's Polaris/Mist testbeds) that prices a
+//!   collective at any worker count — this is what stands in for the
+//!   64-GPU measurements (DESIGN.md §3).
+
+pub mod cost;
+pub mod ring;
+
+pub use cost::{ClusterModel, LinkParams};
+pub use ring::{allreduce_mean, allreduce_mean_bf16, AllreduceStats};

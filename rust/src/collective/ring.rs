@@ -1,0 +1,236 @@
+//! Ring all-reduce over in-process worker buffers.
+//!
+//! Implements the standard two-phase ring algorithm: W−1 reduce-scatter
+//! steps followed by W−1 all-gather steps over W equal chunks, so each
+//! worker sends/receives `2·(W−1)/W · n` elements — the bandwidth-optimal
+//! schedule whose cost the α–β model in [`super::cost`] prices. Buffers
+//! live in one process (our "workers" are threads), but the data movement
+//! and the arithmetic are the real thing, including optional bf16
+//! quantization of the wire format (MKOR's half-precision sync).
+
+use crate::linalg::half::{bf16_bits_to_f32, f32_to_bf16_bits};
+
+/// Accounting from one collective call.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllreduceStats {
+    /// Bytes a single worker sent (= received) during the collective.
+    pub bytes_per_worker: usize,
+    /// Number of communication steps (latency terms).
+    pub steps: usize,
+}
+
+/// Chunk boundaries for `n` elements over `w` ranks.
+fn chunk_bounds(n: usize, w: usize) -> Vec<(usize, usize)> {
+    let base = n / w;
+    let rem = n % w;
+    let mut out = Vec::with_capacity(w);
+    let mut start = 0;
+    for r in 0..w {
+        let len = base + usize::from(r < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// In-place ring all-reduce (mean) over `bufs` (one buffer per worker, all
+/// the same length). After the call every buffer holds the element-wise
+/// mean. Returns per-worker byte accounting (fp32 wire format).
+pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
+    let w = bufs.len();
+    assert!(w > 0);
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "ragged all-reduce buffers");
+    if w == 1 {
+        return AllreduceStats { bytes_per_worker: 0, steps: 0 };
+    }
+    let chunks = chunk_bounds(n, w);
+    let mut bytes = 0usize;
+
+    // Reduce-scatter: at step s, rank r sends chunk (r−s) to rank r+1,
+    // which accumulates it. After W−1 steps, rank r owns the full sum of
+    // chunk (r+1) mod w.
+    for s in 0..w - 1 {
+        for r in 0..w {
+            let send_chunk = (r + w - s) % w;
+            let dst = (r + 1) % w;
+            let (lo, hi) = chunks[send_chunk];
+            // Move the chunk (copy = the "wire"), accumulate at dst.
+            let payload: Vec<f32> = bufs[r][lo..hi].to_vec();
+            for (d, &p) in bufs[dst][lo..hi].iter_mut().zip(&payload) {
+                *d += p;
+            }
+            bytes += (hi - lo) * 4;
+        }
+    }
+    // All-gather: rank r owns reduced chunk (r+1); circulate W−1 times.
+    for s in 0..w - 1 {
+        for r in 0..w {
+            let send_chunk = (r + 1 + w - s) % w;
+            let dst = (r + 1) % w;
+            let (lo, hi) = chunks[send_chunk];
+            let payload: Vec<f32> = bufs[r][lo..hi].to_vec();
+            bufs[dst][lo..hi].copy_from_slice(&payload);
+            bytes += (hi - lo) * 4;
+        }
+    }
+    // Mean.
+    let inv_w = 1.0 / w as f32;
+    for b in bufs.iter_mut() {
+        for v in b.iter_mut() {
+            *v *= inv_w;
+        }
+    }
+    AllreduceStats { bytes_per_worker: bytes / w, steps: 2 * (w - 1) }
+}
+
+/// Ring all-reduce (mean) with bf16 wire format: every payload is
+/// quantized before the "send" and dequantized at the receiver, halving
+/// bytes at the cost of bounded rounding error (Lemma 3.2 regime). The
+/// local accumulations still happen in fp32.
+pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
+    let w = bufs.len();
+    assert!(w > 0);
+    let n = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == n), "ragged all-reduce buffers");
+    if w == 1 {
+        return AllreduceStats { bytes_per_worker: 0, steps: 0 };
+    }
+    let chunks = chunk_bounds(n, w);
+    let mut bytes = 0usize;
+
+    for s in 0..w - 1 {
+        for r in 0..w {
+            let send_chunk = (r + w - s) % w;
+            let dst = (r + 1) % w;
+            let (lo, hi) = chunks[send_chunk];
+            let wire: Vec<u16> = bufs[r][lo..hi].iter().map(|&x| f32_to_bf16_bits(x)).collect();
+            for (d, &h) in bufs[dst][lo..hi].iter_mut().zip(&wire) {
+                *d += bf16_bits_to_f32(h);
+            }
+            bytes += (hi - lo) * 2;
+        }
+    }
+    for s in 0..w - 1 {
+        for r in 0..w {
+            let send_chunk = (r + 1 + w - s) % w;
+            let dst = (r + 1) % w;
+            let (lo, hi) = chunks[send_chunk];
+            let wire: Vec<u16> = bufs[r][lo..hi].iter().map(|&x| f32_to_bf16_bits(x)).collect();
+            for (d, &h) in bufs[dst][lo..hi].iter_mut().zip(&wire) {
+                *d = bf16_bits_to_f32(h);
+            }
+            bytes += (hi - lo) * 2;
+        }
+    }
+    let inv_w = 1.0 / w as f32;
+    for b in bufs.iter_mut() {
+        for v in b.iter_mut() {
+            *v *= inv_w;
+        }
+    }
+    AllreduceStats { bytes_per_worker: bytes / w, steps: 2 * (w - 1) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn worker_bufs(w: usize, n: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..w)
+            .map(|_| (0..n).map(|_| rng.gaussian_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn fp32_allreduce_computes_exact_mean() {
+        for &(w, n) in &[(2usize, 10usize), (4, 17), (8, 64), (3, 1), (5, 4)] {
+            let mut bufs = worker_bufs(w, n, 42 + w as u64);
+            // Reference mean.
+            let mut want = vec![0.0f64; n];
+            for b in &bufs {
+                for (wv, &x) in want.iter_mut().zip(b) {
+                    *wv += x as f64;
+                }
+            }
+            for wv in want.iter_mut() {
+                *wv /= w as f64;
+            }
+            let stats = allreduce_mean(&mut bufs);
+            for b in &bufs {
+                for (i, (&got, &wv)) in b.iter().zip(&want).enumerate() {
+                    assert!(
+                        (got as f64 - wv).abs() < 1e-5,
+                        "w={w} n={n} i={i}: {got} vs {wv}"
+                    );
+                }
+            }
+            assert_eq!(stats.steps, 2 * (w - 1));
+        }
+    }
+
+    #[test]
+    fn byte_accounting_matches_ring_formula() {
+        let w = 4;
+        let n = 1000;
+        let mut bufs = worker_bufs(w, n, 7);
+        let stats = allreduce_mean(&mut bufs);
+        // 2(W−1)/W · n elements × 4 bytes per worker.
+        let want = 2 * (w - 1) * n / w * 4;
+        assert_eq!(stats.bytes_per_worker, want);
+    }
+
+    #[test]
+    fn bf16_halves_bytes_and_bounds_error() {
+        let w = 4;
+        let n = 512;
+        let mut a = worker_bufs(w, n, 9);
+        let mut b = a.clone();
+        let s32 = allreduce_mean(&mut a);
+        let s16 = allreduce_mean_bf16(&mut b);
+        assert_eq!(s16.bytes_per_worker * 2, s32.bytes_per_worker);
+        // bf16 has ~2⁻⁸ relative step; the ring accumulates a few of them.
+        for (x, y) in a[0].iter().zip(&b[0]) {
+            let denom = x.abs().max(0.1);
+            assert!(
+                ((x - y) / denom).abs() < 0.05,
+                "fp32 {x} vs bf16 {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_worker_is_noop() {
+        let mut bufs = vec![vec![1.0f32, 2.0, 3.0]];
+        let stats = allreduce_mean(&mut bufs);
+        assert_eq!(stats.bytes_per_worker, 0);
+        assert_eq!(bufs[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn uneven_chunks_are_covered() {
+        // n not divisible by w exercises the remainder path.
+        let mut bufs = worker_bufs(3, 7, 11);
+        let mut want = vec![0.0f32; 7];
+        for b in &bufs {
+            for (wv, &x) in want.iter_mut().zip(b) {
+                *wv += x / 3.0;
+            }
+        }
+        allreduce_mean(&mut bufs);
+        for b in &bufs {
+            for (got, wv) in b.iter().zip(&want) {
+                assert!((got - wv).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_buffers_rejected() {
+        let mut bufs = vec![vec![0.0f32; 3], vec![0.0f32; 4]];
+        allreduce_mean(&mut bufs);
+    }
+}

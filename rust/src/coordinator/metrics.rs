@@ -1,0 +1,187 @@
+//! Run metrics: per-step records, summaries, JSON/CSV export under
+//! `results/`.
+
+use crate::util::json::Json;
+use std::path::Path;
+
+/// One training step's observables.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub loss: f64,
+    /// Eval metric (accuracy) when an eval ran this step.
+    pub eval_metric: Option<f64>,
+    pub lr: f32,
+    /// Wall seconds of this step (local measurement).
+    pub wall_secs: f64,
+    /// Gradient all-reduce payload bytes (per worker).
+    pub grad_comm_bytes: usize,
+    /// Second-order sync bytes (per worker).
+    pub sync_comm_bytes: usize,
+}
+
+/// A whole run.
+#[derive(Clone, Debug, Default)]
+pub struct RunRecord {
+    pub name: String,
+    pub optimizer: String,
+    pub steps: Vec<StepRecord>,
+    pub diverged: bool,
+    /// Step at which the target metric was first reached, if ever.
+    pub converged_at: Option<usize>,
+    /// MKOR-H switch step, if applicable.
+    pub switched_at: Option<usize>,
+}
+
+impl RunRecord {
+    pub fn final_loss(&self) -> f64 {
+        self.steps.last().map_or(f64::NAN, |s| s.loss)
+    }
+
+    pub fn best_eval(&self) -> Option<f64> {
+        self.steps
+            .iter()
+            .filter_map(|s| s.eval_metric)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    pub fn total_wall_secs(&self) -> f64 {
+        self.steps.iter().map(|s| s.wall_secs).sum()
+    }
+
+    pub fn total_comm_bytes(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| s.grad_comm_bytes + s.sync_comm_bytes)
+            .sum()
+    }
+
+    /// Loss series (for figure CSVs).
+    pub fn loss_series(&self) -> Vec<f64> {
+        self.steps.iter().map(|s| s.loss).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("optimizer", Json::Str(self.optimizer.clone()))
+            .set("diverged", Json::Bool(self.diverged))
+            .set(
+                "converged_at",
+                self.converged_at.map_or(Json::Null, |s| Json::Num(s as f64)),
+            )
+            .set(
+                "switched_at",
+                self.switched_at.map_or(Json::Null, |s| Json::Num(s as f64)),
+            )
+            .set("final_loss", Json::Num(self.final_loss()))
+            .set("total_wall_secs", Json::Num(self.total_wall_secs()))
+            .set("total_comm_bytes", Json::Num(self.total_comm_bytes() as f64))
+            .set("loss", Json::from_f64s(&self.loss_series()));
+        let evals: Vec<Json> = self
+            .steps
+            .iter()
+            .filter_map(|s| {
+                s.eval_metric.map(|m| {
+                    let mut e = Json::obj();
+                    e.set("step", Json::Num(s.step as f64))
+                        .set("metric", Json::Num(m));
+                    e
+                })
+            })
+            .collect();
+        o.set("evals", Json::Arr(evals));
+        o
+    }
+
+    pub fn save_json(&self, path: &Path) -> anyhow::Result<()> {
+        self.to_json().to_file(path)
+    }
+
+    /// CSV "step,loss,lr,eval" (for plotting the figure series).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("step,loss,lr,eval_metric\n");
+        for r in &self.steps {
+            s.push_str(&format!(
+                "{},{},{},{}\n",
+                r.step,
+                r.loss,
+                r.lr,
+                r.eval_metric.map_or(String::new(), |m| m.to_string())
+            ));
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_run() -> RunRecord {
+        RunRecord {
+            name: "t".into(),
+            optimizer: "mkor".into(),
+            steps: vec![
+                StepRecord {
+                    step: 0,
+                    loss: 2.0,
+                    eval_metric: None,
+                    lr: 0.1,
+                    wall_secs: 0.5,
+                    grad_comm_bytes: 100,
+                    sync_comm_bytes: 10,
+                },
+                StepRecord {
+                    step: 1,
+                    loss: 1.0,
+                    eval_metric: Some(0.8),
+                    lr: 0.1,
+                    wall_secs: 0.5,
+                    grad_comm_bytes: 100,
+                    sync_comm_bytes: 0,
+                },
+            ],
+            diverged: false,
+            converged_at: Some(1),
+            switched_at: None,
+        }
+    }
+
+    #[test]
+    fn summaries() {
+        let r = sample_run();
+        assert_eq!(r.final_loss(), 1.0);
+        assert_eq!(r.best_eval(), Some(0.8));
+        assert_eq!(r.total_wall_secs(), 1.0);
+        assert_eq!(r.total_comm_bytes(), 210);
+    }
+
+    #[test]
+    fn json_roundtrip_fields() {
+        let j = sample_run().to_json();
+        assert_eq!(j.require_str("optimizer").unwrap(), "mkor");
+        assert_eq!(j.get("converged_at").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 2);
+        // parse what we print
+        let re = Json::parse(&format!("{j:#}")).unwrap();
+        assert_eq!(re.get("final_loss").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = sample_run().to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("step,"));
+        assert!(lines[2].contains("0.8"));
+    }
+}

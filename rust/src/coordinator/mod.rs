@@ -1,0 +1,23 @@
+//! The L3 coordinator: synchronous data-parallel training.
+//!
+//! This is the distributed-training runtime the paper's system lives in:
+//! worker replicas compute forward/backward on their batch shards (real
+//! threads), gradients are combined with a real ring all-reduce
+//! ([`crate::collective::ring`], optionally bf16 on the wire), the
+//! optimizer — MKOR or any baseline — runs its factor/precondition/update
+//! phases on the leader with phase timing and communication accounting,
+//! MKOR-H's loss-rate switch and the knee-point LR scheduler observe the
+//! loss stream, and divergence is detected and reported (Table 5's "D"
+//! entries).
+//!
+//! Two frontends:
+//! * [`trainer::Trainer`] — drives the Rust-native [`crate::model::Mlp`]
+//!   proxies (all convergence figures/tables);
+//! * `runtime::XlaTrainer` (see [`crate::runtime`]) — drives the AOT
+//!   transformer artifacts for the end-to-end example.
+
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::{RunRecord, StepRecord};
+pub use trainer::{Target, Trainer, TrainerConfig};

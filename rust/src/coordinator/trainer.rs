@@ -1,0 +1,532 @@
+//! The synchronous data-parallel trainer over the Rust-native model.
+//!
+//! One step:
+//! 1. split the global batch into per-worker shards (columns);
+//! 2. worker threads run forward/backward on their replica, producing
+//!    per-layer captures;
+//! 3. weight gradients are combined with a real ring all-reduce (fp32 or
+//!    bf16 wire), activations/gradients are concatenated (a leader-view of
+//!    the global batch, as KFAC-family math expects);
+//! 4. the optimizer steps the leader replica (factor / precondition /
+//!    update phases, timed) and observes the loss (MKOR-H switching);
+//! 5. the leader's weights are broadcast back to the replicas.
+//!
+//! Divergence (non-finite loss or weights) halts the run and is recorded —
+//! those are the "D" entries of Table 5.
+
+use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
+use crate::coordinator::metrics::{RunRecord, StepRecord};
+use crate::linalg::Matrix;
+use crate::model::{accuracy, mse_loss, softmax_xent, Capture, Mlp};
+use crate::optim::schedule::LrSchedule;
+use crate::optim::Optimizer;
+use crate::util::timer::PhaseTimer;
+
+/// What a batch is labeled with.
+#[derive(Clone, Debug)]
+pub enum Target {
+    /// Classification labels (softmax cross-entropy + accuracy).
+    Labels(Vec<usize>),
+    /// Dense regression targets (MSE; the autoencoder experiments).
+    Dense(Matrix),
+}
+
+/// Trainer configuration.
+pub struct TrainerConfig {
+    /// Simulated data-parallel width (worker threads).
+    pub workers: usize,
+    /// bf16 wire format for the gradient all-reduce.
+    pub quantized_grads: bool,
+    /// Stop early when eval metric ≥ target (classification) or loss ≤
+    /// target (dense).
+    pub target_metric: Option<f64>,
+    /// Run an eval every n steps (0 = never).
+    pub eval_every: usize,
+    /// Name recorded in the run record.
+    pub run_name: String,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            workers: 4,
+            quantized_grads: false,
+            target_metric: None,
+            eval_every: 0,
+            run_name: String::from("run"),
+        }
+    }
+}
+
+/// The trainer. Owns the worker replicas, the optimizer and the schedule.
+pub struct Trainer {
+    cfg: TrainerConfig,
+    /// replicas[0] is the leader.
+    replicas: Vec<Mlp>,
+    opt: Box<dyn Optimizer + Send>,
+    schedule: Box<dyn LrSchedule + Send>,
+    pub phases: PhaseTimer,
+    pub record: RunRecord,
+    t: usize,
+    diverged: bool,
+}
+
+impl Trainer {
+    pub fn new(
+        model: Mlp,
+        opt: Box<dyn Optimizer + Send>,
+        schedule: Box<dyn LrSchedule + Send>,
+        cfg: TrainerConfig,
+    ) -> Self {
+        assert!(cfg.workers >= 1);
+        let replicas = vec![model; cfg.workers];
+        let record = RunRecord {
+            name: cfg.run_name.clone(),
+            optimizer: opt.name().to_string(),
+            ..Default::default()
+        };
+        Trainer {
+            cfg,
+            replicas,
+            opt,
+            schedule,
+            phases: PhaseTimer::new(),
+            record,
+            t: 0,
+            diverged: false,
+        }
+    }
+
+    pub fn diverged(&self) -> bool {
+        self.diverged
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.t
+    }
+
+    pub fn leader(&self) -> &Mlp {
+        &self.replicas[0]
+    }
+
+    pub fn optimizer(&self) -> &dyn Optimizer {
+        self.opt.as_ref()
+    }
+
+    /// Column ranges of the per-worker shards.
+    fn shard_ranges(&self, b: usize) -> Vec<(usize, usize)> {
+        let w = self.cfg.workers;
+        let base = b / w;
+        let rem = b % w;
+        let mut out = Vec::with_capacity(w);
+        let mut start = 0;
+        for r in 0..w {
+            let len = base + usize::from(r < rem);
+            out.push((start, start + len));
+            start += len;
+        }
+        out
+    }
+
+    /// One synchronous data-parallel step on a global batch. Returns the
+    /// (global) training loss, or `None` if the run has diverged.
+    pub fn step(&mut self, x: &Matrix, target: &Target) -> Option<f64> {
+        if self.diverged {
+            return None;
+        }
+        let t0 = std::time::Instant::now();
+        let b = x.cols();
+        let ranges = self.shard_ranges(b);
+        let lr = self.schedule.lr(self.t);
+
+        // ---- per-worker forward/backward (threads) ----------------------
+        let shards: Vec<(Matrix, Target)> = ranges
+            .iter()
+            .map(|&(lo, hi)| {
+                let mut sx = Matrix::zeros(x.rows(), hi - lo);
+                for r in 0..x.rows() {
+                    sx.row_mut(r).copy_from_slice(&x.row(r)[lo..hi]);
+                }
+                let st = match target {
+                    Target::Labels(l) => Target::Labels(l[lo..hi].to_vec()),
+                    Target::Dense(y) => {
+                        let mut sy = Matrix::zeros(y.rows(), hi - lo);
+                        for r in 0..y.rows() {
+                            sy.row_mut(r).copy_from_slice(&y.row(r)[lo..hi]);
+                        }
+                        Target::Dense(sy)
+                    }
+                };
+                (sx, st)
+            })
+            .collect();
+
+        let results: Vec<(f64, Vec<Capture>)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .replicas
+                .iter_mut()
+                .zip(&shards)
+                .map(|(replica, (sx, st))| {
+                    scope.spawn(move || {
+                        if sx.cols() == 0 {
+                            return (0.0f64, Vec::new());
+                        }
+                        let out = replica.forward(sx);
+                        let (loss, dldy) = match st {
+                            Target::Labels(l) => softmax_xent(&out, l),
+                            Target::Dense(y) => mse_loss(&out, y),
+                        };
+                        (loss, replica.backward(&dldy))
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        });
+
+        // ---- combine: loss mean + gradient all-reduce + A/G concat ------
+        let mut loss = 0.0f64;
+        let mut weight = 0.0f64;
+        for ((lo, hi), (l, _)) in ranges.iter().zip(&results) {
+            let n = (hi - lo) as f64;
+            loss += l * n;
+            weight += n;
+        }
+        loss /= weight.max(1.0);
+        if !loss.is_finite() {
+            self.mark_diverged(loss, lr, t0.elapsed().as_secs_f64());
+            return None;
+        }
+
+        let n_layers = self.replicas[0].layers.len();
+        let mut grad_bytes = 0usize;
+        let mut caps: Vec<Capture> = Vec::with_capacity(n_layers);
+        let t_comm = std::time::Instant::now();
+        for layer in 0..n_layers {
+            // All-reduce the per-worker weight gradients (real ring).
+            let mut bufs: Vec<Vec<f32>> = results
+                .iter()
+                .map(|(_, c)| {
+                    if c.is_empty() {
+                        vec![0.0; self.replicas[0].layers[layer].w.len()]
+                    } else {
+                        c[layer].dw.data().to_vec()
+                    }
+                })
+                .collect();
+            let stats = if self.cfg.quantized_grads {
+                allreduce_mean_bf16(&mut bufs)
+            } else {
+                allreduce_mean(&mut bufs)
+            };
+            grad_bytes += stats.bytes_per_worker;
+            let dw = Matrix::from_vec(
+                self.replicas[0].layers[layer].w.rows(),
+                self.replicas[0].layers[layer].w.cols(),
+                bufs[0].clone(),
+            );
+            // Bias gradients: plain mean (small).
+            let dout = self.replicas[0].layers[layer].w.rows();
+            let mut db = vec![0.0f32; dout];
+            let mut contributors = 0usize;
+            for (_, c) in &results {
+                if !c.is_empty() {
+                    contributors += 1;
+                    for (s, &v) in db.iter_mut().zip(&c[layer].db) {
+                        *s += v;
+                    }
+                }
+            }
+            for v in db.iter_mut() {
+                *v /= contributors.max(1) as f32;
+            }
+            // Concatenate A and G across workers (leader's global view).
+            let din = self.replicas[0].layers[layer].w.cols();
+            let total_cols: usize = results
+                .iter()
+                .filter(|(_, c)| !c.is_empty())
+                .map(|(_, c)| c[layer].a.cols())
+                .sum();
+            let mut a = Matrix::zeros(din, total_cols);
+            let mut g = Matrix::zeros(dout, total_cols);
+            let mut at = 0usize;
+            for (_, c) in &results {
+                if c.is_empty() {
+                    continue;
+                }
+                let ca = &c[layer].a;
+                let cg = &c[layer].g;
+                for col in 0..ca.cols() {
+                    for r in 0..din {
+                        a[(r, at + col)] = ca[(r, col)];
+                    }
+                    for r in 0..dout {
+                        g[(r, at + col)] = cg[(r, col)];
+                    }
+                }
+                at += ca.cols();
+            }
+            caps.push(Capture { a, g, dw, db });
+        }
+        self.phases.add("allreduce", t_comm.elapsed());
+
+        // ---- optimizer step on the leader -------------------------------
+        {
+            // Split so the optimizer borrows only the leader replica.
+            let (leader, _rest) = self.replicas.split_first_mut().unwrap();
+            self.opt.step(&mut leader.layers, &caps, lr, &mut self.phases);
+        }
+        self.opt.observe_loss(loss);
+        self.schedule.observe(self.t, loss);
+
+        if self.replicas[0].diverged() {
+            self.mark_diverged(loss, lr, t0.elapsed().as_secs_f64());
+            return None;
+        }
+
+        // ---- broadcast leader weights back to replicas ------------------
+        let t_bc = std::time::Instant::now();
+        let (leader, rest) = self.replicas.split_first_mut().unwrap();
+        for replica in rest {
+            for (dst, src) in replica.layers.iter_mut().zip(&leader.layers) {
+                dst.w.data_mut().copy_from_slice(src.w.data());
+                dst.bias.copy_from_slice(&src.bias);
+            }
+        }
+        self.phases.add("broadcast", t_bc.elapsed());
+
+        self.record.steps.push(StepRecord {
+            step: self.t,
+            loss,
+            eval_metric: None,
+            lr,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            grad_comm_bytes: grad_bytes,
+            sync_comm_bytes: self.opt.sync_bytes_last_step(),
+        });
+        self.t += 1;
+        Some(loss)
+    }
+
+    fn mark_diverged(&mut self, loss: f64, lr: f32, wall: f64) {
+        self.diverged = true;
+        self.record.diverged = true;
+        self.record.steps.push(StepRecord {
+            step: self.t,
+            loss,
+            eval_metric: None,
+            lr,
+            wall_secs: wall,
+            grad_comm_bytes: 0,
+            sync_comm_bytes: 0,
+        });
+        self.t += 1;
+    }
+
+    /// Evaluate on a held-out batch: returns (loss, accuracy-if-labeled)
+    /// and records the metric against the current step.
+    pub fn evaluate(&mut self, x: &Matrix, target: &Target) -> (f64, Option<f64>) {
+        let out = self.replicas[0].infer(x);
+        let (loss, metric) = match target {
+            Target::Labels(l) => {
+                let (loss, _) = softmax_xent(&out, l);
+                (loss, Some(accuracy(&out, l)))
+            }
+            Target::Dense(y) => {
+                let (loss, _) = mse_loss(&out, y);
+                (loss, None)
+            }
+        };
+        if let Some(rec) = self.record.steps.last_mut() {
+            rec.eval_metric = metric.or(Some(-loss));
+        }
+        // Track convergence against the target.
+        if self.record.converged_at.is_none() {
+            if let Some(target_m) = self.cfg.target_metric {
+                let reached = match target {
+                    Target::Labels(_) => metric.map_or(false, |m| m >= target_m),
+                    Target::Dense(_) => loss <= target_m,
+                };
+                if reached {
+                    self.record.converged_at = Some(self.t);
+                }
+            }
+        }
+        (loss, metric)
+    }
+
+    /// Whether the configured target has been reached.
+    pub fn converged(&self) -> bool {
+        self.record.converged_at.is_some()
+    }
+
+    /// Finish: fold phase totals into the record and return it.
+    pub fn finish(self) -> RunRecord {
+        self.record
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::classification::{Dataset, TaskConfig};
+    use crate::model::Activation;
+    use crate::optim::schedule::Constant;
+    use crate::util::Rng;
+
+    fn make_trainer_lr(
+        opt_name: &str,
+        workers: usize,
+        seed: u64,
+        lr: f32,
+    ) -> (Trainer, Dataset) {
+        let mut cfg = TaskConfig::new("t", 16, 3);
+        cfg.train = 256;
+        cfg.test = 128;
+        cfg.separation = 2.5;
+        cfg.seed = seed;
+        let ds = Dataset::generate(cfg);
+        let mut rng = Rng::new(seed);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let shapes = model.shapes();
+        let opt = crate::optim::by_name(opt_name, &shapes).unwrap();
+        let tcfg = TrainerConfig {
+            workers,
+            eval_every: 0,
+            target_metric: Some(0.8),
+            ..Default::default()
+        };
+        (Trainer::new(model, opt, Box::new(Constant(lr)), tcfg), ds)
+    }
+
+    fn make_trainer(opt_name: &str, workers: usize, seed: u64) -> (Trainer, Dataset) {
+        make_trainer_lr(opt_name, workers, seed, 0.1)
+    }
+
+    #[test]
+    fn trains_classification_to_high_accuracy() {
+        let (mut tr, ds) = make_trainer("sgd", 4, 1);
+        for epoch in 0..30 {
+            for b in ds.epoch_batches(64, epoch) {
+                tr.step(&b.x, &Target::Labels(b.labels.clone()));
+            }
+        }
+        let test = ds.test_batch();
+        let (_, acc) = tr.evaluate(&test.x, &Target::Labels(test.labels.clone()));
+        assert!(acc.unwrap() > 0.85, "acc={:?}", acc);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_the_math() {
+        // Same seed, 1 vs 4 workers: identical loss trajectory (all-reduce
+        // mean of shard gradients == global batch gradient).
+        let (mut t1, ds) = make_trainer("sgd", 1, 2);
+        let (mut t4, _) = make_trainer("sgd", 4, 2);
+        let mut l1 = Vec::new();
+        let mut l4 = Vec::new();
+        for b in ds.epoch_batches(64, 0) {
+            l1.push(t1.step(&b.x, &Target::Labels(b.labels.clone())).unwrap());
+            l4.push(t4.step(&b.x, &Target::Labels(b.labels.clone())).unwrap());
+        }
+        for (a, b) in l1.iter().zip(&l4) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn mkor_trains_and_records_sync_bytes() {
+        let (mut tr, ds) = make_trainer("mkor", 2, 3);
+        let mut first_loss = None;
+        let mut last = 0.0;
+        for epoch in 0..10 {
+            for b in ds.epoch_batches(64, epoch) {
+                if let Some(l) = tr.step(&b.x, &Target::Labels(b.labels.clone())) {
+                    first_loss.get_or_insert(l);
+                    last = l;
+                }
+            }
+        }
+        assert!(!tr.diverged());
+        assert!(last < 0.7 * first_loss.unwrap(), "{last} vs {first_loss:?}");
+        // Factor steps synced rank-1 vectors.
+        let synced: usize = tr.record.steps.iter().map(|s| s.sync_comm_bytes).sum();
+        assert!(synced > 0);
+        // Phase timer saw all three optimizer phases.
+        assert!(tr.phases.count("factor") > 0);
+        assert!(tr.phases.count("precond") > 0);
+        assert!(tr.phases.count("update") > 0);
+    }
+
+    #[test]
+    fn divergence_is_detected_and_halts() {
+        let (_, ds) = make_trainer("sgd", 2, 4);
+        // Absurd LR forces divergence.
+        let mut rng = Rng::new(4);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let shapes = model.shapes();
+        let mut tr = Trainer::new(
+            model,
+            crate::optim::by_name("sgd", &shapes).unwrap(),
+            Box::new(Constant(1e6)),
+            TrainerConfig { workers: 2, ..Default::default() },
+        );
+        let mut steps = 0;
+        'outer: for epoch in 0..50 {
+            for b in ds.epoch_batches(64, epoch) {
+                if tr.step(&b.x, &Target::Labels(b.labels.clone())).is_none() {
+                    break 'outer;
+                }
+                steps += 1;
+            }
+        }
+        assert!(tr.diverged(), "did not diverge after {steps} steps");
+        assert!(tr.record.diverged);
+        // Further steps are refused.
+        let b = &ds.epoch_batches(64, 0)[0];
+        assert!(tr.step(&b.x, &Target::Labels(b.labels.clone())).is_none());
+    }
+
+    #[test]
+    fn target_metric_marks_convergence() {
+        // Adam wants a much smaller LR than SGD on this task.
+        let (mut tr, ds) = make_trainer_lr("adam", 2, 5, 0.01);
+        let test = ds.test_batch();
+        for epoch in 0..40 {
+            for b in ds.epoch_batches(64, epoch) {
+                tr.step(&b.x, &Target::Labels(b.labels.clone()));
+            }
+            tr.evaluate(&test.x, &Target::Labels(test.labels.clone()));
+            if tr.converged() {
+                break;
+            }
+        }
+        assert!(tr.converged(), "never reached 0.8 accuracy");
+    }
+
+    #[test]
+    fn quantized_gradient_allreduce_still_trains() {
+        let mut cfg = TaskConfig::new("t", 16, 3);
+        cfg.train = 256;
+        cfg.seed = 6;
+        let ds = Dataset::generate(cfg);
+        let mut rng = Rng::new(6);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let shapes = model.shapes();
+        let mut tr = Trainer::new(
+            model,
+            crate::optim::by_name("sgd", &shapes).unwrap(),
+            Box::new(Constant(0.1)),
+            TrainerConfig { workers: 4, quantized_grads: true, ..Default::default() },
+        );
+        let mut first = None;
+        let mut last = 0.0;
+        for epoch in 0..15 {
+            for b in ds.epoch_batches(64, epoch) {
+                if let Some(l) = tr.step(&b.x, &Target::Labels(b.labels.clone())) {
+                    first.get_or_insert(l);
+                    last = l;
+                }
+            }
+        }
+        assert!(last < 0.8 * first.unwrap());
+    }
+}

@@ -1,0 +1,223 @@
+//! FLOPs → seconds: device throughput model + collective pricing.
+//!
+//! Different phases run at very different efficiencies on a GPU: dense
+//! matmul (fwd/bwd, preconditioning, covariance products) streams through
+//! tensor cores, while factor *inversions* (Cholesky/SVD/GJ) are
+//! latency-bound with tiny parallel sections. The paper quantifies this
+//! gap implicitly: a KAISA inversion iteration costs ~150× an SGD
+//! iteration on ResNet-50 (§3.3) — which our default rates reproduce (see
+//! the `kaisa_inversion_step_is_two_orders_costlier` test).
+
+use super::complexity::{fwd_bwd_flops, model_step_cost, OptimizerKind};
+use crate::collective::ClusterModel;
+use crate::model::specs::ModelSpec;
+
+/// Throughput parameters of one device class.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceModel {
+    /// Dense matmul effective FLOP/s (fwd/bwd, precondition, covariances).
+    pub matmul_flops: f64,
+    /// Matrix-inversion effective FLOP/s (Cholesky/GJ/SVD kernels).
+    pub inversion_flops: f64,
+    /// Elementwise/update effective FLOP/s (bandwidth-bound).
+    pub elementwise_flops: f64,
+}
+
+impl DeviceModel {
+    /// A100 (TF32 matmul ≈ 60 TF effective of 156 peak, inversions a few
+    /// hundred GF — cuSOLVER-style, bandwidth/latency bound).
+    pub fn a100() -> Self {
+        DeviceModel { matmul_flops: 60e12, inversion_flops: 0.35e12, elementwise_flops: 3e12 }
+    }
+
+    /// V100 (fp16/fp32 mixed ≈ 25 TF effective).
+    pub fn v100() -> Self {
+        DeviceModel { matmul_flops: 25e12, inversion_flops: 0.2e12, elementwise_flops: 2e12 }
+    }
+}
+
+/// The per-step time breakdown at paper scale (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTime {
+    pub fwd_bwd: f64,
+    pub factor: f64,
+    pub precond: f64,
+    pub update: f64,
+    pub grad_comm: f64,
+    pub sync_comm: f64,
+}
+
+impl StepTime {
+    pub fn total(&self) -> f64 {
+        self.fwd_bwd + self.factor + self.precond + self.update + self.grad_comm + self.sync_comm
+    }
+
+    /// Optimizer-only time (the Figure 3 bars: factor + precond + update).
+    pub fn optimizer_time(&self) -> f64 {
+        self.factor + self.precond + self.update
+    }
+}
+
+/// Price one step on `workers` devices with factor work on this step
+/// (`factor_step = true`) or skipped (stale factors).
+pub fn step_time(
+    kind: OptimizerKind,
+    spec: &ModelSpec,
+    samples_per_worker: usize,
+    workers: usize,
+    device: &DeviceModel,
+    cluster: &ClusterModel,
+    factor_step: bool,
+) -> StepTime {
+    let c = model_step_cost(kind, spec);
+    // Inversion-heavy optimizers split factor work: covariance/kernel
+    // products run at matmul rate, the d³/b³ inversion at inversion rate.
+    let (factor_matmul, factor_inv) = match kind {
+        OptimizerKind::Kfac => {
+            let b = spec.effective_batch as f64;
+            let cov: f64 = spec
+                .layers
+                .iter()
+                .map(|s| 2.0 * b * ((s.d_in * s.d_in + s.d_out * s.d_out) as f64))
+                .sum();
+            (cov, c.factor_flops - cov)
+        }
+        OptimizerKind::Sngd => {
+            let b = spec.effective_batch as f64;
+            let kernel_build: f64 = spec
+                .layers
+                .iter()
+                .map(|s| 2.0 * b * b * ((s.d_in + s.d_out) as f64))
+                .sum();
+            (kernel_build, c.factor_flops - kernel_build)
+        }
+        // MKOR/Eva factor work is matvec/rank-1 — runs at elementwise-ish
+        // rate but is so small it hardly matters; charge matmul rate.
+        _ => (c.factor_flops, 0.0),
+    };
+
+    // KAISA distributes factor inversions layer-wise across workers (each
+    // GPU inverts a subset and broadcasts); HyLo does the same for kernels.
+    // MKOR/Eva's factor work is replicated (it's cheaper than distributing).
+    let inv_parallel = match kind {
+        OptimizerKind::Kfac | OptimizerKind::Sngd => {
+            workers.min(spec.layers.len()).max(1) as f64
+        }
+        _ => 1.0,
+    };
+    let factor = if factor_step {
+        factor_matmul / device.matmul_flops
+            + factor_inv / device.inversion_flops / inv_parallel
+    } else {
+        0.0
+    };
+    let sync_comm = if factor_step {
+        cluster.allreduce_time(c.sync_bytes as usize, workers)
+    } else {
+        0.0
+    };
+
+    StepTime {
+        fwd_bwd: fwd_bwd_flops(spec, samples_per_worker) / device.matmul_flops,
+        factor,
+        precond: c.precond_flops / device.matmul_flops,
+        update: c.update_flops / device.elementwise_flops,
+        grad_comm: cluster.allreduce_time(c.grad_bytes as usize, workers),
+        sync_comm,
+    }
+}
+
+/// Average per-step time with factor steps every `f` iterations.
+pub fn amortized_step_time(
+    kind: OptimizerKind,
+    spec: &ModelSpec,
+    samples_per_worker: usize,
+    workers: usize,
+    device: &DeviceModel,
+    cluster: &ClusterModel,
+    f: usize,
+) -> StepTime {
+    let with = step_time(kind, spec, samples_per_worker, workers, device, cluster, true);
+    let without = step_time(kind, spec, samples_per_worker, workers, device, cluster, false);
+    let f = f.max(1) as f64;
+    StepTime {
+        fwd_bwd: without.fwd_bwd,
+        factor: with.factor / f,
+        precond: without.precond,
+        update: without.update,
+        grad_comm: without.grad_comm,
+        sync_comm: with.sync_comm / f,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::specs;
+
+    fn setup() -> (ModelSpec, DeviceModel, ClusterModel) {
+        (specs::resnet50(), DeviceModel::v100(), ClusterModel::mist_v100())
+    }
+
+    #[test]
+    fn kaisa_inversion_step_is_two_orders_costlier_than_sgd() {
+        // §3.3: "in an iteration that the inversion of factors is executed,
+        // the cost of KAISA and HyLo is 150× more than an SGD iteration"
+        // (full iteration, ResNet-50, 4 V100s). Our calibration should land
+        // in the same two-orders-of-magnitude regime.
+        let (spec, dev, cl) = setup();
+        let kfac = step_time(OptimizerKind::Kfac, &spec, 32, 4, &dev, &cl, true);
+        let sgd = step_time(OptimizerKind::Sgd, &spec, 32, 4, &dev, &cl, true);
+        let ratio = kfac.total() / sgd.total().max(1e-9);
+        assert!(ratio > 30.0 && ratio < 3000.0, "ratio={ratio}");
+        // And the overwhelming share of the optimizer time is the
+        // inversion (§3.3: "more than 98%").
+        assert!(kfac.factor / kfac.optimizer_time() > 0.9);
+    }
+
+    #[test]
+    fn mkor_factor_step_is_cheap() {
+        let (spec, dev, cl) = setup();
+        let mkor = step_time(OptimizerKind::Mkor, &spec, 32, 4, &dev, &cl, true);
+        let kfac = step_time(OptimizerKind::Kfac, &spec, 32, 4, &dev, &cl, true);
+        assert!(kfac.factor > 20.0 * mkor.factor, "kfac={} mkor={}", kfac.factor, mkor.factor);
+    }
+
+    #[test]
+    fn mkor_amortized_time_is_flat_in_f_kaisa_is_not() {
+        // Figure 4a: KAISA's average iteration cost depends strongly on f;
+        // MKOR's barely moves.
+        let (spec, dev, cl) = setup();
+        let m1 = amortized_step_time(OptimizerKind::Mkor, &spec, 32, 4, &dev, &cl, 1).total();
+        let m100 = amortized_step_time(OptimizerKind::Mkor, &spec, 32, 4, &dev, &cl, 100).total();
+        let k1 = amortized_step_time(OptimizerKind::Kfac, &spec, 32, 4, &dev, &cl, 1).total();
+        let k100 = amortized_step_time(OptimizerKind::Kfac, &spec, 32, 4, &dev, &cl, 100).total();
+        assert!(m1 / m100 < 1.3, "mkor f-sensitivity {}", m1 / m100);
+        assert!(k1 / k100 > 3.0, "kaisa f-sensitivity {}", k1 / k100);
+    }
+
+    #[test]
+    fn bert_factor_cost_dominates_kaisa_more_than_resnet() {
+        // Figure 3's contrast: on BERT-Large (large d) KAISA's inversion
+        // share is larger than on ResNet-50.
+        let dev = DeviceModel::a100();
+        let cl = ClusterModel::polaris_a100();
+        let bert = specs::bert_large();
+        let rn = specs::resnet50();
+        let kb = step_time(OptimizerKind::Kfac, &bert, 8, 64, &dev, &cl, true);
+        let kr = step_time(OptimizerKind::Kfac, &rn, 32, 64, &dev, &cl, true);
+        assert!(kb.factor > kr.factor);
+    }
+
+    #[test]
+    fn mkor_scales_better_than_kaisa_at_64_workers() {
+        // Figure 9's mechanism: at 64 workers KFAC's O(d²) factor sync is
+        // expensive, MKOR's O(d) is negligible.
+        let dev = DeviceModel::a100();
+        let cl = ClusterModel::polaris_a100();
+        let bert = specs::bert_large();
+        let m = step_time(OptimizerKind::Mkor, &bert, 8, 64, &dev, &cl, true);
+        let k = step_time(OptimizerKind::Kfac, &bert, 8, 64, &dev, &cl, true);
+        assert!(k.sync_comm > 100.0 * m.sync_comm.max(1e-12));
+    }
+}

@@ -1,0 +1,209 @@
+//! Template-plus-noise "image" data — CIFAR/ImageNet stand-ins for the
+//! autoencoder (Figure 4) and CNN-proxy (Figure 6, Table 5, Figures 11/12c)
+//! experiments.
+//!
+//! Samples are mixtures of a small dictionary of smooth 2-D templates plus
+//! pixel noise: like natural images they are compressible (an autoencoder
+//! can reduce reconstruction loss far below the noise-free input variance)
+//! and class-structured (a classifier proxy can exceed chance by a large
+//! margin), while the covariance of activations stays low-rank.
+
+use crate::data::{Batch, DenseBatch};
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// Synthetic image dataset config.
+#[derive(Clone, Debug)]
+pub struct ImageConfig {
+    /// Image edge; samples are side×side flattened to side².
+    pub side: usize,
+    pub classes: usize,
+    /// Templates per class.
+    pub templates_per_class: usize,
+    pub noise: f32,
+    pub seed: u64,
+}
+
+impl Default for ImageConfig {
+    fn default() -> Self {
+        ImageConfig { side: 16, classes: 10, templates_per_class: 3, noise: 0.25, seed: 0 }
+    }
+}
+
+/// Streamed generator (no materialized dataset needed for the convergence
+/// experiments, which draw fresh batches each step like the paper's
+/// large-corpus settings).
+pub struct ImageGen {
+    cfg: ImageConfig,
+    /// `templates[c][k]` is a flattened side² template.
+    templates: Vec<Vec<Vec<f32>>>,
+    rng: Rng,
+}
+
+impl ImageGen {
+    pub fn new(cfg: ImageConfig, seed: u64) -> Self {
+        let mut trng = Rng::new(cfg.seed ^ 0x1A2B3C);
+        let d = cfg.side * cfg.side;
+        let mut templates = Vec::with_capacity(cfg.classes);
+        for _ in 0..cfg.classes {
+            let mut per_class = Vec::with_capacity(cfg.templates_per_class);
+            for _ in 0..cfg.templates_per_class {
+                per_class.push(smooth_template(cfg.side, &mut trng));
+            }
+            templates.push(per_class);
+        }
+        debug_assert!(templates.iter().all(|t| t.iter().all(|v| v.len() == d)));
+        ImageGen { cfg, templates, rng: Rng::new(seed ^ 0x99AA) }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.cfg.side * self.cfg.side
+    }
+
+    pub fn classes(&self) -> usize {
+        self.cfg.classes
+    }
+
+    /// Draw one sample; returns (pixels, class).
+    fn sample(&mut self) -> (Vec<f32>, usize) {
+        let c = self.rng.next_below(self.cfg.classes as u64) as usize;
+        let k = self.rng.next_below(self.cfg.templates_per_class as u64) as usize;
+        let amp = 0.6 + 0.8 * self.rng.next_f32();
+        let mut px: Vec<f32> = self.templates[c][k].iter().map(|&t| amp * t).collect();
+        for p in px.iter_mut() {
+            *p += self.rng.gaussian_f32() * self.cfg.noise;
+        }
+        (px, c)
+    }
+
+    /// Classification batch (Figure 6 / Table 5 proxies).
+    pub fn next_batch(&mut self, b: usize) -> Batch {
+        let d = self.dim();
+        let mut x = Matrix::zeros(d, b);
+        let mut labels = Vec::with_capacity(b);
+        for col in 0..b {
+            let (px, c) = self.sample();
+            for (i, &v) in px.iter().enumerate() {
+                x[(i, col)] = v;
+            }
+            labels.push(c);
+        }
+        Batch { x, labels }
+    }
+
+    /// Autoencoder batch: targets are the *clean* template mixtures, so the
+    /// optimum is denoising and the loss floor is the noise variance.
+    pub fn next_autoencoder_batch(&mut self, b: usize) -> DenseBatch {
+        let d = self.dim();
+        let mut x = Matrix::zeros(d, b);
+        let mut y = Matrix::zeros(d, b);
+        for col in 0..b {
+            let c = self.rng.next_below(self.cfg.classes as u64) as usize;
+            let k = self.rng.next_below(self.cfg.templates_per_class as u64) as usize;
+            let amp = 0.6 + 0.8 * self.rng.next_f32();
+            for i in 0..d {
+                let clean = amp * self.templates[c][k][i];
+                y[(i, col)] = clean;
+                x[(i, col)] = clean + self.rng.gaussian_f32() * self.cfg.noise;
+            }
+        }
+        DenseBatch { x, y }
+    }
+}
+
+/// A smooth random template: sum of a few 2-D cosine modes (low spatial
+/// frequency, like the coarse structure of real images).
+fn smooth_template(side: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut t = vec![0.0f32; side * side];
+    let modes = 4;
+    for _ in 0..modes {
+        let fx = 1.0 + rng.next_below(3) as f32;
+        let fy = 1.0 + rng.next_below(3) as f32;
+        let phx = rng.next_f32() * std::f32::consts::TAU;
+        let phy = rng.next_f32() * std::f32::consts::TAU;
+        let amp = rng.gaussian_f32() * 0.5;
+        for y in 0..side {
+            for x in 0..side {
+                let v = amp
+                    * ((fx * x as f32 / side as f32) * std::f32::consts::TAU + phx).cos()
+                    * ((fy * y as f32 / side as f32) * std::f32::consts::TAU + phy).cos();
+                t[y * side + x] += v;
+            }
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let mut g = ImageGen::new(ImageConfig::default(), 1);
+        let b = g.next_batch(12);
+        assert_eq!(b.x.rows(), 256);
+        assert_eq!(b.x.cols(), 12);
+        assert!(b.labels.iter().all(|&c| c < 10));
+    }
+
+    #[test]
+    fn autoencoder_targets_are_cleaner_than_inputs() {
+        let mut g = ImageGen::new(ImageConfig { noise: 0.5, ..Default::default() }, 2);
+        let b = g.next_autoencoder_batch(32);
+        // x = y + noise ⇒ E‖x−y‖² ≈ d·σ².
+        let d = 256.0f64;
+        let mut mse = 0.0f64;
+        for col in 0..32 {
+            for i in 0..256 {
+                let e = (b.x[(i, col)] - b.y[(i, col)]) as f64;
+                mse += e * e;
+            }
+        }
+        mse /= 32.0 * d;
+        assert!((mse - 0.25).abs() < 0.05, "mse={mse}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Same-class samples correlate more than cross-class on average.
+        let mut g = ImageGen::new(ImageConfig { noise: 0.1, ..Default::default() }, 3);
+        let b = g.next_batch(200);
+        let corr = |i: usize, j: usize| -> f64 {
+            let (mut num, mut ni, mut nj) = (0.0f64, 0.0f64, 0.0f64);
+            for r in 0..256 {
+                let a = b.x[(r, i)] as f64;
+                let c = b.x[(r, j)] as f64;
+                num += a * c;
+                ni += a * a;
+                nj += c * c;
+            }
+            num / (ni.sqrt() * nj.sqrt() + 1e-12)
+        };
+        let (mut same, mut same_n, mut diff, mut diff_n) = (0.0, 0, 0.0, 0);
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let c = corr(i, j).abs();
+                if b.labels[i] == b.labels[j] {
+                    same += c;
+                    same_n += 1;
+                } else {
+                    diff += c;
+                    diff_n += 1;
+                }
+            }
+        }
+        let same = same / same_n.max(1) as f64;
+        let diff = diff / diff_n.max(1) as f64;
+        assert!(same > diff, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn deterministic_templates() {
+        let mut a = ImageGen::new(ImageConfig::default(), 9);
+        let mut b = ImageGen::new(ImageConfig::default(), 9);
+        let ba = a.next_batch(4);
+        let bb = b.next_batch(4);
+        assert_eq!(ba.x.max_abs_diff(&bb.x), 0.0);
+    }
+}

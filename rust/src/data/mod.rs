@@ -1,0 +1,43 @@
+//! Synthetic workload generators.
+//!
+//! The paper evaluates on Wikipedia+BookCorpus (BERT pre-training), SQuAD and
+//! GLUE (fine-tuning), ImageNet/CIFAR (ResNet/AlexNet). None of those can be
+//! shipped here, so each is replaced by a generator that preserves the
+//! property the optimizer interacts with (DESIGN.md §3):
+//!
+//! * [`text`] — a Markov chain with Zipfian emission marginals: token
+//!   frequencies follow a power law (like natural language) and there is
+//!   learnable sequential structure, so masked-LM loss decreases with
+//!   training and differentiates optimizers.
+//! * [`classification`] — Gaussian-mixture tasks with controllable class
+//!   count/separation/input rank: GLUE proxies of graded difficulty, and
+//!   low-rank inputs reproduce the low-rank covariance regime of Figure 5.
+//! * [`images`] — template-plus-noise "images" for the autoencoder and
+//!   CNN-proxy experiments (CIFAR/ImageNet stand-ins).
+
+pub mod classification;
+pub mod images;
+pub mod text;
+
+use crate::linalg::Matrix;
+
+/// A supervised batch in column-sample layout (`x`: d×b, one column per
+/// sample) with integer labels. This matches the paper's `A ∈ R^{d×b}`.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+}
+
+impl Batch {
+    pub fn batch_size(&self) -> usize {
+        self.x.cols()
+    }
+}
+
+/// A regression/reconstruction batch (targets are dense).
+#[derive(Clone, Debug)]
+pub struct DenseBatch {
+    pub x: Matrix,
+    pub y: Matrix,
+}

@@ -1,0 +1,256 @@
+//! Markov–Zipf synthetic token corpus and masked-LM batches.
+//!
+//! The generator draws a hidden first-order Markov chain over `states`
+//! latent topics; each topic emits tokens from its own Zipfian distribution
+//! over a shared vocabulary. The result has (a) power-law unigram
+//! frequencies, (b) genuine sequential structure a model can learn, and
+//! (c) a tunable entropy floor — which is what makes steps-to-target-loss a
+//! meaningful optimizer metric on it.
+//!
+//! Two consumers: the Rust-native MLP proxies (dense bag-of-context
+//! features via [`MlmBatchGen::next_dense`]) and the XLA transformer
+//! (token-id batches via [`MlmBatchGen::next_tokens`], fed to the
+//! `train_step` artifact).
+
+use crate::linalg::Matrix;
+use crate::util::rng::{Rng, Zipf};
+
+/// Corpus generator configuration.
+#[derive(Clone, Debug)]
+pub struct TextConfig {
+    pub vocab: usize,
+    /// Hidden Markov states (topics).
+    pub states: usize,
+    /// Zipf exponent for per-state emission distributions.
+    pub zipf_s: f64,
+    /// Probability of staying in the current state.
+    pub stickiness: f64,
+    pub seed: u64,
+}
+
+impl Default for TextConfig {
+    fn default() -> Self {
+        TextConfig { vocab: 1024, states: 16, zipf_s: 1.1, stickiness: 0.85, seed: 0 }
+    }
+}
+
+/// The corpus process: hidden Markov chain + per-state Zipfian emissions.
+pub struct Corpus {
+    cfg: TextConfig,
+    /// Per-state permutation of token ranks, so states emit different tokens.
+    state_perm: Vec<Vec<usize>>,
+    zipf: Zipf,
+}
+
+impl Corpus {
+    pub fn new(cfg: TextConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed ^ 0xC0FFEE);
+        let state_perm = (0..cfg.states).map(|_| rng.permutation(cfg.vocab)).collect();
+        let zipf = Zipf::new(cfg.vocab, cfg.zipf_s);
+        Corpus { cfg, state_perm, zipf }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    /// Sample a token sequence of length `len`.
+    pub fn sample_sequence(&self, len: usize, rng: &mut Rng) -> Vec<u32> {
+        let mut state = rng.next_below(self.cfg.states as u64) as usize;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            if rng.next_f64() > self.cfg.stickiness {
+                state = rng.next_below(self.cfg.states as u64) as usize;
+            }
+            let rank = self.zipf.sample(rng);
+            out.push(self.state_perm[state][rank] as u32);
+        }
+        out
+    }
+}
+
+/// Masked-LM batch generator over a [`Corpus`].
+pub struct MlmBatchGen {
+    corpus: Corpus,
+    pub seq_len: usize,
+    pub mask_prob: f64,
+    /// Token id reserved for [MASK] (vocab-1 by convention here).
+    pub mask_id: u32,
+    rng: Rng,
+}
+
+/// A token-level MLM batch: `tokens[b][t]` already has masks applied;
+/// `targets[b][t]` is the original token where masked, `u32::MAX` elsewhere.
+#[derive(Clone, Debug)]
+pub struct TokenBatch {
+    pub tokens: Vec<Vec<u32>>,
+    pub targets: Vec<Vec<u32>>,
+}
+
+impl TokenBatch {
+    /// Flatten to i32 buffers for the XLA runtime (masked positions in
+    /// `target_mask` are 1.0). Targets at unmasked positions are 0.
+    pub fn to_flat(&self) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut toks = Vec::new();
+        let mut tgts = Vec::new();
+        let mut mask = Vec::new();
+        for (ts, gs) in self.tokens.iter().zip(&self.targets) {
+            for (&t, &g) in ts.iter().zip(gs) {
+                toks.push(t as i32);
+                if g == u32::MAX {
+                    tgts.push(0);
+                    mask.push(0.0);
+                } else {
+                    tgts.push(g as i32);
+                    mask.push(1.0);
+                }
+            }
+        }
+        (toks, tgts, mask)
+    }
+}
+
+impl MlmBatchGen {
+    pub fn new(cfg: TextConfig, seq_len: usize, mask_prob: f64, seed: u64) -> Self {
+        let mask_id = (cfg.vocab - 1) as u32;
+        MlmBatchGen {
+            corpus: Corpus::new(cfg),
+            seq_len,
+            mask_prob,
+            mask_id,
+            rng: Rng::new(seed ^ 0xBEEF),
+        }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.corpus.vocab()
+    }
+
+    /// Next batch of `b` masked sequences (for the transformer path).
+    pub fn next_tokens(&mut self, b: usize) -> TokenBatch {
+        let mut tokens = Vec::with_capacity(b);
+        let mut targets = Vec::with_capacity(b);
+        for _ in 0..b {
+            let seq = self.corpus.sample_sequence(self.seq_len, &mut self.rng);
+            let mut masked = seq.clone();
+            let mut tgt = vec![u32::MAX; self.seq_len];
+            let mut any = false;
+            for t in 0..self.seq_len {
+                if self.rng.next_f64() < self.mask_prob {
+                    tgt[t] = seq[t];
+                    masked[t] = self.mask_id;
+                    any = true;
+                }
+            }
+            if !any {
+                // Guarantee at least one prediction target per sequence.
+                let t = self.rng.next_below(self.seq_len as u64) as usize;
+                tgt[t] = seq[t];
+                masked[t] = self.mask_id;
+            }
+            tokens.push(masked);
+            targets.push(tgt);
+        }
+        TokenBatch { tokens, targets }
+    }
+
+    /// Next dense batch for the MLP proxy: predict the token at a masked
+    /// position from a bag-of-context feature vector (normalized counts of
+    /// the `window` surrounding tokens, hashed into `feat_dim` buckets).
+    pub fn next_dense(&mut self, b: usize, feat_dim: usize, window: usize) -> crate::data::Batch {
+        let mut x = Matrix::zeros(feat_dim, b);
+        let mut labels = Vec::with_capacity(b);
+        for col in 0..b {
+            let seq = self.corpus.sample_sequence(self.seq_len, &mut self.rng);
+            let pos = self.rng.next_below(self.seq_len as u64) as usize;
+            labels.push(seq[pos] as usize);
+            let lo = pos.saturating_sub(window);
+            let hi = (pos + window + 1).min(self.seq_len);
+            let mut count = 0.0f32;
+            for (t, &tok) in seq.iter().enumerate().take(hi).skip(lo) {
+                if t == pos {
+                    continue;
+                }
+                // Direct token-count features (exact when feat_dim ≥ vocab,
+                // folded otherwise). Zipfian token frequencies make these
+                // features strongly anisotropic — the ill-conditioned
+                // activation-covariance regime second-order methods target.
+                x[(tok as usize % feat_dim, col)] += 1.0;
+                count += 1.0;
+            }
+            if count > 0.0 {
+                for i in 0..feat_dim {
+                    x[(i, col)] /= count;
+                }
+            }
+        }
+        crate::data::Batch { x, labels }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_are_deterministic_per_seed() {
+        let c1 = Corpus::new(TextConfig::default());
+        let c2 = Corpus::new(TextConfig::default());
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(c1.sample_sequence(64, &mut r1), c2.sample_sequence(64, &mut r2));
+    }
+
+    #[test]
+    fn unigram_distribution_is_skewed() {
+        let c = Corpus::new(TextConfig { vocab: 256, ..Default::default() });
+        let mut rng = Rng::new(2);
+        let mut counts = vec![0usize; 256];
+        for _ in 0..200 {
+            for t in c.sample_sequence(128, &mut rng) {
+                counts[t as usize] += 1;
+            }
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let top10: usize = counts[..10].iter().sum();
+        let total: usize = counts.iter().sum();
+        // Zipf(1.1) over 256 symbols concentrates far more than uniform
+        // (uniform would put ~3.9% in the top 10).
+        assert!(top10 as f64 / total as f64 > 0.15, "top10 frac {}", top10 as f64 / total as f64);
+    }
+
+    #[test]
+    fn mlm_masks_are_marked() {
+        let mut g = MlmBatchGen::new(TextConfig::default(), 32, 0.15, 3);
+        let b = g.next_tokens(4);
+        assert_eq!(b.tokens.len(), 4);
+        for (ts, gs) in b.tokens.iter().zip(&b.targets) {
+            let masked = gs.iter().filter(|&&x| x != u32::MAX).count();
+            assert!(masked >= 1);
+            for (t, g) in ts.iter().zip(gs) {
+                if *g != u32::MAX {
+                    assert_eq!(*t, 1023); // mask_id = vocab-1
+                }
+            }
+        }
+        let (toks, tgts, mask) = b.to_flat();
+        assert_eq!(toks.len(), 4 * 32);
+        assert_eq!(tgts.len(), toks.len());
+        let nmask: f32 = mask.iter().sum();
+        assert!(nmask >= 4.0);
+    }
+
+    #[test]
+    fn dense_batches_shaped_and_normalized() {
+        let mut g = MlmBatchGen::new(TextConfig::default(), 64, 0.15, 4);
+        let b = g.next_dense(8, 100, 5);
+        assert_eq!(b.x.rows(), 100);
+        assert_eq!(b.x.cols(), 8);
+        assert_eq!(b.labels.len(), 8);
+        for col in 0..8 {
+            let s: f32 = (0..100).map(|i| b.x[(i, col)]).sum();
+            assert!((s - 1.0).abs() < 1e-4 || s == 0.0, "col sum {s}");
+            assert!(b.labels[col] < 1024);
+        }
+    }
+}

@@ -1,0 +1,355 @@
+//! Proxy-convergence runner: train a proxy model under any optimizer and
+//! record loss/metric trajectories — the measurement behind Tables 2/3/5
+//! and Figures 2/4b/6/11/12.
+
+use crate::coordinator::{Target, Trainer, TrainerConfig};
+use crate::data::classification::{Dataset, TaskConfig};
+use crate::data::images::{ImageConfig, ImageGen};
+use crate::data::text::{MlmBatchGen, TextConfig};
+use crate::model::{Activation, Mlp};
+use crate::optim::schedule::Constant;
+use crate::util::Rng;
+
+/// The proxy workloads.
+#[derive(Clone, Debug)]
+pub enum TaskKind {
+    /// Masked-token prediction from bag-of-context features — the
+    /// BERT-pre-training / SQuAD / IMDB stand-in (vocab classes).
+    TextClass { feat_dim: usize, vocab: usize },
+    /// Template-image classification — ResNet/AlexNet stand-in.
+    Images,
+    /// Denoising autoencoder — the paper's own Figure 4 workload.
+    Autoencoder,
+    /// A materialized Gaussian-mixture task (GLUE proxies).
+    Glue(TaskConfig),
+}
+
+/// Result of one run.
+#[derive(Clone, Debug, Default)]
+pub struct ConvergenceResult {
+    pub optimizer: String,
+    /// Training loss per step.
+    pub losses: Vec<f64>,
+    /// (step, eval metric) pairs; metric = accuracy or −eval-loss.
+    pub evals: Vec<(usize, f64)>,
+    pub diverged: bool,
+    /// Mean wall seconds per step (local, proxy scale).
+    pub step_secs: f64,
+    /// Optimizer-phase seconds totals: (factor, precond, update).
+    pub phase_secs: (f64, f64, f64),
+    /// Total second-order sync bytes.
+    pub sync_bytes: usize,
+}
+
+impl ConvergenceResult {
+    /// First step at which train loss ≤ target (EMA-smoothed over 5).
+    pub fn steps_to_loss(&self, target: f64) -> Option<usize> {
+        let w = 5usize;
+        for i in 0..self.losses.len() {
+            let lo = i.saturating_sub(w - 1);
+            let mean = self.losses[lo..=i].iter().sum::<f64>() / (i - lo + 1) as f64;
+            if mean <= target {
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    /// First eval step at which the metric ≥ target.
+    pub fn steps_to_metric(&self, target: f64) -> Option<usize> {
+        self.evals.iter().find(|(_, m)| *m >= target).map(|(s, _)| *s)
+    }
+
+    pub fn final_metric(&self) -> Option<f64> {
+        self.evals.last().map(|(_, m)| *m)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.losses.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+/// Options for [`run_convergence`].
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub lr: f32,
+    pub steps: usize,
+    pub workers: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Override the optimizer's factor-update period (second-order only).
+    pub inv_freq: Option<usize>,
+    /// Override MKOR's factor momentum γ (proxy runs are short, so a
+    /// smaller γ than the paper's long-run value lets the factors adapt
+    /// within the budget).
+    pub gamma: Option<f32>,
+    /// Hidden widths of the proxy model.
+    pub hidden: Vec<usize>,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            lr: 0.1,
+            steps: 300,
+            workers: 2,
+            batch: 64,
+            seed: 0,
+            eval_every: 10,
+            inv_freq: None,
+            gamma: Some(0.9),
+            hidden: vec![128, 64],
+        }
+    }
+}
+
+fn build_optimizer(
+    name: &str,
+    shapes: &[crate::model::LayerShape],
+    inv_freq: Option<usize>,
+    gamma: Option<f32>,
+) -> Box<dyn crate::optim::Optimizer + Send> {
+    use crate::optim::{eva, kfac, sngd, Mkor, MkorConfig, MkorH};
+    match (name, inv_freq) {
+        ("mkor", f) => {
+            let mut c = MkorConfig::default();
+            if let Some(f) = f {
+                c.inv_freq = f;
+            }
+            if let Some(g) = gamma {
+                c.gamma = g;
+            }
+            Box::new(Mkor::new(shapes, c))
+        }
+        ("mkor-h", f) => {
+            let mut c = MkorConfig::default();
+            if let Some(f) = f {
+                c.inv_freq = f;
+            }
+            if let Some(g) = gamma {
+                c.gamma = g;
+            }
+            Box::new(MkorH::new(shapes, c, crate::optim::hybrid::SwitchConfig::default()))
+        }
+        ("kfac" | "kaisa", f) => {
+            let mut c = kfac::KfacConfig::default();
+            if let Some(f) = f {
+                c.inv_freq = f;
+            }
+            Box::new(kfac::Kfac::new(shapes, c))
+        }
+        ("sngd" | "hylo", f) => {
+            let mut c = sngd::SngdConfig::default();
+            if let Some(f) = f {
+                c.inv_freq = f;
+            }
+            Box::new(sngd::Sngd::new(shapes, c))
+        }
+        ("eva", _) => Box::new(eva::Eva::new(shapes, eva::EvaConfig::default())),
+        (other, _) => crate::optim::by_name(other, shapes)
+            .unwrap_or_else(|| panic!("unknown optimizer `{other}`")),
+    }
+}
+
+/// Train a proxy model and record its trajectory.
+pub fn run_convergence(task: &TaskKind, opt_name: &str, opts: &RunOpts) -> ConvergenceResult {
+    let mut rng = Rng::new(opts.seed);
+
+    // Workload-specific batch source + eval source + model dims.
+    enum Src {
+        Text(MlmBatchGen, usize),
+        Img(ImageGen),
+        Auto(ImageGen),
+        Glue(Dataset, u64, Vec<crate::data::Batch>),
+    }
+    let (mut src, dims): (Src, Vec<usize>) = match task {
+        TaskKind::TextClass { feat_dim, vocab } => {
+            let gen = MlmBatchGen::new(
+                TextConfig { vocab: *vocab, seed: opts.seed, ..Default::default() },
+                64,
+                0.15,
+                opts.seed ^ 0x7E,
+            );
+            let mut dims = vec![*feat_dim];
+            dims.extend(&opts.hidden);
+            dims.push(*vocab);
+            (Src::Text(gen, *feat_dim), dims)
+        }
+        TaskKind::Images => {
+            let gen = ImageGen::new(ImageConfig::default(), opts.seed);
+            let mut dims = vec![gen.dim()];
+            dims.extend(&opts.hidden);
+            dims.push(gen.classes());
+            (Src::Img(gen), dims)
+        }
+        TaskKind::Autoencoder => {
+            let gen = ImageGen::new(ImageConfig::default(), opts.seed);
+            let d = gen.dim();
+            let mut dims = vec![d];
+            dims.extend(&opts.hidden);
+            dims.push(d);
+            (Src::Auto(gen), dims)
+        }
+        TaskKind::Glue(cfg) => {
+            let ds = Dataset::generate(cfg.clone());
+            let mut dims = vec![cfg.dim];
+            dims.extend(&opts.hidden);
+            dims.push(cfg.classes);
+            (Src::Glue(ds, 0, Vec::new()), dims)
+        }
+    };
+
+    let act = match task {
+        TaskKind::Autoencoder => Activation::Tanh,
+        TaskKind::TextClass { .. } => Activation::Gelu,
+        _ => Activation::Relu,
+    };
+    let model = Mlp::new(&dims, act, &mut rng);
+    let shapes = model.shapes();
+    let opt = build_optimizer(opt_name, &shapes, opts.inv_freq, opts.gamma);
+    let mut trainer = Trainer::new(
+        model,
+        opt,
+        Box::new(Constant(opts.lr)),
+        TrainerConfig {
+            workers: opts.workers,
+            run_name: format!("{opt_name}"),
+            ..Default::default()
+        },
+    );
+
+    let mut next = |src: &mut Src, b: usize| -> (crate::linalg::Matrix, Target) {
+        match src {
+            Src::Text(gen, feat) => {
+                let batch = gen.next_dense(b, *feat, 6);
+                (batch.x, Target::Labels(batch.labels))
+            }
+            Src::Img(gen) => {
+                let batch = gen.next_batch(b);
+                (batch.x, Target::Labels(batch.labels))
+            }
+            Src::Auto(gen) => {
+                let batch = gen.next_autoencoder_batch(b);
+                (batch.x, Target::Dense(batch.y))
+            }
+            Src::Glue(ds, epoch, queue) => {
+                if queue.is_empty() {
+                    *queue = ds.epoch_batches(b, *epoch);
+                    *epoch += 1;
+                }
+                let batch = queue.pop().unwrap();
+                (batch.x, Target::Labels(batch.labels))
+            }
+        }
+    };
+
+    // Held-out eval batch (fresh draw / test split).
+    let eval = match &mut src {
+        Src::Glue(ds, _, _) => {
+            let t = ds.test_batch();
+            Some((t.x, Target::Labels(t.labels)))
+        }
+        s => {
+            let (x, t) = next(s, 256);
+            Some((x, t))
+        }
+    };
+
+    let mut result = ConvergenceResult {
+        optimizer: opt_name.to_string(),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    for step in 0..opts.steps {
+        let (x, target) = next(&mut src, opts.batch);
+        match trainer.step(&x, &target) {
+            Some(loss) => result.losses.push(loss),
+            None => {
+                result.diverged = true;
+                break;
+            }
+        }
+        if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+            if let Some((ex, et)) = &eval {
+                let (l, acc) = trainer.evaluate(ex, et);
+                result.evals.push((step, acc.unwrap_or(-l)));
+            }
+        }
+    }
+    let n = result.losses.len().max(1);
+    result.step_secs = t0.elapsed().as_secs_f64() / n as f64;
+    result.phase_secs = (
+        trainer.phases.total_secs("factor"),
+        trainer.phases.total_secs("precond"),
+        trainer.phases.total_secs("update"),
+    );
+    let rec = trainer.finish();
+    result.sync_bytes = rec.steps.iter().map(|s| s.sync_comm_bytes).sum();
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn text_task_trains_under_mkor_and_sgd() {
+        let task = TaskKind::TextClass { feat_dim: 96, vocab: 64 };
+        let opts = RunOpts { steps: 60, hidden: vec![64], ..Default::default() };
+        for name in ["sgd", "mkor"] {
+            let r = run_convergence(&task, name, &opts);
+            assert!(!r.diverged, "{name}");
+            assert_eq!(r.losses.len(), 60);
+            assert!(r.final_loss() < r.losses[0], "{name}: no improvement");
+        }
+    }
+
+    #[test]
+    fn autoencoder_reduces_mse() {
+        let r = run_convergence(
+            &TaskKind::Autoencoder,
+            "mkor",
+            &RunOpts { steps: 50, lr: 0.05, hidden: vec![64, 16, 64], ..Default::default() },
+        );
+        assert!(!r.diverged);
+        assert!(r.final_loss() < 0.8 * r.losses[0]);
+        // MKOR synced rank-1 vectors on its factor steps.
+        assert!(r.sync_bytes > 0);
+    }
+
+    #[test]
+    fn steps_to_loss_and_metric() {
+        let r = ConvergenceResult {
+            losses: vec![3.0, 2.0, 1.0, 0.5, 0.4],
+            evals: vec![(9, 0.5), (19, 0.9)],
+            ..Default::default()
+        };
+        assert_eq!(r.steps_to_metric(0.85), Some(19));
+        assert!(r.steps_to_loss(1.5).is_some());
+        assert_eq!(r.steps_to_loss(0.01), None);
+    }
+
+    #[test]
+    fn divergence_detected_with_huge_lr() {
+        let r = run_convergence(
+            &TaskKind::Images,
+            "sgd",
+            &RunOpts { steps: 100, lr: 1e6, hidden: vec![32], ..Default::default() },
+        );
+        assert!(r.diverged);
+    }
+
+    #[test]
+    fn inv_freq_override_changes_sync_cadence() {
+        let task = TaskKind::Images;
+        let base = RunOpts { steps: 40, hidden: vec![32], ..Default::default() };
+        let mut o1 = base.clone();
+        o1.inv_freq = Some(1);
+        let mut o40 = base.clone();
+        o40.inv_freq = Some(40);
+        let r1 = run_convergence(&task, "mkor", &o1);
+        let r40 = run_convergence(&task, "mkor", &o40);
+        assert!(r1.sync_bytes > 10 * r40.sync_bytes.max(1));
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared experiment runners used by the `cargo bench` targets that
+//! regenerate the paper's tables and figures (DESIGN.md §4).
+//!
+//! Each runner is a thin composition of the substrates: a workload
+//! generator ([`crate::data`]), the data-parallel [`crate::coordinator`],
+//! one of the [`crate::optim`] optimizers, and (for wall-clock numbers at
+//! paper scale) the calibrated [`crate::costmodel`].
+
+pub mod convergence;
+pub mod spectra;
+
+pub use convergence::{run_convergence, ConvergenceResult, TaskKind};

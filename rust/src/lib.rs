@@ -1,0 +1,39 @@
+//! # MKOR — Momentum-Enabled Kronecker-Factor-Based Optimizer Using Rank-1 Updates
+//!
+//! Full-system reproduction of the NeurIPS 2023 paper as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: data-parallel
+//!   workers, ring all-reduce (fp32 + bf16-quantized rank-1 sync), the
+//!   inversion-frequency scheduler, the MKOR-H loss-rate switcher, the
+//!   norm-based stabilizer, metrics and the CLI.
+//! * **L2 (JAX, build time)** — transformer fwd/bwd and the fused `mkor_step`
+//!   optimizer graph, AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 (Pallas, build time)** — the Sherman–Morrison rank-1 inverse-update
+//!   and preconditioning kernels, lowered into the same HLO.
+//!
+//! Python never runs on the training path: [`runtime`] loads the artifacts via
+//! the PJRT C API and executes them from Rust.
+//!
+//! The crate also contains pure-Rust implementations of MKOR
+//! ([`optim::mkor`]) and of every baseline the paper compares against (KFAC/
+//! KAISA, SNGD/HyLo, Eva, SGD-momentum, Adam, LAMB) plus the substrates they
+//! need (dense linear algebra, synthetic workloads, a Rust-native NN with
+//! per-layer activation/gradient capture, collectives, a cluster cost model).
+//! See `DESIGN.md` for the system inventory and the experiment index.
+
+pub mod bench_utils;
+pub mod cli;
+pub mod collective;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod model;
+pub mod optim;
+pub mod runtime;
+pub mod util;
+
+/// Crate version string reported by `mkor --version`.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,175 @@
+//! Cholesky factorization, solve and SPD inversion.
+//!
+//! Used by (a) the KFAC/KAISA baseline to invert damped factors, (b) the
+//! SNGD/HyLo baseline to invert the b×b kernel, and (c) the Lemma 3.1
+//! property tests ("Cholesky succeeds" is the constructive proof that a
+//! matrix is positive-definite).
+
+use super::Matrix;
+use thiserror::Error;
+
+/// Failure modes of the SPD routines.
+#[derive(Debug, Error, PartialEq)]
+pub enum CholeskyError {
+    #[error("matrix is not positive definite (pivot {pivot} at index {index})")]
+    NotPositiveDefinite { index: usize, pivot: f64 },
+    #[error("matrix is not square")]
+    NotSquare,
+}
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+///
+/// Accumulates in `f64` — the paper (§8.4) notes KFAC factors have huge
+/// condition numbers, and f32 accumulation loses PD-ness well before the
+/// matrix actually becomes indefinite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix, CholeskyError> {
+    if !a.is_square() {
+        return Err(CholeskyError::NotSquare);
+    }
+    let n = a.rows();
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[(i, j)] as f64;
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return Err(CholeskyError::NotPositiveDefinite { index: i, pivot: sum });
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    let data: Vec<f32> = l.iter().map(|&x| x as f32).collect();
+    Ok(Matrix::from_vec(n, n, data))
+}
+
+/// True iff `a` is positive definite (Cholesky succeeds).
+pub fn is_positive_definite(a: &Matrix) -> bool {
+    cholesky(a).is_ok()
+}
+
+/// Solve `A x = b` for SPD `A` via Cholesky (two triangular solves).
+pub fn solve_spd(a: &Matrix, b: &[f32]) -> Result<Vec<f32>, CholeskyError> {
+    let l = cholesky(a)?;
+    let n = a.rows();
+    assert_eq!(b.len(), n);
+    // forward: L y = b
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for k in 0..i {
+            s -= l[(i, k)] as f64 * y[k];
+        }
+        y[i] = s / l[(i, i)] as f64;
+    }
+    // backward: Lᵀ x = y
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] as f64 * x[k];
+        }
+        x[i] = s / l[(i, i)] as f64;
+    }
+    Ok(x.iter().map(|&v| v as f32).collect())
+}
+
+/// Inverse of an SPD matrix via Cholesky: `A⁻¹ = L⁻ᵀ L⁻¹`.
+///
+/// O(d³) — this cost is exactly what Table 1 charges KFAC for, and what
+/// MKOR's O(d²) SM update avoids.
+pub fn invert_spd(a: &Matrix) -> Result<Matrix, CholeskyError> {
+    let l = cholesky(a)?;
+    let n = a.rows();
+    // Invert L in-place (lower triangular), f64 accumulation.
+    let mut linv = vec![0.0f64; n * n];
+    for i in 0..n {
+        linv[i * n + i] = 1.0 / l[(i, i)] as f64;
+        for j in 0..i {
+            let mut s = 0.0f64;
+            for k in j..i {
+                s -= l[(i, k)] as f64 * linv[k * n + j];
+            }
+            linv[i * n + j] = s / l[(i, i)] as f64;
+        }
+    }
+    // A⁻¹ = Lᵀ⁻¹ L⁻¹; compute lower triangle then mirror.
+    let mut inv = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0f64;
+            for k in i..n {
+                s += linv[k * n + i] * linv[k * n + j];
+            }
+            inv[(i, j)] = s as f32;
+            inv[(j, i)] = s as f32;
+        }
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::{matmul, matvec};
+    use crate::util::Rng;
+
+    #[test]
+    fn factorizes_known_matrix() {
+        // A = [[4,2],[2,3]] => L = [[2,0],[1,sqrt(2)]]
+        let a = Matrix::from_rows(&[&[4.0, 2.0], &[2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        assert!((l[(0, 0)] - 2.0).abs() < 1e-6);
+        assert!((l[(1, 0)] - 1.0).abs() < 1e-6);
+        assert!((l[(1, 1)] - 2.0f32.sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reconstruction_llt() {
+        let mut rng = Rng::new(8);
+        let a = Matrix::rand_spd(24, 0.5, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-3);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_rows(&[&[1.0, 2.0], &[2.0, 1.0]]); // eigs 3, -1
+        assert!(matches!(cholesky(&a), Err(CholeskyError::NotPositiveDefinite { .. })));
+        assert!(!is_positive_definite(&a));
+    }
+
+    #[test]
+    fn rejects_nonsquare() {
+        let a = Matrix::zeros(2, 3);
+        assert_eq!(cholesky(&a).unwrap_err(), CholeskyError::NotSquare);
+    }
+
+    #[test]
+    fn solve_recovers_x() {
+        let mut rng = Rng::new(9);
+        let a = Matrix::rand_spd(16, 0.5, &mut rng);
+        let x: Vec<f32> = (0..16).map(|_| rng.gaussian_f32()).collect();
+        let b = matvec(&a, &x);
+        let got = solve_spd(&a, &b).unwrap();
+        for i in 0..16 {
+            assert!((got[i] - x[i]).abs() < 1e-3, "i={i}");
+        }
+    }
+
+    #[test]
+    fn inverse_times_matrix_is_identity() {
+        let mut rng = Rng::new(10);
+        let a = Matrix::rand_spd(20, 0.5, &mut rng);
+        let inv = invert_spd(&a).unwrap();
+        let prod = matmul(&inv, &a);
+        assert!(prod.max_abs_diff(&Matrix::identity(20)) < 1e-2);
+        assert!(inv.is_symmetric(1e-4));
+    }
+}

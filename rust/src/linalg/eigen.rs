@@ -1,0 +1,209 @@
+//! Symmetric eigensolver (cyclic Jacobi) and power iteration.
+//!
+//! The Jacobi solver backs (a) the KFAC/KAISA baseline's eigendecomposition
+//! path (the original KFAC implementation masks near-zero eigenvalues), and
+//! (b) the Figure 8 condition-number experiment. Power iteration gives the
+//! top eigenpair cheaply for the rank-1 approximation-error experiments
+//! (Figures 5/10) where a full decomposition would dwarf the training run.
+
+use super::ops::{dot, matvec, norm2};
+use super::Matrix;
+use crate::util::Rng;
+
+/// Eigendecomposition of a symmetric matrix: `A = V diag(w) Vᵀ`.
+#[derive(Clone, Debug)]
+pub struct EigenDecomposition {
+    /// Eigenvalues in descending order.
+    pub values: Vec<f64>,
+    /// Column i of `vectors` is the eigenvector for `values[i]`.
+    pub vectors: Matrix,
+}
+
+/// Cyclic Jacobi eigendecomposition (f64 internal).
+///
+/// Complexity O(d³) per sweep; fine for the ≤1024-dim factors these
+/// experiments examine. `tol` bounds the off-diagonal Frobenius mass.
+pub fn jacobi_eigen(a: &Matrix, tol: f64, max_sweeps: usize) -> EigenDecomposition {
+    assert!(a.is_square(), "eigen of non-square matrix");
+    let n = a.rows();
+    let mut m = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            // Symmetrize on input to tolerate f32 asymmetry.
+            m[i * n + j] = 0.5 * (a[(i, j)] as f64 + a[(j, i)] as f64);
+        }
+    }
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    let off = |m: &[f64]| -> f64 {
+        let mut s = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    s += m[i * n + j] * m[i * n + j];
+                }
+            }
+        }
+        s.sqrt()
+    };
+
+    for _ in 0..max_sweeps {
+        if off(&m) <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation to rows/cols p and q.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract, sort descending.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[i * n + i], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let values: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vectors[(r, new_col)] = v[r * n + old_col] as f32;
+        }
+    }
+    EigenDecomposition { values, vectors }
+}
+
+/// Condition number from the eigenvalues of a symmetric PSD matrix
+/// (|λ|max / |λ|min). Returns `f64::INFINITY` for singular matrices.
+pub fn condition_number(values: &[f64]) -> f64 {
+    let max = values.iter().fold(0.0f64, |m, &x| m.max(x.abs()));
+    let min = values.iter().fold(f64::INFINITY, |m, &x| m.min(x.abs()));
+    if min <= 0.0 {
+        f64::INFINITY
+    } else {
+        max / min
+    }
+}
+
+/// Top eigenpair of a symmetric PSD matrix via power iteration.
+///
+/// Returns `(lambda, v)` with `‖v‖ = 1`. This is what the optimal rank-1
+/// approximation of a covariance matrix is built from (Eckart–Young: the
+/// best rank-1 approximation of symmetric PSD `C` is `λ₁ v₁ v₁ᵀ`).
+pub fn power_iteration(a: &Matrix, iters: usize, seed: u64) -> (f64, Vec<f32>) {
+    assert!(a.is_square());
+    let n = a.rows();
+    let mut rng = Rng::new(seed);
+    let mut v: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let norm = norm2(&v).max(1e-30);
+    for x in v.iter_mut() {
+        *x = (*x as f64 / norm) as f32;
+    }
+    let mut lambda = 0.0f64;
+    for _ in 0..iters {
+        let w = matvec(a, &v);
+        let wnorm = norm2(&w);
+        if wnorm < 1e-30 {
+            return (0.0, v); // zero matrix
+        }
+        for (vi, &wi) in v.iter_mut().zip(&w) {
+            *vi = (wi as f64 / wnorm) as f32;
+        }
+        lambda = dot(&v, &matvec(a, &v));
+    }
+    (lambda, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops::matmul;
+
+    #[test]
+    fn eigen_of_diagonal() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let e = jacobi_eigen(&a, 1e-12, 50);
+        assert!((e.values[0] - 3.0).abs() < 1e-9);
+        assert!((e.values[1] - 2.0).abs() < 1e-9);
+        assert!((e.values[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eigen_reconstructs() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::rand_spd(12, 0.2, &mut rng);
+        let e = jacobi_eigen(&a, 1e-12, 100);
+        // V diag(w) Vᵀ == A
+        let mut d = Matrix::zeros(12, 12);
+        for i in 0..12 {
+            d[(i, i)] = e.values[i] as f32;
+        }
+        let rec = matmul(&matmul(&e.vectors, &d), &e.vectors.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-3);
+        // Orthonormal V
+        let vtv = matmul(&e.vectors.transpose(), &e.vectors);
+        assert!(vtv.max_abs_diff(&Matrix::identity(12)) < 1e-3);
+    }
+
+    #[test]
+    fn eigen_known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 3 and 1
+        let a = Matrix::from_rows(&[&[2.0, 1.0], &[1.0, 2.0]]);
+        let e = jacobi_eigen(&a, 1e-14, 50);
+        assert!((e.values[0] - 3.0).abs() < 1e-9);
+        assert!((e.values[1] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn condition_number_cases() {
+        assert!((condition_number(&[4.0, 2.0, 1.0]) - 4.0).abs() < 1e-12);
+        assert!(condition_number(&[1.0, 0.0]).is_infinite());
+    }
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        let mut rng = Rng::new(33);
+        let a = Matrix::rand_spd(20, 0.1, &mut rng);
+        let e = jacobi_eigen(&a, 1e-12, 100);
+        let (lam, v) = power_iteration(&a, 200, 7);
+        assert!(
+            (lam - e.values[0]).abs() / e.values[0] < 1e-4,
+            "power {lam} vs jacobi {}",
+            e.values[0]
+        );
+        // v is an eigenvector: Av ≈ λv
+        let av = matvec(&a, &v);
+        for i in 0..20 {
+            assert!((av[i] as f64 - lam * v[i] as f64).abs() < 1e-2);
+        }
+    }
+}

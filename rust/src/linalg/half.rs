@@ -1,0 +1,218 @@
+//! Software half-precision floats: IEEE binary16 (`f16`) and bfloat16.
+//!
+//! MKOR's communication contribution includes synchronizing the rank-1
+//! vectors in half precision (Table 1's "divide by 2"); the collective layer
+//! quantizes through this module, and the Lemma 3.2 property test bounds the
+//! end-to-end quantization error of the SM update.
+
+/// Encode an `f32` as IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let m = if mant != 0 { 0x200 } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+    // Re-bias: f32 bias 127 -> f16 bias 15.
+    let new_exp = exp - 127 + 15;
+    if new_exp >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if new_exp <= 0 {
+        // Subnormal or zero.
+        if new_exp < -10 {
+            return sign; // underflow to zero
+        }
+        let full_mant = mant | 0x80_0000;
+        let shift = (14 - new_exp) as u32;
+        let halfway = 1u32 << (shift - 1);
+        let mut half_mant = full_mant >> shift;
+        let rem = full_mant & ((1 << shift) - 1);
+        if rem > halfway || (rem == halfway && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+    // Normal: round mantissa 23 -> 10 bits, RNE.
+    let mut half_mant = (mant >> 13) as u16;
+    let rem = mant & 0x1FFF;
+    let mut half_exp = new_exp as u16;
+    if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+        half_mant += 1;
+        if half_mant == 0x400 {
+            half_mant = 0;
+            half_exp += 1;
+            if half_exp >= 0x1F {
+                return sign | 0x7C00;
+            }
+        }
+    }
+    sign | (half_exp << 10) | half_mant
+}
+
+/// Decode IEEE binary16 bits into `f32`.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: value = mant · 2⁻²⁴. Normalize via the position p
+            // of the highest set bit: value = 1.frac · 2^(p−24).
+            let p = 31 - mant.leading_zeros(); // 0..=9
+            let frac = (mant ^ (1 << p)) << (23 - p);
+            let new_exp = p + 103; // (p − 24) + 127
+            sign | (new_exp << 23) | frac
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Encode an `f32` as bfloat16 bits (truncate-with-RNE of the top 16 bits).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet the NaN
+    }
+    let round_bit = 0x8000u32;
+    let lsb = (bits >> 16) & 1;
+    let rem = bits & 0xFFFF;
+    let mut hi = bits >> 16;
+    if rem > round_bit || (rem == round_bit && lsb == 1) {
+        hi += 1;
+    }
+    hi as u16
+}
+
+/// Decode bfloat16 bits into `f32`.
+#[inline]
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Quantization formats the collectives can use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HalfKind {
+    /// IEEE binary16: 10-bit mantissa, narrow range (±65504).
+    F16,
+    /// bfloat16: 7-bit mantissa, f32 range. MKOR's default — factors and
+    /// gradients can exceed f16 range early in training.
+    Bf16,
+}
+
+/// Quantize a slice to 16-bit words.
+pub fn quantize(xs: &[f32], kind: HalfKind) -> Vec<u16> {
+    match kind {
+        HalfKind::F16 => xs.iter().map(|&x| f32_to_f16_bits(x)).collect(),
+        HalfKind::Bf16 => xs.iter().map(|&x| f32_to_bf16_bits(x)).collect(),
+    }
+}
+
+/// Dequantize 16-bit words back to `f32`.
+pub fn dequantize(hs: &[u16], kind: HalfKind) -> Vec<f32> {
+    match kind {
+        HalfKind::F16 => hs.iter().map(|&h| f16_bits_to_f32(h)).collect(),
+        HalfKind::Bf16 => hs.iter().map(|&h| bf16_bits_to_f32(h)).collect(),
+    }
+}
+
+/// Round-trip a slice through 16-bit (what a quantized all-reduce does to
+/// the payload). Returns the dequantized values.
+pub fn roundtrip(xs: &[f32], kind: HalfKind) -> Vec<f32> {
+    dequantize(&quantize(xs, kind), kind)
+}
+
+/// Max relative quantization step for a format: 2^-(mantissa_bits+1).
+pub fn unit_roundoff(kind: HalfKind) -> f64 {
+    match kind {
+        HalfKind::F16 => (2.0f64).powi(-11),
+        HalfKind::Bf16 => (2.0f64).powi(-8),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 2.0, 65504.0, -0.25] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // overflow -> +inf
+        assert!(f16_bits_to_f32(0x7C00).is_infinite());
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 5.9604645e-8f32; // smallest f16 subnormal
+        let rt = f16_bits_to_f32(f32_to_f16_bits(tiny));
+        assert!((rt - tiny).abs() / tiny < 1e-3);
+        // Deep underflow goes to zero.
+        assert_eq!(f32_to_f16_bits(1e-10), 0);
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_bounded() {
+        let u = unit_roundoff(HalfKind::Bf16);
+        let mut x = -3.0f32;
+        while x < 3.0 {
+            let rt = bf16_bits_to_f32(f32_to_bf16_bits(x));
+            if x != 0.0 {
+                assert!(
+                    ((rt - x) as f64 / x as f64).abs() <= u,
+                    "x={x} rt={rt}"
+                );
+            }
+            x += 0.00137;
+        }
+    }
+
+    #[test]
+    fn bf16_preserves_f32_range() {
+        let big = 1e30f32;
+        let rt = bf16_bits_to_f32(f32_to_bf16_bits(big));
+        assert!((rt - big).abs() / big < 0.01);
+    }
+
+    #[test]
+    fn bf16_nan_stays_nan() {
+        assert!(bf16_bits_to_f32(f32_to_bf16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn quantize_dequantize_slices() {
+        let xs = [1.0f32, -2.5, 0.125, 100.0];
+        for kind in [HalfKind::F16, HalfKind::Bf16] {
+            let rt = roundtrip(&xs, kind);
+            for (a, b) in xs.iter().zip(&rt) {
+                assert!((a - b).abs() / a.abs() < 0.01, "{kind:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_rne_ties_to_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10 in f16:
+        // RNE keeps the even mantissa (1.0).
+        let x = 1.0 + (2.0f32).powi(-11);
+        assert_eq!(f32_to_f16_bits(x), 0x3C00);
+    }
+}

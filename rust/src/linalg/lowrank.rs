@@ -1,0 +1,146 @@
+//! Rank-1 (and rank-r) approximation quality of covariance matrices.
+//!
+//! Reproduces the measurement behind Figures 5 and 10: how well is
+//! `C = X Xᵀ / b` approximated by (a) the *optimal* rank-1 matrix
+//! `λ₁ v₁ v₁ᵀ` (Eckart–Young via power iteration) and (b) the *mean-based*
+//! rank-1 matrix `x̄ x̄ᵀ` that MKOR actually uses (Algorithm 1 lines 2–3)?
+
+use super::eigen::power_iteration;
+use super::ops::{matmul_nt, outer, row_mean};
+use super::Matrix;
+
+/// Covariance `C = X Xᵀ / b` for column-sample layout `X ∈ R^{d×b}`.
+pub fn covariance(x: &Matrix) -> Matrix {
+    let b = x.cols().max(1);
+    let mut c = matmul_nt(x, x);
+    c.scale(1.0 / b as f32);
+    c
+}
+
+/// Relative Frobenius error of the best rank-1 approximation of a symmetric
+/// PSD matrix: `‖C − λ₁v₁v₁ᵀ‖_F / ‖C‖_F`.
+pub fn optimal_rank1_error(c: &Matrix, power_iters: usize, seed: u64) -> f64 {
+    let denom = c.fro_norm();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    let (lambda, v) = power_iteration(c, power_iters, seed);
+    let mut approx = outer(&v, &v);
+    approx.scale(lambda as f32);
+    let mut diff = c.clone();
+    diff.blend(1.0, -1.0, &approx);
+    diff.fro_norm() / denom
+}
+
+/// Relative Frobenius error of the *mean-vector* rank-1 approximation MKOR
+/// uses: `‖C − x̄ x̄ᵀ‖_F / ‖C‖_F` with `x̄` the batch mean.
+///
+/// `x` is d×b (samples in columns). The paper argues (§4, Approximation
+/// Error Analysis) that over-parameterization makes the gap between this and
+/// the optimal rank-1 small; the Figure 5 bench measures both.
+pub fn mean_rank1_error(x: &Matrix) -> f64 {
+    let c = covariance(x);
+    let denom = c.fro_norm();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    let xbar = row_mean(&x.transpose()); // mean over columns of x = rows of xᵀ
+    let approx = outer(&xbar, &xbar);
+    let mut diff = c.clone();
+    diff.blend(1.0, -1.0, &approx);
+    diff.fro_norm() / denom
+}
+
+/// Spectral "effective rank" diagnostics: fraction of Frobenius mass in the
+/// top eigenvalue, computed from a full Jacobi decomposition (small dims).
+pub fn top_eig_mass(c: &Matrix) -> f64 {
+    let e = super::eigen::jacobi_eigen(c, 1e-10, 60);
+    let total: f64 = e.values.iter().map(|v| v * v).sum();
+    if total == 0.0 {
+        return 1.0;
+    }
+    (e.values[0] * e.values[0]) / total
+}
+
+/// Rank-r greedy approximation error via repeated deflation (the paper's
+/// §4 "Extending MKOR to Higher Ranks" discussion): returns relative errors
+/// for ranks `1..=r`.
+pub fn rank_r_errors(c: &Matrix, r: usize, power_iters: usize, seed: u64) -> Vec<f64> {
+    let denom = c.fro_norm();
+    let mut residual = c.clone();
+    let mut out = Vec::with_capacity(r);
+    for k in 0..r {
+        let (lambda, v) = power_iteration(&residual, power_iters, seed + k as u64);
+        let mut approx = outer(&v, &v);
+        approx.scale(lambda as f32);
+        residual.blend(1.0, -1.0, &approx);
+        out.push(if denom == 0.0 { 0.0 } else { residual.fro_norm() / denom });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_rank1_has_zero_error() {
+        let v = vec![1.0f32, 2.0, -1.0, 0.5];
+        let c = outer(&v, &v);
+        let err = optimal_rank1_error(&c, 100, 3);
+        assert!(err < 1e-4, "err={err}");
+    }
+
+    #[test]
+    fn identity_has_high_rank1_error() {
+        let c = Matrix::identity(16);
+        let err = optimal_rank1_error(&c, 100, 3);
+        // Best rank-1 of I_n removes 1/n of the mass: err = sqrt(1-1/n).
+        let expect = (1.0 - 1.0 / 16.0f64).sqrt();
+        assert!((err - expect).abs() < 1e-3, "err={err}, expect={expect}");
+    }
+
+    #[test]
+    fn mean_rank1_error_zero_for_constant_samples() {
+        // All columns equal x̄ ⇒ C = x̄x̄ᵀ exactly.
+        let d = 6;
+        let b = 10;
+        let mut x = Matrix::zeros(d, b);
+        for i in 0..d {
+            for j in 0..b {
+                x[(i, j)] = (i as f32) - 2.0;
+            }
+        }
+        assert!(mean_rank1_error(&x) < 1e-5);
+    }
+
+    #[test]
+    fn rank_r_errors_decrease() {
+        let mut rng = Rng::new(55);
+        let x = Matrix::randn(12, 8, 1.0, &mut rng);
+        let c = covariance(&x);
+        let errs = rank_r_errors(&c, 5, 100, 1);
+        for w in errs.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{errs:?}");
+        }
+        // C has rank ≤ 8, so by r=5 error should be well below rank-1 error.
+        assert!(errs[4] < errs[0]);
+    }
+
+    #[test]
+    fn top_eig_mass_of_rank1_is_one() {
+        let v = vec![1.0f32, -1.0, 2.0];
+        let c = outer(&v, &v);
+        assert!((top_eig_mass(&c) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn covariance_shape_and_symmetry() {
+        let mut rng = Rng::new(56);
+        let x = Matrix::randn(9, 4, 1.0, &mut rng);
+        let c = covariance(&x);
+        assert_eq!(c.rows(), 9);
+        assert!(c.is_symmetric(1e-5));
+    }
+}

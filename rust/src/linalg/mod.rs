@@ -1,0 +1,18 @@
+//! Dense linear algebra substrate.
+//!
+//! Everything the optimizer family needs, implemented from scratch (the
+//! offline crate set has no BLAS/ndarray): a row-major `f32` [`Matrix`],
+//! cache-blocked matmul, Cholesky factorization/solve/inverse, a Jacobi
+//! eigensolver for symmetric matrices, power-iteration rank-1 approximation
+//! (Figures 5/10), Gauss–Jordan inversion (SNGD kernels), and bf16/f16
+//! software floats (MKOR's half-precision communication, Lemma 3.2).
+
+pub mod cholesky;
+pub mod eigen;
+pub mod half;
+pub mod inverse;
+pub mod lowrank;
+pub mod matrix;
+pub mod ops;
+
+pub use matrix::Matrix;

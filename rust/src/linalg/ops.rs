@@ -1,0 +1,331 @@
+//! Matrix/vector kernels: cache-blocked matmul (plain and transposed
+//! variants), matvec, outer products, and the fused rank-1 symmetric update
+//! at the heart of MKOR's Sherman–Morrison step.
+//!
+//! These are the L3 hot paths: the preconditioning step (Equation 2) is two
+//! matmuls, and the SM factor update (Equations 5/6) is one matvec + one
+//! scaled outer product. The matmul is written j-innermost so the compiler
+//! auto-vectorizes the contiguous row updates; `matmul_nt` packs nothing and
+//! is used when the right operand is logically transposed.
+
+use super::Matrix;
+
+/// Tile edge for the blocked matmul. Swept in the §Perf pass (32/64/128):
+/// 128 wins slightly at d≤256 and ties above, and keeps three f32 tiles
+/// ≈192KB — within this host's L2. See EXPERIMENTS.md §Perf.
+const BLOCK: usize = 128;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    let (m, n) = (a.rows(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · B` writing into a preallocated output (hot-loop variant; the
+/// coordinator reuses buffers to keep allocation out of the step path).
+pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    c.data_mut().fill(0.0);
+    // i-k-j loop with blocking over all three dims: the inner j loop is a
+    // contiguous FMA over C's row and B's row, which LLVM vectorizes.
+    for ii in (0..m).step_by(BLOCK) {
+        let i_end = (ii + BLOCK).min(m);
+        for kk in (0..k).step_by(BLOCK) {
+            let k_end = (kk + BLOCK).min(k);
+            for jj in (0..n).step_by(BLOCK) {
+                let j_end = (jj + BLOCK).min(n);
+                for i in ii..i_end {
+                    // 2-way k-unroll: two broadcast FMAs per pass over C's
+                    // row keeps more of the loop in registers. No zero-skip
+                    // branch — it blocks vectorization (§Perf: removing it
+                    // was a 1.3-3x win).
+                    let mut p = kk;
+                    while p + 1 < k_end {
+                        let aip0 = a[(i, p)];
+                        let aip1 = a[(i, p + 1)];
+                        let (b0, b1) = {
+                            let (lo, hi) = b.data().split_at((p + 1) * n);
+                            (&lo[p * n + jj..p * n + j_end], &hi[jj..j_end])
+                        };
+                        let crow = &mut c.row_mut(i)[jj..j_end];
+                        for ((cv, &bv0), &bv1) in crow.iter_mut().zip(b0).zip(b1) {
+                            *cv += aip0 * bv0 + aip1 * bv1;
+                        }
+                        p += 2;
+                    }
+                    if p < k_end {
+                        let aip = a[(i, p)];
+                        let brow = &b.row(p)[jj..j_end];
+                        let crow = &mut c.row_mut(i)[jj..j_end];
+                        for (cv, &bv) in crow.iter_mut().zip(brow) {
+                            *cv += aip * bv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ` without materializing the transpose.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            c[(i, j)] = acc;
+        }
+    }
+    c
+}
+
+/// `C = Aᵀ · B` without materializing the transpose.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    let (m, k, n) = (a.cols(), a.rows(), b.cols());
+    let mut c = Matrix::zeros(m, n);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aip = arow[i];
+            if aip == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += aip * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// `y = A · x`.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), x.len(), "matvec shape mismatch");
+    let mut y = vec![0.0; a.rows()];
+    matvec_into(a, x, &mut y);
+    y
+}
+
+/// `y = A · x` into a preallocated output.
+pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    for (i, yi) in y.iter_mut().enumerate() {
+        let row = a.row(i);
+        let mut acc = 0.0f32;
+        for (&r, &v) in row.iter().zip(x) {
+            acc += r * v;
+        }
+        *yi = acc;
+    }
+}
+
+/// `y = Aᵀ · x`.
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.rows(), x.len(), "matvec_t shape mismatch");
+    let mut y = vec![0.0f32; a.cols()];
+    for i in 0..a.rows() {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        let row = a.row(i);
+        for (yj, &r) in y.iter_mut().zip(row) {
+            *yj += xi * r;
+        }
+    }
+    y
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// Euclidean norm.
+pub fn norm2(x: &[f32]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    for (yv, &xv) in y.iter_mut().zip(x) {
+        *yv += alpha * xv;
+    }
+}
+
+/// Outer product `x yᵀ`.
+pub fn outer(x: &[f32], y: &[f32]) -> Matrix {
+    let mut m = Matrix::zeros(x.len(), y.len());
+    for (i, &xi) in x.iter().enumerate() {
+        let row = m.row_mut(i);
+        for (rv, &yj) in row.iter_mut().zip(y) {
+            *rv = xi * yj;
+        }
+    }
+    m
+}
+
+/// Fused symmetric rank-1 update `A = alpha*A + beta * u uᵀ`.
+///
+/// This is the SM-update hot loop (lines 7–8 of Algorithm 1 after the matvec
+/// `u = J⁻¹g` is computed): one pass over A, no temporary d×d allocation.
+pub fn scaled_rank1_update(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32]) {
+    assert!(a.is_square());
+    assert_eq!(a.rows(), u.len());
+    let n = u.len();
+    for i in 0..n {
+        let bu = beta * u[i];
+        let row = a.row_mut(i);
+        for (j, rv) in row.iter_mut().enumerate().take(n) {
+            *rv = alpha * *rv + bu * u[j];
+        }
+    }
+}
+
+/// Mean of the columns of `A` (d×b → d) — the paper's rank-1 approximation
+/// of a batch (lines 2–3 of Algorithm 1).
+pub fn col_mean(a: &Matrix) -> Vec<f32> {
+    let (d, b) = (a.rows(), a.cols());
+    assert!(b > 0);
+    let mut out = vec![0.0f32; d];
+    for i in 0..d {
+        let row = a.row(i);
+        out[i] = (row.iter().map(|&x| x as f64).sum::<f64>() / b as f64) as f32;
+    }
+    out
+}
+
+/// Mean of the rows of `A` (b×d → d).
+pub fn row_mean(a: &Matrix) -> Vec<f32> {
+    let (b, d) = (a.rows(), a.cols());
+    assert!(b > 0);
+    let mut acc = vec![0.0f64; d];
+    for i in 0..b {
+        for (a_ij, s) in a.row(i).iter().zip(acc.iter_mut()) {
+            *s += *a_ij as f64;
+        }
+    }
+    acc.iter().map(|&s| (s / b as f64) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for p in 0..a.cols() {
+                    s += a[(i, p)] as f64 * b[(p, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (70, 70, 70), (128, 64, 130)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            let want = naive_matmul(&a, &b);
+            assert!(c.max_abs_diff(&want) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_tn_consistent() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(13, 7, 1.0, &mut rng);
+        let b = Matrix::randn(11, 7, 1.0, &mut rng);
+        let c1 = matmul_nt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-4);
+
+        let d = Matrix::randn(7, 13, 1.0, &mut rng);
+        let e = Matrix::randn(7, 5, 1.0, &mut rng);
+        let f1 = matmul_tn(&d, &e);
+        let f2 = matmul(&d.transpose(), &e);
+        assert!(f1.max_abs_diff(&f2) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(9, 14, 1.0, &mut rng);
+        let x: Vec<f32> = (0..14).map(|_| rng.gaussian_f32()).collect();
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(14, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..9 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-4);
+        }
+        // transposed variant
+        let z = matvec_t(&a, &y);
+        let zm = matmul_tn(&a, &Matrix::from_vec(9, 1, y.clone()));
+        for j in 0..14 {
+            assert!((z[j] - zm[(j, 0)]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn outer_and_rank1_update() {
+        let mut rng = Rng::new(4);
+        let n = 12;
+        let mut a = Matrix::rand_spd(n, 0.1, &mut rng);
+        let u: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mut want = a.clone();
+        want.scale(0.9);
+        let mut o = outer(&u, &u);
+        o.scale(0.2);
+        for i in 0..n {
+            for j in 0..n {
+                want[(i, j)] += o[(i, j)];
+            }
+        }
+        scaled_rank1_update(&mut a, 0.9, 0.2, &u);
+        assert!(a.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn means() {
+        let a = Matrix::from_rows(&[&[1.0, 3.0], &[2.0, 4.0]]);
+        assert_eq!(col_mean(&a), vec![2.0, 3.0]);
+        assert_eq!(row_mean(&a), vec![1.5, 3.5]);
+    }
+
+    #[test]
+    fn dot_norm_axpy() {
+        let x = [1.0f32, 2.0, 2.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        assert!((norm2(&x) - 3.0).abs() < 1e-9);
+        assert!((dot(&x, &y) - 5.0).abs() < 1e-9);
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 5.0]);
+    }
+}

@@ -1,0 +1,288 @@
+//! `mkor` — the leader binary.
+//!
+//! Subcommands:
+//!
+//! * `train`  — end-to-end transformer training through the AOT artifacts
+//!              (`make artifacts` first). Flags: `--preset tiny|small|base`,
+//!              `--steps N`, `--workers W`, `--lr`, `--inv-freq`,
+//!              `--hybrid`, `--out results/e2e.json`.
+//! * `sim`    — proxy-model training with any optimizer (`--optimizer
+//!              mkor|mkor-h|kfac|sngd|eva|sgd|adam|lamb`, `--task
+//!              glue|images|autoencoder|text`, `--steps`, `--workers`).
+//! * `specs`  — print the paper-scale model specs and Table-1 complexity.
+//! * `version`
+
+use mkor::bench_utils::Table;
+use mkor::cli::Args;
+use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
+use mkor::data::classification::{Dataset, TaskConfig};
+use mkor::data::images::{ImageConfig, ImageGen};
+use mkor::data::text::{MlmBatchGen, TextConfig};
+use mkor::model::{specs, Activation, Mlp};
+use mkor::optim::schedule::Constant;
+use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
+use mkor::runtime::ArtifactBundle;
+use mkor::util::Rng;
+use std::path::Path;
+
+fn main() {
+    mkor::util::logging::init_from_env();
+    let args = Args::from_env();
+    let code = match args.command() {
+        Some("version") => {
+            println!("mkor {}", mkor::VERSION);
+            0
+        }
+        Some("specs") => cmd_specs(),
+        Some("sim") => cmd_sim(&args),
+        Some("train") => cmd_train(&args),
+        _ => {
+            eprintln!(
+                "usage: mkor <train|sim|specs|version> [--flags]\n\
+                 see README.md for details"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn cmd_specs() -> i32 {
+    let mut t = Table::new(&["Model", "Params (M)", "Max dim d", "Eff. batch b"]);
+    for name in ["bert-large", "bert-base", "resnet50", "alexnet", "autoencoder"] {
+        let s = specs::by_name(name).unwrap();
+        t.row(&[
+            s.name.clone(),
+            format!("{:.1}", s.params() as f64 / 1e6),
+            s.max_dim().to_string(),
+            s.effective_batch.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let spec = specs::bert_large();
+    let mut t = Table::new(&["Optimizer", "Factor FLOPs", "Sync bytes", "State bytes"]);
+    for kind in [
+        OptimizerKind::Mkor,
+        OptimizerKind::Kfac,
+        OptimizerKind::Sngd,
+        OptimizerKind::Eva,
+        OptimizerKind::Lamb,
+    ] {
+        let c = model_step_cost(kind, &spec);
+        t.row(&[
+            kind.label().to_string(),
+            format!("{:.2e}", c.factor_flops),
+            format!("{:.2e}", c.sync_bytes),
+            format!("{:.2e}", c.state_bytes),
+        ]);
+    }
+    println!("BERT-Large per-step costs (Table 1 instantiated):");
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    let opt_name = args.get_or("optimizer", "mkor");
+    let task = args.get_or("task", "glue");
+    let steps = args.usize_or("steps", 300);
+    let workers = args.usize_or("workers", 4);
+    let lr = args.f32_or("lr", 0.1);
+    let seed = args.u64_or("seed", 0);
+
+    let mut rng = Rng::new(seed);
+    type BatchFn = Box<dyn FnMut() -> (mkor::linalg::Matrix, Target)>;
+    let (model, mut next_batch): (Mlp, BatchFn) = match task {
+        "images" => {
+            let mut gen = ImageGen::new(ImageConfig::default(), seed);
+            let model =
+                Mlp::new(&[gen.dim(), 128, 64, gen.classes()], Activation::Relu, &mut rng);
+            (
+                model,
+                Box::new(move || {
+                    let b = gen.next_batch(64);
+                    (b.x, Target::Labels(b.labels))
+                }),
+            )
+        }
+        "autoencoder" => {
+            let mut gen = ImageGen::new(ImageConfig::default(), seed);
+            let d = gen.dim();
+            let model = Mlp::new(&[d, 128, 32, 128, d], Activation::Tanh, &mut rng);
+            (
+                model,
+                Box::new(move || {
+                    let b = gen.next_autoencoder_batch(64);
+                    (b.x, Target::Dense(b.y))
+                }),
+            )
+        }
+        "text" => {
+            let mut gen = MlmBatchGen::new(TextConfig::default(), 64, 0.15, seed);
+            let vocab = gen.vocab();
+            let model = Mlp::new(&[256, 256, vocab], Activation::Gelu, &mut rng);
+            (
+                model,
+                Box::new(move || {
+                    let b = gen.next_dense(64, 256, 6);
+                    (b.x, Target::Labels(b.labels))
+                }),
+            )
+        }
+        _ => {
+            // "glue": a single representative task.
+            let mut cfg = TaskConfig::new("qnli-proxy", 64, 2);
+            cfg.seed = seed;
+            let ds = Dataset::generate(cfg);
+            let model = Mlp::new(&[64, 64, 2], Activation::Relu, &mut rng);
+            let mut epoch = 0u64;
+            let mut queue: Vec<mkor::data::Batch> = Vec::new();
+            (
+                model,
+                Box::new(move || {
+                    if queue.is_empty() {
+                        queue = ds.epoch_batches(64, epoch);
+                        epoch += 1;
+                    }
+                    let b = queue.pop().unwrap();
+                    (b.x, Target::Labels(b.labels))
+                }),
+            )
+        }
+    };
+
+    let shapes = model.shapes();
+    let Some(opt) = mkor::optim::by_name(opt_name, &shapes) else {
+        eprintln!("unknown optimizer `{opt_name}`");
+        return 2;
+    };
+    let mut trainer = Trainer::new(
+        model,
+        opt,
+        Box::new(Constant(lr)),
+        TrainerConfig {
+            workers,
+            run_name: format!("sim-{task}-{opt_name}"),
+            ..Default::default()
+        },
+    );
+    for s in 0..steps {
+        let (x, target) = next_batch();
+        match trainer.step(&x, &target) {
+            Some(loss) => {
+                if s % 20 == 0 {
+                    println!("step {s:>5}  loss {loss:.5}");
+                }
+            }
+            None => {
+                println!("DIVERGED at step {s}");
+                break;
+            }
+        }
+    }
+    let rec = trainer.finish();
+    println!(
+        "final loss {:.5} over {} steps ({} total comm)",
+        rec.final_loss(),
+        rec.steps.len(),
+        mkor::bench_utils::fmt_bytes(rec.total_comm_bytes() as f64)
+    );
+    if let Some(out) = args.get("out") {
+        if let Err(e) = rec.save_json(Path::new(out)) {
+            eprintln!("saving {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let preset = args.get_or("preset", "tiny");
+    let steps = args.usize_or("steps", 50);
+    let workers = args.usize_or("workers", 2);
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let eval_every = args.usize_or("eval-every", 25);
+
+    let bundle = match ArtifactBundle::load(Path::new(artifacts), preset) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("loading artifacts for `{preset}`: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    println!(
+        "loaded preset `{}` on {} ({} params, {} factor pairs)",
+        bundle.meta.preset,
+        bundle.platform(),
+        bundle.meta.params,
+        bundle.meta.factor_dims.len()
+    );
+
+    // Initialize parameters in Rust (seeded; same init family as model.py).
+    let mut rng = Rng::new(args.u64_or("seed", 0));
+    let init = mkor::runtime::xla_trainer::init_params(&bundle.meta, &mut rng);
+
+    let cfg = XlaTrainerConfig {
+        workers,
+        lr: args.f32_or("lr", 0.05),
+        momentum: args.f32_or("momentum", 0.9),
+        gamma: args.f32_or("gamma", 0.99),
+        inv_freq: args.usize_or("inv-freq", 10),
+        half_sync: !args.flag("no-half-sync"),
+        hybrid_switch_ratio: if args.flag("hybrid") { Some(0.1) } else { None },
+        ..Default::default()
+    };
+    let mut trainer = XlaTrainer::new(bundle, init, cfg);
+
+    let mut gen = MlmBatchGen::new(
+        TextConfig {
+            vocab: trainer.bundle.meta.vocab,
+            seed: args.u64_or("seed", 0),
+            ..Default::default()
+        },
+        trainer.bundle.meta.seq_len,
+        0.15,
+        args.u64_or("seed", 0) ^ 1,
+    );
+    let eval_batch = gen.next_tokens(trainer.bundle.meta.batch);
+
+    let global_batch = trainer.bundle.meta.batch * workers;
+    let t0 = std::time::Instant::now();
+    for s in 0..steps {
+        let batch = gen.next_tokens(global_batch);
+        match trainer.step(&batch) {
+            Ok(loss) => {
+                if s % 5 == 0 {
+                    println!("step {s:>5}  loss {loss:.5}");
+                }
+            }
+            Err(e) => {
+                eprintln!("step {s} failed: {e:#}");
+                return 1;
+            }
+        }
+        if eval_every > 0 && (s + 1) % eval_every == 0 {
+            match trainer.evaluate(&eval_batch) {
+                Ok(l) => println!("  eval loss {l:.5}"),
+                Err(e) => eprintln!("  eval failed: {e:#}"),
+            }
+        }
+    }
+    println!(
+        "{} steps in {} ({} /step), switched={:?}",
+        steps,
+        mkor::bench_utils::fmt_secs(t0.elapsed().as_secs_f64()),
+        mkor::bench_utils::fmt_secs(t0.elapsed().as_secs_f64() / steps.max(1) as f64),
+        trainer.record.switched_at,
+    );
+    if let Some(out) = args.get("out") {
+        if let Err(e) = trainer.record.save_json(Path::new(out)) {
+            eprintln!("saving {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    0
+}

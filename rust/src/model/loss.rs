@@ -1,0 +1,130 @@
+//! Loss functions (column-sample layout): softmax cross-entropy, MSE,
+//! accuracy. All return `(loss, dL/dlogits)` with the gradient already
+//! averaged over the batch, matching the `∇_W L` convention of Algorithm 1.
+
+use crate::linalg::Matrix;
+
+/// Softmax cross-entropy over logits `C×b` with integer labels.
+pub fn softmax_xent(logits: &Matrix, labels: &[usize]) -> (f64, Matrix) {
+    let (c, b) = (logits.rows(), logits.cols());
+    assert_eq!(labels.len(), b);
+    let mut dl = Matrix::zeros(c, b);
+    let mut loss = 0.0f64;
+    for col in 0..b {
+        // Stable log-sum-exp per column.
+        let mut maxv = f32::NEG_INFINITY;
+        for i in 0..c {
+            maxv = maxv.max(logits[(i, col)]);
+        }
+        let mut z = 0.0f64;
+        for i in 0..c {
+            z += ((logits[(i, col)] - maxv) as f64).exp();
+        }
+        let logz = z.ln() + maxv as f64;
+        let y = labels[col];
+        assert!(y < c, "label {y} out of range {c}");
+        loss += logz - logits[(y, col)] as f64;
+        for i in 0..c {
+            let p = ((logits[(i, col)] as f64) - logz).exp();
+            dl[(i, col)] = (p as f32 - if i == y { 1.0 } else { 0.0 }) / b as f32;
+        }
+    }
+    (loss / b as f64, dl)
+}
+
+/// Mean-squared error `mean((pred-target)^2)` (mean over all entries).
+pub fn mse_loss(pred: &Matrix, target: &Matrix) -> (f64, Matrix) {
+    assert_eq!(pred.rows(), target.rows());
+    assert_eq!(pred.cols(), target.cols());
+    let n = pred.len() as f64;
+    let mut dl = Matrix::zeros(pred.rows(), pred.cols());
+    let mut loss = 0.0f64;
+    for ((d, &p), &t) in dl.data_mut().iter_mut().zip(pred.data()).zip(target.data()) {
+        let e = p - t;
+        loss += (e as f64) * (e as f64);
+        *d = 2.0 * e / n as f32;
+    }
+    (loss / n, dl)
+}
+
+/// Top-1 accuracy of logits against labels.
+pub fn accuracy(logits: &Matrix, labels: &[usize]) -> f64 {
+    let (c, b) = (logits.rows(), logits.cols());
+    assert_eq!(labels.len(), b);
+    let mut correct = 0usize;
+    for col in 0..b {
+        let mut best = (f32::NEG_INFINITY, 0usize);
+        for i in 0..c {
+            if logits[(i, col)] > best.0 {
+                best = (logits[(i, col)], i);
+            }
+        }
+        if best.1 == labels[col] {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xent_of_perfect_prediction_is_small() {
+        let mut logits = Matrix::zeros(3, 2);
+        logits[(0, 0)] = 20.0;
+        logits[(2, 1)] = 20.0;
+        let (loss, _) = softmax_xent(&logits, &[0, 2]);
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn xent_uniform_is_log_c() {
+        let logits = Matrix::zeros(4, 3);
+        let (loss, dl) = softmax_xent(&logits, &[0, 1, 2]);
+        assert!((loss - (4.0f64).ln()).abs() < 1e-9);
+        // Gradient columns sum to zero (softmax minus one-hot).
+        for col in 0..3 {
+            let s: f32 = (0..4).map(|i| dl[(i, col)]).sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn xent_gradient_finite_difference() {
+        let mut logits = Matrix::from_rows(&[&[0.3, -0.2], &[0.1, 0.5], &[-0.4, 0.2]]);
+        let labels = [2usize, 0];
+        let (_, dl) = softmax_xent(&logits, &labels);
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            for j in 0..2 {
+                let orig = logits[(i, j)];
+                logits[(i, j)] = orig + eps;
+                let (lp, _) = softmax_xent(&logits, &labels);
+                logits[(i, j)] = orig - eps;
+                let (lm, _) = softmax_xent(&logits, &labels);
+                logits[(i, j)] = orig;
+                let num = (lp - lm) / (2.0 * eps as f64);
+                assert!((num - dl[(i, j)] as f64).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn mse_basics() {
+        let p = Matrix::from_rows(&[&[1.0, 2.0]]);
+        let t = Matrix::from_rows(&[&[0.0, 0.0]]);
+        let (loss, dl) = mse_loss(&p, &t);
+        assert!((loss - 2.5).abs() < 1e-9); // (1+4)/2
+        assert!((dl[(0, 0)] - 1.0).abs() < 1e-6); // 2*1/2
+        assert!((dl[(0, 1)] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = Matrix::from_rows(&[&[2.0, 0.0], &[1.0, 3.0]]);
+        assert!((accuracy(&logits, &[0, 1]) - 1.0).abs() < 1e-12);
+        assert!((accuracy(&logits, &[1, 1]) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,345 @@
+//! Fully-connected network (column-sample layout) with KFAC-style captures.
+
+use crate::linalg::{ops, Matrix};
+use crate::model::LayerShape;
+use crate::util::Rng;
+
+/// Pointwise nonlinearity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Relu,
+    Tanh,
+    /// tanh-approximated GELU (what BERT uses).
+    Gelu,
+}
+
+impl Activation {
+    #[inline]
+    fn apply(self, z: f32) -> f32 {
+        match self {
+            Activation::Linear => z,
+            Activation::Relu => z.max(0.0),
+            Activation::Tanh => z.tanh(),
+            Activation::Gelu => {
+                let c = 0.7978845608f32; // sqrt(2/pi)
+                0.5 * z * (1.0 + (c * (z + 0.044715 * z * z * z)).tanh())
+            }
+        }
+    }
+
+    /// Derivative evaluated at pre-activation `z`.
+    #[inline]
+    fn grad(self, z: f32) -> f32 {
+        match self {
+            Activation::Linear => 1.0,
+            Activation::Relu => {
+                if z > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Tanh => {
+                let t = z.tanh();
+                1.0 - t * t
+            }
+            Activation::Gelu => {
+                let c = 0.7978845608f32;
+                let u = c * (z + 0.044715 * z * z * z);
+                let t = u.tanh();
+                let sech2 = 1.0 - t * t;
+                0.5 * (1.0 + t) + 0.5 * z * sech2 * c * (1.0 + 3.0 * 0.044715 * z * z)
+            }
+        }
+    }
+}
+
+/// One dense layer `y = act(W a + bias)`, weights `d_out×d_in`.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Matrix,
+    pub bias: Vec<f32>,
+    pub act: Activation,
+}
+
+impl Dense {
+    /// He-style initialization (scaled for the activation).
+    pub fn init(shape: LayerShape, act: Activation, rng: &mut Rng) -> Self {
+        let gain = match act {
+            Activation::Relu | Activation::Gelu => 2.0f32,
+            _ => 1.0,
+        };
+        let sigma = (gain / shape.d_in as f32).sqrt();
+        Dense {
+            w: Matrix::randn(shape.d_out, shape.d_in, sigma, rng),
+            bias: vec![0.0; shape.d_out],
+            act,
+        }
+    }
+
+    pub fn shape(&self) -> LayerShape {
+        LayerShape::new(self.w.cols(), self.w.rows())
+    }
+}
+
+/// What the backward pass records for one layer — the inputs to every
+/// second-order optimizer in this repo (names follow Algorithm 1):
+#[derive(Clone, Debug)]
+pub struct Capture {
+    /// `A_t^{m-1}`: input activations, d_in×b.
+    pub a: Matrix,
+    /// `G_t^m`: loss gradient wrt the layer's pre-activation output, d_out×b.
+    pub g: Matrix,
+    /// `∇_{W^m} L = G Aᵀ`, d_out×d_in. The 1/b batch averaging is already
+    /// inside `G` (folded in by the loss gradient), so this is the
+    /// batch-mean gradient.
+    pub dw: Matrix,
+    /// Bias gradient (row sums of G; batch-mean for the same reason).
+    pub db: Vec<f32>,
+}
+
+/// A sequential dense network.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+    /// Per-layer (input, pre-activation) caches from the last forward.
+    cache: Vec<(Matrix, Matrix)>,
+}
+
+impl Mlp {
+    /// Build from a dims spec `[in, h1, ..., out]` with `act` on all hidden
+    /// layers and a linear head.
+    pub fn new(dims: &[usize], act: Activation, rng: &mut Rng) -> Self {
+        assert!(dims.len() >= 2);
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for i in 0..dims.len() - 1 {
+            let a = if i + 2 == dims.len() { Activation::Linear } else { act };
+            layers.push(Dense::init(LayerShape::new(dims[i], dims[i + 1]), a, rng));
+        }
+        Mlp { layers, cache: Vec::new() }
+    }
+
+    pub fn shapes(&self) -> Vec<LayerShape> {
+        self.layers.iter().map(Dense::shape).collect()
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.len() + l.bias.len())
+            .sum()
+    }
+
+    /// Forward pass; caches per-layer inputs and pre-activations for
+    /// [`Mlp::backward`]. `x` is d_in×b.
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        self.cache.clear();
+        let mut a = x.clone();
+        for layer in &self.layers {
+            let mut z = ops::matmul(&layer.w, &a);
+            for i in 0..z.rows() {
+                let bi = layer.bias[i];
+                for v in z.row_mut(i) {
+                    *v += bi;
+                }
+            }
+            let mut out = z.clone();
+            for v in out.data_mut() {
+                *v = layer.act.apply(*v);
+            }
+            self.cache.push((a, z));
+            a = out;
+        }
+        a
+    }
+
+    /// Inference-only forward (no caching, doesn't disturb training state).
+    pub fn infer(&self, x: &Matrix) -> Matrix {
+        let mut a = x.clone();
+        for layer in &self.layers {
+            let mut z = ops::matmul(&layer.w, &a);
+            for i in 0..z.rows() {
+                let bi = layer.bias[i];
+                for v in z.row_mut(i) {
+                    *v += bi;
+                }
+            }
+            for v in z.data_mut() {
+                *v = layer.act.apply(*v);
+            }
+            a = z;
+        }
+        a
+    }
+
+    /// Backward from `dL/dy` of the network output (d_out×b). Returns the
+    /// per-layer captures, outermost layer last (same order as `layers`).
+    ///
+    /// `dldy` is expected to already include the 1/b batch averaging, as
+    /// produced by [`crate::model::loss`]'s functions — so `dw = G Aᵀ` here
+    /// is the batch-mean weight gradient without further scaling.
+    pub fn backward(&mut self, dldy: &Matrix) -> Vec<Capture> {
+        assert_eq!(self.cache.len(), self.layers.len(), "forward() before backward()");
+        let mut grads: Vec<Option<Capture>> = (0..self.layers.len()).map(|_| None).collect();
+        let mut up = dldy.clone(); // dL/d(layer output)
+        for (idx, layer) in self.layers.iter().enumerate().rev() {
+            let (a, z) = &self.cache[idx];
+            // g = dL/dz = up ⊙ act'(z)
+            let mut g = up.clone();
+            for (gv, &zv) in g.data_mut().iter_mut().zip(z.data()) {
+                *gv *= layer.act.grad(zv);
+            }
+            // dW = G Aᵀ (1/b already folded into dldy by the loss).
+            let dw = ops::matmul_nt(&g, a);
+            let db: Vec<f32> = (0..g.rows())
+                .map(|i| g.row(i).iter().sum::<f32>())
+                .collect();
+            // dL/d(input) = Wᵀ g
+            if idx > 0 {
+                up = ops::matmul_tn(&layer.w, &g);
+            }
+            grads[idx] = Some(Capture { a: a.clone(), g, dw, db });
+        }
+        grads.into_iter().map(Option::unwrap).collect()
+    }
+
+    /// Apply per-layer weight deltas: `W -= lr * delta`, `bias -= lr * db`.
+    pub fn apply_update(&mut self, deltas: &[Matrix], dbs: &[Vec<f32>], lr: f32) {
+        assert_eq!(deltas.len(), self.layers.len());
+        for ((layer, dw), db) in self.layers.iter_mut().zip(deltas).zip(dbs) {
+            assert_eq!(layer.w.rows(), dw.rows());
+            assert_eq!(layer.w.cols(), dw.cols());
+            for (w, &d) in layer.w.data_mut().iter_mut().zip(dw.data()) {
+                *w -= lr * d;
+            }
+            for (bv, &d) in layer.bias.iter_mut().zip(db) {
+                *bv -= lr * d;
+            }
+        }
+    }
+
+    /// True if any parameter is non-finite (divergence detector used by the
+    /// Table 5 learning-rate sweep).
+    pub fn diverged(&self) -> bool {
+        self.layers
+            .iter()
+            .any(|l| !l.w.all_finite() || l.bias.iter().any(|b| !b.is_finite()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::loss::{mse_loss, softmax_xent};
+
+    fn finite_diff_check(act: Activation) {
+        // Numerical gradient check on a tiny network.
+        let mut rng = Rng::new(42);
+        let mut net = Mlp::new(&[3, 4, 2], act, &mut rng);
+        let x = Matrix::randn(3, 5, 1.0, &mut rng);
+        let labels = vec![0usize, 1, 0, 1, 1];
+
+        let logits = net.forward(&x);
+        let (_, dlogits) = softmax_xent(&logits, &labels);
+        let caps = net.backward(&dlogits);
+
+        let eps = 1e-3f32;
+        for (li, layer) in net.layers.clone().iter().enumerate() {
+            for &(i, j) in &[(0usize, 0usize), (1, 2), (layer.w.rows() - 1, layer.w.cols() - 1)] {
+                let orig = net.layers[li].w[(i, j)];
+                net.layers[li].w[(i, j)] = orig + eps;
+                let (lp, _) = softmax_xent(&net.infer(&x), &labels);
+                net.layers[li].w[(i, j)] = orig - eps;
+                let (lm, _) = softmax_xent(&net.infer(&x), &labels);
+                net.layers[li].w[(i, j)] = orig;
+                let num = (lp - lm) / (2.0 * eps as f64);
+                let ana = caps[li].dw[(i, j)] as f64;
+                assert!(
+                    (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                    "{act:?} layer {li} ({i},{j}): numeric {num} vs analytic {ana}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_tanh() {
+        finite_diff_check(Activation::Tanh);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_relu() {
+        finite_diff_check(Activation::Relu);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_gelu() {
+        finite_diff_check(Activation::Gelu);
+    }
+
+    #[test]
+    fn bias_gradient_matches_finite_differences() {
+        let mut rng = Rng::new(43);
+        let mut net = Mlp::new(&[3, 4, 2], Activation::Tanh, &mut rng);
+        let x = Matrix::randn(3, 6, 1.0, &mut rng);
+        let y = Matrix::randn(2, 6, 1.0, &mut rng);
+        let out = net.forward(&x);
+        let (_, dldy) = mse_loss(&out, &y);
+        let caps = net.backward(&dldy);
+        let eps = 1e-3f32;
+        let orig = net.layers[0].bias[1];
+        net.layers[0].bias[1] = orig + eps;
+        let (lp, _) = mse_loss(&net.infer(&x), &y);
+        net.layers[0].bias[1] = orig - eps;
+        let (lm, _) = mse_loss(&net.infer(&x), &y);
+        net.layers[0].bias[1] = orig;
+        let num = (lp - lm) / (2.0 * eps as f64);
+        assert!((num - caps[0].db[1] as f64).abs() < 1e-2);
+    }
+
+    #[test]
+    fn capture_shapes() {
+        let mut rng = Rng::new(44);
+        let mut net = Mlp::new(&[5, 7, 3], Activation::Relu, &mut rng);
+        let x = Matrix::randn(5, 4, 1.0, &mut rng);
+        let out = net.forward(&x);
+        assert_eq!(out.rows(), 3);
+        assert_eq!(out.cols(), 4);
+        let caps = net.backward(&Matrix::zeros(3, 4));
+        assert_eq!(caps.len(), 2);
+        assert_eq!(caps[0].a.rows(), 5);
+        assert_eq!(caps[0].g.rows(), 7);
+        assert_eq!(caps[1].a.rows(), 7);
+        assert_eq!(caps[1].g.rows(), 3);
+        assert_eq!(caps[0].dw.rows(), 7);
+        assert_eq!(caps[0].dw.cols(), 5);
+    }
+
+    #[test]
+    fn sgd_on_captures_learns_xor() {
+        // End-to-end sanity: raw gradient descent on the captures solves XOR.
+        let mut rng = Rng::new(45);
+        let mut net = Mlp::new(&[2, 16, 2], Activation::Tanh, &mut rng);
+        let x = Matrix::from_rows(&[&[0.0, 0.0, 1.0, 1.0], &[0.0, 1.0, 0.0, 1.0]]);
+        let labels = vec![0usize, 1, 1, 0];
+        let mut last = f64::INFINITY;
+        for _ in 0..400 {
+            let logits = net.forward(&x);
+            let (loss, dlogits) = softmax_xent(&logits, &labels);
+            let caps = net.backward(&dlogits);
+            let deltas: Vec<Matrix> = caps.iter().map(|c| c.dw.clone()).collect();
+            let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
+            net.apply_update(&deltas, &dbs, 0.5);
+            last = loss;
+        }
+        assert!(last < 0.05, "XOR loss {last}");
+    }
+
+    #[test]
+    fn num_params_counts_weights_and_biases() {
+        let mut rng = Rng::new(46);
+        let net = Mlp::new(&[3, 5, 2], Activation::Relu, &mut rng);
+        assert_eq!(net.num_params(), 3 * 5 + 5 + 5 * 2 + 2);
+    }
+}

@@ -1,0 +1,40 @@
+//! Rust-native neural network with per-layer activation/gradient capture.
+//!
+//! The convergence experiments (Figures 2/4/6/11/12, Tables 2/3/5) need to
+//! train real models under eight different optimizers, and KFAC-family
+//! optimizers need, per layer `m`, the batch of input activations
+//! `A_t^{m-1} ∈ R^{d_in×b}` and pre-activation input gradients
+//! `G_t^m ∈ R^{d_out×b}` — exactly the quantities Algorithm 1 consumes. The
+//! [`Mlp`] here is a column-sample (d×b) fully-connected network whose
+//! backward pass returns those captures for every layer.
+//!
+//! The ~100M-parameter transformer path lives in JAX (L2) and is executed
+//! from Rust via `runtime`; this module is the substrate for the many
+//! smaller optimizer-comparison experiments where the paper itself uses an
+//! autoencoder / AlexNet-scale models (§4 "Inversion Frequency", §8.12).
+
+pub mod loss;
+pub mod mlp;
+pub mod specs;
+
+pub use loss::{accuracy, mse_loss, softmax_xent};
+pub use mlp::{Activation, Capture, Dense, Mlp};
+
+/// Shape of one learnable layer (used by optimizers to allocate state and
+/// by the cost model to price steps at paper scale).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    pub d_in: usize,
+    pub d_out: usize,
+}
+
+impl LayerShape {
+    pub fn new(d_in: usize, d_out: usize) -> Self {
+        LayerShape { d_in, d_out }
+    }
+
+    /// Parameter count (weights only; biases are first-order everywhere).
+    pub fn params(&self) -> usize {
+        self.d_in * self.d_out
+    }
+}

@@ -1,0 +1,206 @@
+//! Layer-dimension specs of the paper's real models.
+//!
+//! The cost model (Table 1, Figure 3, Figure 9) and the memory accounting
+//! (Table 6) price optimizer steps at *paper scale*, which requires the true
+//! per-layer dimensions of BERT-Large-Uncased, BERT-Base, ResNet-50 and
+//! AlexNet — not the proxy models'. KFAC treats a conv layer with `c_in`
+//! input channels, `c_out` filters and k×k kernels as a linear layer of
+//! shape `(c_in·k²) → c_out` (patch extraction), which is how the conv specs
+//! below are expressed.
+
+use crate::model::LayerShape;
+
+/// A named model spec: the learnable layers KFAC-family optimizers
+/// precondition, plus the effective per-GPU batch size in *samples at the
+/// layer input* (for transformers this is batch×seq-len — the b that SNGD's
+/// O(b³) scales with, §1).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerShape>,
+    /// Effective per-device batch dimension seen by the factor math.
+    pub effective_batch: usize,
+}
+
+impl ModelSpec {
+    pub fn params(&self) -> usize {
+        self.layers.iter().map(LayerShape::params).sum()
+    }
+
+    /// Largest layer dimension `d = max(d_in, d_out)` over the model — the
+    /// `d` of Table 1.
+    pub fn max_dim(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.d_in.max(l.d_out))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// BERT-Large-Uncased: 24 transformer blocks, hidden 1024, FFN 4096,
+/// embeddings + pooler + MLM head. Effective batch = 8 sequences × 512
+/// tokens (phase-2 pre-training shape used by KAISA).
+pub fn bert_large() -> ModelSpec {
+    let h = 1024;
+    let ffn = 4096;
+    let vocab = 30522;
+    let mut layers = Vec::new();
+    // Embedding projection treated as a (vocab → h) linear for cost purposes.
+    layers.push(LayerShape::new(vocab, h));
+    for _ in 0..24 {
+        // Q, K, V, attention-output projections.
+        for _ in 0..4 {
+            layers.push(LayerShape::new(h, h));
+        }
+        // FFN up / down.
+        layers.push(LayerShape::new(h, ffn));
+        layers.push(LayerShape::new(ffn, h));
+    }
+    // Pooler + MLM head transform; the MLM decoder is weight-tied to the
+    // embedding and therefore not counted again (matches HF param counts).
+    layers.push(LayerShape::new(h, h));
+    layers.push(LayerShape::new(h, h));
+    ModelSpec { name: "BERT-Large-Uncased".into(), layers, effective_batch: 8 * 512 }
+}
+
+/// BERT-Base-Cased: 12 blocks, hidden 768, FFN 3072.
+pub fn bert_base() -> ModelSpec {
+    let h = 768;
+    let ffn = 3072;
+    let vocab = 28996;
+    let mut layers = Vec::new();
+    layers.push(LayerShape::new(vocab, h));
+    for _ in 0..12 {
+        for _ in 0..4 {
+            layers.push(LayerShape::new(h, h));
+        }
+        layers.push(LayerShape::new(h, ffn));
+        layers.push(LayerShape::new(ffn, h));
+    }
+    // Tied MLM decoder not re-counted (see bert_large).
+    layers.push(LayerShape::new(h, h));
+    layers.push(LayerShape::new(h, h));
+    ModelSpec { name: "BERT-Base-Cased".into(), layers, effective_batch: 8 * 384 }
+}
+
+/// ResNet-50 conv/fc layers in KFAC's (c_in·k², c_out) linear view.
+/// Effective batch = 32 images × mean spatial positions (~196 at stride-16
+/// resolution); 32·196 ≈ 6272, but KFAC implementations subsample spatial
+/// positions; KAISA's effective per-GPU batch for factor math is ~32·49.
+pub fn resnet50() -> ModelSpec {
+    let mut layers = Vec::new();
+    let mut push_conv = |cin: usize, k: usize, cout: usize, n: usize| {
+        for _ in 0..n {
+            layers.push(LayerShape::new(cin * k * k, cout));
+        }
+    };
+    // Stem.
+    push_conv(3, 7, 64, 1);
+    // Stage conv blocks (bottlenecks): (1x1 reduce, 3x3, 1x1 expand) × blocks.
+    // Stage 1: 3 blocks, width 64→256.
+    push_conv(64, 1, 64, 1);
+    push_conv(64, 3, 64, 3);
+    push_conv(64, 1, 256, 3);
+    push_conv(256, 1, 64, 2);
+    push_conv(64, 1, 256, 1); // downsample shortcut
+    // Stage 2: 4 blocks, width 128→512.
+    push_conv(256, 1, 128, 4);
+    push_conv(128, 3, 128, 4);
+    push_conv(128, 1, 512, 4);
+    push_conv(256, 1, 512, 1);
+    // Stage 3: 6 blocks, width 256→1024.
+    push_conv(512, 1, 256, 6);
+    push_conv(256, 3, 256, 6);
+    push_conv(256, 1, 1024, 6);
+    push_conv(512, 1, 1024, 1);
+    // Stage 4: 3 blocks, width 512→2048.
+    push_conv(1024, 1, 512, 3);
+    push_conv(512, 3, 512, 3);
+    push_conv(512, 1, 2048, 3);
+    push_conv(1024, 1, 2048, 1);
+    // Classifier.
+    layers.push(LayerShape::new(2048, 1000));
+    ModelSpec { name: "ResNet-50".into(), layers, effective_batch: 32 * 49 }
+}
+
+/// AlexNet, CIFAR-100 variant used in §8.12 (paper: 20.3M params): 5 conv
+/// + 3 fc; the 32×32 input leaves a 2×2 spatial map before the classifier,
+/// which is what brings the fc1 below the 37.7M of ImageNet AlexNet.
+pub fn alexnet() -> ModelSpec {
+    let mut layers = Vec::new();
+    layers.push(LayerShape::new(3 * 11 * 11, 64));
+    layers.push(LayerShape::new(64 * 5 * 5, 192));
+    layers.push(LayerShape::new(192 * 3 * 3, 384));
+    layers.push(LayerShape::new(384 * 3 * 3, 256));
+    layers.push(LayerShape::new(256 * 3 * 3, 256));
+    layers.push(LayerShape::new(256 * 2 * 2, 4096));
+    layers.push(LayerShape::new(4096, 4096));
+    layers.push(LayerShape::new(4096, 100));
+    ModelSpec { name: "AlexNet".into(), layers, effective_batch: 128 }
+}
+
+/// The autoencoder of the Figure 4 experiment (CIFAR-100-shaped).
+pub fn autoencoder_spec() -> ModelSpec {
+    let dims = [3072usize, 1024, 256, 64, 256, 1024, 3072];
+    let layers = dims
+        .windows(2)
+        .map(|w| LayerShape::new(w[0], w[1]))
+        .collect();
+    ModelSpec { name: "Autoencoder".into(), layers, effective_batch: 128 }
+}
+
+/// All specs keyed by CLI-friendly names.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name {
+        "bert-large" => Some(bert_large()),
+        "bert-base" => Some(bert_base()),
+        "resnet50" => Some(resnet50()),
+        "alexnet" => Some(alexnet()),
+        "autoencoder" => Some(autoencoder_spec()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_large_param_count_in_range() {
+        // Paper Table 7: 335.1M parameters. Our layer view (no layernorm /
+        // position embeddings, decoder counted once) should land within ~15%.
+        let p = bert_large().params() as f64 / 1e6;
+        assert!(p > 310.0 && p < 360.0, "params={p}M");
+    }
+
+    #[test]
+    fn bert_base_param_count_in_range() {
+        let p = bert_base().params() as f64 / 1e6;
+        assert!(p > 95.0 && p < 120.0, "params={p}M"); // paper: 108.9M
+    }
+
+    #[test]
+    fn resnet50_param_count_in_range() {
+        let p = resnet50().params() as f64 / 1e6;
+        assert!(p > 20.0 && p < 30.0, "params={p}M"); // paper: 25.5M
+    }
+
+    #[test]
+    fn alexnet_param_count_in_range() {
+        let p = alexnet().params() as f64 / 1e6;
+        assert!(p > 15.0 && p < 26.0, "params={p}M"); // paper: 20.3M
+    }
+
+    #[test]
+    fn transformer_dims_dominate_resnet_dims() {
+        // The paper's core scaling argument: d in transformers >> d in CNNs.
+        assert!(bert_large().max_dim() > resnet50().max_dim());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("bert-large").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,265 @@
+//! Eva baseline (Zhang, Shi & Li 2023): vectorized second-order
+//! approximation.
+//!
+//! Eva stores only the Kronecker *vectors* ā, ḡ (batch means) and
+//! preconditions with the closed-form SMW inverse of the damped rank-1
+//! factors:
+//!
+//! ```text
+//! (v vᵀ + μI)⁻¹ = (1/μ)(I − v vᵀ / (μ + vᵀv))
+//! ```
+//!
+//! applied on both sides of the gradient — O(d²) work with O(2d) state
+//! (Table 1). Two contrasts with MKOR that the paper calls out (§1): Eva
+//! needs the damping factor μ (an extra approximation-error knob), and
+//! because it stores vectors rather than factor inverses, it cannot carry
+//! momentum in the second-order statistics — each step's preconditioner
+//! sees only the current batch (optionally smoothed over the vectors, not
+//! the factors).
+
+use crate::linalg::{ops, Matrix};
+use crate::model::{Capture, Dense, LayerShape};
+use crate::optim::first_order::SgdMomentum;
+use crate::optim::rescale::rescale_to_gradient_norm;
+use crate::optim::Optimizer;
+use crate::util::timer::PhaseTimer;
+
+/// Eva hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct EvaConfig {
+    /// SMW damping μ.
+    pub damping: f32,
+    /// EMA smoothing of the Kronecker vectors (Eva's β; this smooths the
+    /// *vectors*, not the factors — see module docs).
+    pub beta: f32,
+    pub momentum: f32,
+    /// Refresh period for the vectors (Eva updates every step by default).
+    pub update_freq: usize,
+}
+
+impl Default for EvaConfig {
+    fn default() -> Self {
+        EvaConfig { damping: 0.03, beta: 0.95, momentum: 0.9, update_freq: 1 }
+    }
+}
+
+struct LayerState {
+    a_vec: Vec<f32>,
+    g_vec: Vec<f32>,
+    initialized: bool,
+}
+
+/// The Eva optimizer.
+pub struct Eva {
+    cfg: EvaConfig,
+    layers: Vec<LayerState>,
+    shapes: Vec<LayerShape>,
+    backend: SgdMomentum,
+    t: usize,
+    last_sync_bytes: usize,
+}
+
+impl Eva {
+    pub fn new(shapes: &[LayerShape], cfg: EvaConfig) -> Self {
+        Eva {
+            cfg,
+            layers: shapes
+                .iter()
+                .map(|s| LayerState {
+                    a_vec: vec![0.0; s.d_in],
+                    g_vec: vec![0.0; s.d_out],
+                    initialized: false,
+                })
+                .collect(),
+            shapes: shapes.to_vec(),
+            backend: SgdMomentum::new(shapes, cfg.momentum),
+            t: 0,
+            last_sync_bytes: 0,
+        }
+    }
+
+    /// Apply `(vvᵀ + μI)⁻¹` to the rows/cols of `m` via the closed form.
+    /// `side = true` applies from the left (v has d_out entries), else from
+    /// the right. O(d_out·d_in).
+    fn apply_smw(m: &Matrix, v: &[f32], mu: f32, left: bool) -> Matrix {
+        let denom = mu as f64 + ops::dot(v, v);
+        let mut out = m.clone();
+        if left {
+            // out = (1/μ)(m − v (vᵀ m)/denom)
+            let vt_m = ops::matvec_t(m, v); // wait: need vᵀM over rows
+            // matvec_t computes Mᵀ v with M (rows×cols): gives cols-dim = correct vᵀM.
+            for r in 0..out.rows() {
+                let vr = v[r] as f64;
+                let row = out.row_mut(r);
+                for (c, val) in row.iter_mut().enumerate() {
+                    *val = ((*val as f64 - vr * vt_m[c] as f64 / denom) / mu as f64) as f32;
+                }
+            }
+        } else {
+            // out = (1/μ)(m − (m v) vᵀ/denom)
+            let mv = ops::matvec(m, v);
+            for r in 0..out.rows() {
+                let mvr = mv[r] as f64;
+                let row = out.row_mut(r);
+                for (c, val) in row.iter_mut().enumerate() {
+                    *val = ((*val as f64 - mvr * v[c] as f64 / denom) / mu as f64) as f32;
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Optimizer for Eva {
+    fn name(&self) -> &str {
+        "eva"
+    }
+
+    fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer) {
+        self.last_sync_bytes = 0;
+        let mut deltas = Vec::with_capacity(caps.len());
+        for (idx, cap) in caps.iter().enumerate() {
+            // ---- vector update (factor computation) --------------------
+            if self.t % self.cfg.update_freq == 0 {
+                let t0 = std::time::Instant::now();
+                let a = ops::col_mean(&cap.a);
+                let g = ops::col_mean(&cap.g);
+                let st = &mut self.layers[idx];
+                if st.initialized {
+                    let b = self.cfg.beta;
+                    for (sv, &nv) in st.a_vec.iter_mut().zip(&a) {
+                        *sv = b * *sv + (1.0 - b) * nv;
+                    }
+                    for (sv, &nv) in st.g_vec.iter_mut().zip(&g) {
+                        *sv = b * *sv + (1.0 - b) * nv;
+                    }
+                } else {
+                    st.a_vec = a;
+                    st.g_vec = g;
+                    st.initialized = true;
+                }
+                // Sync: 2d fp32 vector elements (Table 1's O(2d)).
+                let s = &self.shapes[idx];
+                self.last_sync_bytes += (s.d_in + s.d_out) * 4;
+                timer.add("factor", t0.elapsed());
+            }
+
+            // ---- precondition ------------------------------------------
+            let t0 = std::time::Instant::now();
+            let st = &self.layers[idx];
+            let mu = self.cfg.damping;
+            let left = Eva::apply_smw(&cap.dw, &st.g_vec, mu, true);
+            let mut delta = Eva::apply_smw(&left, &st.a_vec, mu, false);
+            // Eva normalizes update scale via KL-clip; we use the same
+            // norm-matching rescale for comparability across optimizers.
+            rescale_to_gradient_norm(&mut delta, &cap.dw);
+            timer.add("precond", t0.elapsed());
+            deltas.push(delta);
+        }
+
+        let t0 = std::time::Instant::now();
+        let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
+        self.backend.apply(layers, &deltas, &dbs, lr);
+        timer.add("update", t0.elapsed());
+        self.t += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        // O(2d): two vectors per layer.
+        self.shapes
+            .iter()
+            .map(|s| (s.d_in + s.d_out) * 4)
+            .sum::<usize>()
+            + self.backend.state_bytes()
+    }
+
+    fn sync_bytes_last_step(&self) -> usize {
+        self.last_sync_bytes
+    }
+
+    fn steps_done(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::inverse::invert;
+    use crate::model::Activation;
+    use crate::util::Rng;
+
+    #[test]
+    fn smw_closed_form_matches_dense_inverse() {
+        let mut rng = Rng::new(1);
+        let n = 6;
+        let v: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let mu = 0.4f32;
+        // Dense (vvᵀ + μI)⁻¹ M
+        let mut vvmu = ops::outer(&v, &v);
+        for i in 0..n {
+            vvmu[(i, i)] += mu;
+        }
+        let dense_inv = invert(&vvmu).unwrap();
+        let m = Matrix::randn(n, 4, 1.0, &mut rng);
+        let want = ops::matmul(&dense_inv, &m);
+        let got = Eva::apply_smw(&m, &v, mu, true);
+        assert!(got.max_abs_diff(&want) < 1e-3);
+
+        // Right application: M (vvᵀ + μI)⁻¹
+        let m2 = Matrix::randn(4, n, 1.0, &mut rng);
+        let want2 = ops::matmul(&m2, &dense_inv);
+        let got2 = Eva::apply_smw(&m2, &v, mu, false);
+        assert!(got2.max_abs_diff(&want2) < 1e-3);
+    }
+
+    #[test]
+    fn state_is_linear_in_d() {
+        let shapes = [LayerShape::new(100, 100)];
+        let eva = Eva::new(&shapes, EvaConfig::default());
+        // 2d vectors (800 bytes) + backend momentum (d² f32).
+        assert_eq!(eva.state_bytes(), 200 * 4 + (100 * 100 + 100) * 4);
+    }
+
+    #[test]
+    fn reduces_quadratic_loss() {
+        let mut rng = Rng::new(2);
+        let shapes = [LayerShape::new(6, 4)];
+        let x = Matrix::randn(6, 16, 1.0, &mut rng);
+        let w_true = Matrix::randn(4, 6, 1.0, &mut rng);
+        let y = ops::matmul(&w_true, &x);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        layers[0].w = Matrix::zeros(4, 6);
+        let mut opt = Eva::new(&shapes, EvaConfig::default());
+        let mut timer = PhaseTimer::new();
+        let mut loss = f64::INFINITY;
+        for _ in 0..150 {
+            let pred = ops::matmul(&layers[0].w, &x);
+            let mut err = pred.clone();
+            err.blend(1.0, -1.0, &y);
+            loss = err.fro_norm().powi(2) / 16.0;
+            let mut g = err;
+            g.scale(2.0 / 16.0);
+            let dw = ops::matmul_nt(&g, &x);
+            let cap = Capture { a: x.clone(), g, dw, db: vec![0.0; 4] };
+            opt.step(&mut layers, std::slice::from_ref(&cap), 0.05, &mut timer);
+        }
+        assert!(loss < 0.1, "loss={loss}");
+    }
+
+    #[test]
+    fn sync_is_linear_and_fp32() {
+        let shapes = [LayerShape::new(64, 64)];
+        let mut opt = Eva::new(&shapes, EvaConfig::default());
+        let mut rng = Rng::new(3);
+        let a = Matrix::randn(64, 4, 1.0, &mut rng);
+        let g = Matrix::randn(64, 4, 1.0, &mut rng);
+        let mut dw = ops::matmul_nt(&g, &a);
+        dw.scale(0.25);
+        let cap = Capture { a, g, dw, db: vec![0.0; 64] };
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        let mut timer = PhaseTimer::new();
+        opt.step(&mut layers, std::slice::from_ref(&cap), 0.01, &mut timer);
+        assert_eq!(opt.sync_bytes_last_step(), 128 * 4);
+    }
+}

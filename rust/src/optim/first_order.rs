@@ -1,0 +1,383 @@
+//! First-order baselines: SGD with momentum, Adam, and LAMB.
+//!
+//! LAMB (You et al., 2019) is the paper's first-order baseline for BERT
+//! (Tables 2/3); SGD-momentum is the ResNet baseline (§8.1). Each exposes
+//! both the [`Optimizer`] interface (stand-alone baseline) and an
+//! [`apply`]-style entry point so MKOR/MKOR-H can use it as the line-14
+//! backend on *preconditioned* deltas.
+
+use crate::linalg::Matrix;
+use crate::model::{Capture, Dense, LayerShape};
+use crate::optim::Optimizer;
+use crate::util::timer::PhaseTimer;
+
+/// SGD with heavy-ball momentum: `v ← m·v + Δ; W ← W − lr·v`.
+pub struct SgdMomentum {
+    momentum: f32,
+    vel_w: Vec<Matrix>,
+    vel_b: Vec<Vec<f32>>,
+    t: usize,
+}
+
+impl SgdMomentum {
+    pub fn new(shapes: &[LayerShape], momentum: f32) -> Self {
+        SgdMomentum {
+            momentum,
+            vel_w: shapes.iter().map(|s| Matrix::zeros(s.d_out, s.d_in)).collect(),
+            vel_b: shapes.iter().map(|s| vec![0.0; s.d_out]).collect(),
+            t: 0,
+        }
+    }
+
+    /// Apply deltas (gradients or preconditioned gradients) with momentum.
+    pub fn apply(&mut self, layers: &mut [Dense], deltas: &[Matrix], dbs: &[Vec<f32>], lr: f32) {
+        for i in 0..layers.len() {
+            let v = &mut self.vel_w[i];
+            for (vv, &d) in v.data_mut().iter_mut().zip(deltas[i].data()) {
+                *vv = self.momentum * *vv + d;
+            }
+            for (w, &vv) in layers[i].w.data_mut().iter_mut().zip(v.data()) {
+                *w -= lr * vv;
+            }
+            let vb = &mut self.vel_b[i];
+            for ((bv, vv), &d) in layers[i].bias.iter_mut().zip(vb.iter_mut()).zip(&dbs[i]) {
+                *vv = self.momentum * *vv + d;
+                *bv -= lr * *vv;
+            }
+        }
+        self.t += 1;
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.vel_w.iter().map(|m| m.len() * 4).sum::<usize>()
+            + self.vel_b.iter().map(|v| v.len() * 4).sum::<usize>()
+    }
+}
+
+impl Optimizer for SgdMomentum {
+    fn name(&self) -> &str {
+        "sgd"
+    }
+
+    fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer) {
+        let t0 = std::time::Instant::now();
+        let deltas: Vec<Matrix> = caps.iter().map(|c| c.dw.clone()).collect();
+        let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
+        self.apply(layers, &deltas, &dbs, lr);
+        timer.add("update", t0.elapsed());
+    }
+
+    fn state_bytes(&self) -> usize {
+        SgdMomentum::state_bytes(self)
+    }
+
+    fn steps_done(&self) -> usize {
+        self.t
+    }
+}
+
+/// Adam/LAMB moment hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-6, weight_decay: 0.0 }
+    }
+}
+
+/// Per-layer Adam state.
+struct Moments {
+    m_w: Matrix,
+    v_w: Matrix,
+    m_b: Vec<f32>,
+    v_b: Vec<f32>,
+}
+
+/// Adam (Kingma & Ba).
+pub struct Adam {
+    cfg: AdamConfig,
+    state: Vec<Moments>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(shapes: &[LayerShape], cfg: AdamConfig) -> Self {
+        Adam {
+            cfg,
+            state: shapes
+                .iter()
+                .map(|s| Moments {
+                    m_w: Matrix::zeros(s.d_out, s.d_in),
+                    v_w: Matrix::zeros(s.d_out, s.d_in),
+                    m_b: vec![0.0; s.d_out],
+                    v_b: vec![0.0; s.d_out],
+                })
+                .collect(),
+            t: 0,
+        }
+    }
+
+    /// Compute the bias-corrected Adam direction for one layer's delta.
+    fn adam_direction(&mut self, i: usize, delta: &Matrix, db: &[f32]) -> (Matrix, Vec<f32>) {
+        let AdamConfig { beta1, beta2, eps, .. } = self.cfg;
+        let t = (self.t + 1) as i32;
+        let bc1 = 1.0 - beta1.powi(t);
+        let bc2 = 1.0 - beta2.powi(t);
+        let st = &mut self.state[i];
+        let mut dir = Matrix::zeros(delta.rows(), delta.cols());
+        for (((dv, m), v), &g) in dir
+            .data_mut()
+            .iter_mut()
+            .zip(st.m_w.data_mut())
+            .zip(st.v_w.data_mut())
+            .zip(delta.data())
+        {
+            *m = beta1 * *m + (1.0 - beta1) * g;
+            *v = beta2 * *v + (1.0 - beta2) * g * g;
+            *dv = (*m / bc1) / ((*v / bc2).sqrt() + eps);
+        }
+        let mut dirb = vec![0.0f32; db.len()];
+        for (((dv, m), v), &g) in dirb
+            .iter_mut()
+            .zip(st.m_b.iter_mut())
+            .zip(st.v_b.iter_mut())
+            .zip(db)
+        {
+            *m = beta1 * *m + (1.0 - beta1) * g;
+            *v = beta2 * *v + (1.0 - beta2) * g * g;
+            *dv = (*m / bc1) / ((*v / bc2).sqrt() + eps);
+        }
+        (dir, dirb)
+    }
+
+    pub fn apply(&mut self, layers: &mut [Dense], deltas: &[Matrix], dbs: &[Vec<f32>], lr: f32) {
+        let wd = self.cfg.weight_decay;
+        for i in 0..layers.len() {
+            let (mut dir, dirb) = self.adam_direction(i, &deltas[i], &dbs[i]);
+            if wd > 0.0 {
+                for (d, &w) in dir.data_mut().iter_mut().zip(layers[i].w.data()) {
+                    *d += wd * w;
+                }
+            }
+            for (w, &d) in layers[i].w.data_mut().iter_mut().zip(dir.data()) {
+                *w -= lr * d;
+            }
+            for (b, &d) in layers[i].bias.iter_mut().zip(&dirb) {
+                *b -= lr * d;
+            }
+        }
+        self.t += 1;
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.state
+            .iter()
+            .map(|s| (s.m_w.len() + s.v_w.len() + s.m_b.len() + s.v_b.len()) * 4)
+            .sum()
+    }
+}
+
+impl Optimizer for Adam {
+    fn name(&self) -> &str {
+        "adam"
+    }
+
+    fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer) {
+        let t0 = std::time::Instant::now();
+        let deltas: Vec<Matrix> = caps.iter().map(|c| c.dw.clone()).collect();
+        let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
+        self.apply(layers, &deltas, &dbs, lr);
+        timer.add("update", t0.elapsed());
+    }
+
+    fn state_bytes(&self) -> usize {
+        Adam::state_bytes(self)
+    }
+
+    fn steps_done(&self) -> usize {
+        self.t
+    }
+}
+
+/// LAMB: Adam direction with a per-layer trust ratio `‖W‖/‖dir‖`.
+pub struct Lamb {
+    inner: Adam,
+    t: usize,
+}
+
+impl Lamb {
+    pub fn new(shapes: &[LayerShape], cfg: AdamConfig) -> Self {
+        Lamb { inner: Adam::new(shapes, cfg), t: 0 }
+    }
+
+    pub fn apply(&mut self, layers: &mut [Dense], deltas: &[Matrix], dbs: &[Vec<f32>], lr: f32) {
+        let wd = self.inner.cfg.weight_decay;
+        for i in 0..layers.len() {
+            let (mut dir, dirb) = self.inner.adam_direction(i, &deltas[i], &dbs[i]);
+            if wd > 0.0 {
+                for (d, &w) in dir.data_mut().iter_mut().zip(layers[i].w.data()) {
+                    *d += wd * w;
+                }
+            }
+            // Trust ratio, clipped to [0, 10] like NVIDIA's Fused LAMB.
+            let wnorm = layers[i].w.fro_norm();
+            let dnorm = dir.fro_norm();
+            let ratio = if wnorm > 0.0 && dnorm > 0.0 {
+                ((wnorm / dnorm) as f32).min(10.0)
+            } else {
+                1.0
+            };
+            for (w, &d) in layers[i].w.data_mut().iter_mut().zip(dir.data()) {
+                *w -= lr * ratio * d;
+            }
+            for (b, &d) in layers[i].bias.iter_mut().zip(&dirb) {
+                *b -= lr * d;
+            }
+        }
+        self.inner.t += 1;
+        self.t += 1;
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+}
+
+impl Optimizer for Lamb {
+    fn name(&self) -> &str {
+        "lamb"
+    }
+
+    fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer) {
+        let t0 = std::time::Instant::now();
+        let deltas: Vec<Matrix> = caps.iter().map(|c| c.dw.clone()).collect();
+        let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
+        self.apply(layers, &deltas, &dbs, lr);
+        timer.add("update", t0.elapsed());
+    }
+
+    fn state_bytes(&self) -> usize {
+        Lamb::state_bytes(self)
+    }
+
+    fn steps_done(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+    use crate::model::Activation;
+    use crate::util::Rng;
+
+    fn quadratic_losses(opt_name: &str, steps: usize, lr: f32) -> f64 {
+        // min ‖Wx − y‖² from zero init.
+        let mut rng = Rng::new(31);
+        let shapes = [LayerShape::new(6, 4)];
+        let x = Matrix::randn(6, 32, 1.0, &mut rng);
+        let w_true = Matrix::randn(4, 6, 1.0, &mut rng);
+        let y = ops::matmul(&w_true, &x);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        layers[0].w = Matrix::zeros(4, 6);
+        let mut opt = crate::optim::by_name(opt_name, &shapes).unwrap();
+        let mut timer = PhaseTimer::new();
+        let mut loss = f64::INFINITY;
+        for _ in 0..steps {
+            let pred = ops::matmul(&layers[0].w, &x);
+            let mut err = pred.clone();
+            err.blend(1.0, -1.0, &y);
+            loss = err.fro_norm().powi(2) / 32.0;
+            let mut g = err;
+            g.scale(2.0 / 32.0);
+            let dw = ops::matmul_nt(&g, &x);
+            let cap = Capture { a: x.clone(), g, dw, db: vec![0.0; 4] };
+            opt.step(&mut layers, std::slice::from_ref(&cap), lr, &mut timer);
+        }
+        loss
+    }
+
+    #[test]
+    fn sgd_momentum_reduces_quadratic_loss() {
+        assert!(quadratic_losses("sgd", 100, 0.05) < 0.05);
+    }
+
+    #[test]
+    fn adam_reduces_quadratic_loss() {
+        assert!(quadratic_losses("adam", 200, 0.05) < 0.05);
+    }
+
+    #[test]
+    fn lamb_reduces_quadratic_loss() {
+        // LAMB's trust ratio throttles steps while ‖W‖ is small (zero
+        // init), so it needs more steps than Adam on this toy problem; the
+        // contract is a large decrease, not a race.
+        let final_loss = quadratic_losses("lamb", 400, 0.05);
+        let init_loss = quadratic_losses("lamb", 1, 0.0);
+        assert!(
+            final_loss < 0.1 * init_loss,
+            "final {final_loss} vs init {init_loss}"
+        );
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let shapes = [LayerShape::new(1, 1)];
+        let mut rng = Rng::new(1);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        layers[0].w[(0, 0)] = 0.0;
+        let mut sgd = SgdMomentum::new(&shapes, 0.5);
+        let delta = vec![Matrix::from_rows(&[&[1.0f32]])];
+        let dbs = vec![vec![0.0f32]];
+        sgd.apply(&mut layers, &delta, &dbs, 1.0);
+        assert!((layers[0].w[(0, 0)] + 1.0).abs() < 1e-6); // -1
+        sgd.apply(&mut layers, &delta, &dbs, 1.0);
+        // velocity = 0.5*1 + 1 = 1.5 → w = -2.5
+        assert!((layers[0].w[(0, 0)] + 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_sign_like() {
+        let shapes = [LayerShape::new(2, 1)];
+        let mut rng = Rng::new(2);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        layers[0].w = Matrix::zeros(1, 2);
+        let mut adam = Adam::new(&shapes, AdamConfig::default());
+        let delta = vec![Matrix::from_rows(&[&[10.0f32, -0.001]])];
+        let dbs = vec![vec![0.0f32]];
+        adam.apply(&mut layers, &delta, &dbs, 0.1);
+        // Both coordinates move ≈ lr in magnitude regardless of scale.
+        assert!((layers[0].w[(0, 0)] + 0.1).abs() < 0.02);
+        assert!((layers[0].w[(0, 1)] - 0.1).abs() < 0.02);
+    }
+
+    #[test]
+    fn lamb_trust_ratio_bounds_step() {
+        let shapes = [LayerShape::new(1, 1)];
+        let mut rng = Rng::new(3);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        layers[0].w[(0, 0)] = 1e-3; // tiny weight norm → tiny trust ratio
+        let mut lamb = Lamb::new(&shapes, AdamConfig::default());
+        let delta = vec![Matrix::from_rows(&[&[100.0f32]])];
+        let dbs = vec![vec![0.0f32]];
+        lamb.apply(&mut layers, &delta, &dbs, 0.1);
+        // Step is ≤ lr·ratio·1 ≈ lr·(1e-3/1) — tiny, unlike Adam's 0.1.
+        assert!(layers[0].w[(0, 0)].abs() < 1e-2);
+    }
+
+    #[test]
+    fn state_bytes_scale_with_params() {
+        let shapes = [LayerShape::new(10, 10)];
+        let sgd = SgdMomentum::new(&shapes, 0.9);
+        let adam = Adam::new(&shapes, AdamConfig::default());
+        // Adam keeps 2 moments vs SGD's 1.
+        assert_eq!(adam.state_bytes(), 2 * sgd.state_bytes());
+    }
+}

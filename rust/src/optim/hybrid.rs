@@ -1,0 +1,222 @@
+//! MKOR-H (§3.2): hybrid second-/first-order optimizer with a
+//! loss-decrease-rate switching rule.
+//!
+//! Second-order acceleration concentrates in the early phase of training —
+//! near convergence the curvature approaches identity and the expensive
+//! factor machinery stops paying for itself. MKOR-H monitors the loss
+//! decrease *rate* (EMA-smoothed) and permanently switches to the
+//! first-order backend when the rate of the recent window falls below
+//! `switch_ratio` × the rate observed early on.
+
+use crate::model::{Capture, Dense, LayerShape};
+use crate::optim::first_order::SgdMomentum;
+use crate::optim::mkor::{Mkor, MkorConfig};
+use crate::optim::Optimizer;
+use crate::util::stats::Ema;
+use crate::util::timer::PhaseTimer;
+
+/// Switching rule parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchConfig {
+    /// EMA smoothing of the per-step loss decrease.
+    pub beta: f64,
+    /// Switch when smoothed rate < switch_ratio × peak smoothed rate.
+    pub switch_ratio: f64,
+    /// Don't consider switching before this many steps (rate estimates are
+    /// noise until the EMA warms up).
+    pub min_steps: usize,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        SwitchConfig { beta: 0.95, switch_ratio: 0.1, min_steps: 50 }
+    }
+}
+
+/// The MKOR-H optimizer. Callers feed the observed training loss via
+/// [`MkorH::observe_loss`] after each step (the coordinator does this).
+pub struct MkorH {
+    mkor: Mkor,
+    fallback: SgdMomentum,
+    switch_cfg: SwitchConfig,
+    rate_ema: Ema,
+    peak_rate: f64,
+    last_loss: Option<f64>,
+    switched_at: Option<usize>,
+    t: usize,
+}
+
+impl MkorH {
+    pub fn new(shapes: &[LayerShape], mkor_cfg: MkorConfig, switch_cfg: SwitchConfig) -> Self {
+        let momentum = mkor_cfg.momentum;
+        MkorH {
+            mkor: Mkor::new(shapes, mkor_cfg),
+            fallback: SgdMomentum::new(shapes, momentum),
+            switch_cfg,
+            rate_ema: Ema::new(0.95),
+            peak_rate: 0.0,
+            last_loss: None,
+            switched_at: None,
+            t: 0,
+        }
+    }
+
+    /// Report the training loss after a step; drives the switching rule.
+    pub fn observe_loss(&mut self, loss: f64) {
+        if let Some(prev) = self.last_loss {
+            let decrease = (prev - loss).max(0.0);
+            let rate = self.rate_ema.update(decrease);
+            if self.rate_ema.steps() as usize >= self.switch_cfg.min_steps {
+                self.peak_rate = self.peak_rate.max(rate);
+                if self.switched_at.is_none()
+                    && self.peak_rate > 0.0
+                    && rate < self.switch_cfg.switch_ratio * self.peak_rate
+                {
+                    self.switched_at = Some(self.t);
+                }
+            }
+        }
+        self.last_loss = Some(loss);
+    }
+
+    /// Has the hybrid fallen back to first-order yet?
+    pub fn switched(&self) -> bool {
+        self.switched_at.is_some()
+    }
+
+    /// Step index at which the switch happened, if it has.
+    pub fn switched_at(&self) -> Option<usize> {
+        self.switched_at
+    }
+
+    /// Force the switch (tests / manual schedules).
+    pub fn force_switch(&mut self) {
+        if self.switched_at.is_none() {
+            self.switched_at = Some(self.t);
+        }
+    }
+}
+
+impl Optimizer for MkorH {
+    fn name(&self) -> &str {
+        "mkor-h"
+    }
+
+    fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer) {
+        if self.switched() {
+            // First-order phase: momentum SGD on raw gradients — the cheap
+            // late-training regime MKOR-H buys its speedup from.
+            let t0 = std::time::Instant::now();
+            let deltas: Vec<_> = caps.iter().map(|c| c.dw.clone()).collect();
+            let dbs: Vec<_> = caps.iter().map(|c| c.db.clone()).collect();
+            self.fallback.apply(layers, &deltas, &dbs, lr);
+            timer.add("update", t0.elapsed());
+        } else {
+            self.mkor.step(layers, caps, lr, timer);
+        }
+        self.t += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.mkor.state_bytes() + self.fallback.state_bytes()
+    }
+
+    fn sync_bytes_last_step(&self) -> usize {
+        if self.switched() {
+            0
+        } else {
+            self.mkor.sync_bytes_last_step()
+        }
+    }
+
+    fn steps_done(&self) -> usize {
+        self.t
+    }
+
+    fn observe_loss(&mut self, loss: f64) {
+        MkorH::observe_loss(self, loss);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ops, Matrix};
+    use crate::model::Activation;
+    use crate::util::Rng;
+
+    fn toy_capture(shape: LayerShape, b: usize, rng: &mut Rng) -> Capture {
+        let a = Matrix::randn(shape.d_in, b, 1.0, rng);
+        let g = Matrix::randn(shape.d_out, b, 1.0, rng);
+        let mut dw = ops::matmul_nt(&g, &a);
+        dw.scale(1.0 / b as f32);
+        Capture { a, g, dw, db: vec![0.0; shape.d_out] }
+    }
+
+    #[test]
+    fn switches_when_loss_flattens() {
+        let shapes = [LayerShape::new(4, 4)];
+        let cfg = SwitchConfig { beta: 0.9, switch_ratio: 0.2, min_steps: 10 };
+        let mut h = MkorH::new(&shapes, MkorConfig::default(), cfg);
+        // Fast decrease for 60 steps, then a plateau.
+        let mut loss = 10.0;
+        for t in 0..200 {
+            h.t = t;
+            h.observe_loss(loss);
+            loss -= if t < 60 { 0.1 } else { 0.0001 };
+        }
+        assert!(h.switched());
+        let at = h.switched_at().unwrap();
+        assert!(at >= 60 && at < 150, "switched at {at}");
+    }
+
+    #[test]
+    fn does_not_switch_while_improving() {
+        let shapes = [LayerShape::new(4, 4)];
+        let mut h = MkorH::new(&shapes, MkorConfig::default(), SwitchConfig::default());
+        let mut loss = 10.0;
+        for t in 0..300 {
+            h.t = t;
+            h.observe_loss(loss);
+            loss *= 0.995; // steady geometric improvement
+        }
+        assert!(!h.switched());
+    }
+
+    #[test]
+    fn after_switch_steps_are_first_order() {
+        let shapes = [LayerShape::new(5, 3)];
+        let mut rng = Rng::new(1);
+        let mut h = MkorH::new(&shapes, MkorConfig::default(), SwitchConfig::default());
+        h.force_switch();
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        let cap = toy_capture(shapes[0], 8, &mut rng);
+        let w0 = layers[0].w.clone();
+        let mut timer = PhaseTimer::new();
+        h.step(&mut layers, std::slice::from_ref(&cap), 0.1, &mut timer);
+        // No factor/precond phases, no second-order sync.
+        assert_eq!(timer.count("factor"), 0);
+        assert_eq!(timer.count("precond"), 0);
+        assert_eq!(h.sync_bytes_last_step(), 0);
+        // And the step equals momentum-SGD on the raw gradient.
+        let mut want = w0;
+        let mut d = cap.dw.clone();
+        d.scale(0.1);
+        want.blend(1.0, -1.0, &d);
+        assert!(layers[0].w.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn before_switch_behaves_like_mkor() {
+        let shapes = [LayerShape::new(5, 3)];
+        let mut rng = Rng::new(2);
+        let mut h = MkorH::new(&shapes, MkorConfig::default(), SwitchConfig::default());
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        let cap = toy_capture(shapes[0], 8, &mut rng);
+        let mut timer = PhaseTimer::new();
+        h.step(&mut layers, std::slice::from_ref(&cap), 0.1, &mut timer);
+        assert!(timer.count("factor") > 0); // t=0 is a factor step
+        assert!(timer.count("precond") > 0);
+        assert!(h.sync_bytes_last_step() > 0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Gradient rescaling (Algorithm 1 line 10, Figure 1-d).
+//!
+//! Preconditioning changes the norm of the update, which interferes with
+//! learning-rate schedules tuned for raw gradients. MKOR rescales the
+//! preconditioned update so its Frobenius norm matches the raw gradient's.
+
+use crate::linalg::Matrix;
+
+/// Scale `delta` in place so `‖delta‖_F == ‖grad‖_F`. Returns the applied
+/// scale factor (1.0 when either norm is ~0, leaving `delta` unchanged).
+pub fn rescale_to_gradient_norm(delta: &mut Matrix, grad: &Matrix) -> f32 {
+    let gn = grad.fro_norm();
+    let dn = delta.fro_norm();
+    if !(gn.is_finite() && dn.is_finite()) || dn < 1e-30 || gn < 1e-30 {
+        return 1.0;
+    }
+    let s = (gn / dn) as f32;
+    delta.scale(s);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn norm_matches_after_rescale() {
+        let mut rng = Rng::new(1);
+        let grad = Matrix::randn(6, 9, 2.0, &mut rng);
+        let mut delta = Matrix::randn(6, 9, 0.01, &mut rng);
+        let s = rescale_to_gradient_norm(&mut delta, &grad);
+        assert!(s > 1.0);
+        assert!((delta.fro_norm() - grad.fro_norm()).abs() / grad.fro_norm() < 1e-5);
+    }
+
+    #[test]
+    fn direction_is_preserved() {
+        let grad = Matrix::from_rows(&[&[2.0, 0.0]]);
+        let mut delta = Matrix::from_rows(&[&[0.0, 0.5]]);
+        rescale_to_gradient_norm(&mut delta, &grad);
+        assert_eq!(delta[(0, 0)], 0.0);
+        assert!((delta[(0, 1)] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_delta_is_left_alone() {
+        let grad = Matrix::from_rows(&[&[1.0]]);
+        let mut delta = Matrix::from_rows(&[&[0.0]]);
+        let s = rescale_to_gradient_norm(&mut delta, &grad);
+        assert_eq!(s, 1.0);
+        assert_eq!(delta[(0, 0)], 0.0);
+    }
+}

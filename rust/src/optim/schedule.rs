@@ -1,0 +1,180 @@
+//! Learning-rate schedules, including the paper's knee-point scheduler
+//! (§8.13): decay the LR when the EMA of the improvement rate drops below
+//! β × the total improvement accumulated under the current LR.
+
+use crate::util::stats::Ema;
+
+/// A learning-rate schedule driven by step count and (optionally) observed
+/// loss/metric values.
+pub trait LrSchedule {
+    /// The LR to use for step `t` (0-based).
+    fn lr(&self, t: usize) -> f32;
+    /// Feed an observation (training loss or eval metric) after step `t`.
+    fn observe(&mut self, _t: usize, _value: f64) {}
+}
+
+/// Constant LR.
+pub struct Constant(pub f32);
+
+impl LrSchedule for Constant {
+    fn lr(&self, _t: usize) -> f32 {
+        self.0
+    }
+}
+
+/// Piecewise decay at fixed steps: lr × factor at each milestone (the §8.9
+/// ResNet schedule: decay by 2 at epochs 25,35,40,…).
+pub struct StepDecay {
+    pub base: f32,
+    pub factor: f32,
+    pub milestones: Vec<usize>,
+}
+
+impl LrSchedule for StepDecay {
+    fn lr(&self, t: usize) -> f32 {
+        let hits = self.milestones.iter().filter(|&&m| t >= m).count() as i32;
+        self.base * self.factor.powi(hits)
+    }
+}
+
+/// Linear warmup then polynomial (power-1) decay — the LAMB/BERT schedule.
+pub struct WarmupLinear {
+    pub base: f32,
+    pub warmup: usize,
+    pub total: usize,
+}
+
+impl LrSchedule for WarmupLinear {
+    fn lr(&self, t: usize) -> f32 {
+        if t < self.warmup {
+            self.base * (t + 1) as f32 / self.warmup as f32
+        } else if t >= self.total {
+            0.0
+        } else {
+            self.base * (self.total - t) as f32 / (self.total - self.warmup) as f32
+        }
+    }
+}
+
+/// Knee-point scheduler (§8.13).
+///
+/// Tracks an EMA of the per-step improvement (loss decrease). A knee-point
+/// is declared when that smoothed rate falls below `beta` × the *average*
+/// rate since the current LR was adopted; the LR is then multiplied by
+/// `decay` (with a cooldown so one knee can't trigger repeatedly).
+pub struct KneePoint {
+    base: f32,
+    decay: f32,
+    beta: f64,
+    cooldown: usize,
+    min_lr: f32,
+    // state
+    current: f32,
+    rate_ema: Ema,
+    since_change: usize,
+    improvement_since_change: f64,
+    last_value: Option<f64>,
+    /// Steps at which knees were detected (observability/tests).
+    pub knees: Vec<usize>,
+}
+
+impl KneePoint {
+    pub fn new(base: f32, decay: f32, beta: f64, cooldown: usize, min_lr: f32) -> Self {
+        KneePoint {
+            base,
+            decay,
+            beta,
+            cooldown,
+            min_lr,
+            current: base,
+            rate_ema: Ema::new(0.9),
+            since_change: 0,
+            improvement_since_change: 0.0,
+            last_value: None,
+            knees: Vec::new(),
+        }
+    }
+}
+
+impl LrSchedule for KneePoint {
+    fn lr(&self, _t: usize) -> f32 {
+        self.current
+    }
+
+    fn observe(&mut self, t: usize, value: f64) {
+        if let Some(prev) = self.last_value {
+            let dec = (prev - value).max(0.0);
+            self.improvement_since_change += dec;
+            let rate = self.rate_ema.update(dec);
+            self.since_change += 1;
+            if self.since_change >= self.cooldown {
+                let avg_rate =
+                    self.improvement_since_change / self.since_change.max(1) as f64;
+                if avg_rate > 0.0 && rate < self.beta * avg_rate {
+                    // Knee: decay and reset the window.
+                    self.current = (self.current * self.decay).max(self.min_lr);
+                    self.knees.push(t);
+                    self.since_change = 0;
+                    self.improvement_since_change = 0.0;
+                    self.rate_ema = Ema::new(0.9);
+                }
+            }
+        }
+        self.last_value = Some(value);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Constant(0.1);
+        assert_eq!(s.lr(0), 0.1);
+        assert_eq!(s.lr(10_000), 0.1);
+    }
+
+    #[test]
+    fn step_decay_applies_milestones() {
+        let s = StepDecay { base: 1.0, factor: 0.5, milestones: vec![10, 20] };
+        assert_eq!(s.lr(5), 1.0);
+        assert_eq!(s.lr(10), 0.5);
+        assert_eq!(s.lr(25), 0.25);
+    }
+
+    #[test]
+    fn warmup_linear_shape() {
+        let s = WarmupLinear { base: 1.0, warmup: 10, total: 110 };
+        assert!(s.lr(0) < s.lr(5));
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+        assert!(s.lr(60) < 1.0);
+        assert_eq!(s.lr(110), 0.0);
+    }
+
+    #[test]
+    fn knee_point_decays_on_plateau() {
+        let mut s = KneePoint::new(1.0, 0.5, 0.3, 10, 1e-4);
+        let mut loss = 10.0;
+        for t in 0..60 {
+            s.observe(t, loss);
+            loss -= 0.1; // steady improvement: no knee
+        }
+        assert!(s.knees.is_empty(), "knees={:?}", s.knees);
+        for t in 60..120 {
+            s.observe(t, loss);
+            loss -= 0.0001; // plateau: knee expected
+        }
+        assert!(!s.knees.is_empty());
+        assert!(s.lr(120) <= 0.5);
+    }
+
+    #[test]
+    fn knee_point_respects_min_lr() {
+        let mut s = KneePoint::new(0.1, 0.1, 0.9, 2, 1e-3);
+        for t in 0..500 {
+            s.observe(t, 1.0); // perpetual plateau
+        }
+        assert!(s.lr(500) >= 1e-3);
+    }
+}

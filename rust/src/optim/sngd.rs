@@ -1,0 +1,329 @@
+//! SNGD baseline (HyLo-style): Sherman–Morrison–Woodbury NGD.
+//!
+//! Preconditions with `(F + μI)⁻¹∇ = (∇ − U(K + μI)⁻¹Uᵀ∇)/μ` where
+//! `K = AᵀA ⊙ GᵀG ∈ R^{b×b}` (Equation 13). The kernel inversion is O(b³)
+//! and the stored `A`,`G` are O(bd) — the batch-size scaling that breaks
+//! down for transformers, where b is batch×sequence-length (§1). Like HyLo
+//! we refresh the kernel every `inv_freq` steps and reuse the *stored*
+//! A/G/K⁻¹ (stale-kernel preconditioning) in between, which is where the
+//! O(2bd + b²) memory overhead of Table 1 comes from.
+
+use crate::linalg::inverse::invert;
+use crate::linalg::{ops, Matrix};
+use crate::model::{Capture, Dense, LayerShape};
+use crate::optim::first_order::SgdMomentum;
+use crate::optim::Optimizer;
+use crate::util::timer::PhaseTimer;
+
+/// SNGD hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SngdConfig {
+    /// Kernel refresh period.
+    pub inv_freq: usize,
+    /// SMW damping μ.
+    pub damping: f32,
+    pub momentum: f32,
+}
+
+impl Default for SngdConfig {
+    fn default() -> Self {
+        SngdConfig { inv_freq: 10, damping: 0.3, momentum: 0.9 }
+    }
+}
+
+struct LayerState {
+    /// Stored activations/gradients from the last kernel refresh (d×b).
+    a: Option<Matrix>,
+    g: Option<Matrix>,
+    /// (K + μI)⁻¹ from the last refresh (b×b).
+    kinv: Option<Matrix>,
+}
+
+/// The SNGD/HyLo optimizer.
+pub struct Sngd {
+    cfg: SngdConfig,
+    layers: Vec<LayerState>,
+    shapes: Vec<LayerShape>,
+    backend: SgdMomentum,
+    t: usize,
+    last_sync_bytes: usize,
+    /// Kernel inversions that failed (singular even with damping).
+    pub inversion_failures: usize,
+}
+
+impl Sngd {
+    pub fn new(shapes: &[LayerShape], cfg: SngdConfig) -> Self {
+        Sngd {
+            cfg,
+            layers: shapes.iter().map(|_| LayerState { a: None, g: None, kinv: None }).collect(),
+            shapes: shapes.to_vec(),
+            backend: SgdMomentum::new(shapes, cfg.momentum),
+            t: 0,
+            last_sync_bytes: 0,
+            inversion_failures: 0,
+        }
+    }
+
+    pub fn is_kernel_step(&self, t: usize) -> bool {
+        t % self.cfg.inv_freq == 0
+    }
+
+    /// `K = AᵀA ⊙ GᵀG` (b×b Hadamard of Gram matrices).
+    fn kernel(a: &Matrix, g: &Matrix) -> Matrix {
+        let ata = ops::matmul_tn(a, a);
+        let gtg = ops::matmul_tn(g, g);
+        let b = ata.rows();
+        let mut k = Matrix::zeros(b, b);
+        for (kv, (&x, &y)) in k
+            .data_mut()
+            .iter_mut()
+            .zip(ata.data().iter().zip(gtg.data()))
+        {
+            *kv = x * y;
+        }
+        k
+    }
+}
+
+impl Optimizer for Sngd {
+    fn name(&self) -> &str {
+        "sngd"
+    }
+
+    fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer) {
+        let kernel_step = self.is_kernel_step(self.t);
+        self.last_sync_bytes = 0;
+        let mu = self.cfg.damping;
+
+        let mut deltas = Vec::with_capacity(caps.len());
+        for (idx, cap) in caps.iter().enumerate() {
+            // ---- kernel refresh (factor computation) -------------------
+            if kernel_step {
+                let t0 = std::time::Instant::now();
+                let mut k = Sngd::kernel(&cap.a, &cap.g);
+                let b = k.rows();
+                for i in 0..b {
+                    k[(i, i)] += mu;
+                }
+                match invert(&k) {
+                    Ok(kinv) => {
+                        let st = &mut self.layers[idx];
+                        st.a = Some(cap.a.clone());
+                        st.g = Some(cap.g.clone());
+                        st.kinv = Some(kinv);
+                        // Sync: activations+gradients (2bd) + kernel (b²)
+                        // per Table 1.
+                        let s = &self.shapes[idx];
+                        self.last_sync_bytes += (2 * b * (s.d_in + s.d_out) / 2 + b * b) * 4;
+                    }
+                    Err(_) => {
+                        // KID-style failure mode (§3.3: "for batch sizes
+                        // larger than d ... the method fails").
+                        self.inversion_failures += 1;
+                    }
+                }
+                timer.add("factor", t0.elapsed());
+            }
+
+            // ---- precondition with (possibly stale) kernel -------------
+            let t0 = std::time::Instant::now();
+            let st = &self.layers[idx];
+            let delta = match (&st.a, &st.g, &st.kinv) {
+                (Some(a), Some(g), Some(kinv)) => {
+                    // v_i = g_iᵀ ∇ a_i  via M = ∇·A (d_out×b), v = colsum(G ⊙ M)
+                    let m = ops::matmul(&cap.dw, a);
+                    let b = a.cols();
+                    let mut v = vec![0.0f32; b];
+                    for (i, vi) in v.iter_mut().enumerate() {
+                        let gi = g.col(i);
+                        let mut acc = 0.0f64;
+                        for r in 0..g.rows() {
+                            acc += gi[r] as f64 * m[(r, i)] as f64;
+                        }
+                        *vi = acc as f32;
+                    }
+                    // w = K⁻¹ v
+                    let w = ops::matvec(kinv, &v);
+                    // correction = G·diag(w)·Aᵀ = (G*w) Aᵀ
+                    let mut gw = g.clone();
+                    for i in 0..b {
+                        let wi = w[i];
+                        for r in 0..gw.rows() {
+                            gw[(r, i)] *= wi;
+                        }
+                    }
+                    let corr = ops::matmul_nt(&gw, a);
+                    let mut delta = cap.dw.clone();
+                    delta.blend(1.0, -1.0, &corr);
+                    delta.scale(1.0 / mu);
+                    delta
+                }
+                _ => cap.dw.clone(), // kernel never built: SGD fallback
+            };
+            timer.add("precond", t0.elapsed());
+            deltas.push(delta);
+        }
+
+        let t0 = std::time::Instant::now();
+        let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
+        self.backend.apply(layers, &deltas, &dbs, lr);
+        timer.add("update", t0.elapsed());
+        self.t += 1;
+    }
+
+    fn state_bytes(&self) -> usize {
+        // Stored A, G (2bd) + kernel (b²) per layer, counted at the actual
+        // stored sizes (0 before first refresh).
+        self.layers
+            .iter()
+            .map(|st| {
+                st.a.as_ref().map_or(0, |m| m.len() * 4)
+                    + st.g.as_ref().map_or(0, |m| m.len() * 4)
+                    + st.kinv.as_ref().map_or(0, |m| m.len() * 4)
+            })
+            .sum::<usize>()
+            + self.backend.state_bytes()
+    }
+
+    fn sync_bytes_last_step(&self) -> usize {
+        self.last_sync_bytes
+    }
+
+    fn steps_done(&self) -> usize {
+        self.t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Activation;
+    use crate::util::Rng;
+
+    fn toy_capture(shape: LayerShape, b: usize, rng: &mut Rng) -> Capture {
+        let a = Matrix::randn(shape.d_in, b, 1.0, rng);
+        let g = Matrix::randn(shape.d_out, b, 1.0, rng);
+        let mut dw = ops::matmul_nt(&g, &a);
+        dw.scale(1.0 / b as f32);
+        Capture { a, g, dw, db: vec![0.0; shape.d_out] }
+    }
+
+    #[test]
+    fn kernel_is_hadamard_of_grams() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 3, 1.0, &mut rng);
+        let g = Matrix::randn(4, 3, 1.0, &mut rng);
+        let k = Sngd::kernel(&a, &g);
+        assert_eq!(k.rows(), 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                let ai = a.col(i);
+                let aj = a.col(j);
+                let gi = g.col(i);
+                let gj = g.col(j);
+                let want = ops::dot(&ai, &aj) * ops::dot(&gi, &gj);
+                assert!((k[(i, j)] as f64 - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn smw_identity_matches_direct_fim_inverse() {
+        // For a single layer, F = (1/b)Σ u_i u_iᵀ with u_i = vec(g_i a_iᵀ).
+        // Check (F + μI)⁻¹∇ via SMW == direct inversion on a tiny problem.
+        let mut rng = Rng::new(2);
+        let (dout, din, b) = (3usize, 2, 4);
+        let a = Matrix::randn(din, b, 1.0, &mut rng);
+        let g = Matrix::randn(dout, b, 1.0, &mut rng);
+        let mu = 0.5f32;
+        let d2 = dout * din;
+
+        // Build U (d²×b) with u_i = vec(g_i a_iᵀ) (row-major dout×din).
+        let mut u = Matrix::zeros(d2, b);
+        for i in 0..b {
+            for r in 0..dout {
+                for c in 0..din {
+                    u[(r * din + c, i)] = g[(r, i)] * a[(c, i)];
+                }
+            }
+        }
+        // F + μI — note the paper's Eq. 13 uses unnormalized Σ u uᵀ.
+        let f = ops::matmul_nt(&u, &u);
+        let mut fmu = f.clone();
+        for i in 0..d2 {
+            fmu[(i, i)] += mu;
+        }
+        let finv = invert(&fmu).unwrap();
+        let grad: Vec<f32> = (0..d2).map(|_| rng.gaussian_f32()).collect();
+        let want = ops::matvec(&finv, &grad);
+
+        // SMW path (as the optimizer computes it, with unnormalized kernel).
+        let mut k = Sngd::kernel(&a, &g);
+        for i in 0..b {
+            k[(i, i)] += mu;
+        }
+        let kinv = invert(&k).unwrap();
+        let utg = ops::matvec_t(&u, &grad);
+        let w = ops::matvec(&kinv, &utg);
+        let uw = ops::matvec(&u, &w);
+        let got: Vec<f32> = grad
+            .iter()
+            .zip(&uw)
+            .map(|(&gv, &uv)| (gv - uv) / mu)
+            .collect();
+
+        for i in 0..d2 {
+            assert!((got[i] - want[i]).abs() < 1e-3, "i={i}: {} vs {}", got[i], want[i]);
+        }
+    }
+
+    #[test]
+    fn stale_kernel_reused_between_refreshes() {
+        let shapes = [LayerShape::new(6, 4)];
+        let mut cfg = SngdConfig::default();
+        cfg.inv_freq = 4;
+        let mut opt = Sngd::new(&shapes, cfg);
+        let mut rng = Rng::new(3);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        let mut timer = PhaseTimer::new();
+        for t in 0..5 {
+            let cap = toy_capture(shapes[0], 8, &mut rng);
+            opt.step(&mut layers, std::slice::from_ref(&cap), 0.01, &mut timer);
+            if t == 0 || t == 4 {
+                assert!(opt.sync_bytes_last_step() > 0, "t={t}");
+            } else {
+                assert_eq!(opt.sync_bytes_last_step(), 0, "t={t}");
+            }
+        }
+        // Memory overhead now includes stored A (b·d_in), G (b·d_out) and
+        // K⁻¹ (b²) — the "2bd + b²" of Table 1 with d_in=d_out=d.
+        let want = (8 * (6 + 4) + 8 * 8) * 4 + opt.backend.state_bytes();
+        assert_eq!(opt.state_bytes(), want);
+    }
+
+    #[test]
+    fn reduces_quadratic_loss() {
+        let mut rng = Rng::new(4);
+        let shapes = [LayerShape::new(6, 4)];
+        let x = Matrix::randn(6, 16, 1.0, &mut rng);
+        let w_true = Matrix::randn(4, 6, 1.0, &mut rng);
+        let y = ops::matmul(&w_true, &x);
+        let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+        layers[0].w = Matrix::zeros(4, 6);
+        let mut opt = Sngd::new(&shapes, SngdConfig::default());
+        let mut timer = PhaseTimer::new();
+        let mut loss = f64::INFINITY;
+        for _ in 0..120 {
+            let pred = ops::matmul(&layers[0].w, &x);
+            let mut err = pred.clone();
+            err.blend(1.0, -1.0, &y);
+            loss = err.fro_norm().powi(2) / 16.0;
+            let mut g = err;
+            g.scale(2.0 / 16.0);
+            let dw = ops::matmul_nt(&g, &x);
+            let cap = Capture { a: x.clone(), g, dw, db: vec![0.0; 4] };
+            opt.step(&mut layers, std::slice::from_ref(&cap), 0.05, &mut timer);
+        }
+        assert!(loss < 0.1, "loss={loss}");
+    }
+}

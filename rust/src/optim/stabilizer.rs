@@ -1,0 +1,115 @@
+//! Norm-based stabilizer (§3.3, Algorithm 1 lines 5–6, Equations 7/8).
+//!
+//! Second-order methods explode when the factor inverses grow without
+//! bound: the preconditioned update is a product with those inverses, so an
+//! unbounded ‖J⁻¹‖ amplifies gradients arbitrarily. MKOR watches the
+//! infinity norm of each factor inverse and, when it crosses a threshold,
+//! blends the inverse toward the identity — leaning the layer toward SGD
+//! (Lemma 3.3 shows the blended preconditioner still decreases the
+//! linearized loss for any ζ ∈ [0,1]).
+
+use crate::linalg::Matrix;
+
+/// Stabilizer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct StabilizerConfig {
+    /// Threshold ε on ‖J⁻¹‖∞ above which blending triggers.
+    pub epsilon: f64,
+    /// Blend retention ζ: `J⁻¹ ← ζ J⁻¹ + (1−ζ) I`.
+    pub zeta: f32,
+}
+
+impl Default for StabilizerConfig {
+    fn default() -> Self {
+        // ε is in factor-inverse-norm units; the factors start at identity
+        // (norm 1), so 100 tolerates two orders of magnitude of growth
+        // before intervening. ζ=0.5 halves the distance to identity per
+        // trigger — a handful of triggers suffices to stop an explosion
+        // without collapsing to SGD (the paper warns small ζ "converts
+        // MKOR to SGD").
+        StabilizerConfig { epsilon: 100.0, zeta: 0.5 }
+    }
+}
+
+/// Outcome of one stabilizer check.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StabilizerReport {
+    pub triggered: bool,
+    pub norm_before: f64,
+}
+
+/// Apply lines 5–6 of Algorithm 1 to one factor inverse.
+pub fn stabilize(inv: &mut Matrix, cfg: &StabilizerConfig) -> StabilizerReport {
+    let norm = inv.inf_norm();
+    // Non-finite entries are the worst-case explosion: reset hard to
+    // identity (norm check alone would propagate NaN through the blend —
+    // and NaN row sums don't surface through max-folds, so check finiteness
+    // of the entries, not just of the norm).
+    if !norm.is_finite() || !inv.all_finite() {
+        let n = inv.rows();
+        *inv = Matrix::identity(n);
+        return StabilizerReport { triggered: true, norm_before: norm };
+    }
+    if norm > cfg.epsilon {
+        inv.blend_identity(cfg.zeta);
+        StabilizerReport { triggered: true, norm_before: norm }
+    } else {
+        StabilizerReport { triggered: false, norm_before: norm }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::cholesky::is_positive_definite;
+    use crate::util::Rng;
+
+    #[test]
+    fn below_threshold_is_untouched() {
+        let mut m = Matrix::identity(4);
+        let before = m.clone();
+        let r = stabilize(&mut m, &StabilizerConfig::default());
+        assert!(!r.triggered);
+        assert_eq!(m, before);
+    }
+
+    #[test]
+    fn above_threshold_blends_toward_identity() {
+        let cfg = StabilizerConfig { epsilon: 10.0, zeta: 0.5 };
+        let mut m = Matrix::diag(&[40.0, 40.0]);
+        let r = stabilize(&mut m, &cfg);
+        assert!(r.triggered);
+        assert!((r.norm_before - 40.0).abs() < 1e-9);
+        assert!((m[(0, 0)] - 20.5).abs() < 1e-6); // 0.5*40 + 0.5*1
+    }
+
+    #[test]
+    fn repeated_triggers_converge_to_bounded_norm() {
+        let cfg = StabilizerConfig { epsilon: 2.0, zeta: 0.5 };
+        let mut m = Matrix::diag(&[1000.0; 3]);
+        for _ in 0..40 {
+            stabilize(&mut m, &cfg);
+        }
+        assert!(m.inf_norm() <= 2.0 * (1.0 + 1e-6), "norm={}", m.inf_norm());
+    }
+
+    #[test]
+    fn nan_is_reset_to_identity() {
+        let mut m = Matrix::diag(&[1.0, f32::NAN]);
+        let r = stabilize(&mut m, &StabilizerConfig::default());
+        assert!(r.triggered);
+        assert_eq!(m, Matrix::identity(2));
+    }
+
+    #[test]
+    fn blending_preserves_positive_definiteness() {
+        // Lemma 3.3's premise: ζJ⁻¹+(1−ζ)I stays PD when J⁻¹ is PD.
+        let mut rng = Rng::new(2);
+        for _ in 0..20 {
+            let mut m = Matrix::rand_spd(8, 0.01, &mut rng);
+            m.scale(500.0); // push above threshold
+            stabilize(&mut m, &StabilizerConfig::default());
+            assert!(is_positive_definite(&m));
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Artifact loading: HLO text → compiled PJRT executable, plus the preset
+//! metadata (`meta.json`) that tells Rust the shapes/argument order the
+//! Python side lowered with.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled computation.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute on literals; returns the flattened tuple outputs.
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing artifact `{}`", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching output of `{}`", self.name))?;
+        // aot.py lowers with return_tuple=True, so outputs are one tuple.
+        Ok(out.to_tuple()?)
+    }
+}
+
+/// Metadata for one model preset, mirrored from `python/compile/configs.py`
+/// by `aot.py` into `artifacts/<preset>/meta.json`.
+#[derive(Clone, Debug)]
+pub struct PresetMeta {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub params: usize,
+    /// `(d_in, d_out)` of each preconditioned weight matrix (JAX `x @ W`
+    /// convention), in the order the `mkor_step` artifact consumes their
+    /// factor inverses: `R⁻¹` is d_in×d_in, `L⁻¹` is d_out×d_out.
+    pub factor_dims: Vec<(usize, usize)>,
+    /// Parameter tensor shapes, in artifact argument order.
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl PresetMeta {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let factor_dims = j
+            .get("factor_dims")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing factor_dims"))?
+            .iter()
+            .map(|p| {
+                let a = p.as_arr().ok_or_else(|| anyhow!("bad factor_dims entry"))?;
+                Ok((
+                    a[0].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                    a[1].as_usize().ok_or_else(|| anyhow!("bad dim"))?,
+                ))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let param_shapes = j
+            .get("param_shapes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing param_shapes"))?
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .ok_or_else(|| anyhow!("bad param shape"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                    .collect::<Result<Vec<_>>>()
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PresetMeta {
+            preset: j.require_str("preset")?.to_string(),
+            vocab: j.require_usize("vocab")?,
+            d_model: j.require_usize("d_model")?,
+            n_layers: j.require_usize("n_layers")?,
+            n_heads: j.require_usize("n_heads")?,
+            d_ff: j.require_usize("d_ff")?,
+            seq_len: j.require_usize("seq_len")?,
+            batch: j.require_usize("batch")?,
+            params: j.require_usize("params")?,
+            factor_dims,
+            param_shapes,
+        })
+    }
+}
+
+/// All artifacts of one preset: metadata + the compiled computations.
+pub struct ArtifactBundle {
+    pub meta: PresetMeta,
+    pub dir: PathBuf,
+    client: xla::PjRtClient,
+    /// `train_step`: (params…, tokens, targets, mask) → (loss, grads…, a_vecs…, g_vecs…)
+    pub train_step: Executable,
+    /// `mkor_step`: (params…, grads…, linvs…, rinvs…, a…, g…, scalars) →
+    /// (new_params…, new_linvs…, new_rinvs…)
+    pub mkor_step: Executable,
+    /// `eval_step`: (params…, tokens, targets, mask) → (loss,)
+    pub eval_step: Executable,
+}
+
+impl ArtifactBundle {
+    /// Load and compile `artifacts/<preset>/` (run `make artifacts` first).
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Self> {
+        let dir = artifacts_dir.join(preset);
+        let meta_path = dir.join("meta.json");
+        let meta = PresetMeta::from_json(&Json::from_file(&meta_path)?)
+            .with_context(|| format!("parsing {}", meta_path.display()))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let load = |name: &str| -> Result<Executable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+            Ok(Executable { name: name.to_string(), exe })
+        };
+        Ok(ArtifactBundle {
+            train_step: load("train_step")?,
+            mkor_step: load("mkor_step")?,
+            eval_step: load("eval_step")?,
+            meta,
+            dir,
+            client,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Build an i32 literal of the given shape from a flat slice.
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    Ok(xla::Literal::vec1(data).reshape(dims)?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f32) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&[x]).reshape(&[])?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_meta_parses() {
+        let j = Json::parse(
+            r#"{"preset":"tiny","vocab":1024,"d_model":128,"n_layers":2,
+                "n_heads":4,"d_ff":512,"seq_len":64,"batch":8,"params":1000,
+                "factor_dims":[[128,128],[128,512]],
+                "param_shapes":[[128,128],[128,512]]}"#,
+        )
+        .unwrap();
+        let m = PresetMeta::from_json(&j).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.factor_dims, vec![(128, 128), (128, 512)]);
+        assert_eq!(m.param_shapes, vec![vec![128, 128], vec![128, 512]]);
+    }
+
+    #[test]
+    fn preset_meta_rejects_missing_fields() {
+        let j = Json::parse(r#"{"preset":"x"}"#).unwrap();
+        assert!(PresetMeta::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/aot.py`
+//! and execute them from the Rust training path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards the `mkor`
+//! binary is self-contained. The interchange format is **HLO text** (not a
+//! serialized `HloModuleProto`) — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `/opt/xla-example/README.md`).
+
+pub mod artifact;
+pub mod xla_trainer;
+
+pub use artifact::{ArtifactBundle, Executable, PresetMeta};
+pub use xla_trainer::XlaTrainer;

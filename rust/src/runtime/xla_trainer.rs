@@ -1,0 +1,462 @@
+//! End-to-end transformer training through the AOT artifacts.
+//!
+//! The full three-layer loop (Python never runs here):
+//!
+//! 1. **L3 (this struct)** owns the parameter/factor/momentum state, the
+//!    data-parallel topology and the schedule. Per step it shards the token
+//!    batch over workers and executes the `train_step` artifact per shard.
+//! 2. Gradients (and, on factor steps, the 2d rank-1 vectors — bf16 on the
+//!    wire) are combined with the real ring all-reduce.
+//! 3. The leader executes the `mkor_step` artifact — the L2 graph whose
+//!    factor updates and preconditioning are the L1 Pallas kernels — and L3
+//!    applies the momentum SGD weight update (Algorithm 1 line 14) and
+//!    broadcasts.
+//!
+//! MKOR-H's switch and the stabilizer threshold run in Rust where the loss
+//! stream lives.
+
+use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
+use crate::coordinator::metrics::{RunRecord, StepRecord};
+use crate::data::text::TokenBatch;
+use crate::runtime::artifact::{literal_f32, literal_i32, literal_scalar, ArtifactBundle};
+use crate::util::stats::Ema;
+use anyhow::{Context, Result};
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct XlaTrainerConfig {
+    pub workers: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub gamma: f32,
+    /// Factor-update period f.
+    pub inv_freq: usize,
+    /// bf16 wire format for the rank-1 vector sync.
+    pub half_sync: bool,
+    /// Enable the MKOR-H switch (None = plain MKOR).
+    pub hybrid_switch_ratio: Option<f64>,
+    /// Stabilizer threshold ε on ‖J⁻¹‖∞ (checked in Rust between steps).
+    pub stabilizer_epsilon: f64,
+    pub stabilizer_zeta: f32,
+}
+
+impl Default for XlaTrainerConfig {
+    fn default() -> Self {
+        XlaTrainerConfig {
+            workers: 2,
+            lr: 0.05,
+            momentum: 0.9,
+            gamma: 0.99,
+            inv_freq: 10,
+            half_sync: true,
+            hybrid_switch_ratio: None,
+            stabilizer_epsilon: 100.0,
+            stabilizer_zeta: 0.5,
+        }
+    }
+}
+
+/// The XLA-backed trainer.
+pub struct XlaTrainer {
+    pub bundle: ArtifactBundle,
+    pub cfg: XlaTrainerConfig,
+    /// Flat parameter buffers, artifact argument order.
+    params: Vec<Vec<f32>>,
+    /// Momentum buffers matching `params`.
+    momentum: Vec<Vec<f32>>,
+    /// Factor inverses per preconditioned matrix (flattened square).
+    linvs: Vec<Vec<f32>>,
+    rinvs: Vec<Vec<f32>>,
+    pub record: RunRecord,
+    t: usize,
+    switched: bool,
+    rate_ema: Ema,
+    peak_rate: f64,
+    last_loss: Option<f64>,
+}
+
+impl XlaTrainer {
+    /// Initialize from a loaded bundle. `init_params` must match
+    /// `meta.param_shapes` (produced by the `init_params` dump of aot.py or
+    /// randomly initialized by the caller).
+    pub fn new(bundle: ArtifactBundle, init_params: Vec<Vec<f32>>, cfg: XlaTrainerConfig) -> Self {
+        assert_eq!(init_params.len(), bundle.meta.param_shapes.len());
+        for (p, s) in init_params.iter().zip(&bundle.meta.param_shapes) {
+            assert_eq!(p.len(), s.iter().product::<usize>(), "param shape mismatch");
+        }
+        let momentum = init_params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let linvs = bundle
+            .meta
+            .factor_dims
+            .iter()
+            .map(|&(_, dout)| identity_flat(dout))
+            .collect();
+        let rinvs = bundle
+            .meta
+            .factor_dims
+            .iter()
+            .map(|&(din, _)| identity_flat(din))
+            .collect();
+        let record = RunRecord {
+            name: format!("xla-{}", bundle.meta.preset),
+            optimizer: if cfg.hybrid_switch_ratio.is_some() { "mkor-h" } else { "mkor" }.into(),
+            ..Default::default()
+        };
+        XlaTrainer {
+            bundle,
+            cfg,
+            params: init_params,
+            momentum,
+            linvs,
+            rinvs,
+            record,
+            t: 0,
+            switched: false,
+            rate_ema: Ema::new(0.95),
+            peak_rate: 0.0,
+            last_loss: None,
+        }
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.t
+    }
+
+    pub fn switched(&self) -> bool {
+        self.switched
+    }
+
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.params
+    }
+
+    fn is_factor_step(&self) -> bool {
+        !self.switched && self.t % self.cfg.inv_freq == 0
+    }
+
+    /// Shard `batch` rows (sequences) across workers.
+    fn shard(&self, batch: &TokenBatch) -> Vec<TokenBatch> {
+        let w = self.cfg.workers;
+        let b = batch.tokens.len();
+        let base = b / w;
+        let rem = b % w;
+        let mut out = Vec::with_capacity(w);
+        let mut at = 0;
+        for r in 0..w {
+            let len = base + usize::from(r < rem);
+            out.push(TokenBatch {
+                tokens: batch.tokens[at..at + len].to_vec(),
+                targets: batch.targets[at..at + len].to_vec(),
+            });
+            at += len;
+        }
+        out
+    }
+
+    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .zip(&self.bundle.meta.param_shapes)
+            .map(|(p, s)| {
+                let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+                literal_f32(p, &dims)
+            })
+            .collect()
+    }
+
+    fn batch_literals(&self, shard: &TokenBatch) -> Result<Vec<xla::Literal>> {
+        let b = shard.tokens.len();
+        let s = self.bundle.meta.seq_len;
+        let (toks, tgts, mask) = shard.to_flat();
+        Ok(vec![
+            literal_i32(&toks, &[b as i64, s as i64])?,
+            literal_i32(&tgts, &[b as i64, s as i64])?,
+            literal_f32(&mask, &[b as i64, s as i64])?,
+        ])
+    }
+
+    /// One synchronous training step over a global token batch.
+    pub fn step(&mut self, batch: &TokenBatch) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let meta_np = self.params.len();
+        let n_mats = self.bundle.meta.factor_dims.len();
+        let factor_step = self.is_factor_step();
+
+        // ---- per-worker train_step execution ----------------------------
+        let shards = self.shard(batch);
+        let params_lit = self.param_literals()?;
+        let mut losses = Vec::with_capacity(shards.len());
+        let mut grads: Vec<Vec<Vec<f32>>> = Vec::new(); // [worker][param]
+        let mut a_vecs: Vec<Vec<Vec<f32>>> = Vec::new(); // [worker][matrix]
+        let mut g_vecs: Vec<Vec<Vec<f32>>> = Vec::new();
+        for shard in &shards {
+            if shard.tokens.is_empty() {
+                continue;
+            }
+            let mut args = params_lit
+                .iter()
+                .map(clone_literal)
+                .collect::<Result<Vec<_>>>()?;
+            args.extend(self.batch_literals(shard)?);
+            let out = self.bundle.train_step.run(&args)?;
+            anyhow::ensure!(
+                out.len() == 1 + meta_np + 2 * n_mats,
+                "train_step returned {} outputs, expected {}",
+                out.len(),
+                1 + meta_np + 2 * n_mats
+            );
+            losses.push(out[0].to_vec::<f32>()?[0] as f64);
+            grads.push(
+                out[1..1 + meta_np]
+                    .iter()
+                    .map(|l| l.to_vec::<f32>())
+                    .collect::<std::result::Result<_, _>>()?,
+            );
+            a_vecs.push(
+                out[1 + meta_np..1 + meta_np + n_mats]
+                    .iter()
+                    .map(|l| l.to_vec::<f32>())
+                    .collect::<std::result::Result<_, _>>()?,
+            );
+            g_vecs.push(
+                out[1 + meta_np + n_mats..]
+                    .iter()
+                    .map(|l| l.to_vec::<f32>())
+                    .collect::<std::result::Result<_, _>>()?,
+            );
+        }
+        let loss = losses.iter().sum::<f64>() / losses.len().max(1) as f64;
+
+        // ---- all-reduce gradients (fp32) and rank-1 vectors (bf16) ------
+        let mut grad_bytes = 0usize;
+        let mut sync_bytes = 0usize;
+        let workers = grads.len();
+        let mut mean_grads: Vec<Vec<f32>> = Vec::with_capacity(meta_np);
+        for p in 0..meta_np {
+            let mut bufs: Vec<Vec<f32>> = (0..workers).map(|w| grads[w][p].clone()).collect();
+            let stats = allreduce_mean(&mut bufs);
+            grad_bytes += stats.bytes_per_worker;
+            mean_grads.push(bufs.into_iter().next().unwrap());
+        }
+        let (mut mean_a, mut mean_g) = (Vec::new(), Vec::new());
+        if factor_step {
+            for m in 0..n_mats {
+                let mut bufs: Vec<Vec<f32>> = (0..workers).map(|w| a_vecs[w][m].clone()).collect();
+                let stats = if self.cfg.half_sync {
+                    allreduce_mean_bf16(&mut bufs)
+                } else {
+                    allreduce_mean(&mut bufs)
+                };
+                sync_bytes += stats.bytes_per_worker;
+                mean_a.push(bufs.into_iter().next().unwrap());
+                let mut bufs: Vec<Vec<f32>> = (0..workers).map(|w| g_vecs[w][m].clone()).collect();
+                let stats = if self.cfg.half_sync {
+                    allreduce_mean_bf16(&mut bufs)
+                } else {
+                    allreduce_mean(&mut bufs)
+                };
+                sync_bytes += stats.bytes_per_worker;
+                mean_g.push(bufs.into_iter().next().unwrap());
+            }
+        } else {
+            // mkor_step still needs placeholder vectors; zeros are ignored
+            // when update_flag = 0.
+            for &(din, dout) in &self.bundle.meta.factor_dims {
+                mean_a.push(vec![0.0; din]);
+                mean_g.push(vec![0.0; dout]);
+            }
+        }
+
+        // ---- leader: stabilizer (Rust) + mkor_step artifact --------------
+        let deltas: Vec<Vec<f32>> = if self.switched {
+            mean_grads.clone()
+        } else {
+            self.stabilize_factors();
+            let mut args: Vec<xla::Literal> = Vec::new();
+            for (g, s) in mean_grads.iter().zip(&self.bundle.meta.param_shapes) {
+                let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+                args.push(literal_f32(g, &dims)?);
+            }
+            for (l, &(_, dout)) in self.linvs.iter().zip(&self.bundle.meta.factor_dims) {
+                args.push(literal_f32(l, &[dout as i64, dout as i64])?);
+            }
+            for (r, &(din, _)) in self.rinvs.iter().zip(&self.bundle.meta.factor_dims) {
+                args.push(literal_f32(r, &[din as i64, din as i64])?);
+            }
+            for (a, &(din, _)) in mean_a.iter().zip(&self.bundle.meta.factor_dims) {
+                args.push(literal_f32(a, &[din as i64])?);
+            }
+            for (g, &(_, dout)) in mean_g.iter().zip(&self.bundle.meta.factor_dims) {
+                args.push(literal_f32(g, &[dout as i64])?);
+            }
+            args.push(literal_scalar(self.cfg.gamma)?);
+            args.push(literal_scalar(if factor_step { 1.0 } else { 0.0 })?);
+            let out = self.bundle.mkor_step.run(&args).context("mkor_step")?;
+            anyhow::ensure!(out.len() == meta_np + 2 * n_mats, "mkor_step output arity");
+            let deltas: Vec<Vec<f32>> = out[..meta_np]
+                .iter()
+                .map(|l| l.to_vec::<f32>())
+                .collect::<std::result::Result<_, _>>()?;
+            for (dst, l) in self.linvs.iter_mut().zip(&out[meta_np..meta_np + n_mats]) {
+                *dst = l.to_vec::<f32>()?;
+            }
+            for (dst, l) in self.rinvs.iter_mut().zip(&out[meta_np + n_mats..]) {
+                *dst = l.to_vec::<f32>()?;
+            }
+            deltas
+        };
+
+        // ---- line 14: momentum SGD + (logical) broadcast -----------------
+        for ((p, m), d) in self.params.iter_mut().zip(&mut self.momentum).zip(&deltas) {
+            for ((pv, mv), &dv) in p.iter_mut().zip(m.iter_mut()).zip(d) {
+                *mv = self.cfg.momentum * *mv + dv;
+                *pv -= self.cfg.lr * *mv;
+            }
+        }
+
+        // ---- MKOR-H switching rule ---------------------------------------
+        if let Some(ratio) = self.cfg.hybrid_switch_ratio {
+            if let Some(prev) = self.last_loss {
+                let rate = self.rate_ema.update((prev - loss).max(0.0));
+                if self.rate_ema.steps() >= 20 {
+                    self.peak_rate = self.peak_rate.max(rate);
+                    if !self.switched && self.peak_rate > 0.0 && rate < ratio * self.peak_rate {
+                        self.switched = true;
+                        self.record.switched_at = Some(self.t);
+                    }
+                }
+            }
+            self.last_loss = Some(loss);
+        }
+
+        self.record.steps.push(StepRecord {
+            step: self.t,
+            loss,
+            eval_metric: None,
+            lr: self.cfg.lr,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            grad_comm_bytes: grad_bytes,
+            sync_comm_bytes: sync_bytes,
+        });
+        self.t += 1;
+        Ok(loss)
+    }
+
+    /// Norm-based stabilizer on the flat factor inverses (lines 5–6).
+    fn stabilize_factors(&mut self) {
+        let eps = self.cfg.stabilizer_epsilon;
+        let zeta = self.cfg.stabilizer_zeta;
+        for (buf, &(_, dout)) in self.linvs.iter_mut().zip(&self.bundle.meta.factor_dims) {
+            stabilize_flat(buf, dout, eps, zeta);
+        }
+        let dims: Vec<usize> = self.bundle.meta.factor_dims.iter().map(|&(din, _)| din).collect();
+        for (buf, &din) in self.rinvs.iter_mut().zip(&dims) {
+            stabilize_flat(buf, din, eps, zeta);
+        }
+    }
+
+    /// Held-out evaluation loss via the `eval_step` artifact.
+    pub fn evaluate(&mut self, batch: &TokenBatch) -> Result<f64> {
+        let mut args = self.param_literals()?;
+        args.extend(self.batch_literals(batch)?);
+        let out = self.bundle.eval_step.run(&args)?;
+        let loss = out[0].to_vec::<f32>()?[0] as f64;
+        if let Some(rec) = self.record.steps.last_mut() {
+            rec.eval_metric = Some(-loss);
+        }
+        Ok(loss)
+    }
+}
+
+/// Seeded parameter initialization matching the family model.py uses:
+/// ≥2-D tensors get N(0, σ²) with σ = min(0.02, 1/√fan_in); 1-D tensors
+/// (layernorm scales/biases) start at zero — model.py applies scales as
+/// `(1 + s)` so zero is the identity transform.
+pub fn init_params(meta: &crate::runtime::PresetMeta, rng: &mut crate::util::Rng) -> Vec<Vec<f32>> {
+    meta.param_shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            let mut v = vec![0.0f32; n];
+            if s.len() >= 2 {
+                let fan_in = s[0];
+                let sigma = 0.02f32.min((1.0 / fan_in as f32).sqrt());
+                rng.fill_gaussian(&mut v, sigma);
+            }
+            v
+        })
+        .collect()
+}
+
+fn identity_flat(n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    v
+}
+
+fn stabilize_flat(buf: &mut [f32], n: usize, eps: f64, zeta: f32) {
+    // ‖·‖∞ (max abs row sum) + finiteness.
+    let mut norm = 0.0f64;
+    let mut finite = true;
+    for i in 0..n {
+        let mut s = 0.0f64;
+        for j in 0..n {
+            let v = buf[i * n + j];
+            finite &= v.is_finite();
+            s += v.abs() as f64;
+        }
+        norm = norm.max(s);
+    }
+    if !finite {
+        buf.fill(0.0);
+        for i in 0..n {
+            buf[i * n + i] = 1.0;
+        }
+        return;
+    }
+    if norm > eps {
+        for v in buf.iter_mut() {
+            *v *= zeta;
+        }
+        for i in 0..n {
+            buf[i * n + i] += 1.0 - zeta;
+        }
+    }
+}
+
+/// Clone a literal via reshape-to-same-dims (the crate's Literal is not
+/// `Clone`; reshape copies).
+fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
+    let shape = l.shape()?;
+    let dims: Vec<i64> = match &shape {
+        xla::Shape::Array(a) => a.dims().to_vec(),
+        _ => anyhow::bail!("cannot clone non-array literal"),
+    };
+    Ok(l.reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_flat_is_identity() {
+        let v = identity_flat(3);
+        assert_eq!(v, vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn stabilize_flat_blends_and_resets() {
+        let mut big = vec![200.0f32, 0.0, 0.0, 200.0];
+        stabilize_flat(&mut big, 2, 100.0, 0.5);
+        assert_eq!(big, vec![100.5, 0.0, 0.0, 100.5]);
+        let mut nan = vec![1.0f32, f32::NAN, 0.0, 1.0];
+        stabilize_flat(&mut nan, 2, 100.0, 0.5);
+        assert_eq!(nan, identity_flat(2));
+        let mut small = vec![1.0f32, 0.0, 0.0, 1.0];
+        stabilize_flat(&mut small, 2, 100.0, 0.5);
+        assert_eq!(small, identity_flat(2));
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: PRNG, JSON, statistics, timing, lightweight logging.
+//!
+//! These exist because the offline crate set has no `rand`, `serde`,
+//! `criterion` or `tracing`; see DESIGN.md §6.
+
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Timer;

@@ -1,0 +1,215 @@
+//! Small statistics toolkit: exponential moving averages (used by the
+//! knee-point LR scheduler and the MKOR-H switcher), quantiles, histograms
+//! (Figure 5 error distributions) and summary stats for the bench harness.
+
+/// Exponential moving average with bias correction (Adam-style).
+#[derive(Clone, Debug)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        assert!((0.0..1.0).contains(&beta));
+        Ema { beta, value: 0.0, steps: 0 }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+        self.steps += 1;
+        self.get()
+    }
+
+    /// Bias-corrected current value (0 before any update).
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            return 0.0;
+        }
+        let corr = 1.0 - self.beta.powi(self.steps as i32);
+        self.value / corr
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Summary statistics of a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub median: f64,
+    pub p95: f64,
+}
+
+/// Compute summary statistics (sorts a copy).
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary::default();
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: s[0],
+        max: s[n - 1],
+        median: quantile_sorted(&s, 0.5),
+        p95: quantile_sorted(&s, 0.95),
+    }
+}
+
+/// Linear-interpolated quantile of a pre-sorted slice, q in [0,1].
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of an unsorted slice.
+pub fn median(xs: &[f64]) -> f64 {
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&s, 0.5)
+}
+
+/// Fixed-range histogram (Figure 5 / Figure 10 error distributions).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub underflow: u64,
+    pub overflow: u64,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram { lo, hi, counts: vec![0; bins], underflow: 0, overflow: 0, total: 0 }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64) as usize;
+            let last = self.counts.len() - 1;
+            self.counts[b.min(last)] += 1;
+        }
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Bin centers (for CSV/plot output).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        (0..self.counts.len())
+            .map(|i| self.lo + w * (i as f64 + 0.5))
+            .collect()
+    }
+
+    /// Normalized densities summing to 1 over in-range mass.
+    pub fn densities(&self) -> Vec<f64> {
+        let in_range: u64 = self.counts.iter().sum();
+        if in_range == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts.iter().map(|&c| c as f64 / in_range as f64).collect()
+    }
+
+    /// Render a terminal sparkline-ish bar chart (for bench output).
+    pub fn ascii(&self, width: usize) -> String {
+        let max = self.counts.iter().copied().max().unwrap_or(1).max(1);
+        let mut out = String::new();
+        let centers = self.centers();
+        for (i, &c) in self.counts.iter().enumerate() {
+            let bar = "#".repeat((c as usize * width + max as usize - 1) / max as usize);
+            out.push_str(&format!("{:>10.4} | {:<w$} {}\n", centers[i], bar, c, w = width));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ema_bias_correction() {
+        let mut e = Ema::new(0.9);
+        // First update of a bias-corrected EMA returns the sample itself.
+        assert!((e.update(5.0) - 5.0).abs() < 1e-12);
+        // Constant stream stays at the constant.
+        for _ in 0..100 {
+            e.update(5.0);
+        }
+        assert!((e.get() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ema_tracks_shift() {
+        let mut e = Ema::new(0.5);
+        for _ in 0..50 {
+            e.update(1.0);
+        }
+        for _ in 0..50 {
+            e.update(2.0);
+        }
+        assert!((e.get() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn summary_of_known_sample() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let s = [0.0, 10.0];
+        assert!((quantile_sorted(&s, 0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_binning() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add(-0.1);
+        h.add(0.05);
+        h.add(0.95);
+        h.add(1.5);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.overflow, 1);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(h.total, 4);
+        let d = h.densities();
+        assert!((d.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,143 @@
+//! Wall-clock timing helpers and a named phase accumulator used for the
+//! per-step time-breakdown experiments (Figure 3) and the bench harness.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Clone, Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Timer::start()
+    }
+}
+
+/// Accumulates wall time per named phase ("factor", "precondition",
+/// "weight_update", "allreduce", ...). Phases are what Figure 3 plots.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    totals: BTreeMap<String, Duration>,
+    counts: BTreeMap<String, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a named phase.
+    pub fn time<T>(&mut self, phase: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(phase, t.elapsed());
+        out
+    }
+
+    /// Record an externally-measured duration.
+    pub fn add(&mut self, phase: &str, d: Duration) {
+        *self.totals.entry(phase.to_string()).or_default() += d;
+        *self.counts.entry(phase.to_string()).or_default() += 1;
+    }
+
+    pub fn total(&self, phase: &str) -> Duration {
+        self.totals.get(phase).copied().unwrap_or_default()
+    }
+
+    pub fn total_secs(&self, phase: &str) -> f64 {
+        self.total(phase).as_secs_f64()
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    /// Mean seconds per occurrence of a phase (0 if never seen).
+    pub fn mean_secs(&self, phase: &str) -> f64 {
+        let c = self.count(phase);
+        if c == 0 {
+            0.0
+        } else {
+            self.total_secs(phase) / c as f64
+        }
+    }
+
+    /// All phases, sorted by name.
+    pub fn phases(&self) -> Vec<&str> {
+        self.totals.keys().map(String::as_str).collect()
+    }
+
+    /// Merge another accumulator into this one (used to sum workers).
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (k, v) in &other.totals {
+            *self.totals.entry(k.clone()).or_default() += *v;
+        }
+        for (k, v) in &other.counts {
+            *self.counts.entry(k.clone()).or_default() += *v;
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_accumulation() {
+        let mut p = PhaseTimer::new();
+        p.add("a", Duration::from_millis(10));
+        p.add("a", Duration::from_millis(20));
+        p.add("b", Duration::from_millis(5));
+        assert_eq!(p.count("a"), 2);
+        assert!((p.total_secs("a") - 0.030).abs() < 1e-9);
+        assert!((p.mean_secs("a") - 0.015).abs() < 1e-9);
+        assert_eq!(p.phases(), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut p = PhaseTimer::new();
+        let v = p.time("work", || 41 + 1);
+        assert_eq!(v, 42);
+        assert_eq!(p.count("work"), 1);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::new();
+        let mut b = PhaseTimer::new();
+        a.add("x", Duration::from_millis(1));
+        b.add("x", Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.count("x"), 2);
+        assert!((a.total_secs("x") - 0.003).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-validation of the two MKOR implementations: the pure-Rust
+//! Algorithm 1 (`optim::mkor`) against the AOT artifacts whose factor
+//! update and preconditioning are the L1 Pallas kernels.
+//!
+//! These tests need `make artifacts` (the `tiny` preset); they are skipped
+//! with a notice when the artifacts are missing so `cargo test` stays green
+//! on a fresh checkout.
+
+use mkor::linalg::{ops, Matrix};
+use mkor::optim::Mkor;
+use mkor::runtime::artifact::{literal_f32, literal_scalar, ArtifactBundle};
+use mkor::util::Rng;
+use std::path::Path;
+
+fn load_tiny() -> Option<ArtifactBundle> {
+    let dir = Path::new("artifacts");
+    if !dir.join("tiny/meta.json").exists() {
+        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
+        return None;
+    }
+    Some(ArtifactBundle::load(dir, "tiny").expect("loading tiny artifacts"))
+}
+
+/// Drive the mkor_step artifact with crafted inputs and compare the factor
+/// updates + deltas against the Rust implementation, element by element.
+#[test]
+fn mkor_step_artifact_matches_rust_algorithm() {
+    let Some(bundle) = load_tiny() else { return };
+    let meta = &bundle.meta;
+    let np = meta.param_shapes.len();
+    let nm = meta.factor_dims.len();
+    let gamma = 0.95f32;
+    let mut rng = Rng::new(42);
+
+    // Random grads / SPD-ish factors / rank-1 vectors.
+    let grads: Vec<Vec<f32>> = meta
+        .param_shapes
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let spd = |d: usize, rng: &mut Rng| -> Matrix { Matrix::rand_spd(d, 0.3, rng) };
+    let linvs: Vec<Matrix> = meta.factor_dims.iter().map(|&(_, dout)| spd(dout, &mut rng)).collect();
+    let rinvs: Vec<Matrix> = meta.factor_dims.iter().map(|&(din, _)| spd(din, &mut rng)).collect();
+    let a_vecs: Vec<Vec<f32>> = meta
+        .factor_dims
+        .iter()
+        .map(|&(din, _)| {
+            let mut v = vec![0.0f32; din];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let g_vecs: Vec<Vec<f32>> = meta
+        .factor_dims
+        .iter()
+        .map(|&(_, dout)| {
+            let mut v = vec![0.0f32; dout];
+            rng.fill_gaussian(&mut v, 1.0);
+            v
+        })
+        .collect();
+
+    // --- run the artifact -----------------------------------------------
+    let mut args = Vec::new();
+    for (g, s) in grads.iter().zip(&meta.param_shapes) {
+        let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+        args.push(literal_f32(g, &dims).unwrap());
+    }
+    for (l, &(_, dout)) in linvs.iter().zip(&meta.factor_dims) {
+        args.push(literal_f32(l.data(), &[dout as i64, dout as i64]).unwrap());
+    }
+    for (r, &(din, _)) in rinvs.iter().zip(&meta.factor_dims) {
+        args.push(literal_f32(r.data(), &[din as i64, din as i64]).unwrap());
+    }
+    for (a, &(din, _)) in a_vecs.iter().zip(&meta.factor_dims) {
+        args.push(literal_f32(a, &[din as i64]).unwrap());
+    }
+    for (g, &(_, dout)) in g_vecs.iter().zip(&meta.factor_dims) {
+        args.push(literal_f32(g, &[dout as i64]).unwrap());
+    }
+    args.push(literal_scalar(gamma).unwrap());
+    args.push(literal_scalar(1.0).unwrap()); // factor-update flag on
+    let out = bundle.mkor_step.run(&args).expect("mkor_step execution");
+    assert_eq!(out.len(), np + 2 * nm);
+
+    // --- compare against the Rust Algorithm 1 ----------------------------
+    // Factor updates: Eq. 5/6 via Mkor::sm_update.
+    let precond_idx: Vec<usize> = {
+        // Preconditioned params are the 2-D matmul weights, identified by
+        // matching factor dims against the param shapes in order.
+        let mut out = Vec::new();
+        let mut fi = 0;
+        for (i, s) in meta.param_shapes.iter().enumerate() {
+            if fi < nm
+                && s.len() == 2
+                && (s[0], s[1]) == (meta.factor_dims[fi].0, meta.factor_dims[fi].1)
+                && i >= 2
+            // embed/pos are first and never preconditioned
+            {
+                out.push(i);
+                fi += 1;
+            }
+        }
+        assert_eq!(out.len(), nm, "failed to align factor dims with params");
+        out
+    };
+
+    for j in 0..nm {
+        let (din, dout) = meta.factor_dims[j];
+        // Rust factor update.
+        let mut l_rust = linvs[j].clone();
+        let mut scratch = vec![0.0f32; dout];
+        Mkor::sm_update(&mut l_rust, &g_vecs[j], gamma, &mut scratch);
+        let l_art = out[np + j].to_vec::<f32>().unwrap();
+        let max_diff = l_rust
+            .data()
+            .iter()
+            .zip(&l_art)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()));
+        assert!(max_diff < 1e-3, "linv[{j}] diverges: {max_diff}");
+
+        let mut r_rust = rinvs[j].clone();
+        let mut scratch = vec![0.0f32; din];
+        Mkor::sm_update(&mut r_rust, &a_vecs[j], gamma, &mut scratch);
+        let r_art = out[np + nm + j].to_vec::<f32>().unwrap();
+        let max_diff = r_rust
+            .data()
+            .iter()
+            .zip(&r_art)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()));
+        assert!(max_diff < 1e-3, "rinv[{j}] diverges: {max_diff}");
+
+        // Delta: rescale(R⁻¹' ∇ L⁻¹') — Rust dense evaluation.
+        let i = precond_idx[j];
+        let grad = Matrix::from_vec(din, dout, grads[i].clone());
+        let raw = ops::matmul(&ops::matmul(&r_rust, &grad), &l_rust);
+        let gn = grad.fro_norm();
+        let dn = raw.fro_norm();
+        let mut want = raw.clone();
+        want.scale((gn / dn.max(1e-30)) as f32);
+        let got = out[i].to_vec::<f32>().unwrap();
+        let max_diff = want
+            .data()
+            .iter()
+            .zip(&got)
+            .fold(0.0f32, |m, (&a, &b)| m.max((a - b).abs()));
+        let scale = want.max_abs().max(1.0);
+        assert!(
+            max_diff / scale < 2e-3,
+            "delta[{j}] diverges: {max_diff} (scale {scale})"
+        );
+    }
+}
+
+/// flag = 0 must leave the factors untouched and pass preconditioned (but
+/// not re-updated) deltas.
+#[test]
+fn mkor_step_flag_zero_freezes_factors() {
+    let Some(bundle) = load_tiny() else { return };
+    let meta = &bundle.meta;
+    let np = meta.param_shapes.len();
+    let nm = meta.factor_dims.len();
+    let mut rng = Rng::new(7);
+
+    let mut args = Vec::new();
+    for s in &meta.param_shapes {
+        let n: usize = s.iter().product();
+        let mut v = vec![0.0f32; n];
+        rng.fill_gaussian(&mut v, 1.0);
+        let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+        args.push(literal_f32(&v, &dims).unwrap());
+    }
+    let mut idents = Vec::new();
+    for &(_, dout) in &meta.factor_dims {
+        let m = Matrix::identity(dout);
+        idents.push(m.data().to_vec());
+        args.push(literal_f32(idents.last().unwrap(), &[dout as i64, dout as i64]).unwrap());
+    }
+    for &(din, _) in &meta.factor_dims {
+        let m = Matrix::identity(din);
+        args.push(literal_f32(m.data(), &[din as i64, din as i64]).unwrap());
+    }
+    for &(din, _) in &meta.factor_dims {
+        args.push(literal_f32(&vec![1.0f32; din], &[din as i64]).unwrap());
+    }
+    for &(_, dout) in &meta.factor_dims {
+        args.push(literal_f32(&vec![1.0f32; dout], &[dout as i64]).unwrap());
+    }
+    args.push(literal_scalar(0.9).unwrap());
+    args.push(literal_scalar(0.0).unwrap()); // flag OFF
+    let out = bundle.mkor_step.run(&args).unwrap();
+    // Factors unchanged (identity in, identity out).
+    for (j, &(_, dout)) in meta.factor_dims.iter().enumerate() {
+        let got = out[np + j].to_vec::<f32>().unwrap();
+        let want = Matrix::identity(dout);
+        for (a, b) in got.iter().zip(want.data()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+    let _ = nm;
+}
