@@ -7,11 +7,12 @@
 //! ```
 
 use mkor::cli::Args;
-use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::coordinator::{Target, TrainerBuilder};
 use mkor::data::classification::{glue_proxy_suite, Dataset};
 use mkor::model::{Activation, Mlp};
-use mkor::optim::schedule::Constant;
+use mkor::optim::OptimizerSpec;
 use mkor::util::Rng;
+use std::process::exit;
 
 fn main() {
     let args = Args::from_env();
@@ -20,7 +21,16 @@ fn main() {
     let dim = args.usize_or("dim", 64);
     let seed = args.u64_or("seed", 0);
 
-    println!("fine-tuning 8 GLUE-proxy tasks with `{opt_name}` ({steps} steps each)\n");
+    // `--optimizer` accepts the full spec grammar, e.g. `mkor:f=25`.
+    let spec = match OptimizerSpec::parse(opt_name) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("error: {e}");
+            exit(2);
+        }
+    };
+
+    println!("fine-tuning 8 GLUE-proxy tasks with `{spec}` ({steps} steps each)\n");
     let mut table = mkor::bench_utils::Table::new(&["Task", "Accuracy", "Steps run"]);
     let mut sum = 0.0;
     for cfg in glue_proxy_suite(dim, seed) {
@@ -28,14 +38,12 @@ fn main() {
         let ds = Dataset::generate(cfg);
         let mut rng = Rng::new(seed ^ 77);
         let model = Mlp::new(&[dim, 64, ds.cfg.classes], Activation::Relu, &mut rng);
-        let shapes = model.shapes();
-        let opt = mkor::optim::by_name(opt_name, &shapes).expect("optimizer");
-        let mut trainer = Trainer::new(
-            model,
-            opt,
-            Box::new(Constant(args.f32_or("lr", 0.1))),
-            TrainerConfig { workers: 2, run_name: name.clone(), ..Default::default() },
-        );
+        let mut trainer = TrainerBuilder::new(model)
+            .optimizer(spec.clone())
+            .constant_lr(args.f32_or("lr", 0.1))
+            .workers(2)
+            .run_name(name.clone())
+            .build();
         let mut done = 0;
         'outer: for epoch in 0..10_000 {
             for b in ds.epoch_batches(64, epoch) {

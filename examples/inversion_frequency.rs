@@ -7,25 +7,23 @@
 //! ```
 
 use mkor::cli::Args;
-use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::coordinator::{Target, TrainerBuilder};
 use mkor::data::images::{ImageConfig, ImageGen};
 use mkor::model::{Activation, Mlp};
-use mkor::optim::kfac::{Kfac, KfacConfig};
-use mkor::optim::schedule::Constant;
-use mkor::optim::{Mkor, MkorConfig, Optimizer};
 use mkor::util::Rng;
 
-fn run(opt: Box<dyn Optimizer + Send>, steps: usize, seed: u64) -> (f64, f64) {
+fn run(spec: &str, steps: usize, seed: u64) -> (f64, f64) {
     let mut gen = ImageGen::new(ImageConfig::default(), seed);
     let d = gen.dim();
     let mut rng = Rng::new(seed);
     let model = Mlp::new(&[d, 128, 32, 128, d], Activation::Tanh, &mut rng);
-    let mut trainer = Trainer::new(
-        model,
-        opt,
-        Box::new(Constant(0.05)),
-        TrainerConfig { workers: 2, run_name: "invfreq".into(), ..Default::default() },
-    );
+    let mut trainer = TrainerBuilder::new(model)
+        .optimizer_str(spec)
+        .expect("optimizer spec")
+        .constant_lr(0.05)
+        .workers(2)
+        .run_name("invfreq")
+        .build();
     let t0 = std::time::Instant::now();
     let mut last = f64::NAN;
     for _ in 0..steps {
@@ -51,22 +49,15 @@ fn main() {
         "Avg step time",
     ]);
     for f in [1usize, 5, 10, 50, 100] {
-        let shapes = {
-            let mut rng = Rng::new(1);
-            Mlp::new(&[256, 128, 32, 128, 256], Activation::Tanh, &mut rng).shapes()
-        };
-        let mut mcfg = MkorConfig::default();
-        mcfg.inv_freq = f;
-        let (loss, secs) = run(Box::new(Mkor::new(&shapes, mcfg)), steps, 7);
+        // The whole sweep is two one-line spec strings per refresh period.
+        let (loss, secs) = run(&format!("mkor:f={f}"), steps, 7);
         table.row(&[
             "MKOR".into(),
             f.to_string(),
             format!("{loss:.5}"),
             mkor::bench_utils::fmt_secs(secs),
         ]);
-        let mut kcfg = KfacConfig::default();
-        kcfg.inv_freq = f;
-        let (loss, secs) = run(Box::new(Kfac::new(&shapes, kcfg)), steps, 7);
+        let (loss, secs) = run(&format!("kfac:f={f}"), steps, 7);
         table.row(&[
             "KAISA".into(),
             f.to_string(),

@@ -6,28 +6,22 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::coordinator::{Target, TrainerBuilder};
 use mkor::data::classification::{Dataset, TaskConfig};
 use mkor::model::{Activation, Mlp};
-use mkor::optim::schedule::Constant;
 use mkor::util::Rng;
 
 fn run(opt_name: &str, ds: &Dataset) -> (Option<usize>, f64, f64) {
     let mut rng = Rng::new(42);
     let model = Mlp::new(&[ds.cfg.dim, 64, 32, ds.cfg.classes], Activation::Relu, &mut rng);
-    let shapes = model.shapes();
-    let opt = mkor::optim::by_name(opt_name, &shapes).expect("optimizer");
-    let mut trainer = Trainer::new(
-        model,
-        opt,
-        Box::new(Constant(0.02)),
-        TrainerConfig {
-            workers: 4,
-            target_metric: Some(0.86),
-            run_name: format!("quickstart-{opt_name}"),
-            ..Default::default()
-        },
-    );
+    let mut trainer = TrainerBuilder::new(model)
+        .optimizer_str(opt_name)
+        .expect("optimizer spec")
+        .constant_lr(0.02)
+        .workers(4)
+        .target_metric(0.86)
+        .run_name(format!("quickstart-{opt_name}"))
+        .build();
     let test = ds.test_batch();
     let t0 = std::time::Instant::now();
     let mut steps = 0usize;

@@ -32,7 +32,9 @@ fn main() {
             "MKOR 1.26/1.31/1.58x over HyLo-KIS/SGD/KAISA",
         ),
     ];
-    let opts_names = ["sgd", "mkor", "kfac", "sngd"];
+    // One-line optimizer specs; §8.12 runs every second-order method at
+    // f=10 on these workloads.
+    let opts_names = ["sgd", "mkor:f=10", "kfac:f=10", "sngd:f=10"];
 
     std::fs::create_dir_all("results").ok();
     let mut t = Table::new(&[
@@ -49,7 +51,6 @@ fn main() {
             let ro = RunOpts {
                 lr,
                 steps,
-                inv_freq: Some(10),
                 eval_every: 14,
                 hidden: vec![96, 48],
                 seed: 31,

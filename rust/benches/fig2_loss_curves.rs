@@ -12,26 +12,27 @@ fn main() {
     let task = TaskKind::TextClass { feat_dim: 64, vocab: 64 };
     let steps = 400usize;
 
-    let entries: [(&str, &str, f32, Option<usize>); 5] = [
-        ("LAMB", "lamb", 0.02, None),
-        ("KAISA", "kfac", 0.3, Some(50)),
-        ("MKOR", "mkor", 0.3, Some(10)),
-        ("MKOR-H", "mkor-h", 0.3, Some(10)),
-        ("Eva", "eva", 0.3, None),
+    // Inversion frequencies ride along in the optimizer spec strings
+    // (§8.9: MKOR f=10 where KAISA needs 50).
+    let entries: [(&str, &str, f32); 5] = [
+        ("LAMB", "lamb", 0.02),
+        ("KAISA", "kfac:f=50", 0.3),
+        ("MKOR", "mkor:f=10", 0.3),
+        ("MKOR-H", "mkor-h:f=10", 0.3),
+        ("Eva", "eva", 0.3),
     ];
 
     let mut curves: Vec<(String, Vec<f64>)> = Vec::new();
-    for (label, opt, lr, f) in entries {
+    for (label, spec, lr) in entries {
         let opts = RunOpts {
             lr,
             steps,
-            inv_freq: f,
             eval_every: 0,
             hidden: vec![96],
             seed: 21,
             ..Default::default()
         };
-        let r = run_convergence(&task, opt, &opts);
+        let r = run_convergence(&task, spec, &opts);
         curves.push((label.to_string(), r.losses));
     }
 

@@ -21,7 +21,9 @@ fn measured(opt_name: &str, shape: LayerShape, b: usize, steps: usize) -> (f64, 
     let shapes = [shape];
     let mut rng = Rng::new(3);
     let mut layers = vec![Dense::init(shape, Activation::Linear, &mut rng)];
-    let mut opt = mkor::optim::by_name(opt_name, &shapes).unwrap();
+    let mut opt = mkor::optim::OptimizerSpec::parse(opt_name)
+        .expect("optimizer spec")
+        .build(&shapes);
     let mut timer = PhaseTimer::new();
     for _ in 0..steps {
         let a = Matrix::randn(shape.d_in, b, 1.0, &mut rng);

@@ -9,24 +9,24 @@ fn main() {
     println!("=== Figure 6: accuracy-vs-steps, ResNet-proxy ===\n");
     let steps = 320usize;
     let eval_every = 16usize;
-    let entries: [(&str, &str, f32, Option<usize>); 3] = [
-        ("SGD", "sgd", 0.05, None),
-        ("KAISA", "kfac", 0.05, Some(50)),
-        ("MKOR", "mkor", 0.05, Some(10)),
+    // Per-optimizer inversion frequencies as one-line spec strings.
+    let entries: [(&str, &str, f32); 3] = [
+        ("SGD", "sgd", 0.05),
+        ("KAISA", "kfac:f=50", 0.05),
+        ("MKOR", "mkor:f=10", 0.05),
     ];
 
     let mut curves = Vec::new();
-    for (label, opt, lr, f) in entries {
+    for (label, spec, lr) in entries {
         let opts = RunOpts {
             lr,
             steps,
-            inv_freq: f,
             eval_every,
             hidden: vec![128, 64],
             seed: 23,
             ..Default::default()
         };
-        let r = run_convergence(&TaskKind::Images, opt, &opts);
+        let r = run_convergence(&TaskKind::Images, spec, &opts);
         curves.push((label, r));
     }
 

@@ -31,8 +31,9 @@ fn factor_secs(opt_name: &str, d: usize, b: usize) -> f64 {
     let cap = capture(shapes[0], b, &mut rng);
     let mut layers = vec![Dense::init(shapes[0], mkor::model::Activation::Linear, &mut rng)];
     let mut last_factor = 0.0;
+    let spec = mkor::optim::OptimizerSpec::parse(opt_name).expect("optimizer spec");
     let r = bench_fn(opt_name, 0.3, || {
-        let mut opt = mkor::optim::by_name(opt_name, &shapes).unwrap();
+        let mut opt = spec.build(&shapes);
         let mut timer = PhaseTimer::new();
         opt.step(&mut layers, std::slice::from_ref(&cap), 0.0, &mut timer);
         last_factor = timer.total_secs("factor");

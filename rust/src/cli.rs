@@ -45,8 +45,18 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Is `--key` set to a truthy value? Bare `--flag` (stored as
+    /// `"true"`), `--flag=1`, `--flag=yes`, `--flag=on` and their
+    /// case-insensitive variants all count; `--flag=false`/`0`/`no`/`off`
+    /// (and any other value) do not.
     pub fn flag(&self, key: &str) -> bool {
-        self.options.get(key).map(String::as_str) == Some("true")
+        match self.options.get(key) {
+            Some(v) => matches!(
+                v.to_ascii_lowercase().as_str(),
+                "true" | "1" | "yes" | "on"
+            ),
+            None => false,
+        }
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -111,5 +121,36 @@ mod tests {
         let a = parse("--offset -3");
         // "-3" doesn't start with --, so it's consumed as the value.
         assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn truthy_flag_forms_all_read_as_set() {
+        for form in [
+            "--verbose",
+            "--verbose=true",
+            "--verbose=TRUE",
+            "--verbose=1",
+            "--verbose=yes",
+            "--verbose=on",
+            "--verbose true",
+            "--verbose 1",
+            "--verbose yes",
+        ] {
+            let a = parse(form);
+            assert!(a.flag("verbose"), "`{form}` should read as set");
+        }
+    }
+
+    #[test]
+    fn falsy_and_unrelated_values_read_as_unset() {
+        for form in ["--verbose=false", "--verbose=0", "--verbose=no", "--verbose=off"] {
+            let a = parse(form);
+            assert!(!a.flag("verbose"), "`{form}` should read as unset");
+        }
+        // An option carrying an ordinary value is not a set flag...
+        let a = parse("--preset small");
+        assert!(!a.flag("preset"));
+        // ...and an absent key never is.
+        assert!(!a.flag("missing"));
     }
 }

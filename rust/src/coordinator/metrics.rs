@@ -25,6 +25,10 @@ pub struct StepRecord {
 pub struct RunRecord {
     pub name: String,
     pub optimizer: String,
+    /// Canonical optimizer spec string (`OptimizerSpec::canonical`) — the
+    /// exact configuration that produced this run; re-parse it with
+    /// `OptimizerSpec::parse` to reproduce.
+    pub spec: String,
     pub steps: Vec<StepRecord>,
     pub diverged: bool,
     /// Step at which the target metric was first reached, if ever.
@@ -65,6 +69,7 @@ impl RunRecord {
         let mut o = Json::obj();
         o.set("name", Json::Str(self.name.clone()))
             .set("optimizer", Json::Str(self.optimizer.clone()))
+            .set("spec", Json::Str(self.spec.clone()))
             .set("diverged", Json::Bool(self.diverged))
             .set(
                 "converged_at",
@@ -130,6 +135,7 @@ mod tests {
         RunRecord {
             name: "t".into(),
             optimizer: "mkor".into(),
+            spec: "mkor:f=25".into(),
             steps: vec![
                 StepRecord {
                     step: 0,
@@ -169,6 +175,7 @@ mod tests {
     fn json_roundtrip_fields() {
         let j = sample_run().to_json();
         assert_eq!(j.require_str("optimizer").unwrap(), "mkor");
+        assert_eq!(j.require_str("spec").unwrap(), "mkor:f=25");
         assert_eq!(j.get("converged_at").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("loss").unwrap().as_arr().unwrap().len(), 2);
         // parse what we print

@@ -12,7 +12,9 @@
 //!
 //! Two frontends:
 //! * [`trainer::Trainer`] — drives the Rust-native [`crate::model::Mlp`]
-//!   proxies (all convergence figures/tables);
+//!   proxies (all convergence figures/tables). Construct it with
+//!   [`trainer::TrainerBuilder`], which routes optimizer construction
+//!   through [`crate::optim::OptimizerSpec`];
 //! * `runtime::XlaTrainer` (see [`crate::runtime`]) — drives the AOT
 //!   transformer artifacts for the end-to-end example.
 
@@ -20,4 +22,4 @@ pub mod metrics;
 pub mod trainer;
 
 pub use metrics::{RunRecord, StepRecord};
-pub use trainer::{Target, Trainer, TrainerConfig};
+pub use trainer::{Target, Trainer, TrainerBuilder, TrainerConfig};

@@ -18,8 +18,8 @@ use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
 use crate::coordinator::metrics::{RunRecord, StepRecord};
 use crate::linalg::Matrix;
 use crate::model::{accuracy, mse_loss, softmax_xent, Capture, Mlp};
-use crate::optim::schedule::LrSchedule;
-use crate::optim::Optimizer;
+use crate::optim::schedule::{Constant, LrSchedule};
+use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
 
 /// What a batch is labeled with.
@@ -58,6 +58,108 @@ impl Default for TrainerConfig {
     }
 }
 
+/// Builder for [`Trainer`]: model → optimizer spec → schedule →
+/// workers/wire-format → [`TrainerBuilder::build`].
+///
+/// The one construction path for trainers in benches, examples, tests and
+/// the CLI — the optimizer is always built from an [`OptimizerSpec`], so
+/// the resulting [`RunRecord`] carries the canonical spec string of the
+/// exact configuration that ran.
+///
+/// ```ignore
+/// let trainer = TrainerBuilder::new(model)
+///     .optimizer(OptimizerSpec::parse("mkor:f=10,backend=lamb")?)
+///     .constant_lr(0.05)
+///     .workers(4)
+///     .build();
+/// ```
+pub struct TrainerBuilder {
+    model: Mlp,
+    spec: OptimizerSpec,
+    schedule: Box<dyn LrSchedule + Send>,
+    cfg: TrainerConfig,
+}
+
+impl TrainerBuilder {
+    /// Start from a model; defaults: SGD-momentum, constant LR 0.1, and
+    /// [`TrainerConfig::default`] (4 workers, fp32 wire).
+    pub fn new(model: Mlp) -> Self {
+        TrainerBuilder {
+            model,
+            spec: OptimizerSpec::default(),
+            schedule: Box::new(Constant(0.1)),
+            cfg: TrainerConfig::default(),
+        }
+    }
+
+    /// Set the optimizer from a typed spec.
+    pub fn optimizer(mut self, spec: OptimizerSpec) -> Self {
+        self.spec = spec;
+        self
+    }
+
+    /// Set the optimizer from a spec string (`name[:key=val,...]`).
+    pub fn optimizer_str(self, s: &str) -> Result<Self, crate::optim::SpecError> {
+        Ok(self.optimizer(OptimizerSpec::parse(s)?))
+    }
+
+    /// Set an arbitrary LR schedule.
+    pub fn schedule(mut self, schedule: Box<dyn LrSchedule + Send>) -> Self {
+        self.schedule = schedule;
+        self
+    }
+
+    /// Shorthand for a constant learning rate.
+    pub fn constant_lr(self, lr: f32) -> Self {
+        self.schedule(Box::new(Constant(lr)))
+    }
+
+    /// Data-parallel width (worker threads).
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+
+    /// bf16 wire format for the gradient all-reduce.
+    pub fn quantized_grads(mut self, quantized: bool) -> Self {
+        self.cfg.quantized_grads = quantized;
+        self
+    }
+
+    /// Stop-early target (accuracy for labeled targets, loss for dense).
+    pub fn target_metric(mut self, target: f64) -> Self {
+        self.cfg.target_metric = Some(target);
+        self
+    }
+
+    /// Run an eval every `n` steps (0 = never).
+    pub fn eval_every(mut self, n: usize) -> Self {
+        self.cfg.eval_every = n;
+        self
+    }
+
+    /// Name recorded in the run record.
+    pub fn run_name(mut self, name: impl Into<String>) -> Self {
+        self.cfg.run_name = name.into();
+        self
+    }
+
+    /// Replace the whole [`TrainerConfig`] at once (keeps any builder
+    /// fields set afterwards).
+    pub fn config(mut self, cfg: TrainerConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Build the trainer: constructs the optimizer from the spec against
+    /// the model's layer shapes.
+    pub fn build(self) -> Trainer {
+        let shapes = self.model.shapes();
+        let opt = self.spec.build(&shapes);
+        Trainer::from_parts(self.model, opt, self.schedule, self.cfg)
+    }
+}
+
 /// The trainer. Owns the worker replicas, the optimizer and the schedule.
 pub struct Trainer {
     cfg: TrainerConfig,
@@ -72,7 +174,22 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Positional constructor, superseded by [`TrainerBuilder`] (which also
+    /// routes optimizer construction through [`OptimizerSpec`]).
+    #[deprecated(
+        since = "0.2.0",
+        note = "use TrainerBuilder::new(model).optimizer(spec)...build()"
+    )]
     pub fn new(
+        model: Mlp,
+        opt: Box<dyn Optimizer + Send>,
+        schedule: Box<dyn LrSchedule + Send>,
+        cfg: TrainerConfig,
+    ) -> Self {
+        Trainer::from_parts(model, opt, schedule, cfg)
+    }
+
+    fn from_parts(
         model: Mlp,
         opt: Box<dyn Optimizer + Send>,
         schedule: Box<dyn LrSchedule + Send>,
@@ -83,6 +200,7 @@ impl Trainer {
         let record = RunRecord {
             name: cfg.run_name.clone(),
             optimizer: opt.name().to_string(),
+            spec: opt.spec().canonical(),
             ..Default::default()
         };
         Trainer {
@@ -370,7 +488,6 @@ mod tests {
     use super::*;
     use crate::data::classification::{Dataset, TaskConfig};
     use crate::model::Activation;
-    use crate::optim::schedule::Constant;
     use crate::util::Rng;
 
     fn make_trainer_lr(
@@ -387,19 +504,50 @@ mod tests {
         let ds = Dataset::generate(cfg);
         let mut rng = Rng::new(seed);
         let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
-        let shapes = model.shapes();
-        let opt = crate::optim::by_name(opt_name, &shapes).unwrap();
-        let tcfg = TrainerConfig {
-            workers,
-            eval_every: 0,
-            target_metric: Some(0.8),
-            ..Default::default()
-        };
-        (Trainer::new(model, opt, Box::new(Constant(lr)), tcfg), ds)
+        let trainer = TrainerBuilder::new(model)
+            .optimizer_str(opt_name)
+            .unwrap()
+            .constant_lr(lr)
+            .workers(workers)
+            .target_metric(0.8)
+            .build();
+        (trainer, ds)
     }
 
     fn make_trainer(opt_name: &str, workers: usize, seed: u64) -> (Trainer, Dataset) {
         make_trainer_lr(opt_name, workers, seed, 0.1)
+    }
+
+    #[test]
+    fn builder_records_canonical_spec() {
+        let mut rng = Rng::new(8);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let tr = TrainerBuilder::new(model)
+            .optimizer_str("mkor:f=25,backend=lamb")
+            .unwrap()
+            .constant_lr(0.05)
+            .workers(2)
+            .run_name("spec-check")
+            .build();
+        assert_eq!(tr.record.optimizer, "mkor");
+        assert_eq!(tr.record.spec, "mkor:f=25,backend=lamb");
+        // The recorded spec re-parses to the configuration that ran.
+        let re = OptimizerSpec::parse(&tr.record.spec).unwrap();
+        assert_eq!(re, tr.optimizer().spec());
+        // And the JSON dump carries it.
+        let j = tr.record.to_json();
+        assert_eq!(j.require_str("spec").unwrap(), "mkor:f=25,backend=lamb");
+    }
+
+    #[test]
+    fn unknown_spec_string_is_rejected() {
+        let mut rng = Rng::new(9);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let err = match TrainerBuilder::new(model).optimizer_str("bogus") {
+            Ok(_) => panic!("`bogus` should not parse"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("mkor"), "{err}");
     }
 
     #[test]
@@ -462,13 +610,12 @@ mod tests {
         // Absurd LR forces divergence.
         let mut rng = Rng::new(4);
         let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
-        let shapes = model.shapes();
-        let mut tr = Trainer::new(
-            model,
-            crate::optim::by_name("sgd", &shapes).unwrap(),
-            Box::new(Constant(1e6)),
-            TrainerConfig { workers: 2, ..Default::default() },
-        );
+        let mut tr = TrainerBuilder::new(model)
+            .optimizer_str("sgd")
+            .unwrap()
+            .constant_lr(1e6)
+            .workers(2)
+            .build();
         let mut steps = 0;
         'outer: for epoch in 0..50 {
             for b in ds.epoch_batches(64, epoch) {
@@ -510,13 +657,13 @@ mod tests {
         let ds = Dataset::generate(cfg);
         let mut rng = Rng::new(6);
         let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
-        let shapes = model.shapes();
-        let mut tr = Trainer::new(
-            model,
-            crate::optim::by_name("sgd", &shapes).unwrap(),
-            Box::new(Constant(0.1)),
-            TrainerConfig { workers: 4, quantized_grads: true, ..Default::default() },
-        );
+        let mut tr = TrainerBuilder::new(model)
+            .optimizer_str("sgd")
+            .unwrap()
+            .constant_lr(0.1)
+            .workers(4)
+            .quantized_grads(true)
+            .build();
         let mut first = None;
         let mut last = 0.0;
         for epoch in 0..15 {

@@ -2,12 +2,12 @@
 //! record loss/metric trajectories — the measurement behind Tables 2/3/5
 //! and Figures 2/4b/6/11/12.
 
-use crate::coordinator::{Target, Trainer, TrainerConfig};
+use crate::coordinator::{Target, TrainerBuilder};
 use crate::data::classification::{Dataset, TaskConfig};
 use crate::data::images::{ImageConfig, ImageGen};
 use crate::data::text::{MlmBatchGen, TextConfig};
 use crate::model::{Activation, Mlp};
-use crate::optim::schedule::Constant;
+use crate::optim::OptimizerSpec;
 use crate::util::Rng;
 
 /// The proxy workloads.
@@ -104,55 +104,52 @@ impl Default for RunOpts {
     }
 }
 
-fn build_optimizer(
-    name: &str,
-    shapes: &[crate::model::LayerShape],
-    inv_freq: Option<usize>,
-    gamma: Option<f32>,
-) -> Box<dyn crate::optim::Optimizer + Send> {
-    use crate::optim::{eva, kfac, sngd, Mkor, MkorConfig, MkorH};
-    match (name, inv_freq) {
-        ("mkor", f) => {
-            let mut c = MkorConfig::default();
-            if let Some(f) = f {
-                c.inv_freq = f;
-            }
-            if let Some(g) = gamma {
-                c.gamma = g;
-            }
-            Box::new(Mkor::new(shapes, c))
-        }
-        ("mkor-h", f) => {
-            let mut c = MkorConfig::default();
-            if let Some(f) = f {
-                c.inv_freq = f;
-            }
-            if let Some(g) = gamma {
-                c.gamma = g;
-            }
-            Box::new(MkorH::new(shapes, c, crate::optim::hybrid::SwitchConfig::default()))
-        }
-        ("kfac" | "kaisa", f) => {
-            let mut c = kfac::KfacConfig::default();
-            if let Some(f) = f {
-                c.inv_freq = f;
-            }
-            Box::new(kfac::Kfac::new(shapes, c))
-        }
-        ("sngd" | "hylo", f) => {
-            let mut c = sngd::SngdConfig::default();
-            if let Some(f) = f {
-                c.inv_freq = f;
-            }
-            Box::new(sngd::Sngd::new(shapes, c))
-        }
-        ("eva", _) => Box::new(eva::Eva::new(shapes, eva::EvaConfig::default())),
-        (other, _) => crate::optim::by_name(other, shapes)
-            .unwrap_or_else(|| panic!("unknown optimizer `{other}`")),
+/// Does the raw spec string explicitly set one of `keys`?
+///
+/// Used to give spec-string keys precedence over the `RunOpts` harness
+/// overrides — `RunOpts::default()` carries `gamma: Some(0.9)`, which must
+/// not silently clobber an explicit `mkor:gamma=0.99`.
+fn spec_sets_key(s: &str, keys: &[&str]) -> bool {
+    match s.split_once(':') {
+        Some((_, rest)) => rest.split(',').any(|part| {
+            part.split_once('=')
+                .map(|(k, _)| keys.contains(&k.trim()))
+                .unwrap_or(false)
+        }),
+        None => false,
     }
 }
 
+/// Resolve the run's optimizer spec: parse the (possibly keyed) spec
+/// string, then layer the harness overrides on top. A key written in the
+/// spec string always wins over the corresponding `RunOpts` override.
+///
+/// `inv_freq` overrides the refresh period of the second-order methods
+/// (MKOR/MKOR-H factor period, KFAC inversion period, SNGD kernel period,
+/// Eva vector period — Eva previously ignored this override) and `gamma`
+/// overrides MKOR's factor momentum only, as `RunOpts` documents.
+fn resolve_spec(name: &str, inv_freq: Option<usize>, gamma: Option<f32>) -> OptimizerSpec {
+    let mut spec =
+        OptimizerSpec::parse(name).unwrap_or_else(|e| panic!("optimizer spec: {e}"));
+    if let Some(f) = inv_freq {
+        if !spec_sets_key(name, &["f", "inv_freq", "update_freq"]) {
+            spec = spec.with_inv_freq(f);
+        }
+    }
+    if let Some(g) = gamma {
+        if !spec_sets_key(name, &["gamma"]) {
+            spec = spec.with_gamma(g);
+        }
+    }
+    spec
+}
+
 /// Train a proxy model and record its trajectory.
+///
+/// `opt_name` is an optimizer spec string — a bare name (`"mkor"`) or the
+/// full `name[:key=val,...]` grammar (`"mkor:f=25,backend=lamb"`); the
+/// `RunOpts` `inv_freq`/`gamma` overrides are applied on top. Panics on an
+/// invalid spec (harness code; the CLI path reports errors instead).
 pub fn run_convergence(task: &TaskKind, opt_name: &str, opts: &RunOpts) -> ConvergenceResult {
     let mut rng = Rng::new(opts.seed);
 
@@ -206,18 +203,13 @@ pub fn run_convergence(task: &TaskKind, opt_name: &str, opts: &RunOpts) -> Conve
         _ => Activation::Relu,
     };
     let model = Mlp::new(&dims, act, &mut rng);
-    let shapes = model.shapes();
-    let opt = build_optimizer(opt_name, &shapes, opts.inv_freq, opts.gamma);
-    let mut trainer = Trainer::new(
-        model,
-        opt,
-        Box::new(Constant(opts.lr)),
-        TrainerConfig {
-            workers: opts.workers,
-            run_name: format!("{opt_name}"),
-            ..Default::default()
-        },
-    );
+    let spec = resolve_spec(opt_name, opts.inv_freq, opts.gamma);
+    let mut trainer = TrainerBuilder::new(model)
+        .optimizer(spec)
+        .constant_lr(opts.lr)
+        .workers(opts.workers)
+        .run_name(opt_name)
+        .build();
 
     let mut next = |src: &mut Src, b: usize| -> (crate::linalg::Matrix, Target) {
         match src {
@@ -338,6 +330,28 @@ mod tests {
             &RunOpts { steps: 100, lr: 1e6, hidden: vec![32], ..Default::default() },
         );
         assert!(r.diverged);
+    }
+
+    #[test]
+    fn spec_string_keys_win_over_runopts_overrides() {
+        // An explicit key in the string survives a conflicting harness
+        // override (RunOpts::default() carries gamma: Some(0.9))...
+        let s = resolve_spec("mkor:gamma=0.97", Some(5), Some(0.9));
+        assert_eq!(s, OptimizerSpec::parse("mkor:f=5,gamma=0.97").unwrap());
+        // ...while keys the string leaves unset still take the override.
+        let s = resolve_spec("mkor", Some(5), Some(0.9));
+        assert_eq!(s, OptimizerSpec::parse("mkor:f=5,gamma=0.9").unwrap());
+    }
+
+    #[test]
+    fn spec_strings_are_accepted_as_optimizer_names() {
+        // The same sweep the RunOpts override drives, as one-line specs.
+        let task = TaskKind::Images;
+        let base = RunOpts { steps: 40, hidden: vec![32], ..Default::default() };
+        let r1 = run_convergence(&task, "mkor:f=1", &base);
+        let r40 = run_convergence(&task, "mkor:f=40", &base);
+        assert!(!r1.diverged && !r40.diverged);
+        assert!(r1.sync_bytes > 10 * r40.sync_bytes.max(1));
     }
 
     #[test]

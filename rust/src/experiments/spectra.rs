@@ -2,12 +2,12 @@
 //! behind Figures 5, 8 and 10 (rank-1 approximation error and KFAC factor
 //! condition numbers).
 
-use crate::coordinator::{Target, Trainer, TrainerConfig};
+use crate::coordinator::{Target, TrainerBuilder};
 use crate::data::images::{ImageConfig, ImageGen};
 use crate::linalg::eigen::{condition_number, jacobi_eigen};
 use crate::linalg::lowrank::{covariance, mean_rank1_error, optimal_rank1_error};
 use crate::model::{Activation, Mlp};
-use crate::optim::schedule::Constant;
+use crate::optim::OptimizerSpec;
 use crate::util::Rng;
 
 /// One sampled covariance observation.
@@ -42,14 +42,12 @@ pub fn collect_spectra(
     dims.extend(hidden);
     dims.push(gen.classes());
     let model = Mlp::new(&dims, Activation::Relu, &mut rng);
-    let shapes = model.shapes();
-    let opt = crate::optim::by_name("sgd", &shapes).unwrap();
-    let mut trainer = Trainer::new(
-        model,
-        opt,
-        Box::new(Constant(0.1)),
-        TrainerConfig { workers: 1, run_name: "spectra".into(), ..Default::default() },
-    );
+    let mut trainer = TrainerBuilder::new(model)
+        .optimizer(OptimizerSpec::parse("sgd").unwrap())
+        .constant_lr(0.1)
+        .workers(1)
+        .run_name("spectra")
+        .build();
 
     // We need the captures, which the Trainer consumes internally — so run
     // the model manually alongside for sampling (same weights: sample

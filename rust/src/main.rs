@@ -6,21 +6,23 @@
 //!              (`make artifacts` first). Flags: `--preset tiny|small|base`,
 //!              `--steps N`, `--workers W`, `--lr`, `--inv-freq`,
 //!              `--hybrid`, `--out results/e2e.json`.
-//! * `sim`    — proxy-model training with any optimizer (`--optimizer
-//!              mkor|mkor-h|kfac|sngd|eva|sgd|adam|lamb`, `--task
-//!              glue|images|autoencoder|text`, `--steps`, `--workers`).
+//! * `sim`    — proxy-model training with any optimizer spec
+//!              (`--optimizer name[:key=val,...]`, e.g. `--optimizer
+//!              mkor:f=10,backend=lamb`; names: mkor|mkor-h|kfac|sngd|
+//!              eva|sgd|adam|lamb), `--task glue|images|autoencoder|text`,
+//!              `--steps`, `--workers`.
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 
 use mkor::bench_utils::Table;
 use mkor::cli::Args;
-use mkor::coordinator::{Target, Trainer, TrainerConfig};
+use mkor::coordinator::{Target, TrainerBuilder};
 use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
 use mkor::data::classification::{Dataset, TaskConfig};
 use mkor::data::images::{ImageConfig, ImageGen};
 use mkor::data::text::{MlmBatchGen, TextConfig};
 use mkor::model::{specs, Activation, Mlp};
-use mkor::optim::schedule::Constant;
+use mkor::optim::OptimizerSpec;
 use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
 use mkor::runtime::ArtifactBundle;
 use mkor::util::Rng;
@@ -152,21 +154,22 @@ fn cmd_sim(args: &Args) -> i32 {
         }
     };
 
-    let shapes = model.shapes();
-    let Some(opt) = mkor::optim::by_name(opt_name, &shapes) else {
-        eprintln!("unknown optimizer `{opt_name}`");
-        return 2;
+    // Parse the optimizer spec up front so a typo reports an actionable
+    // message (naming valid optimizers/keys) instead of panicking.
+    let spec = match OptimizerSpec::parse(opt_name) {
+        Ok(spec) => spec,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
     };
-    let mut trainer = Trainer::new(
-        model,
-        opt,
-        Box::new(Constant(lr)),
-        TrainerConfig {
-            workers,
-            run_name: format!("sim-{task}-{opt_name}"),
-            ..Default::default()
-        },
-    );
+    println!("optimizer spec: {}", spec.canonical());
+    let mut trainer = TrainerBuilder::new(model)
+        .optimizer(spec)
+        .constant_lr(lr)
+        .workers(workers)
+        .run_name(format!("sim-{task}-{opt_name}"))
+        .build();
     for s in 0..steps {
         let (x, target) = next_batch();
         match trainer.step(&x, &target) {

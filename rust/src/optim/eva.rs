@@ -21,11 +21,11 @@ use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::SgdMomentum;
 use crate::optim::rescale::rescale_to_gradient_norm;
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
 
 /// Eva hyperparameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EvaConfig {
     /// SMW damping μ.
     pub damping: f32,
@@ -179,6 +179,10 @@ impl Optimizer for Eva {
 
     fn steps_done(&self) -> usize {
         self.t
+    }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Eva(self.cfg)
     }
 }
 

@@ -8,7 +8,7 @@
 
 use crate::linalg::Matrix;
 use crate::model::{Capture, Dense, LayerShape};
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
 
 /// SGD with heavy-ball momentum: `v ← m·v + Δ; W ← W − lr·v`.
@@ -74,10 +74,14 @@ impl Optimizer for SgdMomentum {
     fn steps_done(&self) -> usize {
         self.t
     }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Sgd { momentum: self.momentum }
+    }
 }
 
 /// Adam/LAMB moment hyperparameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct AdamConfig {
     pub beta1: f32,
     pub beta2: f32,
@@ -203,6 +207,10 @@ impl Optimizer for Adam {
     fn steps_done(&self) -> usize {
         self.t
     }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Adam(self.cfg)
+    }
 }
 
 /// LAMB: Adam direction with a per-layer trust ratio `‖W‖/‖dir‖`.
@@ -269,6 +277,10 @@ impl Optimizer for Lamb {
     fn steps_done(&self) -> usize {
         self.t
     }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Lamb(self.inner.cfg)
+    }
 }
 
 #[cfg(test)]
@@ -287,7 +299,7 @@ mod tests {
         let y = ops::matmul(&w_true, &x);
         let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
         layers[0].w = Matrix::zeros(4, 6);
-        let mut opt = crate::optim::by_name(opt_name, &shapes).unwrap();
+        let mut opt = OptimizerSpec::parse(opt_name).unwrap().build(&shapes);
         let mut timer = PhaseTimer::new();
         let mut loss = f64::INFINITY;
         for _ in 0..steps {

@@ -11,12 +11,12 @@
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::SgdMomentum;
 use crate::optim::mkor::{Mkor, MkorConfig};
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::stats::Ema;
 use crate::util::timer::PhaseTimer;
 
 /// Switching rule parameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SwitchConfig {
     /// EMA smoothing of the per-step loss decrease.
     pub beta: f64,
@@ -131,6 +131,13 @@ impl Optimizer for MkorH {
 
     fn steps_done(&self) -> usize {
         self.t
+    }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::MkorH {
+            mkor: self.mkor.config().clone(),
+            switch: self.switch_cfg,
+        }
     }
 
     fn observe_loss(&mut self, loss: f64) {

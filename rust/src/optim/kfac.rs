@@ -11,11 +11,11 @@ use crate::linalg::cholesky::invert_spd;
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::SgdMomentum;
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
 
 /// KFAC hyperparameters (KAISA defaults: f=50 for BERT, damping 3e-3).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct KfacConfig {
     /// Covariance EMA momentum γ.
     pub gamma: f32,
@@ -190,6 +190,10 @@ impl Optimizer for Kfac {
 
     fn steps_done(&self) -> usize {
         self.t
+    }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Kfac(self.cfg)
     }
 }
 

@@ -28,11 +28,11 @@ use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::{Adam, AdamConfig, Lamb, SgdMomentum};
 use crate::optim::rescale::rescale_to_gradient_norm;
 use crate::optim::stabilizer::{stabilize, StabilizerConfig};
-use crate::optim::{Backend, Optimizer};
+use crate::optim::{Backend, Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
 
 /// MKOR hyperparameters (paper defaults: γ close to 1, f = 10, bf16 sync).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MkorConfig {
     /// Momentum γ of the factor recurrence (Equations 5/6).
     pub gamma: f32,
@@ -258,6 +258,10 @@ impl Optimizer for Mkor {
 
     fn steps_done(&self) -> usize {
         self.t
+    }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Mkor(self.cfg.clone())
     }
 }
 

@@ -1,19 +1,33 @@
 //! The optimizer family: MKOR (the paper's contribution) plus every
 //! baseline its evaluation compares against.
 //!
-//! | Module       | Optimizer        | Factor cost  | Paper role            |
-//! |--------------|------------------|--------------|-----------------------|
-//! | [`mkor`]     | MKOR (Alg. 1)    | O(d²)        | contribution          |
-//! | [`hybrid`]   | MKOR-H (§3.2)    | O(d²)→O(1)   | contribution          |
-//! | [`kfac`]     | KFAC/KAISA       | O(d³)        | 2nd-order SOTA        |
-//! | [`sngd`]     | SNGD/HyLo        | O(b³)        | 2nd-order SOTA        |
-//! | [`eva`]      | Eva              | O(d²)        | 2nd-order baseline    |
-//! | [`first_order`] | SGD-m, Adam, LAMB | —       | 1st-order baselines   |
+//! Construction goes through the typed [`OptimizerSpec`] registry: parse a
+//! spec string with the grammar `name[:key=val,...]`, then
+//! [`OptimizerSpec::build`] the boxed optimizer. One example string per
+//! optimizer (keys are optional — the bare name gives paper defaults, §8.9):
+//!
+//! | Module       | Optimizer        | Example spec string                         | Factor cost  | Paper role            |
+//! |--------------|------------------|---------------------------------------------|--------------|-----------------------|
+//! | [`mkor`]     | MKOR (Alg. 1)    | `mkor:f=10,gamma=0.99,backend=lamb,half=bf16` | O(d²)      | contribution          |
+//! | [`hybrid`]   | MKOR-H (§3.2)    | `mkor-h:f=10,switch_ratio=0.1,min_steps=50` | O(d²)→O(1)   | contribution          |
+//! | [`kfac`]     | KFAC/KAISA       | `kfac:f=50,damping=3e-2,gamma=0.95`         | O(d³)        | 2nd-order SOTA        |
+//! | [`sngd`]     | SNGD/HyLo        | `sngd:f=10,damping=0.3`                     | O(b³)        | 2nd-order SOTA        |
+//! | [`eva`]      | Eva              | `eva:damping=3e-2,beta=0.95`                | O(d²)        | 2nd-order baseline    |
+//! | [`first_order`] | SGD-m         | `sgd:momentum=0.9`                          | —            | 1st-order baseline    |
+//! | [`first_order`] | Adam           | `adam:beta1=0.9,beta2=0.999,eps=1e-6`       | —            | 1st-order baseline    |
+//! | [`first_order`] | LAMB           | `lamb:wd=0.01`                              | —            | 1st-order baseline    |
+//!
+//! `kaisa` and `hylo` are accepted aliases for `kfac` / `sngd`. For MKOR,
+//! `damping` aliases the stabilizer threshold `epsilon` (MKOR has no
+//! Tikhonov damping; the norm-based stabilizer plays that role), and
+//! `half` ∈ {`bf16`, `f16`, `none`} picks the rank-1 sync precision.
+//! See [`spec`] for the full key tables and error behavior.
 //!
 //! Every optimizer implements [`Optimizer`] against the Rust-native model
-//! captures; phase timings ("factor" / "precond" / "update") feed the
-//! Figure 3/4a breakdowns, and the `state_bytes`/`sync_bytes` accounting
-//! feeds Tables 1 and 6.
+//! captures and reports the spec it was built from via
+//! [`Optimizer::spec`]; phase timings ("factor" / "precond" / "update")
+//! feed the Figure 3/4a breakdowns, and the `state_bytes`/`sync_bytes`
+//! accounting feeds Tables 1 and 6.
 
 pub mod eva;
 pub mod first_order;
@@ -23,6 +37,7 @@ pub mod mkor;
 pub mod rescale;
 pub mod schedule;
 pub mod sngd;
+pub mod spec;
 pub mod stabilizer;
 
 use crate::model::{Capture, Dense};
@@ -30,6 +45,7 @@ use crate::util::timer::PhaseTimer;
 
 pub use hybrid::MkorH;
 pub use mkor::{Mkor, MkorConfig};
+pub use spec::{OptimizerSpec, SpecError};
 
 /// Common optimizer interface for the convergence/benchmark harnesses.
 ///
@@ -54,6 +70,16 @@ pub trait Optimizer {
     /// The step counter (number of `step` calls so far).
     fn steps_done(&self) -> usize;
 
+    /// The full hyperparameter set this optimizer was built with, as a
+    /// typed [`OptimizerSpec`] — `spec().canonical()` re-parses to an
+    /// identical configuration, which is how run records stay reproducible.
+    ///
+    /// One exception: `MkorConfig::second_order_layers` (a programmatic
+    /// per-layer mask with no grammar key) is not encoded by `canonical()`;
+    /// a masked MKOR's recorded spec reproduces the run with every layer
+    /// second-order. See the [`spec`] module docs.
+    fn spec(&self) -> OptimizerSpec;
+
     /// Feed the post-step training loss. Default no-op; MKOR-H uses this
     /// to drive its loss-decrease-rate switching rule (§3.2).
     fn observe_loss(&mut self, _loss: f64) {}
@@ -67,28 +93,22 @@ pub enum Backend {
     Lamb,
 }
 
-/// Construct any optimizer in the suite by CLI name, with per-optimizer
-/// defaults matching the paper's setup (§8.9): MKOR f=10, KAISA f=50
-/// (BERT) — callers override via the returned concrete types if needed.
+/// Construct any optimizer in the suite by CLI name with default
+/// hyperparameters.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `OptimizerSpec::parse(name)?.build(shapes)` — the spec \
+            grammar also accepts hyperparameter overrides"
+)]
 pub fn by_name(
     name: &str,
     shapes: &[crate::model::LayerShape],
 ) -> Option<Box<dyn Optimizer + Send>> {
-    let opt: Box<dyn Optimizer + Send> = match name {
-        "mkor" => Box::new(Mkor::new(shapes, MkorConfig::default())),
-        "mkor-h" => Box::new(MkorH::new(shapes, MkorConfig::default(), hybrid::SwitchConfig::default())),
-        "kfac" | "kaisa" => Box::new(kfac::Kfac::new(shapes, kfac::KfacConfig::default())),
-        "sngd" | "hylo" => Box::new(sngd::Sngd::new(shapes, sngd::SngdConfig::default())),
-        "eva" => Box::new(eva::Eva::new(shapes, eva::EvaConfig::default())),
-        "sgd" => Box::new(first_order::SgdMomentum::new(shapes, 0.9)),
-        "adam" => Box::new(first_order::Adam::new(shapes, first_order::AdamConfig::default())),
-        "lamb" => Box::new(first_order::Lamb::new(shapes, first_order::AdamConfig::default())),
-        _ => return None,
-    };
-    Some(opt)
+    OptimizerSpec::parse(name).ok().map(|s| s.build(shapes))
 }
 
-/// Names accepted by [`by_name`] (stable order for reports).
+/// Canonical names accepted by [`OptimizerSpec::parse`] (stable order for
+/// reports).
 pub const ALL_OPTIMIZERS: &[&str] =
     &["sgd", "adam", "lamb", "kfac", "sngd", "eva", "mkor", "mkor-h"];
 
@@ -101,9 +121,24 @@ mod tests {
     fn registry_constructs_all() {
         let shapes = [LayerShape::new(8, 4), LayerShape::new(4, 2)];
         for name in ALL_OPTIMIZERS {
-            let o = by_name(name, &shapes).unwrap_or_else(|| panic!("{name}"));
+            let o = OptimizerSpec::parse(name)
+                .unwrap_or_else(|e| panic!("{name}: {e}"))
+                .build(&shapes);
             assert_eq!(o.steps_done(), 0);
         }
+        assert!(OptimizerSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn by_name_shim_still_works() {
+        let shapes = [LayerShape::new(8, 4)];
+        for name in ALL_OPTIMIZERS {
+            assert!(by_name(name, &shapes).is_some(), "{name}");
+        }
+        // The aliases by_name historically accepted still resolve.
+        assert!(by_name("kaisa", &shapes).is_some());
+        assert!(by_name("hylo", &shapes).is_some());
         assert!(by_name("bogus", &shapes).is_none());
     }
 }

@@ -12,11 +12,11 @@ use crate::linalg::inverse::invert;
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::SgdMomentum;
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
 
 /// SNGD hyperparameters.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SngdConfig {
     /// Kernel refresh period.
     pub inv_freq: usize,
@@ -191,6 +191,10 @@ impl Optimizer for Sngd {
 
     fn steps_done(&self) -> usize {
         self.t
+    }
+
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Sngd(self.cfg)
     }
 }
 

@@ -1,0 +1,792 @@
+//! Typed, serializable optimizer specifications — the one construction API
+//! for the whole suite.
+//!
+//! An [`OptimizerSpec`] carries an optimizer's *full* hyperparameter set as
+//! plain data. It parses from the CLI grammar
+//!
+//! ```text
+//! name[:key=val,...]
+//! ```
+//!
+//! (e.g. `mkor:f=10,damping=3e-2,backend=lamb`), prints back to a canonical
+//! string via [`OptimizerSpec::canonical`] (only non-default keys, fixed key
+//! order, so `parse(canonical(spec)) == spec`), serializes to JSON via
+//! [`OptimizerSpec::to_json`] so run records capture the exact configuration
+//! that produced every figure/table, and builds the boxed optimizer with
+//! [`OptimizerSpec::build`].
+//!
+//! Every [`Optimizer`] also reports the spec it was built from via
+//! [`Optimizer::spec`], closing the loop: a run record's spec string can be
+//! re-parsed to reproduce the run.
+//!
+//! The per-optimizer key tables (canonical key first, aliases after) live in
+//! the `KEYS_*` constants below and are printed verbatim in [`SpecError`]
+//! messages; the module-level table in [`crate::optim`] documents one
+//! example string per optimizer.
+//!
+//! One deliberate gap: `MkorConfig::second_order_layers` (a per-layer bool
+//! mask) is programmatic-only — it has no grammar key, and `canonical()`
+//! does not encode it. Specs built from strings always treat every layer as
+//! second-order.
+
+use crate::linalg::half::HalfKind;
+use crate::model::LayerShape;
+use crate::optim::eva::{Eva, EvaConfig};
+use crate::optim::first_order::{Adam, AdamConfig, Lamb, SgdMomentum};
+use crate::optim::hybrid::{MkorH, SwitchConfig};
+use crate::optim::kfac::{Kfac, KfacConfig};
+use crate::optim::mkor::{Mkor, MkorConfig};
+use crate::optim::sngd::{Sngd, SngdConfig};
+use crate::optim::{Backend, Optimizer, ALL_OPTIMIZERS};
+use crate::util::json::Json;
+use std::fmt;
+
+/// Why an optimizer spec string failed to parse.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// The optimizer name itself is unknown.
+    UnknownOptimizer { name: String },
+    /// A `key=val` pair named a key the optimizer doesn't have.
+    UnknownKey {
+        optimizer: &'static str,
+        key: String,
+        valid: &'static [&'static str],
+    },
+    /// A key's value failed to parse as the expected type.
+    BadValue {
+        key: String,
+        value: String,
+        expected: &'static str,
+    },
+    /// A comma-separated part was not of the form `key=val`.
+    Malformed { part: String },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::UnknownOptimizer { name } => write!(
+                f,
+                "unknown optimizer `{name}`; valid optimizers: {}",
+                ALL_OPTIMIZERS.join(", ")
+            ),
+            SpecError::UnknownKey { optimizer, key, valid } => write!(
+                f,
+                "unknown key `{key}` for optimizer `{optimizer}`; valid keys: {}",
+                valid.join(", ")
+            ),
+            SpecError::BadValue { key, value, expected } => write!(
+                f,
+                "bad value `{value}` for key `{key}`: expected {expected}"
+            ),
+            SpecError::Malformed { part } => write!(
+                f,
+                "malformed spec part `{part}`: expected `key=val` (grammar: name[:key=val,...])"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+/// Valid keys per optimizer (canonical key first, aliases after).
+pub const KEYS_SGD: &[&str] = &["momentum", "m"];
+pub const KEYS_ADAM: &[&str] = &["beta1", "beta2", "eps", "wd", "weight_decay"];
+pub const KEYS_KFAC: &[&str] =
+    &["f", "inv_freq", "gamma", "damping", "momentum", "cov_freq", "rescale"];
+pub const KEYS_SNGD: &[&str] = &["f", "inv_freq", "damping", "momentum"];
+pub const KEYS_EVA: &[&str] = &["damping", "beta", "momentum", "f", "update_freq"];
+pub const KEYS_MKOR: &[&str] = &[
+    "f", "inv_freq", "gamma", "backend", "momentum", "half", "epsilon", "damping", "zeta",
+];
+pub const KEYS_MKOR_H: &[&str] = &[
+    "f", "inv_freq", "gamma", "backend", "momentum", "half", "epsilon", "damping", "zeta",
+    "switch_ratio", "switch_beta", "min_steps",
+];
+
+/// A fully-specified optimizer configuration: the typed construction API.
+///
+/// Obtain one with [`OptimizerSpec::parse`] (CLI strings) or by constructing
+/// a variant directly; turn it into a live optimizer with
+/// [`OptimizerSpec::build`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizerSpec {
+    /// SGD with heavy-ball momentum.
+    Sgd { momentum: f32 },
+    /// Adam with the paper's BERT hyperparameters as defaults.
+    Adam(AdamConfig),
+    /// LAMB (Adam direction + per-layer trust ratio).
+    Lamb(AdamConfig),
+    /// KFAC in its KAISA-style distributed form.
+    Kfac(KfacConfig),
+    /// SNGD/HyLo batch-side SMW preconditioning.
+    Sngd(SngdConfig),
+    /// Eva rank-1 closed-form SMW.
+    Eva(EvaConfig),
+    /// MKOR (Algorithm 1).
+    Mkor(MkorConfig),
+    /// MKOR-H: MKOR + loss-rate switch to the first-order backend.
+    MkorH { mkor: MkorConfig, switch: SwitchConfig },
+}
+
+/// SGD's default momentum — the one spot it lives so parse/canonical/
+/// Default can never disagree (the other optimizers compare against their
+/// `Config::default()`s).
+pub const SGD_DEFAULT_MOMENTUM: f32 = 0.9;
+
+impl Default for OptimizerSpec {
+    fn default() -> Self {
+        OptimizerSpec::Sgd { momentum: SGD_DEFAULT_MOMENTUM }
+    }
+}
+
+fn f32_val(key: &str, val: &str) -> Result<f32, SpecError> {
+    val.parse::<f32>().map_err(|_| SpecError::BadValue {
+        key: key.to_string(),
+        value: val.to_string(),
+        expected: "a float",
+    })
+}
+
+fn f64_val(key: &str, val: &str) -> Result<f64, SpecError> {
+    val.parse::<f64>().map_err(|_| SpecError::BadValue {
+        key: key.to_string(),
+        value: val.to_string(),
+        expected: "a float",
+    })
+}
+
+fn usize_val(key: &str, val: &str) -> Result<usize, SpecError> {
+    match val.parse::<usize>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => Err(SpecError::BadValue {
+            key: key.to_string(),
+            value: val.to_string(),
+            expected: "a positive integer",
+        }),
+    }
+}
+
+fn bool_val(key: &str, val: &str) -> Result<bool, SpecError> {
+    match val {
+        "true" | "1" | "yes" | "on" => Ok(true),
+        "false" | "0" | "no" | "off" => Ok(false),
+        _ => Err(SpecError::BadValue {
+            key: key.to_string(),
+            value: val.to_string(),
+            expected: "a boolean (true/false/1/0/yes/no/on/off)",
+        }),
+    }
+}
+
+fn backend_val(key: &str, val: &str) -> Result<Backend, SpecError> {
+    match val {
+        "sgd" => Ok(Backend::SgdMomentum),
+        "adam" => Ok(Backend::Adam),
+        "lamb" => Ok(Backend::Lamb),
+        _ => Err(SpecError::BadValue {
+            key: key.to_string(),
+            value: val.to_string(),
+            expected: "one of sgd, adam, lamb",
+        }),
+    }
+}
+
+fn half_val(key: &str, val: &str) -> Result<Option<HalfKind>, SpecError> {
+    match val {
+        "none" | "fp32" => Ok(None),
+        "bf16" => Ok(Some(HalfKind::Bf16)),
+        "f16" | "fp16" => Ok(Some(HalfKind::F16)),
+        _ => Err(SpecError::BadValue {
+            key: key.to_string(),
+            value: val.to_string(),
+            expected: "one of bf16, f16, none",
+        }),
+    }
+}
+
+fn backend_str(b: Backend) -> &'static str {
+    match b {
+        Backend::SgdMomentum => "sgd",
+        Backend::Adam => "adam",
+        Backend::Lamb => "lamb",
+    }
+}
+
+fn half_str(h: Option<HalfKind>) -> &'static str {
+    match h {
+        None => "none",
+        Some(HalfKind::Bf16) => "bf16",
+        Some(HalfKind::F16) => "f16",
+    }
+}
+
+/// Apply one `key=val` pair to an `AdamConfig` (shared by adam / lamb).
+fn apply_adam_key(
+    c: &mut AdamConfig,
+    optimizer: &'static str,
+    key: &str,
+    val: &str,
+) -> Result<(), SpecError> {
+    match key {
+        "beta1" => c.beta1 = f32_val(key, val)?,
+        "beta2" => c.beta2 = f32_val(key, val)?,
+        "eps" => c.eps = f32_val(key, val)?,
+        "wd" | "weight_decay" => c.weight_decay = f32_val(key, val)?,
+        _ => {
+            return Err(SpecError::UnknownKey {
+                optimizer,
+                key: key.to_string(),
+                valid: KEYS_ADAM,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Apply one `key=val` pair to an `MkorConfig` (shared by mkor / mkor-h).
+/// Returns `Ok(false)` when the key isn't an MKOR key so mkor-h can try its
+/// switch-rule keys next.
+fn apply_mkor_key(cfg: &mut MkorConfig, key: &str, val: &str) -> Result<bool, SpecError> {
+    match key {
+        "f" | "inv_freq" => cfg.inv_freq = usize_val(key, val)?,
+        "gamma" => cfg.gamma = f32_val(key, val)?,
+        "backend" => cfg.backend = backend_val(key, val)?,
+        "momentum" => cfg.momentum = f32_val(key, val)?,
+        "half" => cfg.half_sync = half_val(key, val)?,
+        // MKOR has no Tikhonov damping — the norm-based stabilizer threshold
+        // ε plays that regularization role, so `damping` aliases it.
+        "epsilon" | "damping" => cfg.stabilizer.epsilon = f64_val(key, val)?,
+        "zeta" => cfg.stabilizer.zeta = f32_val(key, val)?,
+        _ => return Ok(false),
+    }
+    Ok(true)
+}
+
+/// Push `key=val` onto the canonical pair list.
+fn kv(pairs: &mut Vec<String>, key: &str, val: impl fmt::Display) {
+    pairs.push(format!("{key}={val}"));
+}
+
+/// Canonical pairs for an `MkorConfig` (non-default fields, fixed order).
+fn mkor_pairs(c: &MkorConfig, pairs: &mut Vec<String>) {
+    let d = MkorConfig::default();
+    if c.inv_freq != d.inv_freq {
+        kv(pairs, "f", c.inv_freq);
+    }
+    if c.gamma != d.gamma {
+        kv(pairs, "gamma", c.gamma);
+    }
+    if c.backend != d.backend {
+        kv(pairs, "backend", backend_str(c.backend));
+    }
+    if c.momentum != d.momentum {
+        kv(pairs, "momentum", c.momentum);
+    }
+    if c.half_sync != d.half_sync {
+        kv(pairs, "half", half_str(c.half_sync));
+    }
+    if c.stabilizer.epsilon != d.stabilizer.epsilon {
+        kv(pairs, "epsilon", c.stabilizer.epsilon);
+    }
+    if c.stabilizer.zeta != d.stabilizer.zeta {
+        kv(pairs, "zeta", c.stabilizer.zeta);
+    }
+}
+
+/// JSON object for an `MkorConfig` (all fields).
+fn mkor_json(c: &MkorConfig) -> Json {
+    let mut p = Json::obj();
+    p.set("inv_freq", Json::Num(c.inv_freq as f64))
+        .set("gamma", Json::Num(c.gamma as f64))
+        .set("backend", Json::Str(backend_str(c.backend).into()))
+        .set("momentum", Json::Num(c.momentum as f64))
+        .set("half_sync", Json::Str(half_str(c.half_sync).into()))
+        .set("stabilizer_epsilon", Json::Num(c.stabilizer.epsilon))
+        .set("stabilizer_zeta", Json::Num(c.stabilizer.zeta as f64));
+    p
+}
+
+impl OptimizerSpec {
+    /// Parse `name[:key=val,...]`. The bare name yields the paper-default
+    /// configuration (§8.9); `kaisa` and `hylo` are accepted aliases for
+    /// `kfac` and `sngd`.
+    pub fn parse(s: &str) -> Result<OptimizerSpec, SpecError> {
+        let (name, rest) = match s.split_once(':') {
+            Some((n, r)) => (n.trim(), r.trim()),
+            None => (s.trim(), ""),
+        };
+        let mut spec = match name {
+            "sgd" => OptimizerSpec::Sgd { momentum: SGD_DEFAULT_MOMENTUM },
+            "adam" => OptimizerSpec::Adam(AdamConfig::default()),
+            "lamb" => OptimizerSpec::Lamb(AdamConfig::default()),
+            "kfac" | "kaisa" => OptimizerSpec::Kfac(KfacConfig::default()),
+            "sngd" | "hylo" => OptimizerSpec::Sngd(SngdConfig::default()),
+            "eva" => OptimizerSpec::Eva(EvaConfig::default()),
+            "mkor" => OptimizerSpec::Mkor(MkorConfig::default()),
+            "mkor-h" => OptimizerSpec::MkorH {
+                mkor: MkorConfig::default(),
+                switch: SwitchConfig::default(),
+            },
+            _ => {
+                return Err(SpecError::UnknownOptimizer { name: name.to_string() });
+            }
+        };
+        for part in rest.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let Some((key, val)) = part.split_once('=') else {
+                return Err(SpecError::Malformed { part: part.to_string() });
+            };
+            let (key, val) = (key.trim(), val.trim());
+            spec.apply_key(key, val)?;
+        }
+        Ok(spec)
+    }
+
+    /// Apply one `key=val` override to this spec.
+    fn apply_key(&mut self, key: &str, val: &str) -> Result<(), SpecError> {
+        let unknown = |optimizer, valid| SpecError::UnknownKey {
+            optimizer,
+            key: key.to_string(),
+            valid,
+        };
+        match self {
+            OptimizerSpec::Sgd { momentum } => match key {
+                "momentum" | "m" => *momentum = f32_val(key, val)?,
+                _ => return Err(unknown("sgd", KEYS_SGD)),
+            },
+            OptimizerSpec::Adam(c) => apply_adam_key(c, "adam", key, val)?,
+            OptimizerSpec::Lamb(c) => apply_adam_key(c, "lamb", key, val)?,
+            OptimizerSpec::Kfac(c) => match key {
+                "f" | "inv_freq" => c.inv_freq = usize_val(key, val)?,
+                "gamma" => c.gamma = f32_val(key, val)?,
+                "damping" => c.damping = f32_val(key, val)?,
+                "momentum" => c.momentum = f32_val(key, val)?,
+                "cov_freq" => c.cov_freq = usize_val(key, val)?,
+                "rescale" => c.rescale = bool_val(key, val)?,
+                _ => return Err(unknown("kfac", KEYS_KFAC)),
+            },
+            OptimizerSpec::Sngd(c) => match key {
+                "f" | "inv_freq" => c.inv_freq = usize_val(key, val)?,
+                "damping" => c.damping = f32_val(key, val)?,
+                "momentum" => c.momentum = f32_val(key, val)?,
+                _ => return Err(unknown("sngd", KEYS_SNGD)),
+            },
+            OptimizerSpec::Eva(c) => match key {
+                "damping" => c.damping = f32_val(key, val)?,
+                "beta" => c.beta = f32_val(key, val)?,
+                "momentum" => c.momentum = f32_val(key, val)?,
+                "f" | "update_freq" => c.update_freq = usize_val(key, val)?,
+                _ => return Err(unknown("eva", KEYS_EVA)),
+            },
+            OptimizerSpec::Mkor(c) => {
+                if !apply_mkor_key(c, key, val)? {
+                    return Err(unknown("mkor", KEYS_MKOR));
+                }
+            }
+            OptimizerSpec::MkorH { mkor, switch } => {
+                if !apply_mkor_key(mkor, key, val)? {
+                    match key {
+                        "switch_ratio" => switch.switch_ratio = f64_val(key, val)?,
+                        "switch_beta" => switch.beta = f64_val(key, val)?,
+                        "min_steps" => switch.min_steps = usize_val(key, val)?,
+                        _ => return Err(unknown("mkor-h", KEYS_MKOR_H)),
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The canonical optimizer name (first column of `ALL_OPTIMIZERS`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimizerSpec::Sgd { .. } => "sgd",
+            OptimizerSpec::Adam(_) => "adam",
+            OptimizerSpec::Lamb(_) => "lamb",
+            OptimizerSpec::Kfac(_) => "kfac",
+            OptimizerSpec::Sngd(_) => "sngd",
+            OptimizerSpec::Eva(_) => "eva",
+            OptimizerSpec::Mkor(_) => "mkor",
+            OptimizerSpec::MkorH { .. } => "mkor-h",
+        }
+    }
+
+    /// Canonical string form: `name` alone when every hyperparameter is at
+    /// its default, otherwise `name:key=val,...` with non-default keys in a
+    /// fixed order. Guaranteed to round-trip:
+    /// `parse(canonical(s)) == s` for any grammar-expressible spec.
+    pub fn canonical(&self) -> String {
+        let mut pairs: Vec<String> = Vec::new();
+        match self {
+            OptimizerSpec::Sgd { momentum } => {
+                if *momentum != SGD_DEFAULT_MOMENTUM {
+                    kv(&mut pairs, "momentum", momentum);
+                }
+            }
+            OptimizerSpec::Adam(c) | OptimizerSpec::Lamb(c) => {
+                let d = AdamConfig::default();
+                if c.beta1 != d.beta1 {
+                    kv(&mut pairs, "beta1", c.beta1);
+                }
+                if c.beta2 != d.beta2 {
+                    kv(&mut pairs, "beta2", c.beta2);
+                }
+                if c.eps != d.eps {
+                    kv(&mut pairs, "eps", c.eps);
+                }
+                if c.weight_decay != d.weight_decay {
+                    kv(&mut pairs, "wd", c.weight_decay);
+                }
+            }
+            OptimizerSpec::Kfac(c) => {
+                let d = KfacConfig::default();
+                if c.inv_freq != d.inv_freq {
+                    kv(&mut pairs, "f", c.inv_freq);
+                }
+                if c.gamma != d.gamma {
+                    kv(&mut pairs, "gamma", c.gamma);
+                }
+                if c.damping != d.damping {
+                    kv(&mut pairs, "damping", c.damping);
+                }
+                if c.momentum != d.momentum {
+                    kv(&mut pairs, "momentum", c.momentum);
+                }
+                if c.cov_freq != d.cov_freq {
+                    kv(&mut pairs, "cov_freq", c.cov_freq);
+                }
+                if c.rescale != d.rescale {
+                    kv(&mut pairs, "rescale", c.rescale);
+                }
+            }
+            OptimizerSpec::Sngd(c) => {
+                let d = SngdConfig::default();
+                if c.inv_freq != d.inv_freq {
+                    kv(&mut pairs, "f", c.inv_freq);
+                }
+                if c.damping != d.damping {
+                    kv(&mut pairs, "damping", c.damping);
+                }
+                if c.momentum != d.momentum {
+                    kv(&mut pairs, "momentum", c.momentum);
+                }
+            }
+            OptimizerSpec::Eva(c) => {
+                let d = EvaConfig::default();
+                if c.damping != d.damping {
+                    kv(&mut pairs, "damping", c.damping);
+                }
+                if c.beta != d.beta {
+                    kv(&mut pairs, "beta", c.beta);
+                }
+                if c.momentum != d.momentum {
+                    kv(&mut pairs, "momentum", c.momentum);
+                }
+                if c.update_freq != d.update_freq {
+                    kv(&mut pairs, "f", c.update_freq);
+                }
+            }
+            OptimizerSpec::Mkor(c) => mkor_pairs(c, &mut pairs),
+            OptimizerSpec::MkorH { mkor, switch } => {
+                mkor_pairs(mkor, &mut pairs);
+                let d = SwitchConfig::default();
+                if switch.switch_ratio != d.switch_ratio {
+                    kv(&mut pairs, "switch_ratio", switch.switch_ratio);
+                }
+                if switch.beta != d.beta {
+                    kv(&mut pairs, "switch_beta", switch.beta);
+                }
+                if switch.min_steps != d.min_steps {
+                    kv(&mut pairs, "min_steps", switch.min_steps);
+                }
+            }
+        }
+        if pairs.is_empty() {
+            self.name().to_string()
+        } else {
+            format!("{}:{}", self.name(), pairs.join(","))
+        }
+    }
+
+    /// JSON form: `{"name": ..., "spec": <canonical string>, "params":
+    /// {<every hyperparameter>}}` — written into `RunRecord` dumps so every
+    /// figure/table records the exact configuration that produced it.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", Json::Str(self.name().into()))
+            .set("spec", Json::Str(self.canonical()));
+        let mut p = Json::obj();
+        match self {
+            OptimizerSpec::Sgd { momentum } => {
+                p.set("momentum", Json::Num(*momentum as f64));
+            }
+            OptimizerSpec::Adam(c) | OptimizerSpec::Lamb(c) => {
+                p.set("beta1", Json::Num(c.beta1 as f64))
+                    .set("beta2", Json::Num(c.beta2 as f64))
+                    .set("eps", Json::Num(c.eps as f64))
+                    .set("weight_decay", Json::Num(c.weight_decay as f64));
+            }
+            OptimizerSpec::Kfac(c) => {
+                p.set("inv_freq", Json::Num(c.inv_freq as f64))
+                    .set("gamma", Json::Num(c.gamma as f64))
+                    .set("damping", Json::Num(c.damping as f64))
+                    .set("momentum", Json::Num(c.momentum as f64))
+                    .set("cov_freq", Json::Num(c.cov_freq as f64))
+                    .set("rescale", Json::Bool(c.rescale));
+            }
+            OptimizerSpec::Sngd(c) => {
+                p.set("inv_freq", Json::Num(c.inv_freq as f64))
+                    .set("damping", Json::Num(c.damping as f64))
+                    .set("momentum", Json::Num(c.momentum as f64));
+            }
+            OptimizerSpec::Eva(c) => {
+                p.set("damping", Json::Num(c.damping as f64))
+                    .set("beta", Json::Num(c.beta as f64))
+                    .set("momentum", Json::Num(c.momentum as f64))
+                    .set("update_freq", Json::Num(c.update_freq as f64));
+            }
+            OptimizerSpec::Mkor(c) => {
+                p = mkor_json(c);
+            }
+            OptimizerSpec::MkorH { mkor, switch } => {
+                p = mkor_json(mkor);
+                p.set("switch_ratio", Json::Num(switch.switch_ratio))
+                    .set("switch_beta", Json::Num(switch.beta))
+                    .set("min_steps", Json::Num(switch.min_steps as f64));
+            }
+        }
+        o.set("params", p);
+        o
+    }
+
+    /// Build the boxed optimizer this spec describes.
+    pub fn build(&self, shapes: &[LayerShape]) -> Box<dyn Optimizer + Send> {
+        match self {
+            OptimizerSpec::Sgd { momentum } => Box::new(SgdMomentum::new(shapes, *momentum)),
+            OptimizerSpec::Adam(c) => Box::new(Adam::new(shapes, *c)),
+            OptimizerSpec::Lamb(c) => Box::new(Lamb::new(shapes, *c)),
+            OptimizerSpec::Kfac(c) => Box::new(Kfac::new(shapes, *c)),
+            OptimizerSpec::Sngd(c) => Box::new(Sngd::new(shapes, *c)),
+            OptimizerSpec::Eva(c) => Box::new(Eva::new(shapes, *c)),
+            OptimizerSpec::Mkor(c) => Box::new(Mkor::new(shapes, c.clone())),
+            OptimizerSpec::MkorH { mkor, switch } => {
+                Box::new(MkorH::new(shapes, mkor.clone(), *switch))
+            }
+        }
+    }
+
+    /// Override the second-order refresh period (MKOR/MKOR-H factor period,
+    /// KFAC inversion period, SNGD kernel period, Eva vector period).
+    /// No-op for first-order optimizers — the knob they don't have.
+    pub fn with_inv_freq(mut self, f: usize) -> Self {
+        match &mut self {
+            OptimizerSpec::Mkor(c) => c.inv_freq = f,
+            OptimizerSpec::MkorH { mkor, .. } => mkor.inv_freq = f,
+            OptimizerSpec::Kfac(c) => c.inv_freq = f,
+            OptimizerSpec::Sngd(c) => c.inv_freq = f,
+            OptimizerSpec::Eva(c) => c.update_freq = f,
+            _ => {}
+        }
+        self
+    }
+
+    /// Override MKOR's factor-recurrence momentum γ (Equations 5/6).
+    /// Applies to MKOR and MKOR-H only — other optimizers' EMA momenta are
+    /// distinct knobs with their own grammar keys.
+    pub fn with_gamma(mut self, gamma: f32) -> Self {
+        match &mut self {
+            OptimizerSpec::Mkor(c) => c.gamma = gamma,
+            OptimizerSpec::MkorH { mkor, .. } => mkor.gamma = gamma,
+            _ => {}
+        }
+        self
+    }
+}
+
+impl fmt::Display for OptimizerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+impl std::str::FromStr for OptimizerSpec {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        OptimizerSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_names_parse_to_defaults() {
+        for name in ALL_OPTIMIZERS {
+            let spec = OptimizerSpec::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(spec.name(), *name);
+            assert_eq!(spec.canonical(), *name, "defaults must print bare");
+        }
+        assert_eq!(OptimizerSpec::parse("kaisa").unwrap().name(), "kfac");
+        assert_eq!(OptimizerSpec::parse("hylo").unwrap().name(), "sngd");
+    }
+
+    #[test]
+    fn keyed_parse_applies_overrides() {
+        let spec = OptimizerSpec::parse("mkor:f=25,gamma=0.95,backend=lamb,half=none").unwrap();
+        let OptimizerSpec::Mkor(c) = &spec else { panic!("wrong variant") };
+        assert_eq!(c.inv_freq, 25);
+        assert_eq!(c.gamma, 0.95);
+        assert_eq!(c.backend, Backend::Lamb);
+        assert_eq!(c.half_sync, None);
+
+        let spec = OptimizerSpec::parse("kfac:f=5,damping=3e-2,rescale=false").unwrap();
+        let OptimizerSpec::Kfac(c) = &spec else { panic!("wrong variant") };
+        assert_eq!(c.inv_freq, 5);
+        assert!((c.damping - 0.03).abs() < 1e-9);
+        assert!(!c.rescale);
+    }
+
+    #[test]
+    fn mkor_damping_aliases_stabilizer_epsilon() {
+        let spec = OptimizerSpec::parse("mkor:damping=50").unwrap();
+        let OptimizerSpec::Mkor(c) = &spec else { panic!() };
+        assert_eq!(c.stabilizer.epsilon, 50.0);
+    }
+
+    #[test]
+    fn roundtrip_nondefault_specs_for_every_optimizer() {
+        // parse(canonical(spec)) == spec with non-default hyperparameters.
+        let inputs = [
+            "sgd:momentum=0.75",
+            "adam:beta1=0.8,beta2=0.99,eps=1e-8,wd=0.01",
+            "lamb:beta1=0.85,wd=0.1",
+            "kfac:f=7,gamma=0.9,damping=0.003,momentum=0.8,cov_freq=2,rescale=false",
+            "sngd:f=3,damping=0.5,momentum=0.95",
+            "eva:damping=0.01,beta=0.9,momentum=0.85,f=4",
+            "mkor:f=25,gamma=0.9,backend=adam,momentum=0.8,half=f16,epsilon=50,zeta=0.25",
+            "mkor-h:f=15,backend=lamb,switch_ratio=0.2,switch_beta=0.9,min_steps=20",
+        ];
+        for s in inputs {
+            let spec = OptimizerSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            let canon = spec.canonical();
+            let re = OptimizerSpec::parse(&canon)
+                .unwrap_or_else(|e| panic!("reparse `{canon}`: {e}"));
+            assert_eq!(re, spec, "round-trip failed for `{s}` via `{canon}`");
+        }
+    }
+
+    #[test]
+    fn roundtrip_pseudorandom_sweep() {
+        // Proptest-style: a seeded LCG drives value choices for every
+        // optimizer; each sampled spec must round-trip through canonical().
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u32
+        };
+        for _ in 0..50 {
+            let f = 1 + next() % 100;
+            let gamma = 0.5 + (next() % 49) as f32 / 100.0;
+            let damping = (1 + next() % 99) as f32 / 100.0;
+            let momentum = (next() % 100) as f32 / 100.0;
+            let inputs = [
+                format!("sgd:momentum={momentum}"),
+                format!("adam:beta1={gamma},wd={damping}"),
+                format!("lamb:beta2={gamma},eps={damping}"),
+                format!("kfac:f={f},gamma={gamma},damping={damping}"),
+                format!("sngd:f={f},damping={damping},momentum={momentum}"),
+                format!("eva:f={f},damping={damping},beta={gamma}"),
+                format!("mkor:f={f},gamma={gamma},zeta={damping}"),
+                format!("mkor-h:f={f},gamma={gamma},switch_ratio={damping}"),
+            ];
+            for s in &inputs {
+                let spec = OptimizerSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+                let re = OptimizerSpec::parse(&spec.canonical()).unwrap();
+                assert_eq!(re, spec, "round-trip failed for `{s}`");
+            }
+        }
+    }
+
+    #[test]
+    fn errors_are_actionable() {
+        let e = OptimizerSpec::parse("bogus").unwrap_err();
+        let msg = e.to_string();
+        for name in ALL_OPTIMIZERS {
+            assert!(msg.contains(name), "`{msg}` should list `{name}`");
+        }
+
+        let e = OptimizerSpec::parse("mkor:nope=1").unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("nope"));
+        for key in ["f", "gamma", "backend", "half", "zeta"] {
+            assert!(msg.contains(key), "`{msg}` should list key `{key}`");
+        }
+
+        let e = OptimizerSpec::parse("mkor:f=abc").unwrap_err();
+        assert!(e.to_string().contains("abc"));
+
+        let e = OptimizerSpec::parse("mkor:f").unwrap_err();
+        assert!(e.to_string().contains("key=val"));
+    }
+
+    #[test]
+    fn build_honors_inv_freq_override_via_is_factor_step() {
+        // `mkor:f=25` must actually factor every 25 steps (concrete-type
+        // check; the trait-level cadence check lives in tests/spec_roundtrip).
+        let spec = OptimizerSpec::parse("mkor:f=25").unwrap();
+        let OptimizerSpec::Mkor(cfg) = &spec else { panic!() };
+        let shapes = [LayerShape::new(4, 4)];
+        let opt = Mkor::new(&shapes, cfg.clone());
+        assert!(opt.is_factor_step(0));
+        assert!(!opt.is_factor_step(24));
+        assert!(opt.is_factor_step(25));
+        assert!(!opt.is_factor_step(26));
+        assert!(opt.is_factor_step(50));
+    }
+
+    #[test]
+    fn built_optimizers_report_their_spec() {
+        let shapes = [LayerShape::new(6, 4), LayerShape::new(4, 2)];
+        for s in [
+            "sgd", "adam", "lamb", "kfac:f=5", "sngd:damping=0.5", "eva",
+            "mkor:f=25,backend=lamb", "mkor-h:switch_ratio=0.3",
+        ] {
+            let spec = OptimizerSpec::parse(s).unwrap();
+            let opt = spec.build(&shapes);
+            assert_eq!(opt.spec(), spec, "spec() introspection for `{s}`");
+            assert_eq!(opt.steps_done(), 0);
+        }
+    }
+
+    #[test]
+    fn json_carries_canonical_spec_and_params() {
+        let spec = OptimizerSpec::parse("mkor:f=25,backend=lamb").unwrap();
+        let j = spec.to_json();
+        assert_eq!(j.require_str("name").unwrap(), "mkor");
+        assert_eq!(j.require_str("spec").unwrap(), "mkor:f=25,backend=lamb");
+        let params = j.get("params").unwrap();
+        assert_eq!(params.get("inv_freq").unwrap().as_usize(), Some(25));
+        assert_eq!(params.get("backend").unwrap().as_str(), Some("lamb"));
+        // What we print re-parses to the same spec.
+        let re = OptimizerSpec::parse(j.require_str("spec").unwrap()).unwrap();
+        assert_eq!(re, spec);
+    }
+
+    #[test]
+    fn override_helpers_match_grammar_semantics() {
+        let s = OptimizerSpec::parse("mkor").unwrap().with_inv_freq(25).with_gamma(0.9);
+        assert_eq!(s, OptimizerSpec::parse("mkor:f=25,gamma=0.9").unwrap());
+        // with_gamma is MKOR-only; kfac's EMA gamma is untouched.
+        let k = OptimizerSpec::parse("kfac").unwrap().with_gamma(0.5);
+        assert_eq!(k, OptimizerSpec::parse("kfac").unwrap());
+        // with_inv_freq is a no-op for first-order optimizers.
+        let a = OptimizerSpec::parse("adam").unwrap().with_inv_freq(3);
+        assert_eq!(a, OptimizerSpec::parse("adam").unwrap());
+    }
+}

@@ -11,7 +11,7 @@
 use crate::linalg::Matrix;
 
 /// Stabilizer configuration.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StabilizerConfig {
     /// Threshold ε on ‖J⁻¹‖∞ above which blending triggers.
     pub epsilon: f64,

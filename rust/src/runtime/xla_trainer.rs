@@ -18,6 +18,9 @@
 use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
 use crate::coordinator::metrics::{RunRecord, StepRecord};
 use crate::data::text::TokenBatch;
+use crate::linalg::half::HalfKind;
+use crate::optim::hybrid::SwitchConfig;
+use crate::optim::{MkorConfig, OptimizerSpec};
 use crate::runtime::artifact::{literal_f32, literal_i32, literal_scalar, ArtifactBundle};
 use crate::util::stats::Ema;
 use anyhow::{Context, Result};
@@ -52,6 +55,30 @@ impl Default for XlaTrainerConfig {
             hybrid_switch_ratio: None,
             stabilizer_epsilon: 100.0,
             stabilizer_zeta: 0.5,
+        }
+    }
+}
+
+impl XlaTrainerConfig {
+    /// The [`OptimizerSpec`] this configuration corresponds to — written
+    /// into the run record so XLA runs carry the same canonical spec string
+    /// as the Rust-native trainer's runs. (The artifact path executes its
+    /// optimizer state inline rather than through the registry.)
+    pub fn optimizer_spec(&self) -> OptimizerSpec {
+        let mut mkor = MkorConfig::default();
+        mkor.gamma = self.gamma;
+        mkor.inv_freq = self.inv_freq;
+        mkor.momentum = self.momentum;
+        mkor.half_sync = if self.half_sync { Some(HalfKind::Bf16) } else { None };
+        mkor.stabilizer.epsilon = self.stabilizer_epsilon;
+        mkor.stabilizer.zeta = self.stabilizer_zeta;
+        match self.hybrid_switch_ratio {
+            Some(ratio) => {
+                let mut switch = SwitchConfig::default();
+                switch.switch_ratio = ratio;
+                OptimizerSpec::MkorH { mkor, switch }
+            }
+            None => OptimizerSpec::Mkor(mkor),
         }
     }
 }
@@ -97,9 +124,11 @@ impl XlaTrainer {
             .iter()
             .map(|&(din, _)| identity_flat(din))
             .collect();
+        let spec = cfg.optimizer_spec();
         let record = RunRecord {
             name: format!("xla-{}", bundle.meta.preset),
-            optimizer: if cfg.hybrid_switch_ratio.is_some() { "mkor-h" } else { "mkor" }.into(),
+            optimizer: spec.name().into(),
+            spec: spec.canonical(),
             ..Default::default()
         };
         XlaTrainer {

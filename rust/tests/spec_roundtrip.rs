@@ -1,0 +1,118 @@
+//! Integration tests for the OptimizerSpec registry, through the public
+//! API only: parse/print round-trips for every optimizer, build() honoring
+//! overrides (observable via the sync cadence of the built optimizer), and
+//! spec introspection on boxed optimizers.
+
+use mkor::linalg::{ops, Matrix};
+use mkor::model::{Activation, Capture, Dense, LayerShape};
+use mkor::optim::{OptimizerSpec, ALL_OPTIMIZERS};
+use mkor::util::timer::PhaseTimer;
+use mkor::util::Rng;
+
+/// One non-default spec string per optimizer (every optimizer in
+/// `ALL_OPTIMIZERS` must appear).
+fn nondefault_specs() -> Vec<(&'static str, String)> {
+    ALL_OPTIMIZERS
+        .iter()
+        .map(|&name| {
+            let s = match name {
+                "sgd" => "sgd:momentum=0.8".to_string(),
+                "adam" => "adam:beta1=0.85,beta2=0.98,eps=1e-7,wd=0.01".to_string(),
+                "lamb" => "lamb:beta1=0.88,wd=0.05".to_string(),
+                "kfac" => "kfac:f=7,gamma=0.9,damping=0.003,cov_freq=2,rescale=false".to_string(),
+                "sngd" => "sngd:f=4,damping=0.6,momentum=0.85".to_string(),
+                "eva" => "eva:damping=0.02,beta=0.9,f=3".to_string(),
+                "mkor" => "mkor:f=25,gamma=0.9,backend=lamb,half=none,epsilon=64,zeta=0.25"
+                    .to_string(),
+                "mkor-h" => "mkor-h:f=15,switch_ratio=0.25,min_steps=30".to_string(),
+                other => panic!("nondefault_specs has no entry for `{other}`"),
+            };
+            (name, s)
+        })
+        .collect()
+}
+
+#[test]
+fn every_optimizer_round_trips_with_nondefault_hyperparameters() {
+    for (name, s) in nondefault_specs() {
+        let spec = OptimizerSpec::parse(&s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        assert_eq!(spec.name(), name);
+        let canon = spec.canonical();
+        assert_ne!(canon, name, "`{s}` must print its non-default keys");
+        let re = OptimizerSpec::parse(&canon).unwrap_or_else(|e| panic!("{canon}: {e}"));
+        assert_eq!(re, spec, "parse(print(spec)) != spec for `{s}` via `{canon}`");
+        // Display and canonical agree.
+        assert_eq!(format!("{spec}"), canon);
+    }
+}
+
+#[test]
+fn built_optimizers_expose_the_spec_that_built_them() {
+    let shapes = [LayerShape::new(8, 6), LayerShape::new(6, 3)];
+    for (_, s) in nondefault_specs() {
+        let spec = OptimizerSpec::parse(&s).unwrap();
+        let opt = spec.build(&shapes);
+        assert_eq!(opt.spec(), spec, "spec() introspection for `{s}`");
+        // The introspected spec's canonical string re-parses to the same
+        // configuration — the reproducibility contract of run records.
+        let re = OptimizerSpec::parse(&opt.spec().canonical()).unwrap();
+        assert_eq!(re, spec);
+    }
+}
+
+fn toy_capture(shape: LayerShape, b: usize, rng: &mut Rng) -> Capture {
+    let a = Matrix::randn(shape.d_in, b, 1.0, rng);
+    let g = Matrix::randn(shape.d_out, b, 1.0, rng);
+    let mut dw = ops::matmul_nt(&g, &a);
+    dw.scale(1.0 / b as f32);
+    let db = vec![0.0; shape.d_out];
+    Capture { a, g, dw, db }
+}
+
+#[test]
+fn build_honors_inv_freq_override() {
+    // `mkor:f=25` must actually factor every 25 steps: second-order sync
+    // bytes appear exactly at t = 0, 25, 50 over 51 steps.
+    let shapes = [LayerShape::new(6, 6)];
+    let spec = OptimizerSpec::parse("mkor:f=25").unwrap();
+    let mut opt = spec.build(&shapes);
+    let mut rng = Rng::new(5);
+    let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+    let cap = toy_capture(shapes[0], 8, &mut rng);
+    let mut timer = PhaseTimer::new();
+    let mut factor_steps = Vec::new();
+    for t in 0..51 {
+        opt.step(&mut layers, std::slice::from_ref(&cap), 0.001, &mut timer);
+        if opt.sync_bytes_last_step() > 0 {
+            factor_steps.push(t);
+        }
+    }
+    assert_eq!(factor_steps, vec![0, 25, 50]);
+}
+
+#[test]
+fn build_honors_half_sync_override() {
+    // `half=none` doubles the rank-1 sync payload vs the bf16 default.
+    let shapes = [LayerShape::new(64, 64)];
+    let mut rng = Rng::new(6);
+    let mut layers = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+    let cap = toy_capture(shapes[0], 4, &mut rng);
+    let mut timer = PhaseTimer::new();
+
+    let mut full = OptimizerSpec::parse("mkor:half=none").unwrap().build(&shapes);
+    full.step(&mut layers, std::slice::from_ref(&cap), 0.001, &mut timer);
+    let mut bf16 = OptimizerSpec::parse("mkor").unwrap().build(&shapes);
+    bf16.step(&mut layers, std::slice::from_ref(&cap), 0.001, &mut timer);
+    assert_eq!(full.sync_bytes_last_step(), (64 + 64) * 4);
+    assert_eq!(bf16.sync_bytes_last_step(), (64 + 64) * 2);
+}
+
+#[test]
+fn unknown_names_and_keys_report_valid_choices() {
+    let msg = OptimizerSpec::parse("newton").unwrap_err().to_string();
+    for name in ALL_OPTIMIZERS {
+        assert!(msg.contains(name), "`{msg}` should name `{name}`");
+    }
+    let msg = OptimizerSpec::parse("sngd:gamma=0.9").unwrap_err().to_string();
+    assert!(msg.contains("gamma") && msg.contains("damping"), "{msg}");
+}

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 verification gate (see ROADMAP.md), plus stricter extras:
+#   1. cargo build --release          — the library and the `mkor` binary
+#   2. cargo test -q                  — unit + integration tests
+#   3. cargo build --release --all-targets — benches/examples compile too
+#   4. cargo fmt --check              — soft by default (the seed tree
+#      predates rustfmt enforcement); set FMT=strict to make it fatal
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo build --release --all-targets (benches + examples) =="
+cargo build --release --all-targets
+
+echo "== cargo fmt --check =="
+if command -v rustfmt >/dev/null 2>&1; then
+    if ! cargo fmt --check; then
+        if [ "${FMT:-}" = "strict" ]; then
+            echo "formatting check failed (FMT=strict)" >&2
+            exit 1
+        fi
+        echo "warning: formatting differs from rustfmt (non-fatal; FMT=strict enforces)" >&2
+    fi
+else
+    echo "warning: rustfmt not installed; skipping format check" >&2
+fi
+
+echo "verify.sh: all gates passed"
