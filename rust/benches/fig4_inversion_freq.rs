@@ -4,19 +4,47 @@
 //!     measured on the autoencoder and modeled at BERT scale;
 //! (b) convergence (final loss after a fixed budget) vs f — fresher factors
 //!     should help, and only MKOR can afford f=1.
+//!
+//! The measured columns come from one sweep-engine run over spec strings
+//! (`mkor:f={...}` / `kfac:f={...}`); the modeled columns stay analytic.
+//! `fig4b_freq_sweep` adds the multi-seed version of panel (b).
 
 use mkor::bench_utils::{fmt_secs, Table};
 use mkor::collective::ClusterModel;
 use mkor::costmodel::complexity::OptimizerKind;
 use mkor::costmodel::timing::{amortized_step_time, DeviceModel};
-use mkor::experiments::convergence::{run_convergence, RunOpts, TaskKind};
+use mkor::experiments::convergence::{RunOpts, TaskKind};
 use mkor::model::specs;
+use mkor::sweep::{run_sweep, SweepGrid, SweepOptions};
 use std::path::Path;
+
+const FS: [usize; 5] = [1, 5, 10, 50, 100];
+const STEPS: usize = 200;
 
 fn main() {
     println!("=== Figure 4: inversion-frequency sensitivity ===\n");
-    let fs = [1usize, 5, 10, 50, 100];
-    let steps = 200usize;
+    // One sweep, two templates (grid order: all mkor cells, then all kfac);
+    // the brace lists derive from FS so the column join below cannot drift.
+    let fs_list = FS.map(|f| f.to_string()).join(",");
+    let sweep_specs = format!("mkor:gamma=0.9,f={{{fs_list}}};kfac:f={{{fs_list}}}");
+    let grid = SweepGrid::parse(&sweep_specs, &TaskKind::Autoencoder, 13).expect("sweep grammar");
+    assert_eq!(grid.len(), 2 * FS.len());
+    // Two jobs keep wall-clock contention low enough that the measured
+    // s/step columns stay meaningful while still halving the sweep time.
+    let opts = SweepOptions {
+        jobs: 2,
+        run: RunOpts {
+            lr: 0.05,
+            steps: STEPS,
+            eval_every: 0,
+            hidden: vec![128, 32, 128],
+            seed: 13,
+            ..Default::default()
+        },
+        verbose: false,
+    };
+    let report = run_sweep(&grid, &opts);
+    let (mkor_cells, kfac_cells) = report.cells.split_at(FS.len());
 
     let mut t = Table::new(&[
         "f",
@@ -30,28 +58,20 @@ fn main() {
     let spec = specs::bert_large();
     let dev = DeviceModel::a100();
     let cl = ClusterModel::polaris_a100();
-    for f in fs {
-        let opts = RunOpts {
-            lr: 0.05,
-            steps,
-            inv_freq: Some(f),
-            eval_every: 0,
-            hidden: vec![128, 32, 128],
-            seed: 13,
-            ..Default::default()
-        };
-        let rm = run_convergence(&TaskKind::Autoencoder, "mkor", &opts);
-        let rk = run_convergence(&TaskKind::Autoencoder, "kfac", &opts);
-        let mm = amortized_step_time(OptimizerKind::Mkor, &spec, 8, 64, &dev, &cl, f);
-        let mk = amortized_step_time(OptimizerKind::Kfac, &spec, 8, 64, &dev, &cl, f);
+    for (i, f) in FS.iter().enumerate() {
+        let (rm, rk) = (&mkor_cells[i], &kfac_cells[i]);
+        let steps_m = rm.steps_run().max(1) as f64;
+        let steps_k = rk.steps_run().max(1) as f64;
+        let mm = amortized_step_time(OptimizerKind::Mkor, &spec, 8, 64, &dev, &cl, *f);
+        let mk = amortized_step_time(OptimizerKind::Kfac, &spec, 8, 64, &dev, &cl, *f);
         t.row(&[
             f.to_string(),
-            fmt_secs(rm.step_secs),
-            fmt_secs(rk.step_secs),
+            fmt_secs(rm.wall_secs() / steps_m),
+            fmt_secs(rk.wall_secs() / steps_k),
             fmt_secs(mm.total()),
             fmt_secs(mk.total()),
-            format!("{:.5}", rm.final_loss()),
-            format!("{:.5}", rk.final_loss()),
+            format!("{:.5}", rm.final_loss().unwrap_or(f64::NAN)),
+            format!("{:.5}", rk.final_loss().unwrap_or(f64::NAN)),
         ]);
     }
     println!("{}", t.render());

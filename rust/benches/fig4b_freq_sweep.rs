@@ -1,0 +1,61 @@
+//! Figure 4b — convergence vs inversion frequency, with seed error bars.
+//!
+//! A pure sweep-engine wrapper: `mkor:f={...} x seed=0..3` against
+//! `kfac:f={...} x seed=0..3` on the paper's own Figure-4 workload (the
+//! denoising autoencoder), reporting mean ± std of the final loss per
+//! (optimizer, f) over seeds. Fresher factors (small f) should give
+//! equal-or-lower loss in the same budget — and only MKOR can afford f=1.
+
+use mkor::bench_utils::Table;
+use mkor::experiments::convergence::{RunOpts, TaskKind};
+use mkor::sweep::{run_sweep, CellResult, CellStatus, SweepGrid, SweepOptions};
+use mkor::util::stats;
+use std::path::Path;
+
+const FS: [usize; 6] = [1, 5, 10, 25, 50, 100];
+const SEEDS: usize = 3;
+
+fn mean_std(cells: &[CellResult]) -> String {
+    if cells.iter().any(|c| c.status != CellStatus::Ok) {
+        return "D".to_string(); // at least one seed diverged/panicked
+    }
+    let losses: Vec<f64> = cells.iter().filter_map(CellResult::final_loss).collect();
+    let s = stats::summarize(&losses);
+    format!("{:.5} ± {:.5}", s.mean, s.std)
+}
+
+fn main() {
+    println!("=== Figure 4b: final loss vs f (mean ± std over seeds) ===\n");
+    let specs = concat!(
+        "mkor:gamma=0.9,f={1,5,10,25,50,100} x seed=0..3;",
+        "kfac:f={1,5,10,25,50,100} x seed=0..3"
+    );
+    let grid = SweepGrid::parse(specs, &TaskKind::Autoencoder, 0).expect("sweep grammar");
+    assert_eq!(grid.len(), 2 * FS.len() * SEEDS);
+    let opts = SweepOptions {
+        jobs: std::thread::available_parallelism().map_or(1, |n| n.get()),
+        run: RunOpts {
+            lr: 0.05,
+            steps: 150,
+            eval_every: 0,
+            hidden: vec![128, 32, 128],
+            ..Default::default()
+        },
+        verbose: false,
+    };
+    let report = run_sweep(&grid, &opts);
+
+    // Grid order: seeds fastest, f next, template outermost.
+    let (mkor_cells, kfac_cells) = report.cells.split_at(FS.len() * SEEDS);
+    let mut t = Table::new(&["f", "MKOR final loss", "KAISA final loss"]);
+    for (i, f) in FS.iter().enumerate() {
+        let group = |cells: &[CellResult]| mean_std(&cells[i * SEEDS..(i + 1) * SEEDS]);
+        t.row(&[f.to_string(), group(mkor_cells), group(kfac_cells)]);
+    }
+    println!("{}", t.render());
+    let _ = report.save_csv(Path::new("results/fig4b_freq_sweep.csv"));
+    println!(
+        "shape to check (paper Fig. 4b): loss decreases (or holds) as f\n\
+         shrinks, seeds agree on the ordering, and MKOR tolerates f=1."
+    );
+}

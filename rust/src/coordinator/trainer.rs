@@ -519,6 +519,17 @@ mod tests {
     }
 
     #[test]
+    fn trainer_and_builder_are_send() {
+        // The sweep executor builds one Trainer per worker thread; this is
+        // the compile-time proof that every part (boxed optimizer and
+        // schedule included) can cross a thread boundary.
+        fn assert_send<T: Send>() {}
+        assert_send::<Trainer>();
+        assert_send::<TrainerBuilder>();
+        assert_send::<RunRecord>();
+    }
+
+    #[test]
     fn builder_records_canonical_spec() {
         let mut rng = Rng::new(8);
         let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);

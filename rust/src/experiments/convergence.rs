@@ -2,7 +2,7 @@
 //! record loss/metric trajectories — the measurement behind Tables 2/3/5
 //! and Figures 2/4b/6/11/12.
 
-use crate::coordinator::{Target, TrainerBuilder};
+use crate::coordinator::{RunRecord, Target, TrainerBuilder};
 use crate::data::classification::{Dataset, TaskConfig};
 use crate::data::images::{ImageConfig, ImageGen};
 use crate::data::text::{MlmBatchGen, TextConfig};
@@ -86,6 +86,9 @@ pub struct RunOpts {
     pub gamma: Option<f32>,
     /// Hidden widths of the proxy model.
     pub hidden: Vec<usize>,
+    /// Convergence target recorded into the run record (accuracy for
+    /// labeled tasks, loss for dense) — checked at each eval.
+    pub target_metric: Option<f64>,
 }
 
 impl Default for RunOpts {
@@ -100,6 +103,7 @@ impl Default for RunOpts {
             inv_freq: None,
             gamma: Some(0.9),
             hidden: vec![128, 64],
+            target_metric: None,
         }
     }
 }
@@ -151,6 +155,53 @@ fn resolve_spec(name: &str, inv_freq: Option<usize>, gamma: Option<f32>) -> Opti
 /// `RunOpts` `inv_freq`/`gamma` overrides are applied on top. Panics on an
 /// invalid spec (harness code; the CLI path reports errors instead).
 pub fn run_convergence(task: &TaskKind, opt_name: &str, opts: &RunOpts) -> ConvergenceResult {
+    let spec = resolve_spec(opt_name, opts.inv_freq, opts.gamma);
+    let (record, phase_secs, step_secs) = run_core(task, &spec, opt_name, opts);
+    let mut losses = record.loss_series();
+    if record.diverged {
+        // The trainer records the diverged step too; the trajectory result
+        // reports only the completed steps (Table 5's "D" cell semantics).
+        losses.pop();
+    }
+    ConvergenceResult {
+        optimizer: opt_name.to_string(),
+        losses,
+        evals: record
+            .steps
+            .iter()
+            .filter_map(|s| s.eval_metric.map(|m| (s.step, m)))
+            .collect(),
+        diverged: record.diverged,
+        step_secs,
+        phase_secs,
+        sync_bytes: record.steps.iter().map(|s| s.sync_comm_bytes).sum(),
+    }
+}
+
+/// Train a proxy model from a fully-typed spec and return the complete
+/// [`RunRecord`] — the sweep engine's per-cell entry point.
+///
+/// Unlike [`run_convergence`], the `RunOpts` `inv_freq`/`gamma` overrides
+/// are *not* layered on: the spec alone describes the optimizer, so the
+/// record's canonical spec string reproduces the run exactly.
+pub fn run_record(
+    task: &TaskKind,
+    spec: &OptimizerSpec,
+    run_name: &str,
+    opts: &RunOpts,
+) -> RunRecord {
+    run_core(task, spec, run_name, opts).0
+}
+
+/// Shared core: build the workload + trainer, run the step/eval loop, and
+/// return the record plus (factor, precond, update) phase seconds and the
+/// mean wall seconds per completed step.
+fn run_core(
+    task: &TaskKind,
+    spec: &OptimizerSpec,
+    run_name: &str,
+    opts: &RunOpts,
+) -> (RunRecord, (f64, f64, f64), f64) {
     let mut rng = Rng::new(opts.seed);
 
     // Workload-specific batch source + eval source + model dims.
@@ -203,13 +254,15 @@ pub fn run_convergence(task: &TaskKind, opt_name: &str, opts: &RunOpts) -> Conve
         _ => Activation::Relu,
     };
     let model = Mlp::new(&dims, act, &mut rng);
-    let spec = resolve_spec(opt_name, opts.inv_freq, opts.gamma);
-    let mut trainer = TrainerBuilder::new(model)
-        .optimizer(spec)
+    let mut builder = TrainerBuilder::new(model)
+        .optimizer(spec.clone())
         .constant_lr(opts.lr)
         .workers(opts.workers)
-        .run_name(opt_name)
-        .build();
+        .run_name(run_name);
+    if let Some(target) = opts.target_metric {
+        builder = builder.target_metric(target);
+    }
+    let mut trainer = builder.build();
 
     let mut next = |src: &mut Src, b: usize| -> (crate::linalg::Matrix, Target) {
         match src {
@@ -248,37 +301,27 @@ pub fn run_convergence(task: &TaskKind, opt_name: &str, opts: &RunOpts) -> Conve
         }
     };
 
-    let mut result = ConvergenceResult {
-        optimizer: opt_name.to_string(),
-        ..Default::default()
-    };
+    let mut ok_steps = 0usize;
     let t0 = std::time::Instant::now();
     for step in 0..opts.steps {
         let (x, target) = next(&mut src, opts.batch);
         match trainer.step(&x, &target) {
-            Some(loss) => result.losses.push(loss),
-            None => {
-                result.diverged = true;
-                break;
-            }
+            Some(_) => ok_steps += 1,
+            None => break,
         }
         if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
             if let Some((ex, et)) = &eval {
-                let (l, acc) = trainer.evaluate(ex, et);
-                result.evals.push((step, acc.unwrap_or(-l)));
+                trainer.evaluate(ex, et);
             }
         }
     }
-    let n = result.losses.len().max(1);
-    result.step_secs = t0.elapsed().as_secs_f64() / n as f64;
-    result.phase_secs = (
+    let step_secs = t0.elapsed().as_secs_f64() / ok_steps.max(1) as f64;
+    let phase_secs = (
         trainer.phases.total_secs("factor"),
         trainer.phases.total_secs("precond"),
         trainer.phases.total_secs("update"),
     );
-    let rec = trainer.finish();
-    result.sync_bytes = rec.steps.iter().map(|s| s.sync_comm_bytes).sum();
-    result
+    (trainer.finish(), phase_secs, step_secs)
 }
 
 #[cfg(test)]
@@ -330,6 +373,30 @@ mod tests {
             &RunOpts { steps: 100, lr: 1e6, hidden: vec![32], ..Default::default() },
         );
         assert!(r.diverged);
+    }
+
+    #[test]
+    fn run_record_returns_the_full_record() {
+        let spec = OptimizerSpec::parse("mkor:f=5,gamma=0.9").unwrap();
+        let opts = RunOpts {
+            steps: 30,
+            hidden: vec![32],
+            eval_every: 5,
+            target_metric: Some(0.5),
+            ..Default::default()
+        };
+        let rec = run_record(&TaskKind::Images, &spec, "cell-0", &opts);
+        assert_eq!(rec.name, "cell-0");
+        assert_eq!(rec.spec, "mkor:f=5,gamma=0.9");
+        assert_eq!(rec.steps.len(), 30);
+        assert!(rec.steps.iter().any(|s| s.eval_metric.is_some()));
+        // The RunOpts overrides are NOT layered onto run_record specs.
+        let re = OptimizerSpec::parse(&rec.spec).unwrap();
+        assert_eq!(re, spec);
+        // Convergence tracking against the target is wired through.
+        if let Some(at) = rec.converged_at {
+            assert!(at < 30);
+        }
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! * **L3 (this crate)** — the distributed-training coordinator: data-parallel
 //!   workers, ring all-reduce (fp32 + bf16-quantized rank-1 sync), the
 //!   inversion-frequency scheduler, the MKOR-H loss-rate switcher, the
-//!   norm-based stabilizer, metrics and the CLI.
+//!   norm-based stabilizer, metrics, the spec-driven sweep engine
+//!   ([`sweep`]) and the CLI.
 //! * **L2 (JAX, build time)** — transformer fwd/bwd and the fused `mkor_step`
 //!   optimizer graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (Pallas, build time)** — the Sherman–Morrison rank-1 inverse-update
@@ -33,6 +34,7 @@ pub mod linalg;
 pub mod model;
 pub mod optim;
 pub mod runtime;
+pub mod sweep;
 pub mod util;
 
 /// Crate version string reported by `mkor --version`.

@@ -8,9 +8,17 @@
 //!              `--hybrid`, `--out results/e2e.json`.
 //! * `sim`    — proxy-model training with any optimizer spec
 //!              (`--optimizer name[:key=val,...]`, e.g. `--optimizer
-//!              mkor:f=10,backend=lamb`; names: mkor|mkor-h|kfac|sngd|
-//!              eva|sgd|adam|lamb), `--task glue|images|autoencoder|text`,
-//!              `--steps`, `--workers`.
+//!              mkor:f=10,backend=lamb,backend.beta1=0.95`; names:
+//!              mkor|mkor-h|kfac|sngd|eva|sgd|adam|lamb), `--task
+//!              glue|images|autoencoder|text`, `--steps`, `--workers`,
+//!              `--eval-every`, `--target`, `--quantized`.
+//! * `sweep`  — fan a grid of specs out over a thread pool and merge the
+//!              results into one CSV/JSON artifact: `--specs
+//!              "mkor:f={1,10,100};lamb;kfac:damping={0.01,0.1}"`,
+//!              `--task`, `--steps`, `--jobs`, `--out sweep.csv`. Braced
+//!              keys cross-multiply; ` x seed=0..4` repeats per seed; `lr`
+//!              and `seed` are reserved harness axes (README has the full
+//!              grammar).
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 
@@ -21,10 +29,12 @@ use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
 use mkor::data::classification::{Dataset, TaskConfig};
 use mkor::data::images::{ImageConfig, ImageGen};
 use mkor::data::text::{MlmBatchGen, TextConfig};
+use mkor::experiments::convergence::RunOpts;
 use mkor::model::{specs, Activation, Mlp};
 use mkor::optim::OptimizerSpec;
 use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
 use mkor::runtime::ArtifactBundle;
+use mkor::sweep::{run_sweep, task_by_name, SweepGrid, SweepOptions};
 use mkor::util::Rng;
 use std::path::Path;
 
@@ -38,10 +48,11 @@ fn main() {
         }
         Some("specs") => cmd_specs(),
         Some("sim") => cmd_sim(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("train") => cmd_train(&args),
         _ => {
             eprintln!(
-                "usage: mkor <train|sim|specs|version> [--flags]\n\
+                "usage: mkor <train|sim|sweep|specs|version> [--flags]\n\
                  see README.md for details"
             );
             2
@@ -92,6 +103,10 @@ fn cmd_sim(args: &Args) -> i32 {
     let workers = args.usize_or("workers", 4);
     let lr = args.f32_or("lr", 0.1);
     let seed = args.u64_or("seed", 0);
+    // --target needs evals to be observed; default a cadence in when the
+    // user asks for a target but no explicit --eval-every.
+    let eval_default = if args.get("target").is_some() { 25 } else { 0 };
+    let eval_every = args.usize_or("eval-every", eval_default);
 
     let mut rng = Rng::new(seed);
     type BatchFn = Box<dyn FnMut() -> (mkor::linalg::Matrix, Target)>;
@@ -164,12 +179,25 @@ fn cmd_sim(args: &Args) -> i32 {
         }
     };
     println!("optimizer spec: {}", spec.canonical());
-    let mut trainer = TrainerBuilder::new(model)
+    let run_name = format!("sim-{task}-{}", spec.canonical());
+    let mut builder = TrainerBuilder::new(model)
         .optimizer(spec)
         .constant_lr(lr)
         .workers(workers)
-        .run_name(format!("sim-{task}-{opt_name}"))
-        .build();
+        .quantized_grads(args.flag("quantized"))
+        .run_name(run_name);
+    if let Some(t) = args.get("target") {
+        match t.parse::<f64>() {
+            Ok(target) => builder = builder.target_metric(target),
+            Err(_) => {
+                eprintln!("error: bad --target `{t}`: expected a number");
+                return 2;
+            }
+        }
+    }
+    let mut trainer = builder.build();
+    // Held-out eval batch (only drawn when evals are requested).
+    let eval_batch = if eval_every > 0 { Some(next_batch()) } else { None };
     for s in 0..steps {
         let (x, target) = next_batch();
         match trainer.step(&x, &target) {
@@ -181,6 +209,19 @@ fn cmd_sim(args: &Args) -> i32 {
             None => {
                 println!("DIVERGED at step {s}");
                 break;
+            }
+        }
+        if eval_every > 0 && (s + 1) % eval_every == 0 {
+            if let Some((ex, et)) = &eval_batch {
+                let (l, acc) = trainer.evaluate(ex, et);
+                match acc {
+                    Some(a) => println!("  eval acc {a:.4} (loss {l:.5})"),
+                    None => println!("  eval loss {l:.5}"),
+                }
+                if trainer.converged() {
+                    println!("reached target at step {s}");
+                    break;
+                }
             }
         }
     }
@@ -199,6 +240,113 @@ fn cmd_sim(args: &Args) -> i32 {
         println!("wrote {out}");
     }
     0
+}
+
+fn cmd_sweep(args: &Args) -> i32 {
+    let Some(specs) = args.get("specs") else {
+        eprintln!(
+            "usage: mkor sweep --specs \"mkor:f={{1,10,100}};lamb;kfac:damping={{0.01,0.1}}\" \
+             [--task glue|images|autoencoder|text] [--steps N] [--jobs J] [--lr LR] \
+             [--workers W] [--batch B] [--seed S] [--eval-every N] [--target M] \
+             [--hidden 96,48] [--out sweep.csv] [--json sweep.json] \
+             [--deterministic] [--quiet]"
+        );
+        return 2;
+    };
+    let task = match task_by_name(args.get_or("task", "glue")) {
+        Ok(task) => task,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let base_seed = args.u64_or("seed", 0);
+    let grid = match SweepGrid::parse(specs, &task, base_seed) {
+        Ok(grid) => grid,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+
+    let target_metric = match args.get("target") {
+        None => None,
+        Some(t) => match t.parse::<f64>() {
+            Ok(v) => Some(v),
+            Err(_) => {
+                eprintln!("error: bad --target `{t}`: expected a number");
+                return 2;
+            }
+        },
+    };
+    let mut run = RunOpts {
+        lr: args.f32_or("lr", 0.1),
+        steps: args.usize_or("steps", 300),
+        workers: args.usize_or("workers", 2),
+        batch: args.usize_or("batch", 64),
+        seed: base_seed,
+        eval_every: args.usize_or("eval-every", 10),
+        target_metric,
+        ..Default::default()
+    };
+    if let Some(h) = args.get("hidden") {
+        let widths: Result<Vec<usize>, _> =
+            h.split(',').map(|w| w.trim().parse::<usize>()).collect();
+        match widths {
+            Ok(hidden) => run.hidden = hidden,
+            Err(_) => {
+                eprintln!("error: bad --hidden `{h}`: expected widths like `96,48`");
+                return 2;
+            }
+        }
+    }
+    let default_jobs = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let opts = SweepOptions {
+        jobs: args.usize_or("jobs", default_jobs),
+        run,
+        verbose: !args.flag("quiet"),
+    };
+
+    println!(
+        "sweep: {} cells × {} steps on `{}`, {} jobs",
+        grid.len(),
+        opts.run.steps,
+        args.get_or("task", "glue"),
+        opts.jobs
+    );
+    let report = run_sweep(&grid, &opts);
+    println!("{}", report.render_table());
+    let (ok, diverged, panicked) = report.counts();
+    println!("{ok} ok, {diverged} diverged, {panicked} panicked");
+
+    // --deterministic drops the wall-clock columns so artifact bytes
+    // depend only on the grid and seeds, never on --jobs or machine load.
+    let det = args.flag("deterministic");
+    if let Some(out) = args.get("out") {
+        let path = Path::new(out);
+        let res = if out.ends_with(".json") {
+            report.save_json_with(path, det)
+        } else {
+            report.save_csv_with(path, det)
+        };
+        if let Err(e) = res {
+            eprintln!("saving {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    if let Some(out) = args.get("json") {
+        if let Err(e) = report.save_json_with(Path::new(out), det) {
+            eprintln!("saving {out}: {e}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
+    if panicked > 0 {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_train(args: &Args) -> i32 {

@@ -45,8 +45,13 @@ pub struct MkorConfig {
     pub half_sync: Option<HalfKind>,
     /// First-order backend for line 14.
     pub backend: Backend,
-    /// Backend momentum (SGD) / Adam betas come from AdamConfig::default.
+    /// Backend momentum (SGD backend only; `backend.momentum` in the
+    /// grammar aliases this key).
     pub momentum: f32,
+    /// Adam/LAMB backend hyperparameters (`backend.beta1`, `backend.beta2`,
+    /// `backend.eps`, `backend.wd` in the grammar); ignored by the SGD
+    /// backend, which only has `momentum`.
+    pub backend_cfg: AdamConfig,
     /// Layers to treat second-order; `None` = all.
     pub second_order_layers: Option<Vec<bool>>,
 }
@@ -60,6 +65,7 @@ impl Default for MkorConfig {
             half_sync: Some(HalfKind::Bf16),
             backend: Backend::SgdMomentum,
             momentum: 0.9,
+            backend_cfg: AdamConfig::default(),
             second_order_layers: None,
         }
     }
@@ -110,8 +116,8 @@ impl Mkor {
             .collect();
         let backend = match cfg.backend {
             Backend::SgdMomentum => BackendState::Sgd(SgdMomentum::new(shapes, cfg.momentum)),
-            Backend::Adam => BackendState::Adam(Adam::new(shapes, AdamConfig::default())),
-            Backend::Lamb => BackendState::Lamb(Lamb::new(shapes, AdamConfig::default())),
+            Backend::Adam => BackendState::Adam(Adam::new(shapes, cfg.backend_cfg)),
+            Backend::Lamb => BackendState::Lamb(Lamb::new(shapes, cfg.backend_cfg)),
         };
         Mkor {
             cfg,
@@ -506,5 +512,28 @@ mod tests {
             "mkor final {final_mkor} vs init {init}: insufficient decrease"
         );
         assert!(final_mkor.is_finite());
+    }
+
+    #[test]
+    fn backend_cfg_reaches_the_adam_backend() {
+        // Same capture, Adam backend with default eps vs eps=10: the huge
+        // eps shrinks the Adam step, so the resulting weights must differ.
+        let shapes = [LayerShape::new(6, 4)];
+        let mut rng = Rng::new(11);
+        let cap = toy_capture(shapes[0], 8, &mut rng);
+        let mut run = |eps: f32| {
+            let mut cfg = MkorConfig { backend: Backend::Adam, ..Default::default() };
+            cfg.backend_cfg.eps = eps;
+            let mut opt = Mkor::new(&shapes, cfg);
+            let mut rng = Rng::new(12);
+            let act = crate::model::Activation::Linear;
+            let mut layers = vec![Dense::init(shapes[0], act, &mut rng)];
+            let mut timer = PhaseTimer::new();
+            opt.step(&mut layers, std::slice::from_ref(&cap), 0.01, &mut timer);
+            layers[0].w.clone()
+        };
+        let w_default = run(AdamConfig::default().eps);
+        let w_blunt = run(10.0);
+        assert!(w_default.max_abs_diff(&w_blunt) > 1e-4);
     }
 }

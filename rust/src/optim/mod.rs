@@ -21,6 +21,9 @@
 //! `damping` aliases the stabilizer threshold `epsilon` (MKOR has no
 //! Tikhonov damping; the norm-based stabilizer plays that role), and
 //! `half` ∈ {`bf16`, `f16`, `none`} picks the rank-1 sync precision.
+//! Nested `backend.*` keys configure the line-14 first-order backend:
+//! `mkor:backend=adam,backend.beta1=0.95,backend.eps=1e-8,backend.wd=0.01`
+//! (and `backend.momentum` for the SGD backend, aliasing `momentum`).
 //! See [`spec`] for the full key tables and error behavior.
 //!
 //! Every optimizer implements [`Optimizer`] against the Rust-native model

@@ -98,10 +98,13 @@ pub const KEYS_SNGD: &[&str] = &["f", "inv_freq", "damping", "momentum"];
 pub const KEYS_EVA: &[&str] = &["damping", "beta", "momentum", "f", "update_freq"];
 pub const KEYS_MKOR: &[&str] = &[
     "f", "inv_freq", "gamma", "backend", "momentum", "half", "epsilon", "damping", "zeta",
+    "backend.beta1", "backend.beta2", "backend.eps", "backend.wd", "backend.weight_decay",
+    "backend.momentum",
 ];
 pub const KEYS_MKOR_H: &[&str] = &[
     "f", "inv_freq", "gamma", "backend", "momentum", "half", "epsilon", "damping", "zeta",
-    "switch_ratio", "switch_beta", "min_steps",
+    "backend.beta1", "backend.beta2", "backend.eps", "backend.wd", "backend.weight_decay",
+    "backend.momentum", "switch_ratio", "switch_beta", "min_steps",
 ];
 
 /// A fully-specified optimizer configuration: the typed construction API.
@@ -258,6 +261,14 @@ fn apply_mkor_key(cfg: &mut MkorConfig, key: &str, val: &str) -> Result<bool, Sp
         // ε plays that regularization role, so `damping` aliases it.
         "epsilon" | "damping" => cfg.stabilizer.epsilon = f64_val(key, val)?,
         "zeta" => cfg.stabilizer.zeta = f32_val(key, val)?,
+        // Nested keys configure the line-14 first-order backend.
+        "backend.beta1" => cfg.backend_cfg.beta1 = f32_val(key, val)?,
+        "backend.beta2" => cfg.backend_cfg.beta2 = f32_val(key, val)?,
+        "backend.eps" => cfg.backend_cfg.eps = f32_val(key, val)?,
+        "backend.wd" | "backend.weight_decay" => {
+            cfg.backend_cfg.weight_decay = f32_val(key, val)?
+        }
+        "backend.momentum" => cfg.momentum = f32_val(key, val)?,
         _ => return Ok(false),
     }
     Ok(true)
@@ -292,6 +303,18 @@ fn mkor_pairs(c: &MkorConfig, pairs: &mut Vec<String>) {
     if c.stabilizer.zeta != d.stabilizer.zeta {
         kv(pairs, "zeta", c.stabilizer.zeta);
     }
+    if c.backend_cfg.beta1 != d.backend_cfg.beta1 {
+        kv(pairs, "backend.beta1", c.backend_cfg.beta1);
+    }
+    if c.backend_cfg.beta2 != d.backend_cfg.beta2 {
+        kv(pairs, "backend.beta2", c.backend_cfg.beta2);
+    }
+    if c.backend_cfg.eps != d.backend_cfg.eps {
+        kv(pairs, "backend.eps", c.backend_cfg.eps);
+    }
+    if c.backend_cfg.weight_decay != d.backend_cfg.weight_decay {
+        kv(pairs, "backend.wd", c.backend_cfg.weight_decay);
+    }
 }
 
 /// JSON object for an `MkorConfig` (all fields).
@@ -303,7 +326,11 @@ fn mkor_json(c: &MkorConfig) -> Json {
         .set("momentum", Json::Num(c.momentum as f64))
         .set("half_sync", Json::Str(half_str(c.half_sync).into()))
         .set("stabilizer_epsilon", Json::Num(c.stabilizer.epsilon))
-        .set("stabilizer_zeta", Json::Num(c.stabilizer.zeta as f64));
+        .set("stabilizer_zeta", Json::Num(c.stabilizer.zeta as f64))
+        .set("backend_beta1", Json::Num(c.backend_cfg.beta1 as f64))
+        .set("backend_beta2", Json::Num(c.backend_cfg.beta2 as f64))
+        .set("backend_eps", Json::Num(c.backend_cfg.eps as f64))
+        .set("backend_wd", Json::Num(c.backend_cfg.weight_decay as f64));
     p
 }
 
@@ -657,6 +684,34 @@ mod tests {
         let spec = OptimizerSpec::parse("mkor:damping=50").unwrap();
         let OptimizerSpec::Mkor(c) = &spec else { panic!() };
         assert_eq!(c.stabilizer.epsilon, 50.0);
+    }
+
+    #[test]
+    fn nested_backend_keys_configure_the_backend() {
+        let s = "mkor:backend=adam,backend.beta1=0.95,backend.eps=1e-8,backend.wd=0.01";
+        let spec = OptimizerSpec::parse(s).unwrap();
+        let OptimizerSpec::Mkor(c) = &spec else { panic!("wrong variant") };
+        assert_eq!(c.backend, Backend::Adam);
+        assert_eq!(c.backend_cfg.beta1, 0.95);
+        assert_eq!(c.backend_cfg.eps, 1e-8);
+        assert_eq!(c.backend_cfg.weight_decay, 0.01);
+        // Canonical prints the nested keys and round-trips.
+        let canon = spec.canonical();
+        assert!(canon.contains("backend.beta1=0.95"), "{canon}");
+        assert_eq!(OptimizerSpec::parse(&canon).unwrap(), spec);
+        // `backend.momentum` aliases the SGD backend's momentum key.
+        let spec = OptimizerSpec::parse("mkor:backend.momentum=0.8").unwrap();
+        let OptimizerSpec::Mkor(c) = &spec else { panic!() };
+        assert_eq!(c.momentum, 0.8);
+        assert_eq!(spec.canonical(), "mkor:momentum=0.8");
+        // mkor-h accepts them too, alongside its switch keys.
+        let spec =
+            OptimizerSpec::parse("mkor-h:backend=lamb,backend.beta2=0.98,switch_ratio=0.2")
+                .unwrap();
+        assert_eq!(OptimizerSpec::parse(&spec.canonical()).unwrap(), spec);
+        // Unknown nested keys list the valid ones.
+        let e = OptimizerSpec::parse("mkor:backend.nope=1").unwrap_err();
+        assert!(e.to_string().contains("backend.beta1"), "{e}");
     }
 
     #[test]

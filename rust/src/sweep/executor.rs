@@ -1,0 +1,204 @@
+//! Bounded thread-pool fan-out with per-cell panic isolation.
+//!
+//! [`run_sweep`] fans a [`SweepGrid`]'s cells out across `jobs` worker
+//! threads (std threads + channels — no external dependencies). Every cell
+//! builds its own trainer via
+//! [`run_record`](crate::experiments::convergence::run_record), so a
+//! diverged or panicked cell becomes a failed [`CellResult`] instead of a
+//! dead sweep, and results are reassembled in grid order: because each
+//! cell seeds its own RNGs and shares no state, the merged report's
+//! results are identical for any `jobs` width.
+
+use crate::experiments::convergence::{run_record, RunOpts};
+use crate::sweep::grid::SweepGrid;
+use crate::sweep::report::{CellResult, SweepReport};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::thread;
+
+/// How a sweep runs: per-cell harness options plus the fan-out width.
+#[derive(Clone, Debug)]
+pub struct SweepOptions {
+    /// Worker threads for the fan-out (≥ 1; capped at the cell count).
+    pub jobs: usize,
+    /// Per-cell run options. `seed` — and `lr`, for cells carrying an `lr`
+    /// axis — is overridden per cell. The `inv_freq`/`gamma` override
+    /// fields are ignored: cells run through
+    /// [`run_record`](crate::experiments::convergence::run_record), which
+    /// is driven by the spec alone.
+    pub run: RunOpts,
+    /// Print one progress line per completed cell.
+    pub verbose: bool,
+}
+
+impl Default for SweepOptions {
+    fn default() -> Self {
+        SweepOptions {
+            jobs: 1,
+            run: RunOpts::default(),
+            verbose: true,
+        }
+    }
+}
+
+/// Extract a human-readable message from a panic payload.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
+}
+
+/// Run `f(i)` for every `i in 0..n` across at most `jobs` threads, with
+/// per-call panic isolation. Results come back ordered by index, no matter
+/// how the calls were scheduled; a panicked call yields `Err(message)`.
+pub fn fan_out<T, F>(n: usize, jobs: usize, f: F) -> Vec<Result<T, String>>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let jobs = jobs.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, Result<T, String>)>();
+    thread::scope(|scope| {
+        for _ in 0..jobs {
+            let tx = tx.clone();
+            let next = &next;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let run = catch_unwind(AssertUnwindSafe(|| f(i)));
+                let out = run.map_err(panic_message);
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<Result<T, String>>> = (0..n).map(|_| None).collect();
+        for (i, out) in rx {
+            slots[i] = Some(out);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("executor: worker dropped a cell"))
+            .collect()
+    })
+}
+
+/// Run every cell of `grid` and merge the results into a [`SweepReport`].
+///
+/// Cells are scheduled dynamically over `opts.jobs` threads; the report is
+/// always in grid order, with per-cell results independent of scheduling.
+pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepReport {
+    let n = grid.cells.len();
+    let done = AtomicUsize::new(0);
+    let results = fan_out(n, opts.jobs, |i| {
+        let cell = &grid.cells[i];
+        let mut run = opts.run.clone();
+        run.seed = cell.seed;
+        if let Some(lr) = cell.lr {
+            run.lr = lr;
+        }
+        let name = format!("{}#s{}", cell.spec.canonical(), cell.seed);
+        let record = run_record(&cell.task, &cell.spec, &name, &run);
+        let k = done.fetch_add(1, Ordering::SeqCst) + 1;
+        if opts.verbose {
+            let status = if record.diverged { "DIVERGED" } else { "ok" };
+            println!(
+                "[{k}/{n}] {} seed={} lr={} → {status}, loss {:.5} after {} steps",
+                cell.spec.canonical(),
+                cell.seed,
+                run.lr,
+                record.final_loss(),
+                record.steps.len()
+            );
+        }
+        record
+    });
+    let cells = grid
+        .cells
+        .iter()
+        .zip(results)
+        .map(|(cell, out)| {
+            let lr = cell.lr.unwrap_or(opts.run.lr);
+            match out {
+                Ok(record) => CellResult::from_record(cell, lr, record),
+                Err(msg) => CellResult::panicked(cell, lr, msg),
+            }
+        })
+        .collect();
+    SweepReport { cells }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::convergence::TaskKind;
+    use crate::sweep::report::CellStatus;
+
+    #[test]
+    fn fan_out_preserves_order_and_isolates_panics() {
+        let out = fan_out(8, 3, |i| {
+            if i == 5 {
+                panic!("boom {i}");
+            }
+            i * 10
+        });
+        assert_eq!(out.len(), 8);
+        for (i, r) in out.iter().enumerate() {
+            if i == 5 {
+                assert!(r.as_ref().unwrap_err().contains("boom"), "{r:?}");
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i * 10);
+            }
+        }
+    }
+
+    #[test]
+    fn fan_out_handles_zero_cells_and_oversized_job_counts() {
+        let out: Vec<Result<usize, String>> = fan_out(0, 4, |i| i);
+        assert!(out.is_empty());
+        let out = fan_out(3, 64, |i| i);
+        let out: Vec<usize> = out.into_iter().map(Result::unwrap).collect();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sweep_runs_cells_and_merges_in_grid_order() {
+        let task = TaskKind::Images;
+        let specs = "sgd:momentum={0.5,0.9};adam:lr={0.01}";
+        let grid = SweepGrid::parse(specs, &task, 3).unwrap();
+        assert_eq!(grid.len(), 3);
+        let opts = SweepOptions {
+            jobs: 2,
+            run: RunOpts {
+                steps: 4,
+                workers: 1,
+                batch: 16,
+                eval_every: 0,
+                hidden: vec![8],
+                ..Default::default()
+            },
+            verbose: false,
+        };
+        let report = run_sweep(&grid, &opts);
+        assert_eq!(report.cells.len(), 3);
+        for (cell, res) in grid.cells.iter().zip(&report.cells) {
+            assert_eq!(res.spec, cell.spec.canonical());
+            assert_eq!(res.seed, 3);
+            assert_eq!(res.status, CellStatus::Ok);
+            assert_eq!(res.steps_run(), 4);
+        }
+        // The lr axis reached the harness; the spec stayed clean.
+        assert_eq!(report.cells[2].lr, 0.01);
+        assert_eq!(report.cells[2].spec, "adam");
+    }
+}

@@ -1,0 +1,622 @@
+//! Grid expansion: sweep spec strings → a deterministic, ordered cell list.
+//!
+//! The sweep grammar extends the optimizer-spec grammar
+//! (`name[:key=val,...]`, see [`crate::optim::spec`]) with three
+//! constructs:
+//!
+//! ```text
+//! sweep    := template (';' template)*
+//! template := spec [' x ' 'seed=' range]
+//! spec     := name [':' axis (',' axis)*]
+//! axis     := key '=' value                      // fixed value
+//!           | key '={' value (',' value)* '}'    // braced value list
+//! range    := A '..' B | A '..=' B
+//! ```
+//!
+//! Braced keys cross-multiply in the order they appear, rightmost varying
+//! fastest; the ` x seed=0..4` repeat suffix runs every expanded spec once
+//! per seed and always varies fastest of all. Two keys are *reserved* and
+//! never reach [`OptimizerSpec::parse`]: `seed` (u64 values, or a single
+//! `A..B` range) and `lr` (the harness learning rate — a training knob,
+//! not an optimizer hyperparameter). Everything else must be a valid key
+//! for the template's optimizer; every failure mode is a [`SweepError`]
+//! naming the offending template, key, or part.
+//!
+//! Examples (one per axis type):
+//!
+//! * braced key: `mkor:f={1,10,100}` → 3 cells;
+//! * cross-product: `kfac:damping={0.01,0.1},lr={1,0.1}` → 4 cells;
+//! * seed repeat: `mkor:f=10 x seed=0..4` → 4 cells (seeds 0–3);
+//! * template list: `mkor;lamb;kfac:damping={0.01,0.1}` → 4 cells.
+
+use crate::data::classification::TaskConfig;
+use crate::experiments::convergence::TaskKind;
+use crate::optim::{OptimizerSpec, SpecError};
+use std::fmt;
+
+/// Why a sweep spec string failed to expand.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SweepError {
+    /// The sweep string contains no templates.
+    Empty,
+    /// `key={}`, or an empty element as in `key={1,}`.
+    EmptyBraces { key: String },
+    /// A `{` without `}` (or vice versa), or nested/misplaced braces.
+    UnmatchedBrace { part: String },
+    /// The same key appears twice in one template.
+    DuplicateKey { key: String },
+    /// A seed range that contains no values (e.g. `seed=4..1`).
+    BadRange { value: String },
+    /// A reserved key (`seed`, `lr`) carries an unparseable value.
+    BadValue {
+        key: String,
+        value: String,
+        expected: &'static str,
+    },
+    /// An expanded spec string failed optimizer-spec parsing.
+    Spec { template: String, err: SpecError },
+    /// Unknown task name.
+    UnknownTask { name: String },
+}
+
+impl fmt::Display for SweepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SweepError::Empty => {
+                write!(f, "empty sweep: expected `template[;template...]`")
+            }
+            SweepError::EmptyBraces { key } => write!(
+                f,
+                "empty value list for `{key}`: braces need at least one \
+                 value, e.g. `{key}={{1,10}}`"
+            ),
+            SweepError::UnmatchedBrace { part } => write!(
+                f,
+                "unbalanced or nested braces in `{part}`: expected \
+                 `key={{v1,v2,...}}`"
+            ),
+            SweepError::DuplicateKey { key } => write!(
+                f,
+                "duplicate key `{key}` in one template; give each key once \
+                 (brace the values to sweep it)"
+            ),
+            SweepError::BadRange { value } => write!(
+                f,
+                "empty seed range `{value}`: expected `A..B` with A < B, \
+                 or `A..=B` with A <= B"
+            ),
+            SweepError::BadValue { key, value, expected } => {
+                write!(f, "bad value `{value}` for `{key}`: expected {expected}")
+            }
+            SweepError::Spec { template, err } => {
+                write!(f, "in template `{template}`: {err}")
+            }
+            SweepError::UnknownTask { name } => write!(
+                f,
+                "unknown task `{name}`; valid tasks: glue, images, \
+                 autoencoder, text"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+// Constructors, so call sites stay one-liners.
+impl SweepError {
+    fn empty_braces(key: &str) -> SweepError {
+        SweepError::EmptyBraces {
+            key: key.to_string(),
+        }
+    }
+
+    fn unmatched(part: &str) -> SweepError {
+        SweepError::UnmatchedBrace {
+            part: part.trim().to_string(),
+        }
+    }
+
+    fn duplicate(key: &str) -> SweepError {
+        SweepError::DuplicateKey {
+            key: key.to_string(),
+        }
+    }
+
+    fn bad_range(value: &str) -> SweepError {
+        SweepError::BadRange {
+            value: value.to_string(),
+        }
+    }
+
+    fn bad_value(key: &str, value: &str, expected: &'static str) -> SweepError {
+        SweepError::BadValue {
+            key: key.to_string(),
+            value: value.to_string(),
+            expected,
+        }
+    }
+
+    fn in_template(template: &str, err: SpecError) -> SweepError {
+        SweepError::Spec {
+            template: template.to_string(),
+            err,
+        }
+    }
+
+    fn unknown_task(name: &str) -> SweepError {
+        SweepError::UnknownTask {
+            name: name.to_string(),
+        }
+    }
+}
+
+/// One expanded configuration: everything a worker needs to run one cell.
+#[derive(Clone, Debug)]
+pub struct SweepCell {
+    /// Position in the grid's deterministic order (report row order).
+    pub index: usize,
+    /// Fully-typed optimizer configuration for this cell.
+    pub spec: OptimizerSpec,
+    /// RNG seed for model init, data generation and shuffling.
+    pub seed: u64,
+    /// Harness learning rate from a reserved `lr` axis, if any.
+    pub lr: Option<f32>,
+    /// The workload this cell trains on.
+    pub task: TaskKind,
+}
+
+/// The expanded grid: cells in template order, axes rightmost-fastest.
+///
+/// The order — and every cell's result — depends only on the sweep string
+/// and the base seed, never on how the executor schedules the cells.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    pub cells: Vec<SweepCell>,
+}
+
+impl SweepGrid {
+    /// Expand a sweep string into its deterministic, ordered cell list.
+    /// Templates are `;`-separated; see the module docs for the grammar.
+    /// Cells without a seed axis use `base_seed`.
+    pub fn parse(specs: &str, task: &TaskKind, base_seed: u64) -> Result<SweepGrid, SweepError> {
+        let mut cells = Vec::new();
+        for template in split_depth0(specs, ';')? {
+            let template = template.trim();
+            if template.is_empty() {
+                continue;
+            }
+            expand_template(template, task, base_seed, &mut cells)?;
+        }
+        if cells.is_empty() {
+            return Err(SweepError::Empty);
+        }
+        Ok(SweepGrid { cells })
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+/// Resolve a CLI task name to its proxy workload.
+pub fn task_by_name(name: &str) -> Result<TaskKind, SweepError> {
+    match name {
+        "glue" => Ok(TaskKind::Glue(TaskConfig::new("glue", 64, 2))),
+        "images" => Ok(TaskKind::Images),
+        "autoencoder" => Ok(TaskKind::Autoencoder),
+        "text" => Ok(TaskKind::TextClass {
+            feat_dim: 96,
+            vocab: 64,
+        }),
+        _ => Err(SweepError::unknown_task(name)),
+    }
+}
+
+/// Short label for a task (report rows).
+pub fn task_label(task: &TaskKind) -> String {
+    match task {
+        TaskKind::Glue(cfg) => cfg.name.clone(),
+        TaskKind::Images => "images".to_string(),
+        TaskKind::Autoencoder => "autoencoder".to_string(),
+        TaskKind::TextClass { .. } => "text".to_string(),
+    }
+}
+
+/// One sweep axis of a template.
+enum Axis {
+    /// `key=value(s)` substituted into the spec string.
+    Spec { key: String, values: Vec<String> },
+    /// Reserved: harness learning rate.
+    Lr(Vec<f32>),
+    /// Reserved: run seed.
+    Seed(Vec<u64>),
+}
+
+impl Axis {
+    fn len(&self) -> usize {
+        match self {
+            Axis::Spec { values, .. } => values.len(),
+            Axis::Lr(v) => v.len(),
+            Axis::Seed(v) => v.len(),
+        }
+    }
+}
+
+/// Split `s` on `sep` at brace depth 0, rejecting unbalanced/nested braces.
+fn split_depth0(s: &str, sep: char) -> Result<Vec<String>, SweepError> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut depth = 0usize;
+    for c in s.chars() {
+        match c {
+            '{' => {
+                depth += 1;
+                if depth > 1 {
+                    return Err(SweepError::unmatched(s));
+                }
+                cur.push(c);
+            }
+            '}' => {
+                if depth == 0 {
+                    return Err(SweepError::unmatched(s));
+                }
+                depth -= 1;
+                cur.push(c);
+            }
+            c if c == sep && depth == 0 => out.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    if depth != 0 {
+        return Err(SweepError::unmatched(s));
+    }
+    out.push(cur);
+    Ok(out)
+}
+
+/// Expand `val` into its value list: `{a,b,c}` → `[a, b, c]`, plain `v` →
+/// `[v]`. `part` is the whole `key=val` text, for error messages.
+fn brace_values(key: &str, val: &str, part: &str) -> Result<Vec<String>, SweepError> {
+    if !val.contains('{') && !val.contains('}') {
+        return Ok(vec![val.to_string()]);
+    }
+    let stripped = val.strip_prefix('{').and_then(|v| v.strip_suffix('}'));
+    let Some(inner) = stripped else {
+        return Err(SweepError::unmatched(part));
+    };
+    if inner.contains('{') || inner.contains('}') {
+        return Err(SweepError::unmatched(part));
+    }
+    let values: Vec<String> = inner.split(',').map(|v| v.trim().to_string()).collect();
+    if values.iter().any(String::is_empty) {
+        return Err(SweepError::empty_braces(key));
+    }
+    Ok(values)
+}
+
+fn parse_lrs(key: &str, values: &[String]) -> Result<Vec<f32>, SweepError> {
+    let mut out = Vec::with_capacity(values.len());
+    for v in values {
+        match v.parse::<f32>() {
+            Ok(lr) => out.push(lr),
+            Err(_) => return Err(SweepError::bad_value(key, v, "a float learning rate")),
+        }
+    }
+    Ok(out)
+}
+
+fn parse_seeds(key: &str, values: &[String]) -> Result<Vec<u64>, SweepError> {
+    // A single `A..B` / `A..=B` value is a range of seeds.
+    if values.len() == 1 && values[0].contains("..") {
+        return seed_range(&values[0]);
+    }
+    let expected = "an unsigned integer (or a single `A..B` range)";
+    let mut out = Vec::with_capacity(values.len());
+    for v in values {
+        match v.parse::<u64>() {
+            Ok(seed) => out.push(seed),
+            Err(_) => return Err(SweepError::bad_value(key, v, expected)),
+        }
+    }
+    Ok(out)
+}
+
+fn seed_range(value: &str) -> Result<Vec<u64>, SweepError> {
+    let expected = "a range `A..B` (half-open) or `A..=B` (inclusive)";
+    let bad = || SweepError::bad_value("seed", value, expected);
+    // `..=` must be tried first: splitting `0..=4` on `..` leaves `=4`.
+    let (a, b, inclusive) = match value.split_once("..=") {
+        Some((a, b)) => (a, b, true),
+        None => match value.split_once("..") {
+            Some((a, b)) => (a, b, false),
+            None => return Err(bad()),
+        },
+    };
+    let a: u64 = a.trim().parse().map_err(|_| bad())?;
+    let b: u64 = b.trim().parse().map_err(|_| bad())?;
+    let seeds: Vec<u64> = if inclusive {
+        (a..=b).collect()
+    } else {
+        (a..b).collect()
+    };
+    if seeds.is_empty() {
+        return Err(SweepError::bad_range(value));
+    }
+    Ok(seeds)
+}
+
+/// Parse one `key=val`/`key={...}` part into an axis of `axes`.
+fn parse_axis(
+    template: &str,
+    part: &str,
+    axes: &mut Vec<Axis>,
+    seen: &mut Vec<String>,
+) -> Result<(), SweepError> {
+    let Some((key, val)) = part.split_once('=') else {
+        let err = SpecError::Malformed {
+            part: part.to_string(),
+        };
+        return Err(SweepError::in_template(template, err));
+    };
+    let (key, val) = (key.trim(), val.trim());
+    if seen.iter().any(|k| k == key) {
+        return Err(SweepError::duplicate(key));
+    }
+    seen.push(key.to_string());
+    let values = brace_values(key, val, part)?;
+    let axis = match key {
+        "lr" => Axis::Lr(parse_lrs(key, &values)?),
+        "seed" => Axis::Seed(parse_seeds(key, &values)?),
+        _ => {
+            let key = key.to_string();
+            Axis::Spec { key, values }
+        }
+    };
+    axes.push(axis);
+    Ok(())
+}
+
+/// Parse one template's axes and append its expanded cells to `out`.
+fn expand_template(
+    template: &str,
+    task: &TaskKind,
+    base_seed: u64,
+    out: &mut Vec<SweepCell>,
+) -> Result<(), SweepError> {
+    // Optional ` x seed=A..B` repeat suffix (always the fastest axis).
+    let (spec_part, repeat) = match template.rsplit_once(" x ") {
+        Some((head, tail)) => (head.trim_end(), Some(tail.trim())),
+        None => (template, None),
+    };
+    let (name, rest) = match spec_part.split_once(':') {
+        Some((n, r)) => (n.trim(), r.trim()),
+        None => (spec_part.trim(), ""),
+    };
+
+    let mut axes: Vec<Axis> = Vec::new();
+    let mut seen: Vec<String> = Vec::new();
+    for part in split_depth0(rest, ',')? {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        parse_axis(template, part, &mut axes, &mut seen)?;
+    }
+    if let Some(rep) = repeat {
+        if !rep.starts_with("seed=") {
+            let expected = "a repeat axis of the form `x seed=A..B`";
+            return Err(SweepError::bad_value("seed", rep, expected));
+        }
+        parse_axis(template, rep, &mut axes, &mut seen)?;
+    }
+
+    // Cross-product, rightmost axis fastest (mixed-radix decode of n).
+    let total: usize = axes.iter().map(Axis::len).product();
+    for n in 0..total.max(1) {
+        let mut rem = n;
+        let mut choice = vec![0usize; axes.len()];
+        for k in (0..axes.len()).rev() {
+            let len = axes[k].len();
+            choice[k] = rem % len;
+            rem /= len;
+        }
+        let mut pairs: Vec<String> = Vec::new();
+        let mut seed = base_seed;
+        let mut lr = None;
+        for (axis, &c) in axes.iter().zip(&choice) {
+            match axis {
+                Axis::Spec { key, values } => pairs.push(format!("{key}={}", values[c])),
+                Axis::Lr(v) => lr = Some(v[c]),
+                Axis::Seed(v) => seed = v[c],
+            }
+        }
+        let spec_str = if pairs.is_empty() {
+            name.to_string()
+        } else {
+            format!("{}:{}", name, pairs.join(","))
+        };
+        let spec = match OptimizerSpec::parse(&spec_str) {
+            Ok(spec) => spec,
+            Err(err) => return Err(SweepError::in_template(template, err)),
+        };
+        out.push(SweepCell {
+            index: out.len(),
+            spec,
+            seed,
+            lr,
+            task: task.clone(),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cells(s: &str) -> Vec<SweepCell> {
+        SweepGrid::parse(s, &TaskKind::Images, 7)
+            .unwrap_or_else(|e| panic!("`{s}`: {e}"))
+            .cells
+    }
+
+    fn err(s: &str) -> SweepError {
+        match SweepGrid::parse(s, &TaskKind::Images, 7) {
+            Ok(g) => panic!("`{s}` expanded to {} cells, expected error", g.len()),
+            Err(e) => e,
+        }
+    }
+
+    fn spec(s: &str) -> OptimizerSpec {
+        OptimizerSpec::parse(s).unwrap()
+    }
+
+    #[test]
+    fn braced_axis_expands_in_order() {
+        let c = cells("mkor:f={1,10,100}");
+        assert_eq!(c.len(), 3);
+        for (i, f) in ["1", "10", "100"].iter().enumerate() {
+            assert_eq!(c[i].index, i);
+            assert_eq!(c[i].spec, spec(&format!("mkor:f={f}")));
+            assert_eq!(c[i].seed, 7, "base seed applies without a seed axis");
+            assert_eq!(c[i].lr, None);
+        }
+    }
+
+    #[test]
+    fn cross_product_is_rightmost_fastest() {
+        let c = cells("kfac:damping={0.01,0.1},f={5,50}");
+        let want = [
+            "kfac:f=5,damping=0.01",
+            "kfac:f=50,damping=0.01",
+            "kfac:f=5,damping=0.1",
+            "kfac:f=50,damping=0.1",
+        ];
+        assert_eq!(c.len(), want.len());
+        for (cell, w) in c.iter().zip(want) {
+            assert_eq!(cell.spec, spec(w));
+        }
+    }
+
+    #[test]
+    fn seed_repeat_axis_varies_fastest() {
+        let c = cells("mkor:f={1,10} x seed=0..2");
+        let want = [
+            ("mkor:f=1", 0),
+            ("mkor:f=1", 1),
+            ("mkor:f=10", 0),
+            ("mkor:f=10", 1),
+        ];
+        assert_eq!(c.len(), want.len());
+        for (cell, (s, seed)) in c.iter().zip(want) {
+            assert_eq!(cell.spec, spec(s));
+            assert_eq!(cell.seed, seed);
+        }
+    }
+
+    #[test]
+    fn inclusive_range_and_inline_seed_list() {
+        let c = cells("sgd x seed=3..=5");
+        assert_eq!(c.iter().map(|c| c.seed).collect::<Vec<_>>(), vec![3, 4, 5]);
+        let c = cells("sgd:seed={2,9}");
+        assert_eq!(c.iter().map(|c| c.seed).collect::<Vec<_>>(), vec![2, 9]);
+    }
+
+    #[test]
+    fn lr_axis_is_reserved_and_not_a_spec_key() {
+        let c = cells("sgd:lr={1,0.1}");
+        assert_eq!(c.len(), 2);
+        assert_eq!(c[0].lr, Some(1.0));
+        assert_eq!(c[1].lr, Some(0.1));
+        assert_eq!(c[0].spec, spec("sgd"));
+    }
+
+    #[test]
+    fn multiple_templates_concatenate_in_order() {
+        let c = cells("mkor:f={1,10};lamb;kfac:damping={0.01,0.1}");
+        let names: Vec<&str> = c.iter().map(|c| c.spec.name()).collect();
+        assert_eq!(names, vec!["mkor", "mkor", "lamb", "kfac", "kfac"]);
+        assert_eq!(c.last().unwrap().index, 4);
+    }
+
+    #[test]
+    fn single_element_braces_are_fine() {
+        let c = cells("mkor:f={10}");
+        assert_eq!(c.len(), 1);
+        assert_eq!(c[0].spec, spec("mkor:f=10"));
+    }
+
+    #[test]
+    fn empty_braces_are_an_actionable_error() {
+        for s in ["mkor:f={}", "mkor:f={1,}", "mkor:f={,1}"] {
+            let e = err(s);
+            let hit = matches!(&e, SweepError::EmptyBraces { key } if key == "f");
+            assert!(hit, "{s}: {e:?}");
+            assert!(e.to_string().contains("`f`"), "{e}");
+        }
+    }
+
+    #[test]
+    fn duplicate_keys_are_an_error() {
+        let e = err("mkor:f={1,2},f={3}");
+        let hit = matches!(&e, SweepError::DuplicateKey { key } if key == "f");
+        assert!(hit, "{e:?}");
+        // The repeat suffix counts as a second `seed` key.
+        let e = err("mkor:seed=1 x seed=0..2");
+        let hit = matches!(&e, SweepError::DuplicateKey { key } if key == "seed");
+        assert!(hit, "{e:?}");
+    }
+
+    #[test]
+    fn malformed_braces_are_an_error() {
+        for s in ["mkor:f={1,10", "mkor:f=1}", "mkor:f={{1}}", "mkor:f=1{2}"] {
+            match err(s) {
+                SweepError::UnmatchedBrace { .. } => {}
+                other => panic!("`{s}`: expected UnmatchedBrace, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_seed_ranges_are_an_error() {
+        for s in ["sgd x seed=4..1", "sgd x seed=4..4"] {
+            let e = err(s);
+            assert!(matches!(&e, SweepError::BadRange { .. }), "{s}: {e:?}");
+            assert!(e.to_string().contains("4.."), "{e}");
+        }
+        assert!(matches!(err("sgd x seed=abc"), SweepError::BadValue { .. }));
+        assert!(matches!(err("sgd x lr=0..2"), SweepError::BadValue { .. }));
+    }
+
+    #[test]
+    fn spec_errors_carry_the_template() {
+        let e = err("bogus:f={1}");
+        let msg = e.to_string();
+        assert!(msg.contains("bogus") && msg.contains("mkor"), "{msg}");
+        let e = err("mkor:nope={1}");
+        assert!(e.to_string().contains("nope"), "{e}");
+        // A part without `=` is the spec grammar's Malformed error.
+        let e = err("mkor:f");
+        assert!(e.to_string().contains("key=val"), "{e}");
+    }
+
+    #[test]
+    fn empty_sweeps_are_an_error() {
+        assert_eq!(err(""), SweepError::Empty);
+        assert_eq!(err(" ; "), SweepError::Empty);
+    }
+
+    #[test]
+    fn tasks_resolve_by_name() {
+        for name in ["glue", "images", "autoencoder", "text"] {
+            let task = task_by_name(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(task_label(&task), name);
+        }
+        let e = task_by_name("mnist").unwrap_err();
+        assert!(e.to_string().contains("glue"), "{e}");
+    }
+}

@@ -1,0 +1,401 @@
+//! Merged sweep reports: one artifact per sweep, one row per cell.
+//!
+//! A [`SweepReport`] aggregates the per-cell
+//! [`RunRecord`](crate::coordinator::RunRecord)s of one sweep into a
+//! single table keyed by canonical spec string + seed, and writes it as
+//! CSV (one data row per cell) and JSON (cell summaries plus loss
+//! series). The deterministic variants omit wall-clock timing, so their
+//! bytes depend only on the grid and the seeds — never on `--jobs`.
+
+use crate::bench_utils::Table;
+use crate::coordinator::RunRecord;
+use crate::sweep::grid::{task_label, SweepCell};
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Terminal state of one cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellStatus {
+    /// Ran its full step budget.
+    Ok,
+    /// Training diverged (non-finite loss/weights); the record is kept.
+    Diverged,
+    /// The cell panicked; the message is kept, the record is lost.
+    Panicked(String),
+}
+
+impl CellStatus {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CellStatus::Ok => "ok",
+            CellStatus::Diverged => "diverged",
+            CellStatus::Panicked(_) => "panicked",
+        }
+    }
+}
+
+/// One cell's outcome: identity (spec/task/seed/lr) + status + record.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    /// Grid position (row order of the merged report).
+    pub index: usize,
+    /// Canonical spec string — the cell's key in CSV/JSON artifacts.
+    pub spec: String,
+    pub task: String,
+    pub seed: u64,
+    /// The harness learning rate this cell actually ran with.
+    pub lr: f32,
+    pub status: CellStatus,
+    /// The full run record (absent only for panicked cells).
+    pub record: Option<RunRecord>,
+}
+
+impl CellResult {
+    /// Wrap a completed (possibly diverged) run.
+    pub fn from_record(cell: &SweepCell, lr: f32, record: RunRecord) -> CellResult {
+        let status = if record.diverged {
+            CellStatus::Diverged
+        } else {
+            CellStatus::Ok
+        };
+        CellResult {
+            index: cell.index,
+            spec: cell.spec.canonical(),
+            task: task_label(&cell.task),
+            seed: cell.seed,
+            lr,
+            status,
+            record: Some(record),
+        }
+    }
+
+    /// Wrap a cell whose worker panicked.
+    pub fn panicked(cell: &SweepCell, lr: f32, message: String) -> CellResult {
+        CellResult {
+            index: cell.index,
+            spec: cell.spec.canonical(),
+            task: task_label(&cell.task),
+            seed: cell.seed,
+            lr,
+            status: CellStatus::Panicked(message),
+            record: None,
+        }
+    }
+
+    /// Final training loss, if the cell produced any steps.
+    pub fn final_loss(&self) -> Option<f64> {
+        let record = self.record.as_ref()?;
+        if record.steps.is_empty() {
+            None
+        } else {
+            Some(record.final_loss())
+        }
+    }
+
+    /// Step at which the run first hit its target metric, if ever.
+    pub fn converged_at(&self) -> Option<usize> {
+        self.record.as_ref().and_then(|r| r.converged_at)
+    }
+
+    /// Best eval metric seen over the run.
+    pub fn best_eval(&self) -> Option<f64> {
+        self.record.as_ref().and_then(|r| r.best_eval())
+    }
+
+    /// Steps the cell recorded (including a diverged final step).
+    pub fn steps_run(&self) -> usize {
+        self.record.as_ref().map_or(0, |r| r.steps.len())
+    }
+
+    /// Total wall seconds of the cell's own steps.
+    pub fn wall_secs(&self) -> f64 {
+        self.record.as_ref().map_or(0.0, |r| r.total_wall_secs())
+    }
+}
+
+/// The merged artifact of one sweep.
+#[derive(Clone, Debug, Default)]
+pub struct SweepReport {
+    /// One result per cell, in grid order (independent of scheduling).
+    pub cells: Vec<CellResult>,
+}
+
+impl SweepReport {
+    /// `(ok, diverged, panicked)` cell counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut ok = 0;
+        let mut diverged = 0;
+        let mut panicked = 0;
+        for c in &self.cells {
+            match c.status {
+                CellStatus::Ok => ok += 1,
+                CellStatus::Diverged => diverged += 1,
+                CellStatus::Panicked(_) => panicked += 1,
+            }
+        }
+        (ok, diverged, panicked)
+    }
+
+    /// Look up a cell by canonical spec string and seed. Cells that
+    /// differ only in the reserved `lr` axis share this key (lr is not
+    /// part of the spec string) — use [`SweepReport::find_with_lr`] there.
+    pub fn find(&self, spec: &str, seed: u64) -> Option<&CellResult> {
+        self.cells.iter().find(|c| c.spec == spec && c.seed == seed)
+    }
+
+    /// [`SweepReport::find`] disambiguated by the harness learning rate,
+    /// for grids that sweep the reserved `lr` axis.
+    pub fn find_with_lr(&self, spec: &str, seed: u64, lr: f32) -> Option<&CellResult> {
+        self.cells
+            .iter()
+            .find(|c| c.spec == spec && c.seed == seed && c.lr == lr)
+    }
+
+    /// Build the report table; `wall` appends the wall-clock column.
+    fn table(&self, wall: bool) -> Table {
+        let mut headers = vec![
+            "cell",
+            "spec",
+            "task",
+            "seed",
+            "lr",
+            "status",
+            "steps",
+            "final_loss",
+            "converged_at",
+            "best_eval",
+        ];
+        if wall {
+            headers.push("wall_secs");
+        }
+        let mut t = Table::new(&headers);
+        for c in &self.cells {
+            let fmt_opt = |v: Option<String>| v.unwrap_or_default();
+            let mut row = vec![
+                c.index.to_string(),
+                c.spec.clone(),
+                c.task.clone(),
+                c.seed.to_string(),
+                c.lr.to_string(),
+                c.status.label().to_string(),
+                c.steps_run().to_string(),
+                fmt_opt(c.final_loss().map(|v| v.to_string())),
+                fmt_opt(c.converged_at().map(|v| v.to_string())),
+                fmt_opt(c.best_eval().map(|v| v.to_string())),
+            ];
+            if wall {
+                row.push(format!("{:.3}", c.wall_secs()));
+            }
+            t.row(&row);
+        }
+        t
+    }
+
+    /// Pretty table for terminal summaries.
+    pub fn render_table(&self) -> String {
+        self.table(true).render()
+    }
+
+    /// CSV, one row per cell, keyed by canonical spec string; includes the
+    /// measured `wall_secs` column.
+    pub fn to_csv(&self) -> String {
+        self.table(true).to_csv()
+    }
+
+    /// CSV without the wall-clock column: byte-identical for any `--jobs`
+    /// width, because cell results depend only on each cell's own seed.
+    pub fn to_csv_deterministic(&self) -> String {
+        self.table(false).to_csv()
+    }
+
+    /// JSON form; `deterministic` omits wall-clock timing so the artifact
+    /// is byte-identical for any `--jobs` width.
+    pub fn to_json_with(&self, deterministic: bool) -> Json {
+        let (ok, diverged, panicked) = self.counts();
+        let mut o = Json::obj();
+        o.set("n_cells", Json::Num(self.cells.len() as f64))
+            .set("ok", Json::Num(ok as f64))
+            .set("diverged", Json::Num(diverged as f64))
+            .set("panicked", Json::Num(panicked as f64));
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let final_loss = c.final_loss().map_or(Json::Null, Json::Num);
+                let conv = c.converged_at().map_or(Json::Null, |s| Json::Num(s as f64));
+                let best = c.best_eval().map_or(Json::Null, Json::Num);
+                let mut j = Json::obj();
+                j.set("cell", Json::Num(c.index as f64))
+                    .set("spec", Json::Str(c.spec.clone()))
+                    .set("task", Json::Str(c.task.clone()))
+                    .set("seed", Json::Num(c.seed as f64))
+                    .set("lr", Json::Num(c.lr as f64))
+                    .set("status", Json::Str(c.status.label().to_string()))
+                    .set("steps", Json::Num(c.steps_run() as f64))
+                    .set("final_loss", final_loss)
+                    .set("converged_at", conv)
+                    .set("best_eval", best);
+                if let Some(r) = &c.record {
+                    j.set("loss", Json::from_f64s(&r.loss_series()));
+                }
+                if let CellStatus::Panicked(msg) = &c.status {
+                    j.set("panic", Json::Str(msg.clone()));
+                }
+                if !deterministic {
+                    j.set("wall_secs", Json::Num(c.wall_secs()));
+                }
+                j
+            })
+            .collect();
+        o.set("cells", Json::Arr(cells));
+        o
+    }
+
+    /// JSON with wall-clock timing included.
+    pub fn to_json(&self) -> Json {
+        self.to_json_with(false)
+    }
+
+    /// Write CSV; `deterministic` drops the wall-clock column so the
+    /// artifact's bytes depend only on the grid and the seeds.
+    pub fn save_csv_with(&self, path: &Path, deterministic: bool) -> anyhow::Result<()> {
+        let csv = if deterministic {
+            self.to_csv_deterministic()
+        } else {
+            self.to_csv()
+        };
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, csv)?;
+        Ok(())
+    }
+
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
+        self.save_csv_with(path, false)
+    }
+
+    /// Write JSON; `deterministic` as in [`SweepReport::save_csv_with`].
+    pub fn save_json_with(&self, path: &Path, deterministic: bool) -> anyhow::Result<()> {
+        self.to_json_with(deterministic).to_file(path)
+    }
+
+    pub fn save_json(&self, path: &Path) -> anyhow::Result<()> {
+        self.save_json_with(path, false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::StepRecord;
+    use crate::experiments::convergence::TaskKind;
+    use crate::optim::OptimizerSpec;
+
+    fn toy_cell(index: usize, spec: &str, seed: u64) -> SweepCell {
+        SweepCell {
+            index,
+            spec: OptimizerSpec::parse(spec).unwrap(),
+            seed,
+            lr: None,
+            task: TaskKind::Images,
+        }
+    }
+
+    fn toy_record(spec: &str, losses: &[f64]) -> RunRecord {
+        RunRecord {
+            name: "t".to_string(),
+            optimizer: "mkor".to_string(),
+            spec: spec.to_string(),
+            steps: losses
+                .iter()
+                .enumerate()
+                .map(|(i, &loss)| StepRecord {
+                    step: i,
+                    loss,
+                    eval_metric: None,
+                    lr: 0.1,
+                    wall_secs: 0.25,
+                    grad_comm_bytes: 0,
+                    sync_comm_bytes: 0,
+                })
+                .collect(),
+            diverged: false,
+            converged_at: Some(1),
+            switched_at: None,
+        }
+    }
+
+    fn toy_report() -> SweepReport {
+        let a = toy_cell(0, "mkor:f=25,backend=lamb", 0);
+        let b = toy_cell(1, "sgd", 1);
+        let rec = toy_record("mkor:f=25,backend=lamb", &[2.0, 1.0]);
+        SweepReport {
+            cells: vec![
+                CellResult::from_record(&a, 0.1, rec),
+                CellResult::panicked(&b, 0.1, "boom".to_string()),
+            ],
+        }
+    }
+
+    #[test]
+    fn csv_has_one_row_per_cell_with_quoted_specs() {
+        let r = toy_report();
+        let csv = r.to_csv();
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3, "{csv}");
+        assert!(lines[0].starts_with("cell,spec,task,seed,lr,status,"));
+        assert!(lines[0].ends_with(",wall_secs"));
+        // Spec strings contain commas, so they must be CSV-quoted.
+        assert!(lines[1].contains("\"mkor:f=25,backend=lamb\""), "{csv}");
+        assert!(lines[2].contains("panicked"));
+        // The deterministic form drops only the wall column.
+        let det = r.to_csv_deterministic();
+        assert!(!det.contains("wall_secs"));
+        assert_eq!(det.trim().lines().count(), 3);
+    }
+
+    #[test]
+    fn summaries_and_lookup() {
+        let r = toy_report();
+        assert_eq!(r.counts(), (1, 0, 1));
+        let cell = r.find("mkor:f=25,backend=lamb", 0).unwrap();
+        assert_eq!(cell.final_loss(), Some(1.0));
+        assert_eq!(cell.converged_at(), Some(1));
+        assert_eq!(cell.steps_run(), 2);
+        assert!((cell.wall_secs() - 0.5).abs() < 1e-12);
+        assert!(r.find("sgd", 0).is_none(), "seed is part of the key");
+        assert!(r.find_with_lr("sgd", 1, 0.1).is_some());
+        assert!(r.find_with_lr("sgd", 1, 0.2).is_none(), "lr disambiguates");
+        let failed = r.find("sgd", 1).unwrap();
+        assert_eq!(failed.final_loss(), None);
+        assert_eq!(failed.steps_run(), 0);
+    }
+
+    #[test]
+    fn json_carries_statuses_loss_series_and_panics() {
+        let r = toy_report();
+        let j = r.to_json();
+        assert_eq!(j.get("n_cells").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("panicked").unwrap().as_usize(), Some(1));
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells[0].require_str("status").unwrap(), "ok");
+        assert_eq!(cells[0].get("loss").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(cells[1].require_str("panic").unwrap(), "boom");
+        assert_eq!(cells[1].get("final_loss"), Some(&Json::Null));
+        // Deterministic JSON has no wall timing; both forms re-parse.
+        let det = r.to_json_with(true);
+        let det_cells = det.get("cells").unwrap().as_arr().unwrap();
+        assert!(det_cells[0].get("wall_secs").is_none());
+        let re = Json::parse(&format!("{det:#}")).unwrap();
+        assert_eq!(re.get("ok").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn render_table_is_aligned() {
+        let s = toy_report().render_table();
+        assert!(s.contains("| spec"));
+        let first = s.lines().next().unwrap().len();
+        assert!(s.lines().all(|l| l.len() == first));
+    }
+}

@@ -22,9 +22,12 @@ fn nondefault_specs() -> Vec<(&'static str, String)> {
                 "kfac" => "kfac:f=7,gamma=0.9,damping=0.003,cov_freq=2,rescale=false".to_string(),
                 "sngd" => "sngd:f=4,damping=0.6,momentum=0.85".to_string(),
                 "eva" => "eva:damping=0.02,beta=0.9,f=3".to_string(),
-                "mkor" => "mkor:f=25,gamma=0.9,backend=lamb,half=none,epsilon=64,zeta=0.25"
+                "mkor" => "mkor:f=25,gamma=0.9,backend=lamb,half=none,epsilon=64,zeta=0.25,\
+                           backend.beta1=0.92,backend.wd=0.01"
                     .to_string(),
-                "mkor-h" => "mkor-h:f=15,switch_ratio=0.25,min_steps=30".to_string(),
+                "mkor-h" => "mkor-h:f=15,backend=adam,backend.eps=1e-8,switch_ratio=0.25,\
+                             min_steps=30"
+                    .to_string(),
                 other => panic!("nondefault_specs has no entry for `{other}`"),
             };
             (name, s)
@@ -105,6 +108,25 @@ fn build_honors_half_sync_override() {
     bf16.step(&mut layers, std::slice::from_ref(&cap), 0.001, &mut timer);
     assert_eq!(full.sync_bytes_last_step(), (64 + 64) * 4);
     assert_eq!(bf16.sync_bytes_last_step(), (64 + 64) * 2);
+}
+
+#[test]
+fn nested_backend_keys_round_trip_through_built_optimizers() {
+    // `backend.*` keys survive parse → build → spec() → canonical →
+    // re-parse, i.e. a run record of a backend-tuned MKOR reproduces it.
+    let shapes = [LayerShape::new(8, 6)];
+    for s in [
+        "mkor:backend=adam,backend.beta1=0.95,backend.beta2=0.98",
+        "mkor:backend=lamb,backend.eps=1e-8,backend.wd=0.05",
+        "mkor-h:backend=adam,backend.beta1=0.85,switch_ratio=0.3",
+    ] {
+        let spec = OptimizerSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+        let opt = spec.build(&shapes);
+        assert_eq!(opt.spec(), spec, "spec() introspection for `{s}`");
+        let canon = opt.spec().canonical();
+        assert!(canon.contains("backend."), "`{canon}` lost the nested keys");
+        assert_eq!(OptimizerSpec::parse(&canon).unwrap(), spec, "via `{canon}`");
+    }
 }
 
 #[test]

@@ -1,0 +1,103 @@
+//! End-to-end sweep-engine tests through the public API: grid → executor
+//! → merged report, including the acceptance contract that a `--jobs N`
+//! sweep produces the same cell set and per-cell results as `--jobs 1`
+//! (deterministic ordering, per-cell seeding independent of scheduling).
+
+use mkor::experiments::convergence::{RunOpts, TaskKind};
+use mkor::sweep::{run_sweep, CellStatus, SweepGrid, SweepOptions};
+use mkor::util::json::Json;
+
+fn tiny_opts(jobs: usize) -> SweepOptions {
+    SweepOptions {
+        jobs,
+        run: RunOpts {
+            steps: 6,
+            workers: 1,
+            batch: 16,
+            eval_every: 3,
+            hidden: vec![16],
+            target_metric: Some(0.4),
+            ..Default::default()
+        },
+        verbose: false,
+    }
+}
+
+#[test]
+fn braced_3x3_grid_is_byte_identical_for_any_job_count() {
+    // A 3×3 braced grid (f × damping), as in the acceptance criterion.
+    let task = TaskKind::Images;
+    let grid = SweepGrid::parse("kfac:f={5,10,50},damping={0.01,0.03,0.1}", &task, 0).unwrap();
+    assert_eq!(grid.len(), 9);
+    let serial = run_sweep(&grid, &tiny_opts(1));
+    let fanned = run_sweep(&grid, &tiny_opts(4));
+    // Cell set and per-cell results are byte-identical to the serial run;
+    // only measured wall-clock columns may differ.
+    assert_eq!(serial.to_csv_deterministic(), fanned.to_csv_deterministic());
+    let (sj, fj) = (serial.to_json_with(true), fanned.to_json_with(true));
+    assert_eq!(format!("{sj:#}"), format!("{fj:#}"));
+    // One data row per cell, keyed by the canonical spec string.
+    let csv = fanned.to_csv_deterministic();
+    assert_eq!(csv.trim().lines().count(), 1 + 9, "{csv}");
+    assert!(csv.contains("\"kfac:f=5,damping=0.01\""), "{csv}");
+}
+
+#[test]
+fn seed_axis_and_templates_expand_into_independent_cells() {
+    let task = TaskKind::Images;
+    let grid = SweepGrid::parse("mkor:f={1,5};sgd x seed=0..2", &task, 7).unwrap();
+    assert_eq!(grid.len(), 4);
+    let report = run_sweep(&grid, &tiny_opts(2));
+    // Grid order survives the fan-out.
+    let specs: Vec<&str> = report.cells.iter().map(|c| c.spec.as_str()).collect();
+    assert_eq!(specs, vec!["mkor:f=1", "mkor:f=5", "sgd", "sgd"]);
+    let seeds: Vec<u64> = report.cells.iter().map(|c| c.seed).collect();
+    assert_eq!(seeds, vec![7, 7, 0, 1]);
+    // Every cell ran its budget and is individually addressable.
+    for c in &report.cells {
+        assert_eq!(c.status, CellStatus::Ok, "{}", c.spec);
+        assert_eq!(c.steps_run(), 6);
+    }
+    assert!(report.find("sgd", 1).is_some());
+    // Same spec, different seed → different trajectory (cells are
+    // genuinely independent runs, not copies).
+    let (a, b) = (report.find("sgd", 0).unwrap(), report.find("sgd", 1).unwrap());
+    assert_ne!(a.final_loss(), b.final_loss());
+}
+
+#[test]
+fn a_diverged_cell_fails_alone_and_the_sweep_survives() {
+    // An absurd lr diverges SGD; the braced sibling cells stay healthy.
+    // (A larger step budget than the other tests: overflow to non-finite
+    // weights takes a few steps of compounding.)
+    let task = TaskKind::Images;
+    let grid = SweepGrid::parse("sgd:lr={1e6,0.1}", &task, 1).unwrap();
+    let mut opts = tiny_opts(2);
+    opts.run.steps = 100;
+    let report = run_sweep(&grid, &opts);
+    let (ok, diverged, panicked) = report.counts();
+    assert_eq!((ok, diverged, panicked), (1, 1, 0), "{:?}", report.counts());
+    assert_eq!(report.cells[0].status, CellStatus::Diverged);
+    assert_eq!(report.cells[1].status, CellStatus::Ok);
+    // The diverged cell still reports a row with its partial record.
+    let csv = report.to_csv();
+    assert_eq!(csv.trim().lines().count(), 3);
+    assert!(csv.contains("diverged"), "{csv}");
+}
+
+#[test]
+fn sweep_json_artifact_reparses_with_per_cell_results() {
+    let task = TaskKind::Images;
+    let grid = SweepGrid::parse("mkor:f={1,5} x seed=0..2", &task, 0).unwrap();
+    let report = run_sweep(&grid, &tiny_opts(3));
+    let text = format!("{:#}", report.to_json());
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("n_cells").unwrap().as_usize(), Some(4));
+    let cells = j.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 4);
+    for c in cells {
+        assert_eq!(c.require_str("status").unwrap(), "ok");
+        assert_eq!(c.get("loss").unwrap().as_arr().unwrap().len(), 6);
+        assert!(c.get("final_loss").unwrap().as_f64().unwrap().is_finite());
+    }
+}

@@ -17,6 +17,15 @@ cargo test -q
 echo "== cargo build --release --all-targets (benches + examples) =="
 cargo build --release --all-targets
 
+echo "== rustfmt --check rust/src/sweep (fmt-strict module) =="
+if command -v rustfmt >/dev/null 2>&1; then
+    # The sweep/ subsystem postdates rustfmt adoption and stays fmt-clean
+    # unconditionally, while the seed tree is still soft-checked below.
+    rustfmt --edition 2021 --check rust/src/sweep/*.rs
+else
+    echo "warning: rustfmt not installed; skipping sweep format check" >&2
+fi
+
 echo "== cargo fmt --check =="
 if command -v rustfmt >/dev/null 2>&1; then
     if ! cargo fmt --check; then
