@@ -1,0 +1,443 @@
+//! Checkpoint directories: a manifest JSON plus one `.bin` state blob per
+//! component.
+//!
+//! Layout of a checkpoint directory (blob names carry the step they were
+//! written at — `save` never overwrites the files the previous manifest
+//! references):
+//!
+//! ```text
+//! <dir>/
+//!   manifest.json     format version, step, canonical OptimizerSpec string,
+//!                     task, run name, per-component file + FNV-1a content
+//!                     hash + byte count
+//!   model-<N>.bin     leader model weights (StateDict binary codec)
+//!   optimizer-<N>.bin optimizer state (factor inverses, moments, counters)
+//!   trainer-<N>.bin   step counter, divergence flag, LR-schedule state
+//!   record-<N>.json   full per-step RunRecord so a resumed run's loss
+//!                     series continues the original seamlessly
+//! ```
+//!
+//! New blobs land under fresh names, the manifest is swapped in by a
+//! temp-file rename, and only then are the previous snapshot's files
+//! garbage-collected — so a kill at any point during a periodic save
+//! leaves a readable manifest whose blobs are intact. Every load failure —
+//! missing manifest, missing manifest key, unsupported version, hash
+//! mismatch, truncated/corrupt blob, wrong spec — is a distinct
+//! [`CheckpointError`].
+
+use crate::checkpoint::state::{fnv1a64, StateDict, StateError};
+use crate::coordinator::RunRecord;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Manifest format version written by this build.
+pub const CHECKPOINT_FORMAT_VERSION: u32 = 1;
+
+/// Name of the manifest file inside a checkpoint directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Why a checkpoint failed to save, load, or restore.
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("{}: {source}", path.display())]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("no checkpoint manifest at {}", .0.display())]
+    MissingManifest(PathBuf),
+    #[error("{}: invalid manifest: {msg}", path.display())]
+    BadManifest { path: PathBuf, msg: String },
+    #[error("manifest is missing key `{key}`")]
+    MissingManifestKey { key: String },
+    #[error(
+        "unsupported checkpoint format version {found} (this build reads version {supported})"
+    )]
+    BadVersion { found: u32, supported: u32 },
+    #[error("checkpoint has no `{name}` component")]
+    MissingComponent { name: String },
+    #[error("component `{name}`: content hash mismatch (file corrupted or truncated?)")]
+    HashMismatch { name: String },
+    #[error("component `{name}`: {source}")]
+    State {
+        name: String,
+        #[source]
+        source: StateError,
+    },
+    #[error("checkpoint run record: {msg}")]
+    BadRecord { msg: String },
+    #[error("checkpoint was written by spec `{found}`, but this run uses `{expected}`")]
+    SpecMismatch { expected: String, found: String },
+    #[error("checkpoint was written on task `{found}`, but this run is on `{expected}`")]
+    TaskMismatch { expected: String, found: String },
+}
+
+impl CheckpointError {
+    fn io(path: &Path, source: std::io::Error) -> CheckpointError {
+        CheckpointError::Io {
+            path: path.to_path_buf(),
+            source,
+        }
+    }
+}
+
+/// An in-memory checkpoint: identity metadata plus one [`StateDict`] per
+/// component and (optionally) the run record so far.
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    /// Completed training steps at the time of the snapshot.
+    pub step: usize,
+    /// Canonical optimizer spec string — resume validates it against the
+    /// resuming run's spec before any state is loaded.
+    pub spec: String,
+    /// Optimizer name (`spec`'s head; kept for human-readable manifests).
+    pub optimizer: String,
+    /// Task label the run trained on ("" when unknown).
+    pub task: String,
+    /// Run name from the trainer config.
+    pub run_name: String,
+    /// One state dict per component (`model`, `optimizer`, `trainer`, and
+    /// any extras like a harness `rng`).
+    pub components: BTreeMap<String, StateDict>,
+    /// Per-step record so far; a resumed run appends to it, keeping the
+    /// loss series identical to an uninterrupted run's.
+    pub record: Option<RunRecord>,
+}
+
+impl Checkpoint {
+    /// Does `dir` contain a checkpoint manifest?
+    pub fn exists(dir: &Path) -> bool {
+        dir.join(MANIFEST_FILE).is_file()
+    }
+
+    /// The component named `name`, or a [`CheckpointError::MissingComponent`].
+    pub fn component(&self, name: &str) -> Result<&StateDict, CheckpointError> {
+        self.components
+            .get(name)
+            .ok_or_else(|| CheckpointError::MissingComponent {
+                name: name.to_string(),
+            })
+    }
+
+    /// Write the checkpoint into `dir` (created if needed), crash-safely:
+    /// blob and record filenames are step-stamped (`model-200.bin`), so
+    /// writing never touches the files the previous manifest references;
+    /// the manifest is swapped in atomically (temp file + rename) last;
+    /// and only then are files the new manifest does not reference
+    /// garbage-collected. A kill at ANY point leaves the directory with a
+    /// readable manifest whose blobs are intact — either the old
+    /// checkpoint or the new one.
+    pub fn save(&self, dir: &Path) -> Result<(), CheckpointError> {
+        std::fs::create_dir_all(dir).map_err(|e| CheckpointError::io(dir, e))?;
+        let mut keep: Vec<String> = Vec::new();
+        let mut components = Json::obj();
+        for (name, sd) in &self.components {
+            let file = format!("{name}-{}.bin", self.step);
+            let bytes = sd.to_bytes();
+            let path = dir.join(&file);
+            std::fs::write(&path, &bytes).map_err(|e| CheckpointError::io(&path, e))?;
+            let mut meta = Json::obj();
+            meta.set("file", Json::Str(file.clone()))
+                .set("hash", Json::Str(format!("{:016x}", fnv1a64(&bytes))))
+                .set("bytes", Json::Num(bytes.len() as f64));
+            components.set(name, meta);
+            keep.push(file);
+        }
+        let mut manifest = Json::obj();
+        manifest
+            .set("format_version", Json::Num(CHECKPOINT_FORMAT_VERSION as f64))
+            .set("step", Json::Num(self.step as f64))
+            .set("spec", Json::Str(self.spec.clone()))
+            .set("optimizer", Json::Str(self.optimizer.clone()))
+            .set("task", Json::Str(self.task.clone()))
+            .set("run_name", Json::Str(self.run_name.clone()))
+            .set("components", components);
+        if let Some(record) = &self.record {
+            let file = format!("record-{}.json", self.step);
+            record
+                .to_json_full()
+                .to_file(&dir.join(&file))
+                .map_err(|e| CheckpointError::BadRecord { msg: e.to_string() })?;
+            manifest.set("record", Json::Str(file.clone()));
+            keep.push(file);
+        }
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, format!("{manifest:#}")).map_err(|e| CheckpointError::io(&tmp, e))?;
+        let final_path = dir.join(MANIFEST_FILE);
+        std::fs::rename(&tmp, &final_path).map_err(|e| CheckpointError::io(&final_path, e))?;
+        // Best-effort GC of files the fresh manifest no longer references
+        // (the previous snapshot's blobs/record). Failures are harmless:
+        // orphans are ignored by load.
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().into_owned();
+                let is_blob = name.ends_with(".bin")
+                    || (name.starts_with("record-") && name.ends_with(".json"));
+                if is_blob && !keep.iter().any(|k| *k == name) {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load and validate a checkpoint from `dir`: manifest present and
+    /// well-formed, version supported, every component blob present with a
+    /// matching content hash and a decodable state dict.
+    pub fn load(dir: &Path) -> Result<Checkpoint, CheckpointError> {
+        let manifest_path = dir.join(MANIFEST_FILE);
+        if !manifest_path.is_file() {
+            return Err(CheckpointError::MissingManifest(dir.to_path_buf()));
+        }
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| CheckpointError::io(&manifest_path, e))?;
+        let manifest = Json::parse(&text).map_err(|e| CheckpointError::BadManifest {
+            path: manifest_path.clone(),
+            msg: e.to_string(),
+        })?;
+
+        let missing = |key: &str| CheckpointError::MissingManifestKey {
+            key: key.to_string(),
+        };
+        let req_str = |key: &str| -> Result<String, CheckpointError> {
+            Ok(manifest
+                .get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| missing(key))?
+                .to_string())
+        };
+        let version = manifest
+            .get("format_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| missing("format_version"))? as u32;
+        if version != CHECKPOINT_FORMAT_VERSION {
+            return Err(CheckpointError::BadVersion {
+                found: version,
+                supported: CHECKPOINT_FORMAT_VERSION,
+            });
+        }
+        let step = manifest
+            .get("step")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| missing("step"))?;
+        let spec = req_str("spec")?;
+        let optimizer = req_str("optimizer")?;
+        let task = req_str("task")?;
+        let run_name = req_str("run_name")?;
+
+        let comp_obj = manifest.get("components").ok_or_else(|| missing("components"))?;
+        let mut components = BTreeMap::new();
+        let names: Vec<String> = match comp_obj {
+            Json::Obj(m) => m.keys().cloned().collect(),
+            _ => {
+                return Err(CheckpointError::BadManifest {
+                    path: manifest_path.clone(),
+                    msg: "`components` is not an object".to_string(),
+                });
+            }
+        };
+        for name in names {
+            let meta = comp_obj.get(&name).unwrap();
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| missing(&format!("components.{name}.file")))?;
+            let want_hash = meta
+                .get("hash")
+                .and_then(Json::as_str)
+                .ok_or_else(|| missing(&format!("components.{name}.hash")))?;
+            let path = dir.join(file);
+            let bytes = std::fs::read(&path).map_err(|e| CheckpointError::io(&path, e))?;
+            if format!("{:016x}", fnv1a64(&bytes)) != want_hash {
+                return Err(CheckpointError::HashMismatch { name });
+            }
+            let sd = StateDict::from_bytes(&bytes)
+                .map_err(|source| CheckpointError::State { name: name.clone(), source })?;
+            components.insert(name, sd);
+        }
+
+        let record = match manifest.get("record").and_then(Json::as_str) {
+            None => None,
+            Some(file) => {
+                let path = dir.join(file);
+                let j = Json::from_file(&path)
+                    .map_err(|e| CheckpointError::BadRecord { msg: e.to_string() })?;
+                Some(RunRecord::from_json(&j).map_err(|msg| CheckpointError::BadRecord { msg })?)
+            }
+        };
+
+        Ok(Checkpoint {
+            step,
+            spec,
+            optimizer,
+            task,
+            run_name,
+            components,
+            record,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::state::Value;
+
+    fn temp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mkor-ckpt-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample() -> Checkpoint {
+        let mut model = StateDict::new();
+        model.put_vector("w", &[1.0, 2.5, -3.0]);
+        let mut opt = StateDict::new();
+        opt.put_u64("t", 17).put_f64("ema", 0.25);
+        let mut components = BTreeMap::new();
+        components.insert("model".to_string(), model);
+        components.insert("optimizer".to_string(), opt);
+        Checkpoint {
+            step: 17,
+            spec: "mkor:f=5".to_string(),
+            optimizer: "mkor".to_string(),
+            task: "glue".to_string(),
+            run_name: "t".to_string(),
+            components,
+            record: None,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = temp_dir("roundtrip");
+        let ckpt = sample();
+        ckpt.save(&dir).unwrap();
+        assert!(Checkpoint::exists(&dir));
+        let re = Checkpoint::load(&dir).unwrap();
+        assert_eq!(re.step, 17);
+        assert_eq!(re.spec, "mkor:f=5");
+        assert_eq!(re.task, "glue");
+        assert_eq!(re.components.len(), 2);
+        assert_eq!(re.component("optimizer").unwrap().u64v("t").unwrap(), 17);
+        assert_eq!(
+            re.component("model").unwrap().vector("w", 3).unwrap(),
+            vec![1.0, 2.5, -3.0]
+        );
+        assert!(matches!(
+            re.component("rng").unwrap_err(),
+            CheckpointError::MissingComponent { .. }
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_and_missing_key_are_distinct_errors() {
+        let dir = temp_dir("missing");
+        assert!(!Checkpoint::exists(&dir));
+        assert!(matches!(
+            Checkpoint::load(&dir).unwrap_err(),
+            CheckpointError::MissingManifest(_)
+        ));
+        // A manifest without `step` fails with the key name.
+        let ckpt = sample();
+        ckpt.save(&dir).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"step\"", "\"stepp\"")).unwrap();
+        let e = Checkpoint::load(&dir).unwrap_err();
+        assert!(
+            matches!(&e, CheckpointError::MissingManifestKey { key } if key == "step"),
+            "{e:?}"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Resolve a component's blob path through the manifest (filenames are
+    /// step-stamped).
+    fn blob_path(dir: &Path, component: &str) -> PathBuf {
+        let manifest = Json::from_file(&dir.join(MANIFEST_FILE)).unwrap();
+        let comp = manifest.get("components").unwrap().get(component).unwrap();
+        dir.join(comp.get("file").and_then(Json::as_str).unwrap())
+    }
+
+    #[test]
+    fn corrupted_and_truncated_blobs_are_rejected() {
+        let dir = temp_dir("corrupt");
+        sample().save(&dir).unwrap();
+        let bin = blob_path(&dir, "model");
+        let bytes = std::fs::read(&bin).unwrap();
+        // Truncation changes the content hash → HashMismatch.
+        std::fs::write(&bin, &bytes[..bytes.len() - 2]).unwrap();
+        let e = Checkpoint::load(&dir).unwrap_err();
+        assert!(
+            matches!(&e, CheckpointError::HashMismatch { name } if name == "model"),
+            "{e:?}"
+        );
+        // A truncated blob that is *re-hashed into the manifest* still
+        // fails, now at the codec layer — the decode error names the cause.
+        let truncated = &bytes[..bytes.len() - 2];
+        let e = StateDict::from_bytes(truncated).unwrap_err();
+        assert!(matches!(e, StateError::Truncated { .. }), "{e:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resaving_gcs_old_blobs_and_never_touches_referenced_files() {
+        let dir = temp_dir("gc");
+        let mut ckpt = sample();
+        ckpt.save(&dir).unwrap();
+        let old_model = blob_path(&dir, "model");
+        assert!(old_model.is_file());
+        // A later snapshot writes fresh names, then GCs the old ones.
+        ckpt.step = 18;
+        ckpt.save(&dir).unwrap();
+        let new_model = blob_path(&dir, "model");
+        assert_ne!(old_model, new_model, "blob names are step-stamped");
+        assert!(!old_model.exists(), "previous blob garbage-collected");
+        assert!(new_model.is_file());
+        assert_eq!(Checkpoint::load(&dir).unwrap().step, 18);
+        // Orphans from a crashed save are ignored by load and collected by
+        // the next successful save.
+        std::fs::write(dir.join("optimizer-99.bin"), b"partial").unwrap();
+        assert_eq!(Checkpoint::load(&dir).unwrap().step, 18);
+        ckpt.step = 19;
+        ckpt.save(&dir).unwrap();
+        assert!(!dir.join("optimizer-99.bin").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn future_format_version_is_rejected() {
+        let dir = temp_dir("version");
+        sample().save(&dir).unwrap();
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, text.replace("\"format_version\": 1", "\"format_version\": 9"))
+            .unwrap();
+        let e = Checkpoint::load(&dir).unwrap_err();
+        assert!(matches!(e, CheckpointError::BadVersion { found: 9, .. }), "{e:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_records_hashes_and_sizes() {
+        let dir = temp_dir("meta");
+        sample().save(&dir).unwrap();
+        let manifest = Json::from_file(&dir.join(MANIFEST_FILE)).unwrap();
+        let comp = manifest.get("components").unwrap().get("model").unwrap();
+        let file = comp.get("file").and_then(Json::as_str).unwrap();
+        let bytes = std::fs::read(dir.join(file)).unwrap();
+        assert_eq!(
+            comp.get("hash").and_then(Json::as_str).unwrap(),
+            format!("{:016x}", fnv1a64(&bytes))
+        );
+        assert_eq!(comp.get("bytes").and_then(Json::as_usize).unwrap(), bytes.len());
+        // The saved state blob also survives a value-level inspection.
+        let sd = StateDict::from_bytes(&bytes).unwrap();
+        assert!(matches!(sd.get("w"), Some(Value::Tensor(_))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

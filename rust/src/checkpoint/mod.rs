@@ -1,0 +1,39 @@
+//! Checkpoint subsystem: durable save/restore of training state, resumable
+//! runs and sweeps.
+//!
+//! MKOR's whole value proposition is *frequent* second-order updates — the
+//! factor inverses accumulated by rank-1 updates ARE the optimizer, so a
+//! killed run used to lose them all. This subsystem makes training state
+//! durable in three layers:
+//!
+//! 1. [`state`] — [`StateDict`], a nested map of named f32 tensors and
+//!    scalar counters, with a versioned, endian-stable binary codec
+//!    (bitwise round-trips) and a JSON debug dump;
+//! 2. [`snapshot`] — the [`Checkpointable`] trait
+//!    (`state_dict()` / `load_state_dict()` with missing-/unexpected-key
+//!    and shape-mismatch errors), implemented by every optimizer, the
+//!    model, the LR schedules and the harness RNG;
+//! 3. [`manifest`] — [`Checkpoint`] directories: a manifest JSON carrying
+//!    the canonical `OptimizerSpec` string, step count, task and
+//!    per-component content hashes, plus one `.bin` blob per component,
+//!    validated on load.
+//!
+//! The acceptance property is **bitwise resume equivalence**: training 2N
+//! steps straight and training N steps, checkpointing, restoring into a
+//! fresh process and training N more produce identical loss series and
+//! final weights (`rust/tests/checkpoint_resume.rs` asserts this for mkor,
+//! mkor-h, kfac and lamb).
+//!
+//! Entry points: `TrainerBuilder::checkpoint_every/checkpoint_dir/
+//! resume_from`, the `RunOpts` checkpoint knobs in
+//! [`crate::experiments::convergence`], and the CLI
+//! (`mkor sim --checkpoint-every N --checkpoint-dir D --resume-from D`,
+//! `mkor sweep --resume`).
+
+pub mod manifest;
+pub mod snapshot;
+pub mod state;
+
+pub use manifest::{Checkpoint, CheckpointError, CHECKPOINT_FORMAT_VERSION, MANIFEST_FILE};
+pub use snapshot::Checkpointable;
+pub use state::{fnv1a64, StateDict, StateError, Tensor, Value, STATE_FORMAT_VERSION};

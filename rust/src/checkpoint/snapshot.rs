@@ -1,0 +1,224 @@
+//! The [`Checkpointable`] trait: `state_dict()` / `load_state_dict()` for
+//! every stateful training component.
+//!
+//! Implementations live next to the state they serialize: each optimizer
+//! implements the trait in its own module (`optim/*`), the LR schedules in
+//! [`crate::optim::schedule`], and this module covers the model
+//! ([`Dense`] / [`Mlp`]) and the harness RNG ([`Rng`]). The contract every
+//! implementation honors:
+//!
+//! * `state_dict()` captures everything the component needs to continue a
+//!   run bitwise — restoring into a freshly-constructed component (same
+//!   configuration) and stepping on must produce the exact trajectory the
+//!   uninterrupted component would have;
+//! * `load_state_dict()` validates: a missing key is
+//!   [`StateError::MissingKey`], a key the component doesn't know is
+//!   [`StateError::UnexpectedKey`], and a tensor of the wrong shape is
+//!   [`StateError::ShapeMismatch`] — configuration mismatches fail loudly
+//!   instead of silently corrupting a resumed run.
+//!
+//! Hyperparameters are deliberately NOT in state dicts: they live in the
+//! [`OptimizerSpec`](crate::optim::OptimizerSpec) recorded by the
+//! checkpoint manifest, which reconstructs the component before the state
+//! is loaded into it.
+
+use crate::checkpoint::state::{StateDict, StateError};
+use crate::linalg::Matrix;
+use crate::model::{Dense, Mlp};
+use crate::util::Rng;
+
+/// Save/restore interface for stateful training components.
+pub trait Checkpointable {
+    /// Serialize the component's mutable state (not its configuration).
+    fn state_dict(&self) -> StateDict;
+
+    /// Restore state captured by [`Checkpointable::state_dict`] on a
+    /// component with the same configuration. Errors (and leaves the
+    /// component in an unspecified but memory-safe state) on missing /
+    /// unexpected keys and shape mismatches.
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError>;
+}
+
+/// Store an indexed list of matrices under `key` (entries `"0"`, `"1"`, …).
+pub fn put_matrices<'a>(
+    sd: &mut StateDict,
+    key: &str,
+    items: impl IntoIterator<Item = &'a Matrix>,
+) {
+    let mut d = StateDict::new();
+    for (i, m) in items.into_iter().enumerate() {
+        d.put_matrix(&i.to_string(), m);
+    }
+    sd.put_dict(key, d);
+}
+
+/// Store an indexed list of vectors under `key`.
+pub fn put_vectors<'a>(
+    sd: &mut StateDict,
+    key: &str,
+    items: impl IntoIterator<Item = &'a Vec<f32>>,
+) {
+    let mut d = StateDict::new();
+    for (i, v) in items.into_iter().enumerate() {
+        d.put_vector(&i.to_string(), v);
+    }
+    sd.put_dict(key, d);
+}
+
+/// Read back what [`put_matrices`] stored, validating the entry count and
+/// every shape against `shapes` (so a checkpoint from a differently-sized
+/// model fails with a named error instead of loading garbage).
+pub fn matrices_from(
+    sd: &StateDict,
+    key: &str,
+    shapes: &[(usize, usize)],
+) -> Result<Vec<Matrix>, StateError> {
+    let d = sd.dict(key)?;
+    let expected: Vec<String> = (0..shapes.len()).map(|i| i.to_string()).collect();
+    d.check_keys_exact(&expected)?;
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &(rows, cols))| d.matrix(&i.to_string(), rows, cols))
+        .collect()
+}
+
+/// Read back what [`put_vectors`] stored, validating count and lengths.
+pub fn vectors_from(
+    sd: &StateDict,
+    key: &str,
+    lens: &[usize],
+) -> Result<Vec<Vec<f32>>, StateError> {
+    let d = sd.dict(key)?;
+    let expected: Vec<String> = (0..lens.len()).map(|i| i.to_string()).collect();
+    d.check_keys_exact(&expected)?;
+    lens.iter()
+        .enumerate()
+        .map(|(i, &len)| d.vector(&i.to_string(), len))
+        .collect()
+}
+
+impl Checkpointable for Dense {
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.put_matrix("w", &self.w).put_vector("bias", &self.bias);
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(&["w", "bias"], &[])?;
+        self.w = state.matrix("w", self.w.rows(), self.w.cols())?;
+        self.bias = state.vector("bias", self.bias.len())?;
+        Ok(())
+    }
+}
+
+impl Checkpointable for Mlp {
+    fn state_dict(&self) -> StateDict {
+        // Forward caches are per-batch scratch, not run state.
+        let mut sd = StateDict::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            sd.put_dict(&format!("layer{i}"), layer.state_dict());
+        }
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        let expected: Vec<String> = (0..self.layers.len()).map(|i| format!("layer{i}")).collect();
+        state.check_keys_exact(&expected)?;
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            layer.load_state_dict(state.dict(&format!("layer{i}"))?)?;
+        }
+        Ok(())
+    }
+}
+
+impl Checkpointable for Rng {
+    fn state_dict(&self) -> StateDict {
+        let (s, spare) = self.state();
+        let mut sd = StateDict::new();
+        for (i, word) in s.iter().enumerate() {
+            sd.put_u64(&format!("s{i}"), *word);
+        }
+        sd.put_opt_f64("gauss_spare", spare);
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(&["s0", "s1", "s2", "s3"], &["gauss_spare"])?;
+        let s = [
+            state.u64v("s0")?,
+            state.u64v("s1")?,
+            state.u64v("s2")?,
+            state.u64v("s3")?,
+        ];
+        self.set_state(s, state.opt_f64("gauss_spare")?);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Activation;
+
+    #[test]
+    fn mlp_roundtrip_restores_exact_weights() {
+        let mut rng = Rng::new(3);
+        let net = Mlp::new(&[4, 6, 2], Activation::Tanh, &mut rng);
+        let sd = net.state_dict();
+        // Perturb, then restore.
+        let mut other = Mlp::new(&[4, 6, 2], Activation::Tanh, &mut rng);
+        other.load_state_dict(&sd).unwrap();
+        for (a, b) in net.layers.iter().zip(&other.layers) {
+            assert_eq!(a.w.data(), b.w.data());
+            assert_eq!(a.bias, b.bias);
+        }
+        // And the round-tripped dict is identical.
+        assert_eq!(other.state_dict(), sd);
+        // A differently-shaped model rejects the load with a shape error.
+        let mut wrong = Mlp::new(&[4, 8, 2], Activation::Tanh, &mut rng);
+        let e = wrong.load_state_dict(&sd).unwrap_err();
+        assert!(matches!(e, StateError::ShapeMismatch { .. }), "{e:?}");
+        // A model with a different layer count rejects by key set.
+        let mut deeper = Mlp::new(&[4, 6, 6, 2], Activation::Tanh, &mut rng);
+        let e = deeper.load_state_dict(&sd).unwrap_err();
+        assert!(matches!(e, StateError::MissingKey { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn rng_roundtrip_continues_the_stream_bitwise() {
+        let mut a = Rng::new(99);
+        // Consume an odd number of gaussians so the Box–Muller spare is
+        // populated — the tricky half of the state.
+        let _ = a.gaussian();
+        let _ = a.next_u64();
+        let sd = a.state_dict();
+        let mut b = Rng::new(0);
+        b.load_state_dict(&sd).unwrap();
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+            assert_eq!(a.gaussian().to_bits(), b.gaussian().to_bits());
+        }
+    }
+
+    #[test]
+    fn indexed_helpers_validate_count_and_shape() {
+        let mut sd = StateDict::new();
+        let ms = [Matrix::identity(2), Matrix::zeros(3, 2)];
+        put_matrices(&mut sd, "m", ms.iter());
+        let got = matrices_from(&sd, "m", &[(2, 2), (3, 2)]).unwrap();
+        assert_eq!(got[1].rows(), 3);
+        // Wrong count → missing/unexpected key.
+        assert!(matrices_from(&sd, "m", &[(2, 2)]).is_err());
+        assert!(matrices_from(&sd, "m", &[(2, 2), (3, 2), (1, 1)]).is_err());
+        // Wrong shape → ShapeMismatch.
+        let e = matrices_from(&sd, "m", &[(2, 2), (2, 3)]).unwrap_err();
+        assert!(matches!(e, StateError::ShapeMismatch { .. }), "{e:?}");
+        // Vectors behave the same.
+        let vs = [vec![1.0f32, 2.0], vec![3.0]];
+        put_vectors(&mut sd, "v", vs.iter());
+        assert_eq!(vectors_from(&sd, "v", &[2, 1]).unwrap()[0], vec![1.0, 2.0]);
+        assert!(vectors_from(&sd, "v", &[2, 2]).is_err());
+    }
+}

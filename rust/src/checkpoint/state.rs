@@ -1,0 +1,679 @@
+//! `StateDict`: the tree of named tensors and counters that IS a training
+//! run's durable state, plus its versioned binary codec.
+//!
+//! Every [`Checkpointable`](crate::checkpoint::Checkpointable) component
+//! (optimizers, model, RNG, schedules) serializes to a [`StateDict`] — a
+//! nested map of named f32 tensors and scalar counters. The binary codec is
+//! versioned and endian-stable (everything little-endian, f32/f64 stored as
+//! raw bits), so a checkpoint written on one host restores *bitwise* on
+//! another: restoring and continuing a run reproduces the exact loss series
+//! the uninterrupted run would have produced. A lossy-but-readable JSON
+//! debug dump (via [`crate::util::json`]) is available for inspection.
+//!
+//! Keys are sorted (BTreeMap), so encoding is deterministic: the same state
+//! always produces the same bytes, which is what makes the manifest's
+//! content hashes meaningful.
+
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Magic prefix of every `.bin` state blob.
+pub const STATE_MAGIC: &[u8; 8] = b"MKORCKPT";
+
+/// Binary format version written by this build (bump on layout changes).
+pub const STATE_FORMAT_VERSION: u32 = 1;
+
+/// Why a state dict failed to decode or load into a component.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum StateError {
+    #[error("missing state key `{key}`")]
+    MissingKey { key: String },
+    #[error("unexpected state key `{key}`")]
+    UnexpectedKey { key: String },
+    #[error("state key `{key}`: expected a {expected}, found a {found}")]
+    TypeMismatch {
+        key: String,
+        expected: &'static str,
+        found: &'static str,
+    },
+    #[error(
+        "state key `{key}`: shape mismatch: expected {expected_rows}x{expected_cols}, \
+         found {found_rows}x{found_cols}"
+    )]
+    ShapeMismatch {
+        key: String,
+        expected_rows: usize,
+        expected_cols: usize,
+        found_rows: usize,
+        found_cols: usize,
+    },
+    #[error("state key `{key}`: {reason}")]
+    Invalid { key: String, reason: String },
+    #[error("not a state blob (bad magic)")]
+    BadMagic,
+    #[error("unsupported state format version {found} (this build reads version {supported})")]
+    BadVersion { found: u32, supported: u32 },
+    #[error("truncated state blob at byte {at}")]
+    Truncated { at: usize },
+    #[error("bad value tag {tag} at byte {at}")]
+    BadTag { tag: u8, at: usize },
+    #[error("{extra} trailing bytes after state blob")]
+    TrailingBytes { extra: usize },
+}
+
+impl StateError {
+    /// Shorthand for [`StateError::Invalid`].
+    pub fn invalid(key: &str, reason: impl Into<String>) -> StateError {
+        StateError::Invalid {
+            key: key.to_string(),
+            reason: reason.into(),
+        }
+    }
+}
+
+/// A dense f32 tensor with explicit shape (vectors are `len × 1`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn from_matrix(m: &Matrix) -> Tensor {
+        Tensor {
+            rows: m.rows(),
+            cols: m.cols(),
+            data: m.data().to_vec(),
+        }
+    }
+
+    pub fn from_slice(v: &[f32]) -> Tensor {
+        Tensor {
+            rows: v.len(),
+            cols: 1,
+            data: v.to_vec(),
+        }
+    }
+
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.clone())
+    }
+}
+
+/// One value of a [`StateDict`] tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Dense f32 tensor (factor inverses, moments, weights).
+    Tensor(Tensor),
+    /// Unsigned counter (step counts, trigger counts, RNG words, flags).
+    U64(u64),
+    /// f64 scalar (EMA accumulators, losses); stored as raw bits, so the
+    /// round-trip is bitwise.
+    F64(f64),
+    /// Nested dict (per-layer state, sub-components).
+    Dict(StateDict),
+}
+
+impl Value {
+    fn kind(&self) -> &'static str {
+        match self {
+            Value::Tensor(_) => "tensor",
+            Value::U64(_) => "u64",
+            Value::F64(_) => "f64",
+            Value::Dict(_) => "dict",
+        }
+    }
+}
+
+/// A nested map of named tensors and counters — the serialized state of one
+/// [`Checkpointable`](crate::checkpoint::Checkpointable) component.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct StateDict {
+    entries: BTreeMap<String, Value>,
+}
+
+impl StateDict {
+    pub fn new() -> StateDict {
+        StateDict::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.entries.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    // ---- insertion ----------------------------------------------------
+
+    pub fn put(&mut self, key: &str, value: Value) -> &mut Self {
+        self.entries.insert(key.to_string(), value);
+        self
+    }
+
+    pub fn put_matrix(&mut self, key: &str, m: &Matrix) -> &mut Self {
+        self.put(key, Value::Tensor(Tensor::from_matrix(m)))
+    }
+
+    pub fn put_vector(&mut self, key: &str, v: &[f32]) -> &mut Self {
+        self.put(key, Value::Tensor(Tensor::from_slice(v)))
+    }
+
+    pub fn put_u64(&mut self, key: &str, v: u64) -> &mut Self {
+        self.put(key, Value::U64(v))
+    }
+
+    pub fn put_usize(&mut self, key: &str, v: usize) -> &mut Self {
+        self.put_u64(key, v as u64)
+    }
+
+    pub fn put_f64(&mut self, key: &str, v: f64) -> &mut Self {
+        self.put(key, Value::F64(v))
+    }
+
+    pub fn put_dict(&mut self, key: &str, d: StateDict) -> &mut Self {
+        self.put(key, Value::Dict(d))
+    }
+
+    /// Store `Some` values only; `None` leaves the key absent (read back
+    /// with [`StateDict::opt_u64`]).
+    pub fn put_opt_u64(&mut self, key: &str, v: Option<u64>) -> &mut Self {
+        if let Some(v) = v {
+            self.put_u64(key, v);
+        }
+        self
+    }
+
+    /// Store `Some` values only; `None` leaves the key absent.
+    pub fn put_opt_f64(&mut self, key: &str, v: Option<f64>) -> &mut Self {
+        if let Some(v) = v {
+            self.put_f64(key, v);
+        }
+        self
+    }
+
+    // ---- typed access -------------------------------------------------
+
+    fn require(&self, key: &str) -> Result<&Value, StateError> {
+        self.entries.get(key).ok_or_else(|| StateError::MissingKey {
+            key: key.to_string(),
+        })
+    }
+
+    fn mismatch(key: &str, expected: &'static str, found: &Value) -> StateError {
+        StateError::TypeMismatch {
+            key: key.to_string(),
+            expected,
+            found: found.kind(),
+        }
+    }
+
+    /// The raw tensor under `key` (no shape check — callers with partially
+    /// data-dependent shapes, e.g. SNGD's stored batches, validate the
+    /// dimensions they do know).
+    pub fn tensor(&self, key: &str) -> Result<&Tensor, StateError> {
+        match self.require(key)? {
+            Value::Tensor(t) => Ok(t),
+            other => Err(StateDict::mismatch(key, "tensor", other)),
+        }
+    }
+
+    /// The tensor under `key` as a [`Matrix`], checked against the expected
+    /// shape.
+    pub fn matrix(&self, key: &str, rows: usize, cols: usize) -> Result<Matrix, StateError> {
+        let t = self.tensor(key)?;
+        if t.rows != rows || t.cols != cols {
+            return Err(StateError::ShapeMismatch {
+                key: key.to_string(),
+                expected_rows: rows,
+                expected_cols: cols,
+                found_rows: t.rows,
+                found_cols: t.cols,
+            });
+        }
+        Ok(t.to_matrix())
+    }
+
+    /// The tensor under `key` as a flat vector of the expected length.
+    pub fn vector(&self, key: &str, len: usize) -> Result<Vec<f32>, StateError> {
+        let t = self.tensor(key)?;
+        if t.rows != len || t.cols != 1 {
+            return Err(StateError::ShapeMismatch {
+                key: key.to_string(),
+                expected_rows: len,
+                expected_cols: 1,
+                found_rows: t.rows,
+                found_cols: t.cols,
+            });
+        }
+        Ok(t.data.clone())
+    }
+
+    pub fn u64v(&self, key: &str) -> Result<u64, StateError> {
+        match self.require(key)? {
+            Value::U64(v) => Ok(*v),
+            other => Err(StateDict::mismatch(key, "u64", other)),
+        }
+    }
+
+    pub fn usizev(&self, key: &str) -> Result<usize, StateError> {
+        Ok(self.u64v(key)? as usize)
+    }
+
+    pub fn f64v(&self, key: &str) -> Result<f64, StateError> {
+        match self.require(key)? {
+            Value::F64(v) => Ok(*v),
+            other => Err(StateDict::mismatch(key, "f64", other)),
+        }
+    }
+
+    pub fn dict(&self, key: &str) -> Result<&StateDict, StateError> {
+        match self.require(key)? {
+            Value::Dict(d) => Ok(d),
+            other => Err(StateDict::mismatch(key, "dict", other)),
+        }
+    }
+
+    /// An optional counter (absent key → `None`).
+    pub fn opt_u64(&self, key: &str) -> Result<Option<u64>, StateError> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(Value::U64(v)) => Ok(Some(*v)),
+            Some(other) => Err(StateDict::mismatch(key, "u64", other)),
+        }
+    }
+
+    /// An optional f64 scalar (absent key → `None`).
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, StateError> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(Value::F64(v)) => Ok(Some(*v)),
+            Some(other) => Err(StateDict::mismatch(key, "f64", other)),
+        }
+    }
+
+    /// An optional tensor (absent key → `None`; no shape check).
+    pub fn opt_tensor(&self, key: &str) -> Result<Option<&Tensor>, StateError> {
+        match self.entries.get(key) {
+            None => Ok(None),
+            Some(Value::Tensor(t)) => Ok(Some(t)),
+            Some(other) => Err(StateDict::mismatch(key, "tensor", other)),
+        }
+    }
+
+    /// Error unless this dict's key set is exactly `required` plus any
+    /// subset of `optional` — the missing-/unexpected-key contract of every
+    /// `load_state_dict` implementation.
+    pub fn check_keys(&self, required: &[&str], optional: &[&str]) -> Result<(), StateError> {
+        for key in required {
+            if !self.contains(key) {
+                return Err(StateError::MissingKey {
+                    key: key.to_string(),
+                });
+            }
+        }
+        for key in self.keys() {
+            if !required.contains(&key) && !optional.contains(&key) {
+                return Err(StateError::UnexpectedKey {
+                    key: key.to_string(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// [`StateDict::check_keys`] for dynamically-built key lists (per-layer
+    /// indices).
+    pub fn check_keys_exact(&self, required: &[String]) -> Result<(), StateError> {
+        for key in required {
+            if !self.contains(key) {
+                return Err(StateError::MissingKey { key: key.clone() });
+            }
+        }
+        for key in self.keys() {
+            if !required.iter().any(|r| r == key) {
+                return Err(StateError::UnexpectedKey {
+                    key: key.to_string(),
+                });
+            }
+        }
+        Ok(())
+    }
+
+    // ---- binary codec --------------------------------------------------
+
+    /// Encode to the versioned binary format. Deterministic: sorted keys,
+    /// little-endian throughout, floats as raw bits.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64);
+        out.extend_from_slice(STATE_MAGIC);
+        out.extend_from_slice(&STATE_FORMAT_VERSION.to_le_bytes());
+        encode_dict(self, &mut out);
+        out
+    }
+
+    /// Decode a blob produced by [`StateDict::to_bytes`]. Every failure
+    /// mode (bad magic, unknown version, truncation, bad tags, trailing
+    /// garbage) is a distinct [`StateError`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<StateDict, StateError> {
+        let mut c = Cursor { b: bytes, pos: 0 };
+        let magic = c.take(STATE_MAGIC.len())?;
+        if magic != STATE_MAGIC {
+            return Err(StateError::BadMagic);
+        }
+        let version = c.u32()?;
+        if version != STATE_FORMAT_VERSION {
+            return Err(StateError::BadVersion {
+                found: version,
+                supported: STATE_FORMAT_VERSION,
+            });
+        }
+        let dict = decode_dict(&mut c)?;
+        if c.pos != c.b.len() {
+            return Err(StateError::TrailingBytes {
+                extra: c.b.len() - c.pos,
+            });
+        }
+        Ok(dict)
+    }
+
+    // ---- JSON debug dump -----------------------------------------------
+
+    /// Human-readable JSON dump for debugging. Lossy (u64 counters beyond
+    /// 2^53 and f64 bit patterns degrade through JSON numbers) — the binary
+    /// codec is the round-trip format; this is for eyeballs.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (k, v) in &self.entries {
+            o.set(k, value_json(v));
+        }
+        o
+    }
+}
+
+fn value_json(v: &Value) -> Json {
+    match v {
+        Value::Tensor(t) => {
+            let mut o = Json::obj();
+            o.set("rows", Json::Num(t.rows as f64))
+                .set("cols", Json::Num(t.cols as f64))
+                .set("data", Json::from_f32s(&t.data));
+            o
+        }
+        Value::U64(n) => Json::Num(*n as f64),
+        Value::F64(x) => Json::Num(*x),
+        Value::Dict(d) => d.to_json(),
+    }
+}
+
+// Value tags of the binary format.
+const TAG_TENSOR: u8 = 1;
+const TAG_U64: u8 = 2;
+const TAG_F64: u8 = 3;
+const TAG_DICT: u8 = 4;
+
+fn encode_dict(d: &StateDict, out: &mut Vec<u8>) {
+    out.extend_from_slice(&(d.entries.len() as u32).to_le_bytes());
+    for (k, v) in &d.entries {
+        out.extend_from_slice(&(k.len() as u32).to_le_bytes());
+        out.extend_from_slice(k.as_bytes());
+        encode_value(v, out);
+    }
+}
+
+fn encode_value(v: &Value, out: &mut Vec<u8>) {
+    match v {
+        Value::Tensor(t) => {
+            out.push(TAG_TENSOR);
+            out.extend_from_slice(&(t.rows as u32).to_le_bytes());
+            out.extend_from_slice(&(t.cols as u32).to_le_bytes());
+            for x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Value::U64(n) => {
+            out.push(TAG_U64);
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        Value::F64(x) => {
+            out.push(TAG_F64);
+            out.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+        Value::Dict(d) => {
+            out.push(TAG_DICT);
+            encode_dict(d, out);
+        }
+    }
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], StateError> {
+        // checked_add: corrupted length fields must not overflow-panic.
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&end| end <= self.b.len())
+            .ok_or(StateError::Truncated { at: self.b.len() })?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, StateError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, StateError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, StateError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn decode_dict(c: &mut Cursor) -> Result<StateDict, StateError> {
+    let n = c.u32()? as usize;
+    let mut d = StateDict::new();
+    for _ in 0..n {
+        let klen = c.u32()? as usize;
+        let key = std::str::from_utf8(c.take(klen)?)
+            .map_err(|_| StateError::invalid("<key>", "non-utf8 key bytes"))?
+            .to_string();
+        let value = decode_value(c)?;
+        d.entries.insert(key, value);
+    }
+    Ok(d)
+}
+
+fn decode_value(c: &mut Cursor) -> Result<Value, StateError> {
+    let at = c.pos;
+    let tag = c.u8()?;
+    match tag {
+        TAG_TENSOR => {
+            let rows = c.u32()? as usize;
+            let cols = c.u32()? as usize;
+            let n = rows
+                .checked_mul(cols)
+                .and_then(|n| n.checked_mul(4))
+                .ok_or(StateError::Truncated { at })?;
+            let raw = c.take(n)?;
+            let data = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
+            Ok(Value::Tensor(Tensor { rows, cols, data }))
+        }
+        TAG_U64 => Ok(Value::U64(c.u64()?)),
+        TAG_F64 => Ok(Value::F64(f64::from_bits(c.u64()?))),
+        TAG_DICT => Ok(Value::Dict(decode_dict(c)?)),
+        tag => Err(StateError::BadTag { tag, at }),
+    }
+}
+
+/// FNV-1a 64-bit content hash — the manifest's integrity check over each
+/// component's encoded bytes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> StateDict {
+        let mut layer = StateDict::new();
+        layer
+            .put_matrix("w", &Matrix::from_rows(&[&[1.0, 2.0], &[3.0, -4.5]]))
+            .put_vector("bias", &[0.5, -0.25]);
+        let mut sd = StateDict::new();
+        sd.put_u64("t", 42)
+            .put_f64("ema", 0.123456789012345)
+            .put_opt_f64("last_loss", Some(std::f64::consts::PI / 3.0))
+            .put_dict("layer0", layer);
+        sd
+    }
+
+    #[test]
+    fn binary_roundtrip_is_exact() {
+        let sd = sample();
+        let bytes = sd.to_bytes();
+        let re = StateDict::from_bytes(&bytes).unwrap();
+        assert_eq!(re, sd);
+        // Deterministic encoding: same dict → same bytes.
+        assert_eq!(re.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn typed_getters_and_shape_checks() {
+        let sd = sample();
+        assert_eq!(sd.u64v("t").unwrap(), 42);
+        assert!((sd.f64v("ema").unwrap() - 0.123456789012345).abs() == 0.0);
+        let layer = sd.dict("layer0").unwrap();
+        let w = layer.matrix("w", 2, 2).unwrap();
+        assert_eq!(w[(1, 1)], -4.5);
+        assert_eq!(layer.vector("bias", 2).unwrap(), vec![0.5, -0.25]);
+        // Wrong shape is a ShapeMismatch naming the key.
+        let e = layer.matrix("w", 3, 2).unwrap_err();
+        assert!(matches!(e, StateError::ShapeMismatch { .. }), "{e:?}");
+        assert!(e.to_string().contains("`w`"), "{e}");
+        // Wrong type is a TypeMismatch.
+        let e = sd.matrix("t", 1, 1).unwrap_err();
+        assert!(matches!(e, StateError::TypeMismatch { .. }), "{e:?}");
+        // Missing key is a MissingKey.
+        let e = sd.u64v("nope").unwrap_err();
+        assert!(matches!(e, StateError::MissingKey { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn optional_values_roundtrip_presence() {
+        let mut sd = StateDict::new();
+        sd.put_opt_u64("present", Some(7)).put_opt_u64("absent", None);
+        assert_eq!(sd.opt_u64("present").unwrap(), Some(7));
+        assert_eq!(sd.opt_u64("absent").unwrap(), None);
+        let re = StateDict::from_bytes(&sd.to_bytes()).unwrap();
+        assert_eq!(re.opt_u64("present").unwrap(), Some(7));
+        assert_eq!(re.opt_u64("absent").unwrap(), None);
+    }
+
+    #[test]
+    fn check_keys_flags_missing_and_unexpected() {
+        let sd = sample();
+        sd.check_keys(&["t", "ema", "layer0"], &["last_loss"]).unwrap();
+        let e = sd.check_keys(&["t", "ema"], &["last_loss"]).unwrap_err();
+        assert!(matches!(&e, StateError::UnexpectedKey { key } if key == "layer0"), "{e:?}");
+        let e = sd
+            .check_keys(&["t", "ema", "layer0", "gone"], &["last_loss"])
+            .unwrap_err();
+        assert!(matches!(&e, StateError::MissingKey { key } if key == "gone"), "{e:?}");
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let sd = sample();
+        let bytes = sd.to_bytes();
+        // Truncation at any prefix fails with Truncated (never panics).
+        for cut in [3, 8, 12, 20, bytes.len() - 1] {
+            let e = StateDict::from_bytes(&bytes[..cut]).unwrap_err();
+            assert!(
+                matches!(e, StateError::Truncated { .. } | StateError::BadMagic),
+                "cut={cut}: {e:?}"
+            );
+        }
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert_eq!(StateDict::from_bytes(&bad), Err(StateError::BadMagic));
+        // Future version.
+        let mut newer = bytes.clone();
+        newer[8..12].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            StateDict::from_bytes(&newer),
+            Err(StateError::BadVersion { found: 99, .. })
+        ));
+        // Trailing garbage.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(
+            StateDict::from_bytes(&long),
+            Err(StateError::TrailingBytes { extra: 1 })
+        ));
+    }
+
+    #[test]
+    fn f64_bits_survive_exactly() {
+        // The codec must round-trip every bit pattern, including ones JSON
+        // would mangle.
+        for x in [0.1f64, 1.0 / 3.0, f64::MIN_POSITIVE, 1e300, -0.0] {
+            let mut sd = StateDict::new();
+            sd.put_f64("x", x);
+            let re = StateDict::from_bytes(&sd.to_bytes()).unwrap();
+            assert_eq!(re.f64v("x").unwrap().to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn json_dump_is_readable() {
+        let j = sample().to_json();
+        assert_eq!(j.get("t").unwrap().as_usize(), Some(42));
+        let w = j.get("layer0").unwrap().get("w").unwrap();
+        assert_eq!(w.get("rows").unwrap().as_usize(), Some(2));
+        assert_eq!(w.get("data").unwrap().as_arr().unwrap().len(), 4);
+        // The dump parses back as JSON.
+        assert!(Json::parse(&format!("{j:#}")).is_ok());
+    }
+
+    #[test]
+    fn fnv_hash_is_stable_and_content_sensitive() {
+        let a = fnv1a64(b"hello");
+        assert_eq!(a, fnv1a64(b"hello"));
+        assert_ne!(a, fnv1a64(b"hellp"));
+        // Known FNV-1a test vector.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+    }
+}

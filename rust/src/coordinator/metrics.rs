@@ -65,6 +65,13 @@ impl RunRecord {
         self.steps.iter().map(|s| s.loss).collect()
     }
 
+    /// First step at which the train loss ≤ target, smoothed over a
+    /// trailing window of 5 (the same smoothing the convergence harness
+    /// uses, so sweep-based benches report comparable steps-to-target).
+    pub fn steps_to_loss(&self, target: f64) -> Option<usize> {
+        crate::util::stats::first_at_or_below(&self.loss_series(), target, 5)
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", Json::Str(self.name.clone()))
@@ -101,6 +108,82 @@ impl RunRecord {
 
     pub fn save_json(&self, path: &Path) -> anyhow::Result<()> {
         self.to_json().to_file(path)
+    }
+
+    /// Lossless JSON: [`RunRecord::to_json`] plus the full per-step field
+    /// set, so [`RunRecord::from_json`] round-trips the record exactly.
+    /// This is what checkpoints store — a resumed run appends to the
+    /// restored record and its final loss series is indistinguishable from
+    /// an uninterrupted run's. (f64 values survive because the JSON writer
+    /// prints shortest-round-trip representations.)
+    pub fn to_json_full(&self) -> Json {
+        let mut o = self.to_json();
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let mut j = Json::obj();
+                j.set("step", Json::Num(s.step as f64))
+                    .set("loss", Json::Num(s.loss))
+                    .set(
+                        "eval_metric",
+                        s.eval_metric.map_or(Json::Null, Json::Num),
+                    )
+                    .set("lr", Json::Num(s.lr as f64))
+                    .set("wall_secs", Json::Num(s.wall_secs))
+                    .set("grad_comm_bytes", Json::Num(s.grad_comm_bytes as f64))
+                    .set("sync_comm_bytes", Json::Num(s.sync_comm_bytes as f64));
+                j
+            })
+            .collect();
+        o.set("steps", Json::Arr(steps));
+        o
+    }
+
+    /// Parse a record written by [`RunRecord::to_json_full`].
+    pub fn from_json(j: &Json) -> Result<RunRecord, String> {
+        let str_field = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("missing/invalid field `{key}`"))
+        };
+        let steps_json = j
+            .get("steps")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "missing/invalid field `steps`".to_string())?;
+        let mut steps = Vec::with_capacity(steps_json.len());
+        for (i, s) in steps_json.iter().enumerate() {
+            let num = |key: &str| -> Result<f64, String> {
+                s.get(key)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("steps[{i}]: missing/invalid `{key}`"))
+            };
+            steps.push(StepRecord {
+                step: num("step")? as usize,
+                loss: num("loss")?,
+                eval_metric: match s.get("eval_metric") {
+                    None | Some(Json::Null) => None,
+                    Some(v) => Some(
+                        v.as_f64()
+                            .ok_or_else(|| format!("steps[{i}]: invalid `eval_metric`"))?,
+                    ),
+                },
+                lr: num("lr")? as f32,
+                wall_secs: num("wall_secs")?,
+                grad_comm_bytes: num("grad_comm_bytes")? as usize,
+                sync_comm_bytes: num("sync_comm_bytes")? as usize,
+            });
+        }
+        Ok(RunRecord {
+            name: str_field("name")?,
+            optimizer: str_field("optimizer")?,
+            spec: str_field("spec")?,
+            steps,
+            diverged: j.get("diverged").and_then(Json::as_bool).unwrap_or(false),
+            converged_at: j.get("converged_at").and_then(Json::as_usize),
+            switched_at: j.get("switched_at").and_then(Json::as_usize),
+        })
     }
 
     /// CSV "step,loss,lr,eval" (for plotting the figure series).
@@ -181,6 +264,45 @@ mod tests {
         // parse what we print
         let re = Json::parse(&format!("{j:#}")).unwrap();
         assert_eq!(re.get("final_loss").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn full_json_roundtrips_every_step_field() {
+        let r = sample_run();
+        let text = format!("{:#}", r.to_json_full());
+        let re = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re.name, r.name);
+        assert_eq!(re.spec, r.spec);
+        assert_eq!(re.converged_at, r.converged_at);
+        assert_eq!(re.steps.len(), r.steps.len());
+        for (a, b) in r.steps.iter().zip(&re.steps) {
+            assert_eq!(a.step, b.step);
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss must be bitwise");
+            assert_eq!(a.eval_metric, b.eval_metric);
+            assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+            assert_eq!(a.grad_comm_bytes, b.grad_comm_bytes);
+            assert_eq!(a.sync_comm_bytes, b.sync_comm_bytes);
+        }
+        // A messy f64 survives the text round-trip bitwise.
+        let mut r2 = sample_run();
+        r2.steps[0].loss = std::f64::consts::LN_2 / 7.0;
+        let text = format!("{:#}", r2.to_json_full());
+        let re2 = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(re2.steps[0].loss.to_bits(), r2.steps[0].loss.to_bits());
+        // A record without `steps` is rejected with the field name.
+        let e = RunRecord::from_json(&sample_run().to_json()).unwrap_err();
+        assert!(e.contains("steps"), "{e}");
+    }
+
+    #[test]
+    fn steps_to_loss_smooths_over_a_window() {
+        let mut r = sample_run();
+        r.steps[0].loss = 5.0;
+        r.steps[1].loss = 1.0;
+        // Window mean at step 1 is 3.0, so target 2.0 is not yet reached...
+        assert_eq!(r.steps_to_loss(3.0), Some(1));
+        assert_eq!(r.steps_to_loss(0.5), None);
+        assert_eq!(r.steps_to_loss(5.0), Some(0));
     }
 
     #[test]

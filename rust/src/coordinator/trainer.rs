@@ -14,6 +14,7 @@
 //! Divergence (non-finite loss or weights) halts the run and is recorded —
 //! those are the "D" entries of Table 5.
 
+use crate::checkpoint::{Checkpoint, CheckpointError, Checkpointable, StateDict};
 use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
 use crate::coordinator::metrics::{RunRecord, StepRecord};
 use crate::linalg::Matrix;
@@ -21,6 +22,8 @@ use crate::model::{accuracy, mse_loss, softmax_xent, Capture, Mlp};
 use crate::optim::schedule::{Constant, LrSchedule};
 use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 
 /// What a batch is labeled with.
 #[derive(Clone, Debug)]
@@ -44,6 +47,16 @@ pub struct TrainerConfig {
     pub eval_every: usize,
     /// Name recorded in the run record.
     pub run_name: String,
+    /// Write a checkpoint every n completed steps (0 = never). Requires
+    /// `checkpoint_dir`; the driving loop triggers the write by calling
+    /// [`Trainer::checkpoint_tick`] at the end of each iteration.
+    pub checkpoint_every: usize,
+    /// Directory checkpoints are written into (overwritten in place — the
+    /// directory always holds the latest snapshot).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Task label recorded in the checkpoint manifest; resume validates it
+    /// against the resuming run's label when both are non-empty.
+    pub checkpoint_task: String,
 }
 
 impl Default for TrainerConfig {
@@ -54,6 +67,9 @@ impl Default for TrainerConfig {
             target_metric: None,
             eval_every: 0,
             run_name: String::from("run"),
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            checkpoint_task: String::new(),
         }
     }
 }
@@ -78,6 +94,7 @@ pub struct TrainerBuilder {
     spec: OptimizerSpec,
     schedule: Box<dyn LrSchedule + Send>,
     cfg: TrainerConfig,
+    resume: Option<PathBuf>,
 }
 
 impl TrainerBuilder {
@@ -89,6 +106,7 @@ impl TrainerBuilder {
             spec: OptimizerSpec::default(),
             schedule: Box::new(Constant(0.1)),
             cfg: TrainerConfig::default(),
+            resume: None,
         }
     }
 
@@ -151,12 +169,57 @@ impl TrainerBuilder {
         self
     }
 
+    /// Write a checkpoint into `checkpoint_dir` every `n` completed steps
+    /// (0 disables).
+    pub fn checkpoint_every(mut self, n: usize) -> Self {
+        self.cfg.checkpoint_every = n;
+        self
+    }
+
+    /// Directory for periodic checkpoints (see
+    /// [`TrainerBuilder::checkpoint_every`]; also usable with manual
+    /// [`Trainer::save_checkpoint`] calls).
+    pub fn checkpoint_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Task label for the checkpoint manifest (resume cross-checks it).
+    pub fn checkpoint_task(mut self, label: impl Into<String>) -> Self {
+        self.cfg.checkpoint_task = label.into();
+        self
+    }
+
+    /// Restore model/optimizer/schedule state and the run record from a
+    /// checkpoint directory at build time. The checkpoint's canonical spec
+    /// string must match this builder's spec; shapes are validated as the
+    /// state loads. Use [`TrainerBuilder::try_build`] for a `Result`.
+    pub fn resume_from(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.resume = Some(dir.into());
+        self
+    }
+
     /// Build the trainer: constructs the optimizer from the spec against
-    /// the model's layer shapes.
+    /// the model's layer shapes. Panics if a [`TrainerBuilder::resume_from`]
+    /// checkpoint fails validation — harness code wants the loud failure;
+    /// CLI paths use [`TrainerBuilder::try_build`].
     pub fn build(self) -> Trainer {
+        self.try_build()
+            .unwrap_or_else(|e| panic!("TrainerBuilder::build: {e}"))
+    }
+
+    /// [`TrainerBuilder::build`], with checkpoint-resume failures as
+    /// errors instead of panics.
+    pub fn try_build(self) -> Result<Trainer, CheckpointError> {
+        let resume = self.resume;
         let shapes = self.model.shapes();
         let opt = self.spec.build(&shapes);
-        Trainer::from_parts(self.model, opt, self.schedule, self.cfg)
+        let mut trainer = Trainer::from_parts(self.model, opt, self.schedule, self.cfg);
+        if let Some(dir) = resume {
+            let ckpt = Checkpoint::load(&dir)?;
+            trainer.restore_from(&ckpt)?;
+        }
+        Ok(trainer)
     }
 }
 
@@ -229,6 +292,124 @@ impl Trainer {
 
     pub fn optimizer(&self) -> &dyn Optimizer {
         self.opt.as_ref()
+    }
+
+    /// Copy the leader's weights into every worker replica (resume does
+    /// exactly what the post-step broadcast does).
+    fn broadcast_leader(&mut self) {
+        let (leader, rest) = self.replicas.split_first_mut().unwrap();
+        for replica in rest {
+            for (dst, src) in replica.layers.iter_mut().zip(&leader.layers) {
+                dst.w.data_mut().copy_from_slice(src.w.data());
+                dst.bias.copy_from_slice(&src.bias);
+            }
+        }
+    }
+
+    /// Counters + LR-schedule state (the `trainer.bin` component; model
+    /// and optimizer are separate components of the checkpoint).
+    fn counters_state(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t)
+            .put_u64("diverged", self.diverged as u64)
+            .put_dict("schedule", self.schedule.state_dict());
+        sd
+    }
+
+    /// Snapshot the full training state into `dir`: leader model weights,
+    /// optimizer state (factor inverses / moments / counters), trainer
+    /// counters + schedule state, and the run record so far. The directory
+    /// is overwritten in place — it always holds the latest snapshot.
+    pub fn save_checkpoint(&self, dir: &Path) -> Result<(), CheckpointError> {
+        let mut components = BTreeMap::new();
+        components.insert("model".to_string(), self.replicas[0].state_dict());
+        components.insert("optimizer".to_string(), self.opt.state_dict());
+        components.insert("trainer".to_string(), self.counters_state());
+        let ckpt = Checkpoint {
+            step: self.t,
+            spec: self.opt.spec().canonical(),
+            optimizer: self.opt.name().to_string(),
+            task: self.cfg.checkpoint_task.clone(),
+            run_name: self.cfg.run_name.clone(),
+            components,
+            record: Some(self.record.clone()),
+        };
+        ckpt.save(dir)
+    }
+
+    /// Restore state saved by [`Trainer::save_checkpoint`]. Validates the
+    /// spec (canonical string equality) and, when both sides carry one, the
+    /// task label, then loads model weights (broadcast to all replicas),
+    /// optimizer state, schedule state, counters and the run record.
+    /// Stepping on from here reproduces the uninterrupted run bitwise.
+    pub fn restore_from(&mut self, ckpt: &Checkpoint) -> Result<(), CheckpointError> {
+        let expected = self.opt.spec().canonical();
+        if ckpt.spec != expected {
+            return Err(CheckpointError::SpecMismatch {
+                expected,
+                found: ckpt.spec.clone(),
+            });
+        }
+        if !self.cfg.checkpoint_task.is_empty()
+            && !ckpt.task.is_empty()
+            && ckpt.task != self.cfg.checkpoint_task
+        {
+            return Err(CheckpointError::TaskMismatch {
+                expected: self.cfg.checkpoint_task.clone(),
+                found: ckpt.task.clone(),
+            });
+        }
+        let state_err = |name: &str| {
+            let name = name.to_string();
+            move |source| CheckpointError::State { name, source }
+        };
+        self.replicas[0]
+            .load_state_dict(ckpt.component("model")?)
+            .map_err(state_err("model"))?;
+        self.broadcast_leader();
+        self.opt
+            .load_state_dict(ckpt.component("optimizer")?)
+            .map_err(state_err("optimizer"))?;
+        let counters = ckpt.component("trainer")?;
+        counters
+            .check_keys(&["t", "diverged", "schedule"], &[])
+            .map_err(state_err("trainer"))?;
+        self.schedule
+            .load_state_dict(counters.dict("schedule").map_err(state_err("trainer"))?)
+            .map_err(state_err("trainer"))?;
+        self.t = counters.usizev("t").map_err(state_err("trainer"))?;
+        self.diverged = counters.u64v("diverged").map_err(state_err("trainer"))? != 0;
+        if let Some(record) = &ckpt.record {
+            self.record = record.clone();
+        }
+        Ok(())
+    }
+
+    /// Periodic checkpoint hook: writes a snapshot when `checkpoint_every`
+    /// divides the completed-step count. The driving loop calls this at
+    /// the END of each iteration — after any [`Trainer::evaluate`] — so a
+    /// checkpoint landing on an eval boundary captures that step's eval
+    /// metric in the record (checkpointing inside `step` would save the
+    /// record one eval short and break bitwise resume equivalence). A
+    /// write failure warns and keeps training: losing a snapshot must not
+    /// kill the run that produces the next.
+    pub fn checkpoint_tick(&self) {
+        if self.cfg.checkpoint_every == 0
+            || self.t == 0
+            || self.t % self.cfg.checkpoint_every != 0
+        {
+            return;
+        }
+        let Some(dir) = &self.cfg.checkpoint_dir else {
+            return;
+        };
+        if let Err(e) = self.save_checkpoint(dir) {
+            eprintln!(
+                "warning: checkpoint at step {} into {} failed: {e}",
+                self.t,
+                dir.display()
+            );
+        }
     }
 
     /// Column ranges of the per-worker shards.
@@ -559,6 +740,146 @@ mod tests {
             Err(e) => e,
         };
         assert!(err.to_string().contains("mkor"), "{err}");
+    }
+
+    fn temp_dir(name: &str) -> std::path::PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mkor-trainer-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn checkpoint_resume_is_bitwise_equivalent() {
+        // 2N straight steps vs N + save + restore-into-fresh-trainer + N:
+        // identical loss series and identical final weights.
+        let dir = temp_dir("resume");
+        let (mut straight, ds) = make_trainer("mkor", 2, 31);
+        let batches = ds.epoch_batches(64, 0);
+        let n = batches.len() / 2;
+        let mut straight_losses = Vec::new();
+        for b in &batches {
+            straight_losses.push(straight.step(&b.x, &Target::Labels(b.labels.clone())).unwrap());
+        }
+
+        let (mut first, _) = make_trainer("mkor", 2, 31);
+        for b in &batches[..n] {
+            first.step(&b.x, &Target::Labels(b.labels.clone())).unwrap();
+        }
+        first.save_checkpoint(&dir).unwrap();
+
+        // A fresh process would rebuild the model the same way; its random
+        // init is then overwritten by the restored weights.
+        let mut rng = Rng::new(31);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let mut resumed = TrainerBuilder::new(model)
+            .optimizer_str("mkor")
+            .unwrap()
+            .constant_lr(0.1)
+            .workers(2)
+            .target_metric(0.8)
+            .resume_from(&dir)
+            .try_build()
+            .unwrap();
+        assert_eq!(resumed.steps_done(), n);
+        for b in &batches[n..] {
+            resumed.step(&b.x, &Target::Labels(b.labels.clone())).unwrap();
+        }
+
+        let resumed_losses: Vec<f64> = resumed.record.steps.iter().map(|s| s.loss).collect();
+        assert_eq!(straight_losses.len(), resumed_losses.len());
+        for (i, (a, b)) in straight_losses.iter().zip(&resumed_losses).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "loss diverged at step {i}");
+        }
+        for (a, b) in straight.leader().layers.iter().zip(&resumed.leader().layers) {
+            assert_eq!(a.w.data(), b.w.data());
+            assert_eq!(a.bias, b.bias);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_wrong_spec_and_wrong_shapes() {
+        let dir = temp_dir("reject");
+        let (mut tr, ds) = make_trainer("mkor", 2, 32);
+        let b = &ds.epoch_batches(64, 0)[0];
+        tr.step(&b.x, &Target::Labels(b.labels.clone())).unwrap();
+        tr.save_checkpoint(&dir).unwrap();
+
+        // Different optimizer spec → SpecMismatch naming both specs.
+        let mut rng = Rng::new(32);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let err = TrainerBuilder::new(model)
+            .optimizer_str("mkor:f=25")
+            .unwrap()
+            .resume_from(&dir)
+            .try_build()
+            .unwrap_err();
+        assert!(
+            matches!(&err, crate::checkpoint::CheckpointError::SpecMismatch { .. }),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("mkor:f=25"), "{err}");
+
+        // Different model width → shape mismatch from the state layer.
+        let model = Mlp::new(&[16, 48, 3], Activation::Relu, &mut rng);
+        let err = TrainerBuilder::new(model)
+            .optimizer_str("mkor")
+            .unwrap()
+            .resume_from(&dir)
+            .try_build()
+            .unwrap_err();
+        assert!(
+            matches!(&err, crate::checkpoint::CheckpointError::State { .. }),
+            "{err:?}"
+        );
+
+        // build() panics on the same failure (documented loud-failure path).
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            TrainerBuilder::new(model)
+                .optimizer_str("kfac")
+                .unwrap()
+                .resume_from(&dir)
+                .build()
+        }));
+        assert!(caught.is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn periodic_checkpoints_are_written_and_contain_the_record() {
+        let dir = temp_dir("periodic");
+        let mut cfg = TaskConfig::new("t", 16, 3);
+        cfg.train = 256;
+        cfg.seed = 33;
+        let ds = Dataset::generate(cfg);
+        let mut rng = Rng::new(33);
+        let model = Mlp::new(&[16, 32, 3], Activation::Relu, &mut rng);
+        let mut tr = TrainerBuilder::new(model)
+            .optimizer_str("lamb")
+            .unwrap()
+            .constant_lr(0.05)
+            .workers(1)
+            .checkpoint_every(2)
+            .checkpoint_dir(&dir)
+            .checkpoint_task("glue")
+            .build();
+        let batches = ds.epoch_batches(64, 0);
+        for b in batches.iter().take(4) {
+            tr.step(&b.x, &Target::Labels(b.labels.clone()));
+            tr.checkpoint_tick();
+        }
+        // Latest snapshot is from step 4 and carries 4 step records.
+        let ckpt = crate::checkpoint::Checkpoint::load(&dir).unwrap();
+        assert_eq!(ckpt.step, 4);
+        assert_eq!(ckpt.spec, "lamb");
+        assert_eq!(ckpt.task, "glue");
+        assert_eq!(ckpt.record.as_ref().unwrap().steps.len(), 4);
+        for name in ["model", "optimizer", "trainer"] {
+            assert!(ckpt.components.contains_key(name), "{name}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 //! record loss/metric trajectories — the measurement behind Tables 2/3/5
 //! and Figures 2/4b/6/11/12.
 
+use crate::checkpoint::Checkpoint;
 use crate::coordinator::{RunRecord, Target, TrainerBuilder};
 use crate::data::classification::{Dataset, TaskConfig};
 use crate::data::images::{ImageConfig, ImageGen};
@@ -42,17 +43,10 @@ pub struct ConvergenceResult {
 }
 
 impl ConvergenceResult {
-    /// First step at which train loss ≤ target (EMA-smoothed over 5).
+    /// First step at which train loss ≤ target (mean-smoothed over a
+    /// trailing window of 5; one shared definition in `util::stats`).
     pub fn steps_to_loss(&self, target: f64) -> Option<usize> {
-        let w = 5usize;
-        for i in 0..self.losses.len() {
-            let lo = i.saturating_sub(w - 1);
-            let mean = self.losses[lo..=i].iter().sum::<f64>() / (i - lo + 1) as f64;
-            if mean <= target {
-                return Some(i);
-            }
-        }
-        None
+        crate::util::stats::first_at_or_below(&self.losses, target, 5)
     }
 
     /// First eval step at which the metric ≥ target.
@@ -89,6 +83,17 @@ pub struct RunOpts {
     /// Convergence target recorded into the run record (accuracy for
     /// labeled tasks, loss for dense) — checked at each eval.
     pub target_metric: Option<f64>,
+    /// Write a checkpoint into `checkpoint_dir` every n completed steps
+    /// (0 = never).
+    pub checkpoint_every: usize,
+    /// Checkpoint directory: the periodic write target, and — with
+    /// `resume` — the restore source.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Resume from `checkpoint_dir` when it holds a manifest. The data
+    /// stream is replayed deterministically up to the checkpoint step, so
+    /// the resumed run's loss series and final weights are identical to an
+    /// uninterrupted run with the same options.
+    pub resume: bool,
 }
 
 impl Default for RunOpts {
@@ -104,6 +109,9 @@ impl Default for RunOpts {
             gamma: Some(0.9),
             hidden: vec![128, 64],
             target_metric: None,
+            checkpoint_every: 0,
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -262,7 +270,21 @@ fn run_core(
     if let Some(target) = opts.target_metric {
         builder = builder.target_metric(target);
     }
+    if let Some(dir) = &opts.checkpoint_dir {
+        builder = builder
+            .checkpoint_dir(dir.clone())
+            .checkpoint_every(opts.checkpoint_every)
+            .checkpoint_task(crate::sweep::grid::task_label(task));
+        if opts.resume && Checkpoint::exists(dir) {
+            builder = builder.resume_from(dir.clone());
+        }
+    }
     let mut trainer = builder.build();
+    // Resume: the trainer restored `start` completed steps; the loop below
+    // replays the data stream deterministically (same seed, same draws)
+    // and skips training on the first `start` batches, so batch `start`
+    // onward sees exactly what the uninterrupted run saw.
+    let start = trainer.steps_done();
 
     let mut next = |src: &mut Src, b: usize| -> (crate::linalg::Matrix, Target) {
         match src {
@@ -305,6 +327,9 @@ fn run_core(
     let t0 = std::time::Instant::now();
     for step in 0..opts.steps {
         let (x, target) = next(&mut src, opts.batch);
+        if step < start {
+            continue; // replayed batch — trained before the checkpoint
+        }
         match trainer.step(&x, &target) {
             Some(_) => ok_steps += 1,
             None => break,
@@ -314,6 +339,9 @@ fn run_core(
                 trainer.evaluate(ex, et);
             }
         }
+        // After the eval, so a boundary checkpoint carries this step's
+        // eval metric in its record.
+        trainer.checkpoint_tick();
     }
     let step_secs = t0.elapsed().as_secs_f64() / ok_steps.max(1) as f64;
     let phase_secs = (
@@ -397,6 +425,37 @@ mod tests {
         if let Some(at) = rec.converged_at {
             assert!(at < 30);
         }
+    }
+
+    #[test]
+    fn run_record_resumes_bitwise_from_a_checkpoint() {
+        // 20 straight steps vs 10 + checkpoint + resume-to-20 ("fresh
+        // process": everything is rebuilt from the options + checkpoint).
+        let dir =
+            std::env::temp_dir().join(format!("mkor-conv-resume-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = OptimizerSpec::parse("mkor:f=5").unwrap();
+        let base = RunOpts { steps: 20, hidden: vec![32], eval_every: 5, ..Default::default() };
+        let straight = run_record(&TaskKind::Images, &spec, "r", &base);
+
+        let mut first = base.clone();
+        first.steps = 10;
+        first.checkpoint_every = 10;
+        first.checkpoint_dir = Some(dir.clone());
+        let partial = run_record(&TaskKind::Images, &spec, "r", &first);
+        assert_eq!(partial.steps.len(), 10);
+
+        let mut rest = base.clone();
+        rest.checkpoint_dir = Some(dir.clone());
+        rest.resume = true;
+        let resumed = run_record(&TaskKind::Images, &spec, "r", &rest);
+
+        assert_eq!(straight.steps.len(), resumed.steps.len());
+        for (i, (a, b)) in straight.steps.iter().zip(&resumed.steps).enumerate() {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss differs at step {i}");
+            assert_eq!(a.eval_metric, b.eval_metric, "eval differs at step {i}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

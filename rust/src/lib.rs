@@ -7,7 +7,8 @@
 //!   workers, ring all-reduce (fp32 + bf16-quantized rank-1 sync), the
 //!   inversion-frequency scheduler, the MKOR-H loss-rate switcher, the
 //!   norm-based stabilizer, metrics, the spec-driven sweep engine
-//!   ([`sweep`]) and the CLI.
+//!   ([`sweep`]), the checkpoint subsystem ([`checkpoint`]: durable
+//!   optimizer/model state, resumable runs and sweeps) and the CLI.
 //! * **L2 (JAX, build time)** — transformer fwd/bwd and the fused `mkor_step`
 //!   optimizer graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (Pallas, build time)** — the Sherman–Morrison rank-1 inverse-update
@@ -24,6 +25,7 @@
 //! See `DESIGN.md` for the system inventory and the experiment index.
 
 pub mod bench_utils;
+pub mod checkpoint;
 pub mod cli;
 pub mod collective;
 pub mod coordinator;

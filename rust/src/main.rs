@@ -11,14 +11,18 @@
 //!              mkor:f=10,backend=lamb,backend.beta1=0.95`; names:
 //!              mkor|mkor-h|kfac|sngd|eva|sgd|adam|lamb), `--task
 //!              glue|images|autoencoder|text`, `--steps`, `--workers`,
-//!              `--eval-every`, `--target`, `--quantized`.
+//!              `--eval-every`, `--target`, `--quantized`. Checkpointing:
+//!              `--checkpoint-every N --checkpoint-dir D` snapshots every
+//!              N steps; `--resume-from D` restores and continues
+//!              bitwise-identically (run the same flags).
 //! * `sweep`  — fan a grid of specs out over a thread pool and merge the
 //!              results into one CSV/JSON artifact: `--specs
 //!              "mkor:f={1,10,100};lamb;kfac:damping={0.01,0.1}"`,
 //!              `--task`, `--steps`, `--jobs`, `--out sweep.csv`. Braced
 //!              keys cross-multiply; ` x seed=0..4` repeats per seed; `lr`
 //!              and `seed` are reserved harness axes (README has the full
-//!              grammar).
+//!              grammar). `--resume` reloads `--out` and re-runs only the
+//!              missing cells of an interrupted grid.
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 
@@ -34,7 +38,7 @@ use mkor::model::{specs, Activation, Mlp};
 use mkor::optim::OptimizerSpec;
 use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
 use mkor::runtime::ArtifactBundle;
-use mkor::sweep::{run_sweep, task_by_name, SweepGrid, SweepOptions};
+use mkor::sweep::{run_sweep_resumed, task_by_name, SweepGrid, SweepOptions, SweepReport};
 use mkor::util::Rng;
 use std::path::Path;
 
@@ -185,7 +189,8 @@ fn cmd_sim(args: &Args) -> i32 {
         .constant_lr(lr)
         .workers(workers)
         .quantized_grads(args.flag("quantized"))
-        .run_name(run_name);
+        .run_name(run_name)
+        .checkpoint_task(task.to_string());
     if let Some(t) = args.get("target") {
         match t.parse::<f64>() {
             Ok(target) => builder = builder.target_metric(target),
@@ -195,11 +200,41 @@ fn cmd_sim(args: &Args) -> i32 {
             }
         }
     }
-    let mut trainer = builder.build();
+    let checkpoint_every = args.usize_or("checkpoint-every", 0);
+    match args.get("checkpoint-dir") {
+        Some(dir) => {
+            builder = builder.checkpoint_dir(dir).checkpoint_every(checkpoint_every);
+        }
+        None if checkpoint_every > 0 => {
+            eprintln!("error: --checkpoint-every needs --checkpoint-dir");
+            return 2;
+        }
+        None => {}
+    }
+    if let Some(dir) = args.get("resume-from") {
+        builder = builder.resume_from(dir);
+    }
+    let mut trainer = match builder.try_build() {
+        Ok(trainer) => trainer,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    // Resume: replay the (deterministic) data stream up to the checkpoint
+    // step, training only from there — run the same flags as the original
+    // run for a bitwise-identical continuation.
+    let start = trainer.steps_done();
+    if start > 0 {
+        println!("resumed at step {start} ({} recorded steps)", trainer.record.steps.len());
+    }
     // Held-out eval batch (only drawn when evals are requested).
     let eval_batch = if eval_every > 0 { Some(next_batch()) } else { None };
     for s in 0..steps {
         let (x, target) = next_batch();
+        if s < start {
+            continue; // replayed batch — trained before the checkpoint
+        }
         match trainer.step(&x, &target) {
             Some(loss) => {
                 if s % 20 == 0 {
@@ -220,10 +255,14 @@ fn cmd_sim(args: &Args) -> i32 {
                 }
                 if trainer.converged() {
                     println!("reached target at step {s}");
+                    trainer.checkpoint_tick();
                     break;
                 }
             }
         }
+        // After the eval, so a boundary checkpoint carries this step's
+        // eval metric in its record.
+        trainer.checkpoint_tick();
     }
     let rec = trainer.finish();
     println!(
@@ -249,7 +288,7 @@ fn cmd_sweep(args: &Args) -> i32 {
              [--task glue|images|autoencoder|text] [--steps N] [--jobs J] [--lr LR] \
              [--workers W] [--batch B] [--seed S] [--eval-every N] [--target M] \
              [--hidden 96,48] [--out sweep.csv] [--json sweep.json] \
-             [--deterministic] [--quiet]"
+             [--deterministic] [--resume] [--quiet]"
         );
         return 2;
     };
@@ -307,6 +346,37 @@ fn cmd_sweep(args: &Args) -> i32 {
         verbose: !args.flag("quiet"),
     };
 
+    // --resume: reload prior results from --out and skip completed cells
+    // (keyed by canonical spec + seed + lr; panicked cells re-run). Run
+    // with the same flags as the interrupted sweep so the keys line up.
+    let prior = if args.flag("resume") {
+        let Some(out) = args.get("out") else {
+            eprintln!("error: --resume needs --out (the CSV holding prior results)");
+            return 2;
+        };
+        if out.ends_with(".json") {
+            eprintln!("error: --resume reads prior results from a CSV --out");
+            return 2;
+        }
+        let path = Path::new(out);
+        if path.is_file() {
+            match SweepReport::load_csv(path) {
+                Ok(prior) => {
+                    println!("resuming: {} prior cells loaded from {out}", prior.cells.len());
+                    Some(prior)
+                }
+                Err(e) => {
+                    eprintln!("error: loading prior results: {e}");
+                    return 2;
+                }
+            }
+        } else {
+            None // nothing saved yet: run the full grid
+        }
+    } else {
+        None
+    };
+
     println!(
         "sweep: {} cells × {} steps on `{}`, {} jobs",
         grid.len(),
@@ -314,10 +384,15 @@ fn cmd_sweep(args: &Args) -> i32 {
         args.get_or("task", "glue"),
         opts.jobs
     );
-    let report = run_sweep(&grid, &opts);
+    let report = run_sweep_resumed(&grid, &opts, prior.as_ref());
     println!("{}", report.render_table());
     let (ok, diverged, panicked) = report.counts();
-    println!("{ok} ok, {diverged} diverged, {panicked} panicked");
+    let skipped = report.cells.iter().filter(|c| c.skipped).count();
+    if skipped > 0 {
+        println!("{ok} ok, {diverged} diverged, {panicked} panicked ({skipped} reused)");
+    } else {
+        println!("{ok} ok, {diverged} diverged, {panicked} panicked");
+    }
 
     // --deterministic drops the wall-clock columns so artifact bytes
     // depend only on the grid and seeds, never on --jobs or machine load.

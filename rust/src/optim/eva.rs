@@ -17,6 +17,8 @@
 //! sees only the current batch (optionally smoothed over the vectors, not
 //! the factors).
 
+use crate::checkpoint::snapshot::{put_vectors, vectors_from};
+use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::SgdMomentum;
@@ -107,6 +109,48 @@ impl Eva {
             }
         }
         out
+    }
+}
+
+impl Checkpointable for Eva {
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t)
+            .put_usize("last_sync_bytes", self.last_sync_bytes);
+        put_vectors(&mut sd, "a_vec", self.layers.iter().map(|l| &l.a_vec));
+        put_vectors(&mut sd, "g_vec", self.layers.iter().map(|l| &l.g_vec));
+        let mut init = StateDict::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            init.put_u64(&i.to_string(), layer.initialized as u64);
+        }
+        sd.put_dict("initialized", init);
+        sd.put_dict("backend", self.backend.state_dict());
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(
+            &["t", "last_sync_bytes", "a_vec", "g_vec", "initialized", "backend"],
+            &[],
+        )?;
+        let a_lens: Vec<usize> = self.shapes.iter().map(|s| s.d_in).collect();
+        let g_lens: Vec<usize> = self.shapes.iter().map(|s| s.d_out).collect();
+        let a_vec = vectors_from(state, "a_vec", &a_lens)?;
+        let g_vec = vectors_from(state, "g_vec", &g_lens)?;
+        let init = state.dict("initialized")?;
+        let expected: Vec<String> = (0..self.layers.len()).map(|i| i.to_string()).collect();
+        init.check_keys_exact(&expected)?;
+        for (i, ((layer, a), g)) in
+            self.layers.iter_mut().zip(a_vec).zip(g_vec).enumerate()
+        {
+            layer.a_vec = a;
+            layer.g_vec = g;
+            layer.initialized = init.u64v(&i.to_string())? != 0;
+        }
+        self.backend.load_state_dict(state.dict("backend")?)?;
+        self.t = state.usizev("t")?;
+        self.last_sync_bytes = state.usizev("last_sync_bytes")?;
+        Ok(())
     }
 }
 

@@ -6,6 +6,8 @@
 //! [`apply`]-style entry point so MKOR/MKOR-H can use it as the line-14
 //! backend on *preconditioned* deltas.
 
+use crate::checkpoint::snapshot::{matrices_from, put_matrices, put_vectors, vectors_from};
+use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::linalg::Matrix;
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::{Optimizer, OptimizerSpec};
@@ -51,6 +53,27 @@ impl SgdMomentum {
     pub fn state_bytes(&self) -> usize {
         self.vel_w.iter().map(|m| m.len() * 4).sum::<usize>()
             + self.vel_b.iter().map(|v| v.len() * 4).sum::<usize>()
+    }
+}
+
+impl Checkpointable for SgdMomentum {
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t);
+        put_matrices(&mut sd, "vel_w", self.vel_w.iter());
+        put_vectors(&mut sd, "vel_b", self.vel_b.iter());
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(&["t", "vel_w", "vel_b"], &[])?;
+        let shapes: Vec<(usize, usize)> =
+            self.vel_w.iter().map(|m| (m.rows(), m.cols())).collect();
+        let lens: Vec<usize> = self.vel_b.iter().map(Vec::len).collect();
+        self.vel_w = matrices_from(state, "vel_w", &shapes)?;
+        self.vel_b = vectors_from(state, "vel_b", &lens)?;
+        self.t = state.usizev("t")?;
+        Ok(())
     }
 }
 
@@ -187,6 +210,39 @@ impl Adam {
     }
 }
 
+impl Checkpointable for Adam {
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t);
+        put_matrices(&mut sd, "m_w", self.state.iter().map(|s| &s.m_w));
+        put_matrices(&mut sd, "v_w", self.state.iter().map(|s| &s.v_w));
+        put_vectors(&mut sd, "m_b", self.state.iter().map(|s| &s.m_b));
+        put_vectors(&mut sd, "v_b", self.state.iter().map(|s| &s.v_b));
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(&["t", "m_w", "v_w", "m_b", "v_b"], &[])?;
+        let shapes: Vec<(usize, usize)> =
+            self.state.iter().map(|s| (s.m_w.rows(), s.m_w.cols())).collect();
+        let lens: Vec<usize> = self.state.iter().map(|s| s.m_b.len()).collect();
+        let m_w = matrices_from(state, "m_w", &shapes)?;
+        let v_w = matrices_from(state, "v_w", &shapes)?;
+        let m_b = vectors_from(state, "m_b", &lens)?;
+        let v_b = vectors_from(state, "v_b", &lens)?;
+        for ((((st, m), v), mb), vb) in
+            self.state.iter_mut().zip(m_w).zip(v_w).zip(m_b).zip(v_b)
+        {
+            st.m_w = m;
+            st.v_w = v;
+            st.m_b = mb;
+            st.v_b = vb;
+        }
+        self.t = state.usizev("t")?;
+        Ok(())
+    }
+}
+
 impl Optimizer for Adam {
     fn name(&self) -> &str {
         "adam"
@@ -254,6 +310,21 @@ impl Lamb {
 
     pub fn state_bytes(&self) -> usize {
         self.inner.state_bytes()
+    }
+}
+
+impl Checkpointable for Lamb {
+    fn state_dict(&self) -> StateDict {
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t).put_dict("inner", self.inner.state_dict());
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(&["t", "inner"], &[])?;
+        self.inner.load_state_dict(state.dict("inner")?)?;
+        self.t = state.usizev("t")?;
+        Ok(())
     }
 }
 
@@ -382,6 +453,50 @@ mod tests {
         lamb.apply(&mut layers, &delta, &dbs, 0.1);
         // Step is ≤ lr·ratio·1 ≈ lr·(1e-3/1) — tiny, unlike Adam's 0.1.
         assert!(layers[0].w[(0, 0)].abs() < 1e-2);
+    }
+
+    #[test]
+    fn moment_state_roundtrip_is_bitwise() {
+        // Warm the moments up, snapshot, restore into a fresh optimizer,
+        // and check the next update is bit-identical — the invariant the
+        // checkpoint subsystem's resume equivalence rests on.
+        let shapes = [LayerShape::new(3, 2)];
+        let mut rng = Rng::new(7);
+        let delta = vec![Matrix::randn(2, 3, 1.0, &mut rng)];
+        let dbs = vec![vec![0.3f32, -0.2]];
+        let mut warm = vec![Dense::init(shapes[0], Activation::Linear, &mut rng)];
+
+        let mut a = Adam::new(&shapes, AdamConfig::default());
+        for _ in 0..3 {
+            a.apply(&mut warm, &delta, &dbs, 0.05);
+        }
+        let sd = a.state_dict();
+        let mut b = Adam::new(&shapes, AdamConfig::default());
+        b.load_state_dict(&sd).unwrap();
+        assert_eq!(b.state_dict(), sd);
+        // One post-restore step from identical weights matches exactly.
+        let mut la = warm.clone();
+        let mut lb = warm.clone();
+        a.apply(&mut la, &delta, &dbs, 0.05);
+        b.apply(&mut lb, &delta, &dbs, 0.05);
+        assert_eq!(la[0].w.data(), lb[0].w.data());
+        assert_eq!(la[0].bias, lb[0].bias);
+        // Shape mismatches are rejected.
+        let mut wrong = Adam::new(&[LayerShape::new(4, 2)], AdamConfig::default());
+        assert!(wrong.load_state_dict(&sd).is_err());
+        // SGD and LAMB round-trip too.
+        let mut s = SgdMomentum::new(&shapes, 0.9);
+        s.apply(&mut warm, &delta, &dbs, 0.1);
+        let ssd = s.state_dict();
+        let mut s2 = SgdMomentum::new(&shapes, 0.9);
+        s2.load_state_dict(&ssd).unwrap();
+        assert_eq!(s2.state_dict(), ssd);
+        let mut l = Lamb::new(&shapes, AdamConfig::default());
+        l.apply(&mut warm, &delta, &dbs, 0.1);
+        let lsd = l.state_dict();
+        let mut l2 = Lamb::new(&shapes, AdamConfig::default());
+        l2.load_state_dict(&lsd).unwrap();
+        assert_eq!(l2.state_dict(), lsd);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! first-order backend when the rate of the recent window falls below
 //! `switch_ratio` × the rate observed early on.
 
+use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::model::{Capture, Dense, LayerShape};
 use crate::optim::first_order::SgdMomentum;
 use crate::optim::mkor::{Mkor, MkorConfig};
@@ -94,6 +95,42 @@ impl MkorH {
         if self.switched_at.is_none() {
             self.switched_at = Some(self.t);
         }
+    }
+}
+
+impl Checkpointable for MkorH {
+    fn state_dict(&self) -> StateDict {
+        // The switching rule's EMA / peak-rate / last-loss are as much
+        // optimizer state as the factor inverses: dropping them would let a
+        // resumed run re-warm the rate estimate and switch at a different
+        // step than the uninterrupted run.
+        let (ema_value, ema_steps) = self.rate_ema.state();
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t)
+            .put_dict("mkor", self.mkor.state_dict())
+            .put_dict("fallback", self.fallback.state_dict())
+            .put_f64("rate_ema_value", ema_value)
+            .put_u64("rate_ema_steps", ema_steps)
+            .put_f64("peak_rate", self.peak_rate)
+            .put_opt_f64("last_loss", self.last_loss)
+            .put_opt_u64("switched_at", self.switched_at.map(|s| s as u64));
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(
+            &["t", "mkor", "fallback", "rate_ema_value", "rate_ema_steps", "peak_rate"],
+            &["last_loss", "switched_at"],
+        )?;
+        self.mkor.load_state_dict(state.dict("mkor")?)?;
+        self.fallback.load_state_dict(state.dict("fallback")?)?;
+        self.rate_ema
+            .set_state(state.f64v("rate_ema_value")?, state.u64v("rate_ema_steps")?);
+        self.peak_rate = state.f64v("peak_rate")?;
+        self.last_loss = state.opt_f64("last_loss")?;
+        self.switched_at = state.opt_u64("switched_at")?.map(|s| s as usize);
+        self.t = state.usizev("t")?;
+        Ok(())
     }
 }
 
@@ -211,6 +248,41 @@ mod tests {
         d.scale(0.1);
         want.blend(1.0, -1.0, &d);
         assert!(layers[0].w.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn switch_state_survives_a_roundtrip() {
+        // Warm the rate EMA mid-decline, snapshot, restore into a fresh
+        // hybrid, and feed both the same plateau: they must switch at the
+        // same step.
+        let shapes = [LayerShape::new(4, 4)];
+        let cfg = SwitchConfig { beta: 0.9, switch_ratio: 0.2, min_steps: 10 };
+        let mut a = MkorH::new(&shapes, MkorConfig::default(), cfg);
+        let mut loss = 10.0;
+        for t in 0..40 {
+            a.t = t;
+            a.observe_loss(loss);
+            loss -= 0.1;
+        }
+        let sd = a.state_dict();
+        let mut b = MkorH::new(&shapes, MkorConfig::default(), cfg);
+        b.load_state_dict(&sd).unwrap();
+        assert_eq!(b.state_dict(), sd);
+        b.t = a.t;
+        for t in 40..200 {
+            a.t = t;
+            b.t = t;
+            a.observe_loss(loss);
+            b.observe_loss(loss);
+            loss -= if t < 60 { 0.1 } else { 0.0001 };
+        }
+        assert_eq!(a.switched_at(), b.switched_at());
+        assert!(a.switched());
+        // switched_at survives the round-trip once set.
+        let sd2 = a.state_dict();
+        let mut c = MkorH::new(&shapes, MkorConfig::default(), cfg);
+        c.load_state_dict(&sd2).unwrap();
+        assert_eq!(c.switched_at(), a.switched_at());
     }
 
     #[test]

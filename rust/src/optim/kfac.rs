@@ -7,6 +7,8 @@
 //! KFAC with and that motivates MKOR. Between inversions it preconditions
 //! with *stale* factors, exactly the trade-off §3.3 analyzes.
 
+use crate::checkpoint::snapshot::{matrices_from, put_matrices};
+use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::linalg::cholesky::invert_spd;
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
@@ -115,6 +117,61 @@ impl Kfac {
     /// Read access for the Figure 8 condition-number experiment.
     pub fn covariances(&self, layer: usize) -> (&Matrix, &Matrix) {
         (&self.layers[layer].l_cov, &self.layers[layer].r_cov)
+    }
+}
+
+impl Checkpointable for Kfac {
+    fn state_dict(&self) -> StateDict {
+        // Both the EMA covariances and the (possibly stale) inverses are
+        // state: between inversion steps KFAC preconditions with inverses
+        // older than the covariances, and a resumed run must do the same.
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t)
+            .put_usize("inversion_failures", self.inversion_failures)
+            .put_usize("last_sync_bytes", self.last_sync_bytes);
+        put_matrices(&mut sd, "l_cov", self.layers.iter().map(|l| &l.l_cov));
+        put_matrices(&mut sd, "r_cov", self.layers.iter().map(|l| &l.r_cov));
+        put_matrices(&mut sd, "l_inv", self.layers.iter().map(|l| &l.l_inv));
+        put_matrices(&mut sd, "r_inv", self.layers.iter().map(|l| &l.r_inv));
+        sd.put_dict("backend", self.backend.state_dict());
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(
+            &[
+                "t",
+                "inversion_failures",
+                "last_sync_bytes",
+                "l_cov",
+                "r_cov",
+                "l_inv",
+                "r_inv",
+                "backend",
+            ],
+            &[],
+        )?;
+        let l_shapes: Vec<(usize, usize)> =
+            self.shapes.iter().map(|s| (s.d_out, s.d_out)).collect();
+        let r_shapes: Vec<(usize, usize)> =
+            self.shapes.iter().map(|s| (s.d_in, s.d_in)).collect();
+        let l_cov = matrices_from(state, "l_cov", &l_shapes)?;
+        let r_cov = matrices_from(state, "r_cov", &r_shapes)?;
+        let l_inv = matrices_from(state, "l_inv", &l_shapes)?;
+        let r_inv = matrices_from(state, "r_inv", &r_shapes)?;
+        for ((((layer, lc), rc), li), ri) in
+            self.layers.iter_mut().zip(l_cov).zip(r_cov).zip(l_inv).zip(r_inv)
+        {
+            layer.l_cov = lc;
+            layer.r_cov = rc;
+            layer.l_inv = li;
+            layer.r_inv = ri;
+        }
+        self.backend.load_state_dict(state.dict("backend")?)?;
+        self.t = state.usizev("t")?;
+        self.inversion_failures = state.usizev("inversion_failures")?;
+        self.last_sync_bytes = state.usizev("last_sync_bytes")?;
+        Ok(())
     }
 }
 

@@ -22,6 +22,8 @@
 //! to the raw gradient norm (line 10) before the first-order backend applies
 //! them (line 14).
 
+use crate::checkpoint::snapshot::{matrices_from, put_matrices};
+use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::linalg::half::{self, HalfKind};
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
@@ -179,6 +181,54 @@ impl Mkor {
 
     pub fn config(&self) -> &MkorConfig {
         &self.cfg
+    }
+}
+
+impl Checkpointable for Mkor {
+    fn state_dict(&self) -> StateDict {
+        // The factor inverses ARE the optimizer (they accumulate every
+        // rank-1 update since step 0); scratch buffers are per-step
+        // outputs and carry no state.
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t)
+            .put_usize("stabilizer_triggers", self.stabilizer_triggers)
+            .put_usize("last_sync_bytes", self.last_sync_bytes);
+        put_matrices(&mut sd, "l_inv", self.layers.iter().map(|l| &l.l_inv));
+        put_matrices(&mut sd, "r_inv", self.layers.iter().map(|l| &l.r_inv));
+        let backend = match &self.backend {
+            BackendState::Sgd(b) => b.state_dict(),
+            BackendState::Adam(b) => b.state_dict(),
+            BackendState::Lamb(b) => b.state_dict(),
+        };
+        sd.put_dict("backend", backend);
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(
+            &["t", "stabilizer_triggers", "last_sync_bytes", "l_inv", "r_inv", "backend"],
+            &[],
+        )?;
+        let l_shapes: Vec<(usize, usize)> =
+            self.shapes.iter().map(|s| (s.d_out, s.d_out)).collect();
+        let r_shapes: Vec<(usize, usize)> =
+            self.shapes.iter().map(|s| (s.d_in, s.d_in)).collect();
+        let l_inv = matrices_from(state, "l_inv", &l_shapes)?;
+        let r_inv = matrices_from(state, "r_inv", &r_shapes)?;
+        for ((layer, l), r) in self.layers.iter_mut().zip(l_inv).zip(r_inv) {
+            layer.l_inv = l;
+            layer.r_inv = r;
+        }
+        let backend = state.dict("backend")?;
+        match &mut self.backend {
+            BackendState::Sgd(b) => b.load_state_dict(backend)?,
+            BackendState::Adam(b) => b.load_state_dict(backend)?,
+            BackendState::Lamb(b) => b.load_state_dict(backend)?,
+        }
+        self.t = state.usizev("t")?;
+        self.stabilizer_triggers = state.usizev("stabilizer_triggers")?;
+        self.last_sync_bytes = state.usizev("last_sync_bytes")?;
+        Ok(())
     }
 }
 
@@ -512,6 +562,61 @@ mod tests {
             "mkor final {final_mkor} vs init {init}: insufficient decrease"
         );
         assert!(final_mkor.is_finite());
+    }
+
+    #[test]
+    fn factor_state_roundtrip_resumes_bitwise() {
+        // 10 straight steps vs 5 + snapshot + restore-into-fresh + 5 must
+        // produce identical factors, backend moments and weights — the
+        // checkpoint subsystem's acceptance property at the unit level.
+        let shapes = [LayerShape::new(5, 4), LayerShape::new(4, 3)];
+        let mut cfg = MkorConfig::default();
+        cfg.inv_freq = 3; // cross several factor updates in 10 steps
+        let mut rng = Rng::new(21);
+        let caps: Vec<Vec<Capture>> = (0..10)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|&s| toy_capture(s, 6, &mut rng))
+                    .collect()
+            })
+            .collect();
+        let mut init_rng = Rng::new(22);
+        let layers0: Vec<Dense> = shapes
+            .iter()
+            .map(|&s| Dense::init(s, crate::model::Activation::Linear, &mut init_rng))
+            .collect();
+        let mut timer = PhaseTimer::new();
+
+        // Straight run.
+        let mut straight = Mkor::new(&shapes, cfg.clone());
+        let mut lw = layers0.clone();
+        for cap in &caps {
+            straight.step(&mut lw, cap, 0.05, &mut timer);
+        }
+
+        // Interrupted run: 5 steps, snapshot, fresh optimizer, 5 more.
+        let mut first = Mkor::new(&shapes, cfg.clone());
+        let mut lr_ = layers0.clone();
+        for cap in &caps[..5] {
+            first.step(&mut lr_, cap, 0.05, &mut timer);
+        }
+        let sd = first.state_dict();
+        let mut resumed = Mkor::new(&shapes, cfg.clone());
+        resumed.load_state_dict(&sd).unwrap();
+        assert_eq!(resumed.state_dict(), sd);
+        for cap in &caps[5..] {
+            resumed.step(&mut lr_, cap, 0.05, &mut timer);
+        }
+
+        for (a, b) in lw.iter().zip(&lr_) {
+            assert_eq!(a.w.data(), b.w.data());
+            assert_eq!(a.bias, b.bias);
+        }
+        assert_eq!(straight.state_dict(), resumed.state_dict());
+        // A wrong-shaped optimizer refuses the state.
+        let mut wrong = Mkor::new(&[LayerShape::new(5, 4)], cfg);
+        assert!(wrong.load_state_dict(&sd).is_err());
     }
 
     #[test]

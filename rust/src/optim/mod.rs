@@ -43,6 +43,7 @@ pub mod sngd;
 pub mod spec;
 pub mod stabilizer;
 
+use crate::checkpoint::Checkpointable;
 use crate::model::{Capture, Dense};
 use crate::util::timer::PhaseTimer;
 
@@ -55,7 +56,12 @@ pub use spec::{OptimizerSpec, SpecError};
 /// `step` consumes the per-layer [`Capture`]s of one (already all-reduced)
 /// batch and updates `layers` in place. Implementations record their wall
 /// time into `timer` under the phases `"factor"`, `"precond"`, `"update"`.
-pub trait Optimizer {
+///
+/// Every optimizer is also [`Checkpointable`]: `state_dict()` captures the
+/// factor inverses / moments / counters and `load_state_dict()` restores
+/// them bitwise into a freshly-built optimizer of the same spec, which is
+/// what makes killed runs resumable (see [`crate::checkpoint`]).
+pub trait Optimizer: Checkpointable {
     fn name(&self) -> &str;
 
     fn step(&mut self, layers: &mut [Dense], caps: &[Capture], lr: f32, timer: &mut PhaseTimer);

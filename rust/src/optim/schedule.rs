@@ -2,6 +2,7 @@
 //! (§8.13): decay the LR when the EMA of the improvement rate drops below
 //! β × the total improvement accumulated under the current LR.
 
+use crate::checkpoint::{StateDict, StateError};
 use crate::util::stats::Ema;
 
 /// A learning-rate schedule driven by step count and (optionally) observed
@@ -11,6 +12,21 @@ pub trait LrSchedule {
     fn lr(&self, t: usize) -> f32;
     /// Feed an observation (training loss or eval metric) after step `t`.
     fn observe(&mut self, _t: usize, _value: f64) {}
+
+    /// Checkpointable schedule state. Stateless schedules (constant, step
+    /// decay, warmup — everything driven purely by `t`) return an empty
+    /// dict; stateful ones ([`KneePoint`]) override both methods so a
+    /// resumed run's LR trajectory continues bitwise.
+    fn state_dict(&self) -> StateDict {
+        StateDict::new()
+    }
+
+    /// Restore state captured by [`LrSchedule::state_dict`]. The stateless
+    /// default rejects non-empty dicts: restoring a stateful schedule's
+    /// checkpoint into a stateless schedule is a configuration mismatch.
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(&[], &[])
+    }
 }
 
 /// Constant LR.
@@ -122,6 +138,52 @@ impl LrSchedule for KneePoint {
         }
         self.last_value = Some(value);
     }
+
+    fn state_dict(&self) -> StateDict {
+        let (ema_value, ema_steps) = self.rate_ema.state();
+        let mut sd = StateDict::new();
+        sd.put_f64("current", self.current as f64)
+            .put_f64("rate_ema_value", ema_value)
+            .put_u64("rate_ema_steps", ema_steps)
+            .put_usize("since_change", self.since_change)
+            .put_f64("improvement_since_change", self.improvement_since_change)
+            .put_opt_f64("last_value", self.last_value);
+        // Step indices stay exact as u64 entries (f32 tensors would round
+        // beyond 2^24 steps).
+        let mut knees = StateDict::new();
+        for (i, &k) in self.knees.iter().enumerate() {
+            knees.put_usize(&i.to_string(), k);
+        }
+        sd.put_dict("knees", knees);
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(
+            &[
+                "current",
+                "rate_ema_value",
+                "rate_ema_steps",
+                "since_change",
+                "improvement_since_change",
+                "knees",
+            ],
+            &["last_value"],
+        )?;
+        self.current = state.f64v("current")? as f32;
+        self.rate_ema
+            .set_state(state.f64v("rate_ema_value")?, state.u64v("rate_ema_steps")?);
+        self.since_change = state.usizev("since_change")?;
+        self.improvement_since_change = state.f64v("improvement_since_change")?;
+        self.last_value = state.opt_f64("last_value")?;
+        let knees = state.dict("knees")?;
+        let mut steps = Vec::with_capacity(knees.len());
+        for i in 0..knees.len() {
+            steps.push(knees.usizev(&i.to_string())?);
+        }
+        self.knees = steps;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -167,6 +229,34 @@ mod tests {
         }
         assert!(!s.knees.is_empty());
         assert!(s.lr(120) <= 0.5);
+    }
+
+    #[test]
+    fn knee_point_state_roundtrip_continues_bitwise() {
+        // Drive one scheduler to a mid-plateau state, snapshot it, restore
+        // into a fresh instance, and check both produce identical LR
+        // trajectories from there on.
+        let mut a = KneePoint::new(1.0, 0.5, 0.3, 10, 1e-4);
+        let mut loss = 10.0;
+        for t in 0..80 {
+            a.observe(t, loss);
+            loss -= if t < 60 { 0.1 } else { 0.0001 };
+        }
+        let sd = a.state_dict();
+        let mut b = KneePoint::new(1.0, 0.5, 0.3, 10, 1e-4);
+        b.load_state_dict(&sd).unwrap();
+        assert_eq!(b.state_dict(), sd);
+        for t in 80..200 {
+            a.observe(t, loss);
+            b.observe(t, loss);
+            loss -= 0.0001;
+            assert_eq!(a.lr(t).to_bits(), b.lr(t).to_bits(), "t={t}");
+        }
+        assert_eq!(a.knees, b.knees);
+        // Restoring knee state into a stateless schedule is rejected.
+        let mut c = Constant(0.1);
+        assert!(c.load_state_dict(&sd).is_err());
+        assert!(c.load_state_dict(&StateDict::new()).is_ok());
     }
 
     #[test]

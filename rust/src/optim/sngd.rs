@@ -8,6 +8,7 @@
 //! A/G/K⁻¹ (stale-kernel preconditioning) in between, which is where the
 //! O(2bd + b²) memory overhead of Table 1 comes from.
 
+use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::linalg::inverse::invert;
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
@@ -82,6 +83,91 @@ impl Sngd {
             *kv = x * y;
         }
         k
+    }
+}
+
+impl Checkpointable for Sngd {
+    fn state_dict(&self) -> StateDict {
+        // The stored A/G/K⁻¹ come from the last kernel refresh and get
+        // reused (stale) until the next one — a resumed run must reuse
+        // exactly the same stored batch, not refresh early.
+        let mut sd = StateDict::new();
+        sd.put_usize("t", self.t)
+            .put_usize("inversion_failures", self.inversion_failures)
+            .put_usize("last_sync_bytes", self.last_sync_bytes);
+        let mut layers = StateDict::new();
+        for (i, st) in self.layers.iter().enumerate() {
+            let mut d = StateDict::new();
+            if let (Some(a), Some(g), Some(kinv)) = (&st.a, &st.g, &st.kinv) {
+                d.put_matrix("a", a).put_matrix("g", g).put_matrix("kinv", kinv);
+            }
+            layers.put_dict(&i.to_string(), d);
+        }
+        sd.put_dict("layers", layers);
+        sd.put_dict("backend", self.backend.state_dict());
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        state.check_keys(
+            &["t", "inversion_failures", "last_sync_bytes", "layers", "backend"],
+            &[],
+        )?;
+        let layers = state.dict("layers")?;
+        let expected: Vec<String> = (0..self.layers.len()).map(|i| i.to_string()).collect();
+        layers.check_keys_exact(&expected)?;
+        for (i, (st, shape)) in self.layers.iter_mut().zip(&self.shapes).enumerate() {
+            let d = layers.dict(&i.to_string())?;
+            d.check_keys(&[], &["a", "g", "kinv"])?;
+            if d.is_empty() {
+                st.a = None;
+                st.g = None;
+                st.kinv = None;
+                continue;
+            }
+            // All-or-nothing: the kernel is only ever stored as a triple.
+            let a = d.tensor("a")?;
+            let g = d.tensor("g")?;
+            let kinv = d.tensor("kinv")?;
+            let b = a.cols;
+            // The batch side b is data-dependent; the model-side dims and
+            // internal consistency are still checkable.
+            if a.rows != shape.d_in {
+                return Err(StateError::ShapeMismatch {
+                    key: format!("layers.{i}.a"),
+                    expected_rows: shape.d_in,
+                    expected_cols: b,
+                    found_rows: a.rows,
+                    found_cols: a.cols,
+                });
+            }
+            if g.rows != shape.d_out || g.cols != b {
+                return Err(StateError::ShapeMismatch {
+                    key: format!("layers.{i}.g"),
+                    expected_rows: shape.d_out,
+                    expected_cols: b,
+                    found_rows: g.rows,
+                    found_cols: g.cols,
+                });
+            }
+            if kinv.rows != b || kinv.cols != b {
+                return Err(StateError::ShapeMismatch {
+                    key: format!("layers.{i}.kinv"),
+                    expected_rows: b,
+                    expected_cols: b,
+                    found_rows: kinv.rows,
+                    found_cols: kinv.cols,
+                });
+            }
+            st.a = Some(a.to_matrix());
+            st.g = Some(g.to_matrix());
+            st.kinv = Some(kinv.to_matrix());
+        }
+        self.backend.load_state_dict(state.dict("backend")?)?;
+        self.t = state.usizev("t")?;
+        self.inversion_failures = state.usizev("inversion_failures")?;
+        self.last_sync_bytes = state.usizev("last_sync_bytes")?;
+        Ok(())
     }
 }
 

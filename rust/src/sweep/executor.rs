@@ -11,7 +11,7 @@
 
 use crate::experiments::convergence::{run_record, RunOpts};
 use crate::sweep::grid::SweepGrid;
-use crate::sweep::report::{CellResult, SweepReport};
+use crate::sweep::report::{CellResult, CellStatus, SweepReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -98,6 +98,22 @@ where
 /// Cells are scheduled dynamically over `opts.jobs` threads; the report is
 /// always in grid order, with per-cell results independent of scheduling.
 pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepReport {
+    run_sweep_resumed(grid, opts, None)
+}
+
+/// [`run_sweep`] with resume: cells already present in `prior` — keyed by
+/// canonical spec string + task label + seed + lr, the same columns the
+/// CSV rows carry — are *skipped* (reported as `skipped` in the progress
+/// lines, `skipped: true` on the cell) and their prior results merged into
+/// the report unchanged. Panicked prior cells re-run: they never
+/// completed. This is what lets an interrupted 1000-cell sweep continue
+/// instead of restarting (`mkor sweep --resume` loads `--out` via
+/// [`SweepReport::load_csv`]).
+pub fn run_sweep_resumed(
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    prior: Option<&SweepReport>,
+) -> SweepReport {
     let n = grid.cells.len();
     let done = AtomicUsize::new(0);
     let results = fan_out(n, opts.jobs, |i| {
@@ -107,21 +123,39 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepReport {
         if let Some(lr) = cell.lr {
             run.lr = lr;
         }
-        let name = format!("{}#s{}", cell.spec.canonical(), cell.seed);
+        let spec = cell.spec.canonical();
+        let task = crate::sweep::grid::task_label(&cell.task);
+        if let Some(prev) = prior.and_then(|p| p.find_keyed(&spec, &task, cell.seed, run.lr)) {
+            if !matches!(prev.status, CellStatus::Panicked(_)) {
+                let k = done.fetch_add(1, Ordering::SeqCst) + 1;
+                if opts.verbose {
+                    println!(
+                        "[{k}/{n}] {spec} seed={} lr={} → skipped ({} in prior report)",
+                        cell.seed,
+                        run.lr,
+                        prev.status.label()
+                    );
+                }
+                let mut reused = prev.clone();
+                reused.index = cell.index;
+                reused.skipped = true;
+                return reused;
+            }
+        }
+        let name = format!("{spec}#s{}", cell.seed);
         let record = run_record(&cell.task, &cell.spec, &name, &run);
         let k = done.fetch_add(1, Ordering::SeqCst) + 1;
         if opts.verbose {
             let status = if record.diverged { "DIVERGED" } else { "ok" };
             println!(
-                "[{k}/{n}] {} seed={} lr={} → {status}, loss {:.5} after {} steps",
-                cell.spec.canonical(),
+                "[{k}/{n}] {spec} seed={} lr={} → {status}, loss {:.5} after {} steps",
                 cell.seed,
                 run.lr,
                 record.final_loss(),
                 record.steps.len()
             );
         }
-        record
+        CellResult::from_record(cell, run.lr, record)
     });
     let cells = grid
         .cells
@@ -130,7 +164,7 @@ pub fn run_sweep(grid: &SweepGrid, opts: &SweepOptions) -> SweepReport {
         .map(|(cell, out)| {
             let lr = cell.lr.unwrap_or(opts.run.lr);
             match out {
-                Ok(record) => CellResult::from_record(cell, lr, record),
+                Ok(result) => result,
                 Err(msg) => CellResult::panicked(cell, lr, msg),
             }
         })
@@ -200,5 +234,77 @@ mod tests {
         // The lr axis reached the harness; the spec stayed clean.
         assert_eq!(report.cells[2].lr, 0.01);
         assert_eq!(report.cells[2].spec, "adam");
+    }
+
+    #[test]
+    fn resume_skips_prior_cells_and_reruns_the_rest() {
+        let task = TaskKind::Images;
+        let grid = SweepGrid::parse("sgd:momentum={0.5,0.9};adam", &task, 3).unwrap();
+        let opts = SweepOptions {
+            jobs: 2,
+            run: RunOpts {
+                steps: 4,
+                workers: 1,
+                batch: 16,
+                eval_every: 0,
+                hidden: vec![8],
+                ..Default::default()
+            },
+            verbose: false,
+        };
+        let full = run_sweep(&grid, &opts);
+
+        // Prior report holding only the first and last cell (as if the
+        // middle cell was lost to an interruption).
+        let prior = SweepReport {
+            cells: vec![full.cells[0].clone(), full.cells[2].clone()],
+        };
+        let resumed = run_sweep_resumed(&grid, &opts, Some(&prior));
+        assert_eq!(resumed.cells.len(), 3);
+        assert!(resumed.cells[0].skipped);
+        assert!(!resumed.cells[1].skipped, "missing cell must re-run");
+        assert!(resumed.cells[2].skipped);
+        // Deterministic per-cell results: the re-run middle cell matches
+        // the full sweep, and reused cells are carried through unchanged.
+        assert_eq!(resumed.to_csv_deterministic(), full.to_csv_deterministic());
+
+        // A panicked prior cell is NOT treated as done: it re-runs.
+        let mut prior = prior;
+        prior.cells[0].status = CellStatus::Panicked("boom".to_string());
+        prior.cells[0].record = None;
+        let resumed = run_sweep_resumed(&grid, &opts, Some(&prior));
+        assert!(!resumed.cells[0].skipped);
+        assert_eq!(resumed.cells[0].status, CellStatus::Ok);
+    }
+
+    #[test]
+    fn resume_key_includes_the_task() {
+        // Multi-task grids (SweepGrid::for_tasks) repeat the same
+        // spec/seed/lr per task — only the matching task's prior row may
+        // satisfy the resume lookup.
+        let tasks = [TaskKind::Images, TaskKind::Autoencoder];
+        let grid = SweepGrid::for_tasks("sgd", &tasks, 1).unwrap();
+        let opts = SweepOptions {
+            jobs: 2,
+            run: RunOpts {
+                steps: 3,
+                workers: 1,
+                batch: 16,
+                eval_every: 0,
+                hidden: vec![8],
+                ..Default::default()
+            },
+            verbose: false,
+        };
+        let full = run_sweep(&grid, &opts);
+        let prior = SweepReport { cells: vec![full.cells[0].clone()] };
+        let resumed = run_sweep_resumed(&grid, &opts, Some(&prior));
+        assert!(resumed.cells[0].skipped);
+        assert!(
+            !resumed.cells[1].skipped,
+            "same spec/seed/lr on a different task must re-run"
+        );
+        assert_eq!(resumed.cells[1].task, "autoencoder");
+        assert_eq!(resumed.to_csv_deterministic(), full.to_csv_deterministic());
     }
 }

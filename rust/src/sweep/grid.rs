@@ -200,6 +200,29 @@ impl SweepGrid {
     pub fn is_empty(&self) -> bool {
         self.cells.is_empty()
     }
+
+    /// A grid that runs one spec template over several tasks — the shape
+    /// of the Table 2/3 benches, where the same optimizer configuration is
+    /// evaluated on every task of a suite. `template` may use the full
+    /// axis grammar; the expansion is repeated per task, tasks outermost.
+    pub fn for_tasks(
+        template: &str,
+        tasks: &[TaskKind],
+        base_seed: u64,
+    ) -> Result<SweepGrid, SweepError> {
+        let mut cells = Vec::new();
+        for task in tasks {
+            let sub = SweepGrid::parse(template, task, base_seed)?;
+            for mut cell in sub.cells {
+                cell.index = cells.len();
+                cells.push(cell);
+            }
+        }
+        if cells.is_empty() {
+            return Err(SweepError::Empty);
+        }
+        Ok(SweepGrid { cells })
+    }
 }
 
 /// Resolve a CLI task name to its proxy workload.
@@ -608,6 +631,20 @@ mod tests {
     fn empty_sweeps_are_an_error() {
         assert_eq!(err(""), SweepError::Empty);
         assert_eq!(err(" ; "), SweepError::Empty);
+    }
+
+    #[test]
+    fn for_tasks_repeats_the_template_per_task() {
+        let tasks = [TaskKind::Images, TaskKind::Autoencoder];
+        let g = SweepGrid::for_tasks("mkor:f={1,10}", &tasks, 5).unwrap();
+        assert_eq!(g.len(), 4);
+        let labels: Vec<String> = g.cells.iter().map(|c| task_label(&c.task)).collect();
+        assert_eq!(labels, vec!["images", "images", "autoencoder", "autoencoder"]);
+        for (i, c) in g.cells.iter().enumerate() {
+            assert_eq!(c.index, i, "indices re-numbered across tasks");
+            assert_eq!(c.seed, 5);
+        }
+        assert!(SweepGrid::for_tasks("mkor", &[], 0).is_err());
     }
 
     #[test]

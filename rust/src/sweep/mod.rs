@@ -42,6 +42,6 @@ pub mod executor;
 pub mod grid;
 pub mod report;
 
-pub use executor::{fan_out, run_sweep, SweepOptions};
+pub use executor::{fan_out, run_sweep, run_sweep_resumed, SweepOptions};
 pub use grid::{task_by_name, task_label, SweepCell, SweepError, SweepGrid};
-pub use report::{CellResult, CellStatus, SweepReport};
+pub use report::{CellResult, CellStatus, CellSummary, SweepReport};

@@ -34,6 +34,18 @@ impl CellStatus {
     }
 }
 
+/// Summary columns of a cell loaded back from a saved CSV — everything a
+/// resumed sweep needs to re-emit the row unchanged (the loss series lives
+/// only in JSON artifacts and is not recoverable from CSV).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellSummary {
+    pub steps: usize,
+    pub final_loss: Option<f64>,
+    pub converged_at: Option<usize>,
+    pub best_eval: Option<f64>,
+    pub wall_secs: f64,
+}
+
 /// One cell's outcome: identity (spec/task/seed/lr) + status + record.
 #[derive(Clone, Debug)]
 pub struct CellResult {
@@ -46,8 +58,15 @@ pub struct CellResult {
     /// The harness learning rate this cell actually ran with.
     pub lr: f32,
     pub status: CellStatus,
-    /// The full run record (absent only for panicked cells).
+    /// The full run record (absent for panicked cells and for cells loaded
+    /// back from a CSV).
     pub record: Option<RunRecord>,
+    /// Summary columns for cells loaded from a CSV (consulted when
+    /// `record` is absent, so re-saving reproduces the original row).
+    pub loaded: Option<CellSummary>,
+    /// True when a resumed sweep reused this cell from a prior report
+    /// instead of re-running it.
+    pub skipped: bool,
 }
 
 impl CellResult {
@@ -66,6 +85,8 @@ impl CellResult {
             lr,
             status,
             record: Some(record),
+            loaded: None,
+            skipped: false,
         }
     }
 
@@ -79,37 +100,53 @@ impl CellResult {
             lr,
             status: CellStatus::Panicked(message),
             record: None,
+            loaded: None,
+            skipped: false,
         }
     }
 
     /// Final training loss, if the cell produced any steps.
     pub fn final_loss(&self) -> Option<f64> {
-        let record = self.record.as_ref()?;
-        if record.steps.is_empty() {
-            None
-        } else {
-            Some(record.final_loss())
+        if let Some(record) = &self.record {
+            return if record.steps.is_empty() {
+                None
+            } else {
+                Some(record.final_loss())
+            };
         }
+        self.loaded.as_ref().and_then(|s| s.final_loss)
     }
 
     /// Step at which the run first hit its target metric, if ever.
     pub fn converged_at(&self) -> Option<usize> {
-        self.record.as_ref().and_then(|r| r.converged_at)
+        if let Some(record) = &self.record {
+            return record.converged_at;
+        }
+        self.loaded.as_ref().and_then(|s| s.converged_at)
     }
 
     /// Best eval metric seen over the run.
     pub fn best_eval(&self) -> Option<f64> {
-        self.record.as_ref().and_then(|r| r.best_eval())
+        if let Some(record) = &self.record {
+            return record.best_eval();
+        }
+        self.loaded.as_ref().and_then(|s| s.best_eval)
     }
 
     /// Steps the cell recorded (including a diverged final step).
     pub fn steps_run(&self) -> usize {
-        self.record.as_ref().map_or(0, |r| r.steps.len())
+        if let Some(record) = &self.record {
+            return record.steps.len();
+        }
+        self.loaded.as_ref().map_or(0, |s| s.steps)
     }
 
     /// Total wall seconds of the cell's own steps.
     pub fn wall_secs(&self) -> f64 {
-        self.record.as_ref().map_or(0.0, |r| r.total_wall_secs())
+        if let Some(record) = &self.record {
+            return record.total_wall_secs();
+        }
+        self.loaded.as_ref().map_or(0.0, |s| s.wall_secs)
     }
 }
 
@@ -149,6 +186,17 @@ impl SweepReport {
         self.cells
             .iter()
             .find(|c| c.spec == spec && c.seed == seed && c.lr == lr)
+    }
+
+    /// Full-key lookup — canonical spec + task label + seed + lr — the
+    /// resume key of [`run_sweep_resumed`](crate::sweep::run_sweep_resumed).
+    /// The task matters on multi-task grids ([`SweepGrid::for_tasks`]
+    /// (crate::sweep::SweepGrid::for_tasks)), where every task's cell
+    /// shares the same spec/seed/lr.
+    pub fn find_keyed(&self, spec: &str, task: &str, seed: u64, lr: f32) -> Option<&CellResult> {
+        self.cells
+            .iter()
+            .find(|c| c.spec == spec && c.task == task && c.seed == seed && c.lr == lr)
     }
 
     /// Build the report table; `wall` appends the wall-clock column.
@@ -283,6 +331,102 @@ impl SweepReport {
     pub fn save_json(&self, path: &Path) -> anyhow::Result<()> {
         self.save_json_with(path, false)
     }
+
+    /// Load a report back from a CSV written by [`SweepReport::save_csv`]
+    /// (with or without the wall-clock column) — the prior-results source
+    /// for `mkor sweep --resume`. Loaded cells carry the summary columns
+    /// (not the loss series), keyed exactly as written: canonical spec
+    /// string + seed + lr. Numeric columns round-trip exactly because both
+    /// the writer and `parse` use shortest-round-trip float formatting.
+    pub fn load_csv(path: &Path) -> anyhow::Result<SweepReport> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("{}: empty CSV", path.display()))?;
+        let cols = split_csv_line(header);
+        let col = |name: &str| -> anyhow::Result<usize> {
+            cols.iter()
+                .position(|c| c == name)
+                .ok_or_else(|| anyhow::anyhow!("{}: missing column `{name}`", path.display()))
+        };
+        let c_cell = col("cell")?;
+        let c_spec = col("spec")?;
+        let c_task = col("task")?;
+        let c_seed = col("seed")?;
+        let c_lr = col("lr")?;
+        let c_status = col("status")?;
+        let c_steps = col("steps")?;
+        let c_final = col("final_loss")?;
+        let c_conv = col("converged_at")?;
+        let c_best = col("best_eval")?;
+        let c_wall = cols.iter().position(|c| c == "wall_secs");
+
+        let mut cells = Vec::new();
+        for (lineno, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let f = split_csv_line(line);
+            let bad = |what: &str| {
+                anyhow::anyhow!("{}:{}: invalid {what}: `{line}`", path.display(), lineno + 2)
+            };
+            let field = |i: usize| f.get(i).map(String::as_str).unwrap_or("");
+            let opt_f64 = |i: usize| -> Option<f64> { field(i).parse().ok() };
+            let status = match field(c_status) {
+                "ok" => CellStatus::Ok,
+                "diverged" => CellStatus::Diverged,
+                "panicked" => CellStatus::Panicked(String::new()),
+                other => return Err(bad(&format!("status `{other}`"))),
+            };
+            cells.push(CellResult {
+                index: field(c_cell).parse().map_err(|_| bad("cell index"))?,
+                spec: field(c_spec).to_string(),
+                task: field(c_task).to_string(),
+                seed: field(c_seed).parse().map_err(|_| bad("seed"))?,
+                lr: field(c_lr).parse().map_err(|_| bad("lr"))?,
+                status,
+                record: None,
+                loaded: Some(CellSummary {
+                    steps: field(c_steps).parse().unwrap_or(0),
+                    final_loss: opt_f64(c_final),
+                    converged_at: field(c_conv).parse().ok(),
+                    best_eval: opt_f64(c_best),
+                    wall_secs: c_wall.and_then(opt_f64).unwrap_or(0.0),
+                }),
+                skipped: false,
+            });
+        }
+        Ok(SweepReport { cells })
+    }
+}
+
+/// Split one CSV line into fields, honoring the quoting
+/// [`Table::to_csv`](crate::bench_utils::Table::to_csv) produces (fields
+/// containing commas/quotes are double-quoted, embedded quotes doubled).
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' if cur.is_empty() => in_quotes = true,
+            ',' if !in_quotes => out.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
 }
 
 #[cfg(test)]
@@ -397,5 +541,71 @@ mod tests {
         assert!(s.contains("| spec"));
         let first = s.lines().next().unwrap().len();
         assert!(s.lines().all(|l| l.len() == first));
+    }
+
+    #[test]
+    fn csv_roundtrip_preserves_rows_byte_for_byte() {
+        // save → load_csv → save must reproduce the exact same CSV: that
+        // is what lets `--resume` merge completed cells "unchanged".
+        let dir = std::env::temp_dir()
+            .join(format!("mkor-report-csv-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = toy_report();
+        for deterministic in [false, true] {
+            let path = dir.join(format!("sweep-{deterministic}.csv"));
+            r.save_csv_with(&path, deterministic).unwrap();
+            let loaded = SweepReport::load_csv(&path).unwrap();
+            assert_eq!(loaded.cells.len(), 2);
+            // Quoted spec strings (containing commas) survive.
+            assert_eq!(loaded.cells[0].spec, "mkor:f=25,backend=lamb");
+            assert_eq!(loaded.cells[0].status, CellStatus::Ok);
+            assert_eq!(loaded.cells[0].final_loss(), Some(1.0));
+            assert_eq!(loaded.cells[0].converged_at(), Some(1));
+            assert_eq!(loaded.cells[0].steps_run(), 2);
+            assert_eq!(loaded.cells[1].status, CellStatus::Panicked(String::new()));
+            assert_eq!(loaded.cells[1].final_loss(), None);
+            // Re-saving the loaded report reproduces the bytes exactly.
+            let original = std::fs::read_to_string(&path).unwrap();
+            let resaved = if deterministic {
+                loaded.to_csv_deterministic()
+            } else {
+                loaded.to_csv()
+            };
+            assert_eq!(resaved, original, "deterministic={deterministic}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_csv_rejects_malformed_input() {
+        let dir = std::env::temp_dir()
+            .join(format!("mkor-report-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        // Missing a required column.
+        std::fs::write(&path, "cell,spec,task\n0,sgd,images\n").unwrap();
+        let e = SweepReport::load_csv(&path).unwrap_err();
+        assert!(e.to_string().contains("seed"), "{e}");
+        // Unknown status value.
+        std::fs::write(
+            &path,
+            "cell,spec,task,seed,lr,status,steps,final_loss,converged_at,best_eval\n\
+             0,sgd,images,0,0.1,weird,5,1.0,,\n",
+        )
+        .unwrap();
+        let e = SweepReport::load_csv(&path).unwrap_err();
+        assert!(e.to_string().contains("weird"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn csv_field_splitter_handles_quotes() {
+        assert_eq!(split_csv_line("a,b,c"), vec!["a", "b", "c"]);
+        assert_eq!(
+            split_csv_line("0,\"mkor:f=25,backend=lamb\",images"),
+            vec!["0", "mkor:f=25,backend=lamb", "images"]
+        );
+        assert_eq!(split_csv_line("\"he said \"\"hi\"\"\",x"), vec!["he said \"hi\"", "x"]);
+        assert_eq!(split_csv_line("a,,b"), vec!["a", "", "b"]);
     }
 }

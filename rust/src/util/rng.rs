@@ -43,6 +43,20 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The full generator state: the four xoshiro words plus the cached
+    /// Box–Muller spare. Together with [`Rng::set_state`] this makes the
+    /// stream checkpointable — restoring and drawing continues bit-for-bit
+    /// where the saved generator left off.
+    pub fn state(&self) -> ([u64; 4], Option<f64>) {
+        (self.s, self.gauss_spare)
+    }
+
+    /// Restore state captured by [`Rng::state`].
+    pub fn set_state(&mut self, s: [u64; 4], gauss_spare: Option<f64>) {
+        self.s = s;
+        self.gauss_spare = gauss_spare;
+    }
+
     /// Next raw 64-bit value.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

@@ -34,6 +34,18 @@ impl Ema {
     pub fn steps(&self) -> u64 {
         self.steps
     }
+
+    /// Raw accumulator state `(value, steps)` — the uncorrected EMA value,
+    /// for checkpointing (`beta` is configuration, not state).
+    pub fn state(&self) -> (f64, u64) {
+        (self.value, self.steps)
+    }
+
+    /// Restore state captured by [`Ema::state`].
+    pub fn set_state(&mut self, value: f64, steps: u64) {
+        self.value = value;
+        self.steps = steps;
+    }
 }
 
 /// Summary statistics of a sample.
@@ -84,6 +96,22 @@ pub fn median(xs: &[f64]) -> f64 {
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     quantile_sorted(&s, 0.5)
+}
+
+/// First index at which the trailing-`window` mean of `series` drops to
+/// `target` or below — the steps-to-target smoothing shared by the
+/// convergence harness and the sweep-based benches (one definition, so
+/// their reported step counts stay comparable).
+pub fn first_at_or_below(series: &[f64], target: f64, window: usize) -> Option<usize> {
+    let window = window.max(1);
+    for i in 0..series.len() {
+        let lo = i.saturating_sub(window - 1);
+        let mean = series[lo..=i].iter().sum::<f64>() / (i - lo + 1) as f64;
+        if mean <= target {
+            return Some(i);
+        }
+    }
+    None
 }
 
 /// Fixed-range histogram (Figure 5 / Figure 10 error distributions).
@@ -189,6 +217,18 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.std - (2.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn first_at_or_below_smooths_over_the_window() {
+        let s = [5.0, 1.0, 1.0];
+        // Window mean at index 1 is 3.0.
+        assert_eq!(first_at_or_below(&s, 3.0, 2), Some(1));
+        assert_eq!(first_at_or_below(&s, 0.5, 2), None);
+        assert_eq!(first_at_or_below(&s, 5.0, 2), Some(0));
+        assert_eq!(first_at_or_below(&[], 1.0, 5), None);
+        // window 0 is clamped to 1 (no smoothing).
+        assert_eq!(first_at_or_below(&s, 1.0, 0), Some(1));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! (deterministic ordering, per-cell seeding independent of scheduling).
 
 use mkor::experiments::convergence::{RunOpts, TaskKind};
-use mkor::sweep::{run_sweep, CellStatus, SweepGrid, SweepOptions};
+use mkor::sweep::{run_sweep, run_sweep_resumed, CellStatus, SweepGrid, SweepOptions, SweepReport};
 use mkor::util::json::Json;
 
 fn tiny_opts(jobs: usize) -> SweepOptions {
@@ -83,6 +83,47 @@ fn a_diverged_cell_fails_alone_and_the_sweep_survives() {
     let csv = report.to_csv();
     assert_eq!(csv.trim().lines().count(), 3);
     assert!(csv.contains("diverged"), "{csv}");
+}
+
+#[test]
+fn interrupted_sweep_resumes_from_its_csv_and_reruns_only_missing_cells() {
+    // The full `--resume` flow: run a grid, save the CSV, drop rows (the
+    // "interrupted" state), reload via load_csv, and resume — only the
+    // missing cells re-run, reused rows merge unchanged, and the final
+    // artifact is byte-identical to the uninterrupted sweep's.
+    let dir = std::env::temp_dir().join(format!("mkor-sweep-resume-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("sweep.csv");
+
+    let task = TaskKind::Images;
+    let grid = SweepGrid::parse("mkor:f={1,5};sgd:lr={0.1,0.05}", &task, 2).unwrap();
+    assert_eq!(grid.len(), 4);
+    let opts = tiny_opts(2);
+    let full = run_sweep(&grid, &opts);
+    full.save_csv(&csv_path).unwrap();
+    let full_csv = std::fs::read_to_string(&csv_path).unwrap();
+
+    // Interrupt: keep only the header + first two rows.
+    let kept: Vec<&str> = full_csv.trim_end().lines().take(3).collect();
+    std::fs::write(&csv_path, format!("{}\n", kept.join("\n"))).unwrap();
+
+    let prior = SweepReport::load_csv(&csv_path).unwrap();
+    assert_eq!(prior.cells.len(), 2);
+    let resumed = run_sweep_resumed(&grid, &opts, Some(&prior));
+    let skipped: Vec<bool> = resumed.cells.iter().map(|c| c.skipped).collect();
+    assert_eq!(skipped, vec![true, true, false, false]);
+    for c in &resumed.cells {
+        assert_eq!(c.status, CellStatus::Ok, "{}", c.spec);
+    }
+    // Cells that differ only in lr were keyed apart correctly (lr-axis
+    // cells share a spec string, so lr is part of the resume key).
+    assert_eq!(resumed.cells[2].spec, "sgd");
+    assert_eq!(resumed.cells[3].spec, "sgd");
+    assert_ne!(resumed.cells[2].lr, resumed.cells[3].lr);
+    // The merged deterministic artifact matches the uninterrupted run's.
+    assert_eq!(resumed.to_csv_deterministic(), full.to_csv_deterministic());
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

@@ -17,13 +17,14 @@ cargo test -q
 echo "== cargo build --release --all-targets (benches + examples) =="
 cargo build --release --all-targets
 
-echo "== rustfmt --check rust/src/sweep (fmt-strict module) =="
+echo "== rustfmt --check rust/src/{sweep,checkpoint} (fmt-strict modules) =="
 if command -v rustfmt >/dev/null 2>&1; then
-    # The sweep/ subsystem postdates rustfmt adoption and stays fmt-clean
-    # unconditionally, while the seed tree is still soft-checked below.
-    rustfmt --edition 2021 --check rust/src/sweep/*.rs
+    # The sweep/ and checkpoint/ subsystems postdate rustfmt adoption and
+    # stay fmt-clean unconditionally, while the seed tree is still
+    # soft-checked below.
+    rustfmt --edition 2021 --check rust/src/sweep/*.rs rust/src/checkpoint/*.rs
 else
-    echo "warning: rustfmt not installed; skipping sweep format check" >&2
+    echo "warning: rustfmt not installed; skipping sweep/checkpoint format check" >&2
 fi
 
 echo "== cargo fmt --check =="
