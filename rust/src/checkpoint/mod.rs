@@ -28,7 +28,22 @@
 //! resume_from`, the `RunOpts` checkpoint knobs in
 //! [`crate::experiments::convergence`], and the CLI
 //! (`mkor sim --checkpoint-every N --checkpoint-dir D --resume-from D`,
-//! `mkor sweep --resume`).
+//! `mkor sweep --resume`, `mkor ckpt inspect D` to print a checkpoint's
+//! manifest and state).
+//!
+//! The state layer is plain data and can be used directly:
+//!
+//! ```
+//! use mkor::checkpoint::StateDict;
+//!
+//! let mut sd = StateDict::new();
+//! sd.put_u64("t", 7).put_f64("ema", 0.5);
+//! sd.put_vector("w", &[1.0, -2.5]);
+//! let bytes = sd.to_bytes(); // versioned binary codec, bitwise round-trip
+//! let re = StateDict::from_bytes(&bytes).unwrap();
+//! assert_eq!(re.u64v("t").unwrap(), 7);
+//! assert_eq!(re.vector("w", 2).unwrap(), vec![1.0, -2.5]);
+//! ```
 
 pub mod manifest;
 pub mod snapshot;

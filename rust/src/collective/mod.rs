@@ -12,6 +12,19 @@
 //!   inter-node, matching the paper's Polaris/Mist testbeds) that prices a
 //!   collective at any worker count — this is what stands in for the
 //!   64-GPU measurements (DESIGN.md §3).
+//!
+//! The ring operates on plain per-worker buffers:
+//!
+//! ```
+//! use mkor::collective::allreduce_mean;
+//!
+//! // Two workers, two elements: every buffer ends as the element-wise mean.
+//! let mut bufs = vec![vec![1.0_f32, 2.0], vec![3.0, 4.0]];
+//! let stats = allreduce_mean(&mut bufs);
+//! assert_eq!(bufs[0], vec![2.0, 3.0]);
+//! assert_eq!(bufs[0], bufs[1]);
+//! assert!(stats.bytes_per_worker > 0);
+//! ```
 
 pub mod cost;
 pub mod ring;

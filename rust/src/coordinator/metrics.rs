@@ -4,6 +4,23 @@
 use crate::util::json::Json;
 use std::path::Path;
 
+/// One `[k/n] spec seed=S lr=LR → outcome` sweep progress line — the one
+/// format shared by the in-process executor
+/// ([`crate::sweep::run_sweep`]) and the multi-process dispatcher
+/// ([`crate::sweep::run_sweep_mp`]), so `--jobs` and `--workers` sweeps
+/// report identically and aggregated coordinator output reads like a
+/// single-process run.
+pub fn sweep_progress_line(
+    done: usize,
+    total: usize,
+    spec: &str,
+    seed: u64,
+    lr: f32,
+    outcome: &str,
+) -> String {
+    format!("[{done}/{total}] {spec} seed={seed} lr={lr} → {outcome}")
+}
+
 /// One training step's observables.
 #[derive(Clone, Copy, Debug)]
 pub struct StepRecord {
@@ -115,20 +132,33 @@ impl RunRecord {
     /// This is what checkpoints store — a resumed run appends to the
     /// restored record and its final loss series is indistinguishable from
     /// an uninterrupted run's. (f64 values survive because the JSON writer
-    /// prints shortest-round-trip representations.)
+    /// prints shortest-round-trip representations; non-finite losses —
+    /// a diverged run records the NaN/inf step that killed it — are
+    /// written as the strings `"NaN"`/`"inf"`/`"-inf"`, since JSON numbers
+    /// cannot carry them.)
     pub fn to_json_full(&self) -> Json {
         let mut o = self.to_json();
         let steps: Vec<Json> = self
             .steps
             .iter()
             .map(|s| {
+                let loss = if s.loss.is_finite() {
+                    Json::Num(s.loss)
+                } else {
+                    Json::Str(s.loss.to_string())
+                };
+                // Same treatment for eval metrics: a diverging eval loss
+                // records -inf/NaN, which a JSON number cannot carry
+                // (null already means "no eval this step").
+                let eval = match s.eval_metric {
+                    None => Json::Null,
+                    Some(m) if m.is_finite() => Json::Num(m),
+                    Some(m) => Json::Str(m.to_string()),
+                };
                 let mut j = Json::obj();
                 j.set("step", Json::Num(s.step as f64))
-                    .set("loss", Json::Num(s.loss))
-                    .set(
-                        "eval_metric",
-                        s.eval_metric.map_or(Json::Null, Json::Num),
-                    )
+                    .set("loss", loss)
+                    .set("eval_metric", eval)
                     .set("lr", Json::Num(s.lr as f64))
                     .set("wall_secs", Json::Num(s.wall_secs))
                     .set("grad_comm_bytes", Json::Num(s.grad_comm_bytes as f64))
@@ -159,11 +189,24 @@ impl RunRecord {
                     .and_then(Json::as_f64)
                     .ok_or_else(|| format!("steps[{i}]: missing/invalid `{key}`"))
             };
+            // Non-finite losses travel as strings ("NaN"/"inf"/"-inf");
+            // older records (or hand-edited ones) may carry `null`, which
+            // reads back as NaN.
+            let loss = match s.get("loss") {
+                Some(Json::Str(v)) => v
+                    .parse::<f64>()
+                    .map_err(|_| format!("steps[{i}]: invalid `loss` string `{v}`"))?,
+                Some(Json::Null) => f64::NAN,
+                _ => num("loss")?,
+            };
             steps.push(StepRecord {
                 step: num("step")? as usize,
-                loss: num("loss")?,
+                loss,
                 eval_metric: match s.get("eval_metric") {
                     None | Some(Json::Null) => None,
+                    Some(Json::Str(v)) => Some(v.parse::<f64>().map_err(|_| {
+                        format!("steps[{i}]: invalid `eval_metric` string `{v}`")
+                    })?),
                     Some(v) => Some(
                         v.as_f64()
                             .ok_or_else(|| format!("steps[{i}]: invalid `eval_metric`"))?,
@@ -292,6 +335,40 @@ mod tests {
         // A record without `steps` is rejected with the field name.
         let e = RunRecord::from_json(&sample_run().to_json()).unwrap_err();
         assert!(e.contains("steps"), "{e}");
+    }
+
+    #[test]
+    fn nonfinite_losses_survive_the_full_json_roundtrip() {
+        // A diverged run records the non-finite step that killed it; JSON
+        // numbers cannot carry NaN/inf, so they travel as strings.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let mut r = sample_run();
+            r.steps[1].loss = bad;
+            r.steps[1].eval_metric = Some(bad);
+            r.diverged = true;
+            let text = format!("{:#}", r.to_json_full());
+            let re = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert!(re.diverged);
+            if bad.is_nan() {
+                assert!(re.steps[1].loss.is_nan());
+                assert!(re.steps[1].eval_metric.unwrap().is_nan());
+            } else {
+                assert_eq!(re.steps[1].loss, bad);
+                assert_eq!(re.steps[1].eval_metric, Some(bad));
+            }
+        }
+        // Legacy `null` losses read back as NaN instead of failing.
+        let mut r = sample_run();
+        r.steps[0].loss = f64::NAN;
+        let legacy = format!("{:#}", r.to_json_full()).replace("\"NaN\"", "null");
+        let re = RunRecord::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert!(re.steps[0].loss.is_nan());
+    }
+
+    #[test]
+    fn sweep_progress_lines_share_one_format() {
+        let line = sweep_progress_line(3, 9, "mkor:f=10", 4, 0.1, "ok, loss 0.5 after 6 steps");
+        assert_eq!(line, "[3/9] mkor:f=10 seed=4 lr=0.1 → ok, loss 0.5 after 6 steps");
     }
 
     #[test]

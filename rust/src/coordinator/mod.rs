@@ -21,5 +21,5 @@
 pub mod metrics;
 pub mod trainer;
 
-pub use metrics::{RunRecord, StepRecord};
+pub use metrics::{sweep_progress_line, RunRecord, StepRecord};
 pub use trainer::{Target, Trainer, TrainerBuilder, TrainerConfig};

@@ -7,8 +7,10 @@
 //!   workers, ring all-reduce (fp32 + bf16-quantized rank-1 sync), the
 //!   inversion-frequency scheduler, the MKOR-H loss-rate switcher, the
 //!   norm-based stabilizer, metrics, the spec-driven sweep engine
-//!   ([`sweep`]), the checkpoint subsystem ([`checkpoint`]: durable
-//!   optimizer/model state, resumable runs and sweeps) and the CLI.
+//!   ([`sweep`]: thread-pool and multi-process fan-out with byte-identical
+//!   deterministic artifacts), the checkpoint subsystem ([`checkpoint`]:
+//!   durable optimizer/model state, resumable runs and sweeps) and the CLI.
+//!   `docs/ARCHITECTURE.md` maps every module to the paper.
 //! * **L2 (JAX, build time)** — transformer fwd/bwd and the fused `mkor_step`
 //!   optimizer graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 (Pallas, build time)** — the Sherman–Morrison rank-1 inverse-update

@@ -15,14 +15,30 @@
 //!              `--checkpoint-every N --checkpoint-dir D` snapshots every
 //!              N steps; `--resume-from D` restores and continues
 //!              bitwise-identically (run the same flags).
-//! * `sweep`  — fan a grid of specs out over a thread pool and merge the
-//!              results into one CSV/JSON artifact: `--specs
+//! * `sweep`  — fan a grid of specs out and merge the results into one
+//!              CSV/JSON artifact: `--specs
 //!              "mkor:f={1,10,100};lamb;kfac:damping={0.01,0.1}"`,
 //!              `--task`, `--steps`, `--jobs`, `--out sweep.csv`. Braced
 //!              keys cross-multiply; ` x seed=0..4` repeats per seed; `lr`
 //!              and `seed` are reserved harness axes (README has the full
-//!              grammar). `--resume` reloads `--out` and re-runs only the
+//!              grammar). `--jobs J` fans out over an in-process thread
+//!              pool; `--workers N` fans out over N crash-isolated
+//!              `sweep-worker` subprocesses instead (`--worker-batch B`
+//!              cells per dispatch, `--worker-dir D` scratch directory,
+//!              default `<out>.workers/`; `--cell-workers W` sets the
+//!              simulated data-parallel workers *inside* each cell).
+//!              `--resume` reloads `--out` — plus, with `--workers`, any
+//!              leftover worker result files — and re-runs only the
 //!              missing cells of an interrupted grid.
+//!              `--checkpoint-every N --checkpoint-dir D` snapshots every
+//!              cell into `D/cell-<index>` so interrupted cells resume
+//!              mid-run.
+//! * `sweep-worker` — internal: runs one cell batch for `sweep --workers`
+//!              (`--cells-json batch.json --out results.jsonl`).
+//! * `ckpt`   — `ckpt inspect <dir>` prints a checkpoint's manifest
+//!              (step, spec, task, per-component file/hash/bytes) after
+//!              validating every blob; `--dump [component]` adds the
+//!              `StateDict` contents as JSON.
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 
@@ -38,9 +54,14 @@ use mkor::model::{specs, Activation, Mlp};
 use mkor::optim::OptimizerSpec;
 use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
 use mkor::runtime::ArtifactBundle;
-use mkor::sweep::{run_sweep_resumed, task_by_name, SweepGrid, SweepOptions, SweepReport};
+use mkor::checkpoint::{Checkpoint, MANIFEST_FILE};
+use mkor::sweep::{
+    run_sweep_mp, run_sweep_resumed, run_worker, task_by_name, MpOptions, SweepGrid,
+    SweepOptions, SweepReport,
+};
+use mkor::util::json::Json;
 use mkor::util::Rng;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 fn main() {
     mkor::util::logging::init_from_env();
@@ -53,10 +74,12 @@ fn main() {
         Some("specs") => cmd_specs(),
         Some("sim") => cmd_sim(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("sweep-worker") => cmd_sweep_worker(&args),
+        Some("ckpt") => cmd_ckpt(&args),
         Some("train") => cmd_train(&args),
         _ => {
             eprintln!(
-                "usage: mkor <train|sim|sweep|specs|version> [--flags]\n\
+                "usage: mkor <train|sim|sweep|ckpt|specs|version> [--flags]\n\
                  see README.md for details"
             );
             2
@@ -104,7 +127,9 @@ fn cmd_sim(args: &Args) -> i32 {
     let opt_name = args.get_or("optimizer", "mkor");
     let task = args.get_or("task", "glue");
     let steps = args.usize_or("steps", 300);
-    let workers = args.usize_or("workers", 4);
+    // `--cell-workers` is the sweep-side name for the same knob; accept
+    // it here too so recipes move between `sim` and `sweep` unchanged.
+    let workers = args.usize_or("cell-workers", args.usize_or("workers", 4));
     let lr = args.f32_or("lr", 0.1);
     let seed = args.u64_or("seed", 0);
     // --target needs evals to be observed; default a cadence in when the
@@ -286,9 +311,14 @@ fn cmd_sweep(args: &Args) -> i32 {
         eprintln!(
             "usage: mkor sweep --specs \"mkor:f={{1,10,100}};lamb;kfac:damping={{0.01,0.1}}\" \
              [--task glue|images|autoencoder|text] [--steps N] [--jobs J] [--lr LR] \
-             [--workers W] [--batch B] [--seed S] [--eval-every N] [--target M] \
+             [--cell-workers W] [--batch B] [--seed S] [--eval-every N] [--target M] \
              [--hidden 96,48] [--out sweep.csv] [--json sweep.json] \
-             [--deterministic] [--resume] [--quiet]"
+             [--workers N] [--worker-batch B] [--worker-dir D] [--keep-worker-files] \
+             [--checkpoint-every N --checkpoint-dir D] \
+             [--deterministic] [--resume] [--quiet]\n\
+             --jobs fans cells out over an in-process thread pool; --workers N fans \
+             them out over N crash-isolated subprocesses instead (byte-identical \
+             deterministic artifacts either way)"
         );
         return 2;
     };
@@ -321,7 +351,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     let mut run = RunOpts {
         lr: args.f32_or("lr", 0.1),
         steps: args.usize_or("steps", 300),
-        workers: args.usize_or("workers", 2),
+        workers: args.usize_or("cell-workers", 2),
         batch: args.usize_or("batch", 64),
         seed: base_seed,
         eval_every: args.usize_or("eval-every", 10),
@@ -339,12 +369,41 @@ fn cmd_sweep(args: &Args) -> i32 {
             }
         }
     }
+    // Per-cell checkpointing: every cell snapshots into its own
+    // `cell-<index>` subdirectory of --checkpoint-dir and resumes from it
+    // when re-run (see SweepOptions::run_for_cell).
+    run.checkpoint_every = args.usize_or("checkpoint-every", 0);
+    match args.get("checkpoint-dir") {
+        Some(dir) => run.checkpoint_dir = Some(PathBuf::from(dir)),
+        None if run.checkpoint_every > 0 => {
+            eprintln!("error: --checkpoint-every needs --checkpoint-dir");
+            return 2;
+        }
+        None => {}
+    }
     let default_jobs = std::thread::available_parallelism().map_or(1, |n| n.get());
     let opts = SweepOptions {
         jobs: args.usize_or("jobs", default_jobs),
         run,
         verbose: !args.flag("quiet"),
     };
+    let workers = args.usize_or("workers", 0);
+    // `--workers` used to be the per-cell data-parallel width (now
+    // `--cell-workers`); surface the repurposing so old invocations are
+    // not silently reinterpreted.
+    if workers > 0 && args.get("cell-workers").is_none() {
+        println!(
+            "note: --workers now selects the process fan-out ({workers} subprocesses); \
+             per-cell data-parallel workers stay at {} (set --cell-workers to change)",
+            opts.run.workers
+        );
+    }
+    if workers > 0 && args.get("jobs").is_some() {
+        println!(
+            "note: --jobs is ignored with --workers: each of the {workers} worker \
+             processes runs its cell batch serially"
+        );
+    }
 
     // --resume: reload prior results from --out and skip completed cells
     // (keyed by canonical spec + seed + lr; panicked cells re-run). Run
@@ -377,14 +436,43 @@ fn cmd_sweep(args: &Args) -> i32 {
         None
     };
 
+    let fan_label = if workers > 0 {
+        format!("{workers} worker processes")
+    } else {
+        format!("{} jobs", opts.jobs)
+    };
     println!(
-        "sweep: {} cells × {} steps on `{}`, {} jobs",
+        "sweep: {} cells × {} steps on `{}`, {}",
         grid.len(),
         opts.run.steps,
         args.get_or("task", "glue"),
-        opts.jobs
+        fan_label
     );
-    let report = run_sweep_resumed(&grid, &opts, prior.as_ref());
+    let report = if workers > 0 {
+        // Multi-process fan-out: one subprocess per cell batch, results
+        // streamed back through the scratch directory and merged in grid
+        // order — byte-identical deterministic artifacts to --jobs runs.
+        let scratch = match args.get("worker-dir") {
+            Some(dir) => PathBuf::from(dir),
+            None => match args.get("out") {
+                Some(out) => PathBuf::from(format!("{out}.workers")),
+                None => std::env::temp_dir().join(format!("mkor-sweep-{}", std::process::id())),
+            },
+        };
+        let mut mp = MpOptions::new(scratch, workers);
+        mp.batch = args.usize_or("worker-batch", 0);
+        mp.recover = args.flag("resume");
+        mp.keep_scratch = args.flag("keep-worker-files");
+        match run_sweep_mp(&grid, &opts, &mp, prior.as_ref()) {
+            Ok(report) => report,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        run_sweep_resumed(&grid, &opts, prior.as_ref())
+    };
     println!("{}", report.render_table());
     let (ok, diverged, panicked) = report.counts();
     let skipped = report.cells.iter().filter(|c| c.skipped).count();
@@ -424,10 +512,117 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
 }
 
+/// Hidden subcommand: the worker half of `mkor sweep --workers N`. Runs
+/// one cell batch sequentially and appends one JSON result line per cell
+/// to --out; the coordinator streams, merges and (if this process dies)
+/// re-dispatches.
+fn cmd_sweep_worker(args: &Args) -> i32 {
+    let (Some(cells), Some(out)) = (args.get("cells-json"), args.get("out")) else {
+        eprintln!(
+            "usage: mkor sweep-worker --cells-json batch.json --out results.jsonl\n\
+             (internal: launched by `mkor sweep --workers N`)"
+        );
+        return 2;
+    };
+    match run_worker(Path::new(cells), Path::new(out)) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("sweep-worker: {e:#}");
+            1
+        }
+    }
+}
+
+/// `mkor ckpt inspect <dir> [--dump [component]]`: validate a checkpoint
+/// (manifest well-formed, every blob present with a matching content
+/// hash) and print what it holds; `--dump` adds the decoded state dicts
+/// as JSON (`StateDict::to_json` — human-readable, lossy for display).
+fn cmd_ckpt(args: &Args) -> i32 {
+    let usage = || eprintln!("usage: mkor ckpt inspect <dir> [--dump [component]]");
+    if args.positional.get(1).map(String::as_str) != Some("inspect") {
+        usage();
+        return 2;
+    }
+    let Some(dir) = args.positional.get(2) else {
+        usage();
+        return 2;
+    };
+    let dir = Path::new(dir);
+    // Checkpoint::load re-hashes every component blob, so a clean inspect
+    // doubles as an integrity check.
+    let ckpt = match Checkpoint::load(dir) {
+        Ok(ckpt) => ckpt,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!("checkpoint {}", dir.display());
+    println!("  step       {}", ckpt.step);
+    println!("  spec       {}", ckpt.spec);
+    println!("  optimizer  {}", ckpt.optimizer);
+    let task = if ckpt.task.is_empty() { "(unknown)" } else { ckpt.task.as_str() };
+    println!("  task       {task}");
+    println!("  run_name   {}", ckpt.run_name);
+    if let Some(record) = &ckpt.record {
+        println!(
+            "  record     {} steps, final loss {:.5}{}",
+            record.steps.len(),
+            record.final_loss(),
+            record
+                .converged_at
+                .map_or(String::new(), |s| format!(", converged at step {s}"))
+        );
+    }
+
+    // Per-component file/hash/bytes come from the manifest itself (load
+    // validates them but keeps only the decoded state).
+    let manifest = match Json::from_file(&dir.join(MANIFEST_FILE)) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: re-reading manifest: {e}");
+            return 1;
+        }
+    };
+    let mut t = Table::new(&["component", "file", "bytes", "fnv1a64"]);
+    if let Some(Json::Obj(components)) = manifest.get("components") {
+        for (name, meta) in components {
+            t.row(&[
+                name.clone(),
+                meta.get("file").and_then(Json::as_str).unwrap_or("?").to_string(),
+                meta.get("bytes").and_then(Json::as_usize).map_or("?".into(), |b| b.to_string()),
+                meta.get("hash").and_then(Json::as_str).unwrap_or("?").to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    match args.get("dump") {
+        None => {}
+        // Bare `--dump` parses as the flag value "true": dump everything.
+        Some("true") => {
+            for (name, sd) in &ckpt.components {
+                println!("--- {name} ---");
+                println!("{:#}", sd.to_json());
+            }
+        }
+        Some(name) => match ckpt.components.get(name) {
+            Some(sd) => println!("{:#}", sd.to_json()),
+            None => {
+                let known: Vec<&str> = ckpt.components.keys().map(String::as_str).collect();
+                eprintln!("error: no component `{name}`; checkpoint has: {}", known.join(", "));
+                return 1;
+            }
+        },
+    }
+    0
+}
+
 fn cmd_train(args: &Args) -> i32 {
     let preset = args.get_or("preset", "tiny");
     let steps = args.usize_or("steps", 50);
-    let workers = args.usize_or("workers", 2);
+    // As in `sim`: `--cell-workers` is accepted as a synonym.
+    let workers = args.usize_or("cell-workers", args.usize_or("workers", 2));
     let artifacts = args.get_or("artifacts", "artifacts");
     let eval_every = args.usize_or("eval-every", 25);
 

@@ -3,7 +3,7 @@
 //! LAMB (You et al., 2019) is the paper's first-order baseline for BERT
 //! (Tables 2/3); SGD-momentum is the ResNet baseline (§8.1). Each exposes
 //! both the [`Optimizer`] interface (stand-alone baseline) and an
-//! [`apply`]-style entry point so MKOR/MKOR-H can use it as the line-14
+//! `apply`-style entry point so MKOR/MKOR-H can use it as the line-14
 //! backend on *preconditioned* deltas.
 
 use crate::checkpoint::snapshot::{matrices_from, put_matrices, put_vectors, vectors_from};

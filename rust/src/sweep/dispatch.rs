@@ -1,0 +1,878 @@
+//! Multi-process sweep dispatch: coordinator + crash-isolated workers.
+//!
+//! The in-process executor ([`run_sweep`](crate::sweep::run_sweep)) fans
+//! cells out over threads of one process — one OOM or runaway cell can
+//! still take the whole sweep down, and one process is the ceiling the
+//! paper's scalability argument warns about. This module adds the
+//! process-level tier: [`run_sweep_mp`] shards the expanded grid into
+//! cell batches, launches one subprocess per batch (`mkor sweep-worker`,
+//! a hidden subcommand re-entering the same binary), streams per-cell
+//! JSON results back through per-worker files, and merges them into the
+//! same [`SweepReport`] in deterministic grid order — so `--jobs N`,
+//! `--workers N` and straight-line runs all produce byte-identical
+//! deterministic CSV/JSON artifacts.
+//!
+//! ```text
+//! coordinator (mkor sweep --workers N)          scratch dir (<out>.workers/)
+//!   grid ── shard_batches ──► queue             cells-<pid>-<k>.json   batch input
+//!   spawn ≤ N × `mkor sweep-worker` ──────────► out-<pid>-<k>.jsonl    one result/line
+//!   poll: stream lines ──► progress + merge ◄── (appended + flushed per cell)
+//!   reap: dead worker ──► re-dispatch batch minus completed cells
+//!   end : SweepReport in grid order ──► CSV/JSON, scratch GC'd
+//! ```
+//!
+//! Crash recovery is layered on PR 3's resumable sweeps:
+//!
+//! * a **worker** that dies mid-batch (kill, OOM, crash — per-cell panics
+//!   are caught and reported as data, they do not kill the worker) has its
+//!   unfinished cells re-dispatched as a fresh batch, minus the cells its
+//!   result file already carries;
+//! * a **coordinator** that dies leaves the worker result files behind;
+//!   `mkor sweep --resume` scans them (and the prior `--out` CSV) and
+//!   re-runs only the cells missing from both — resume works across
+//!   process boundaries;
+//! * a **cell** interrupted mid-run continues from its own
+//!   `cell-<index>` checkpoint when the sweep sets the checkpoint knobs
+//!   (`--checkpoint-every N --checkpoint-dir D`), via
+//!   [`SweepOptions::run_for_cell`].
+//!
+//! Determinism contract: a worker derives each cell's options through the
+//! same [`SweepOptions::run_for_cell`] as the thread executor, runs the
+//! same [`run_record`](crate::experiments::convergence::run_record), and
+//! ships the full lossless [`RunRecord`](crate::coordinator::RunRecord)
+//! back (floats as shortest-round-trip JSON, non-finite losses as
+//! strings), so the merged report is indistinguishable from an
+//! in-process run's.
+//!
+//! Test hook: setting `MKOR_SWEEP_WORKER_EXIT_AFTER=<k>` makes the first
+//! worker (per scratch directory) exit hard after completing `k` cells —
+//! the crash-injection used by `rust/tests/sweep_mp.rs` to prove that a
+//! killed worker's batch is re-dispatched and the artifacts stay
+//! byte-identical.
+
+use crate::coordinator::metrics::sweep_progress_line;
+use crate::experiments::convergence::{run_record, RunOpts};
+use crate::optim::OptimizerSpec;
+use crate::sweep::executor::{panic_message, SweepOptions};
+use crate::sweep::grid::{task_by_name, task_label, SweepCell, SweepGrid};
+use crate::sweep::report::{seed_from_json, seed_to_json, CellResult, SweepReport};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, VecDeque};
+use std::io::Write;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+/// Format version of the worker batch/result files.
+pub const WORKER_FORMAT_VERSION: usize = 1;
+
+/// Crash-injection env var: a worker exits with code 101 after completing
+/// this many cells — once per scratch directory (a sentinel file keeps
+/// retries alive), so tests can prove re-dispatch without flaky timing.
+pub const WORKER_EXIT_AFTER_ENV: &str = "MKOR_SWEEP_WORKER_EXIT_AFTER";
+
+const DIED_SENTINEL: &str = "worker-died.once";
+
+/// How the multi-process coordinator runs.
+#[derive(Clone, Debug)]
+pub struct MpOptions {
+    /// Worker subprocesses kept busy at once (≥ 1).
+    pub workers: usize,
+    /// Cells per dispatched batch; 0 = `ceil(pending / workers)` (one
+    /// batch per worker — lowest process overhead). Smaller batches give
+    /// better dynamic balance on straggler-heavy grids.
+    pub batch: usize,
+    /// Scratch directory for batch inputs and per-worker result files
+    /// (the CLI defaults to `<out>.workers/`). Removed after a fully
+    /// successful sweep unless [`MpOptions::keep_scratch`] is set.
+    pub scratch: PathBuf,
+    /// Dispatch attempts per batch lineage before the cell the worker
+    /// kept dying on is reported as panicked and the rest of the batch
+    /// restarts fresh (first run + retries; ≥ 1). Panicked *cells* are
+    /// data and never retried — this bounds retries of *dying workers*.
+    pub max_attempts: usize,
+    /// Scan leftover worker result files in `scratch` before dispatching
+    /// and reuse their cells (`--resume`): this is what makes resume work
+    /// across coordinator kills, with full records (the prior CSV alone
+    /// cannot carry loss series).
+    pub recover: bool,
+    /// Keep the scratch directory after the sweep (debugging).
+    pub keep_scratch: bool,
+}
+
+impl MpOptions {
+    /// Defaults: auto batch size, 2 attempts, no recovery scan.
+    pub fn new(scratch: impl Into<PathBuf>, workers: usize) -> MpOptions {
+        MpOptions {
+            workers: workers.max(1),
+            batch: 0,
+            scratch: scratch.into(),
+            max_attempts: 2,
+            recover: false,
+            keep_scratch: false,
+        }
+    }
+}
+
+/// Shard the still-pending grid positions into dispatch batches:
+/// contiguous runs of `batch` cells (`batch == 0` ⇒ `ceil(n / workers)`,
+/// i.e. one batch per worker). Grid order is preserved within and across
+/// batches; the merged report is re-sorted by cell index anyway, so
+/// sharding only affects load balance, never results.
+pub fn shard_batches(indices: &[usize], workers: usize, batch: usize) -> Vec<Vec<usize>> {
+    if indices.is_empty() {
+        return Vec::new();
+    }
+    let workers = workers.max(1);
+    let size = if batch > 0 {
+        batch
+    } else {
+        (indices.len() + workers - 1) / workers
+    };
+    indices.chunks(size.max(1)).map(<[usize]>::to_vec).collect()
+}
+
+// ---- batch files (coordinator → worker) --------------------------------
+
+fn run_to_json(run: &RunOpts) -> Json {
+    let mut o = Json::obj();
+    o.set("lr", Json::Num(run.lr as f64))
+        .set("steps", Json::Num(run.steps as f64))
+        .set("workers", Json::Num(run.workers as f64))
+        .set("batch", Json::Num(run.batch as f64))
+        .set("eval_every", Json::Num(run.eval_every as f64))
+        .set(
+            "target_metric",
+            run.target_metric.map_or(Json::Null, Json::Num),
+        )
+        .set("hidden", Json::from_usizes(&run.hidden))
+        .set("checkpoint_every", Json::Num(run.checkpoint_every as f64))
+        .set(
+            "checkpoint_dir",
+            run.checkpoint_dir.as_ref().map_or(Json::Null, |d| {
+                Json::Str(d.to_string_lossy().into_owned())
+            }),
+        );
+    o
+}
+
+fn run_from_json(j: &Json) -> Result<RunOpts, String> {
+    let num = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("worker batch: missing/invalid `{key}`"))
+    };
+    let hidden = j
+        .get("hidden")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "worker batch: missing/invalid `hidden`".to_string())?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| "worker batch: bad `hidden` entry".to_string()))
+        .collect::<Result<Vec<usize>, String>>()?;
+    Ok(RunOpts {
+        lr: num("lr")? as f32,
+        steps: num("steps")? as usize,
+        workers: num("workers")? as usize,
+        batch: num("batch")? as usize,
+        eval_every: num("eval_every")? as usize,
+        target_metric: j.get("target_metric").and_then(Json::as_f64),
+        hidden,
+        checkpoint_every: num("checkpoint_every")? as usize,
+        checkpoint_dir: j
+            .get("checkpoint_dir")
+            .and_then(Json::as_str)
+            .map(PathBuf::from),
+        // Per-cell fields (`seed`, per-cell lr/resume/checkpoint subdir)
+        // are derived by `SweepOptions::run_for_cell`, exactly as in the
+        // in-process executor; `inv_freq`/`gamma` are ignored by the
+        // spec-driven cell path.
+        ..RunOpts::default()
+    })
+}
+
+fn cell_to_json(cell: &SweepCell) -> Json {
+    let mut o = Json::obj();
+    o.set("index", Json::Num(cell.index as f64))
+        .set("spec", Json::Str(cell.spec.canonical()))
+        .set("task", Json::Str(task_label(&cell.task)))
+        .set("seed", seed_to_json(cell.seed))
+        .set("lr", cell.lr.map_or(Json::Null, |lr| Json::Num(lr as f64)));
+    o
+}
+
+fn cell_from_json(j: &Json) -> Result<SweepCell, String> {
+    let num = |key: &str| -> Result<f64, String> {
+        j.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("worker batch cell: missing/invalid `{key}`"))
+    };
+    let spec_str = j
+        .get("spec")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "worker batch cell: missing `spec`".to_string())?;
+    let spec = OptimizerSpec::parse(spec_str).map_err(|e| format!("cell spec: {e}"))?;
+    let task_name = j
+        .get("task")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "worker batch cell: missing `task`".to_string())?;
+    let task = task_by_name(task_name).map_err(|e| format!("cell task: {e}"))?;
+    let seed = seed_from_json(j.get("seed"))
+        .ok_or_else(|| "worker batch cell: missing/invalid `seed`".to_string())?;
+    Ok(SweepCell {
+        index: num("index")? as usize,
+        spec,
+        seed,
+        lr: j.get("lr").and_then(Json::as_f64).map(|lr| lr as f32),
+        task,
+    })
+}
+
+/// Write the batch input file one worker consumes: the shared run options
+/// plus the selected cells (global grid indices preserved, so per-cell
+/// checkpoint directories and report rows line up across any sharding).
+pub fn write_batch_file(
+    path: &Path,
+    grid: &SweepGrid,
+    indices: &[usize],
+    run: &RunOpts,
+) -> anyhow::Result<()> {
+    let cells: Vec<Json> = indices
+        .iter()
+        .map(|&i| cell_to_json(&grid.cells[i]))
+        .collect();
+    let mut o = Json::obj();
+    o.set("format", Json::Num(WORKER_FORMAT_VERSION as f64))
+        .set("run", run_to_json(run))
+        .set("cells", Json::Arr(cells));
+    o.to_file(path)
+}
+
+/// Parse a batch input file back into the shared options and its cells.
+pub fn read_batch_file(path: &Path) -> anyhow::Result<(RunOpts, Vec<SweepCell>)> {
+    let j = Json::from_file(path)?;
+    let format = j.require_usize("format")?;
+    anyhow::ensure!(
+        format == WORKER_FORMAT_VERSION,
+        "{}: unsupported worker batch format {format} (this build speaks {WORKER_FORMAT_VERSION})",
+        path.display()
+    );
+    let run = j
+        .get("run")
+        .ok_or_else(|| anyhow::anyhow!("{}: missing `run`", path.display()))
+        .and_then(|r| run_from_json(r).map_err(|e| anyhow::anyhow!("{}: {e}", path.display())))?;
+    let cells = j
+        .get("cells")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("{}: missing `cells`", path.display()))?
+        .iter()
+        .map(|c| cell_from_json(c).map_err(|e| anyhow::anyhow!("{}: {e}", path.display())))
+        .collect::<anyhow::Result<Vec<SweepCell>>>()?;
+    Ok((run, cells))
+}
+
+// ---- the worker process ------------------------------------------------
+
+/// Should this worker honor the crash-injection hook and die now?
+/// First-come-first-die: the sentinel file makes exactly one worker per
+/// scratch directory exit, so the retried batch completes.
+fn claim_injected_death(out: &Path, cells_done: usize) -> bool {
+    let Some(after) = std::env::var(WORKER_EXIT_AFTER_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    else {
+        return false;
+    };
+    if cells_done < after {
+        return false;
+    }
+    let dir = out.parent().map(Path::to_path_buf).unwrap_or_default();
+    std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(dir.join(DIED_SENTINEL))
+        .is_ok()
+}
+
+/// The body of the hidden `mkor sweep-worker` subcommand: run every cell
+/// of the batch file sequentially, appending one compact JSON result line
+/// per completed cell to `out` (flushed per line, so a killed worker
+/// loses at most the cell it was on). Per-cell panics are caught and
+/// reported as panicked results; the exit code reflects only whether the
+/// batch file itself was usable.
+pub fn run_worker(cells_json: &Path, out: &Path) -> anyhow::Result<()> {
+    let (run, cells) = read_batch_file(cells_json)?;
+    let opts = SweepOptions {
+        jobs: 1,
+        run,
+        verbose: false,
+    };
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(out)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", out.display()))?;
+    for (k, cell) in cells.iter().enumerate() {
+        if claim_injected_death(out, k) {
+            std::process::exit(101);
+        }
+        let run = opts.run_for_cell(cell);
+        let spec = cell.spec.canonical();
+        let name = format!("{spec}#s{}", cell.seed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            run_record(&cell.task, &cell.spec, &name, &run)
+        }));
+        let result = match outcome {
+            Ok(record) => CellResult::from_record(cell, run.lr, record),
+            Err(payload) => CellResult::panicked(cell, run.lr, panic_message(payload)),
+        };
+        writeln!(file, "{}", result.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", out.display()))?;
+        file.flush()?;
+    }
+    Ok(())
+}
+
+// ---- result streaming (worker → coordinator) ---------------------------
+
+/// Read the complete result lines appended to `path` since `offset`
+/// (advanced past everything consumed). Only the new bytes are read each
+/// call — the coordinator polls these append-only files frequently, and
+/// each line carries a full record, so re-reading from byte 0 would be
+/// quadratic over a sweep. Torn trailing lines — a worker killed
+/// mid-write — stay unconsumed until a newline lands; lines that still
+/// fail to parse are dropped, so their cells simply re-run.
+fn drain_results(path: &Path, offset: &mut usize) -> Vec<CellResult> {
+    use std::io::{Read, Seek, SeekFrom};
+    let Ok(mut file) = std::fs::File::open(path) else {
+        return Vec::new(); // worker has not created its file yet
+    };
+    let mut fresh = Vec::new();
+    if file.seek(SeekFrom::Start(*offset as u64)).is_err()
+        || file.read_to_end(&mut fresh).is_err()
+    {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut consumed = 0;
+    while let Some(pos) = fresh[consumed..].iter().position(|&b| b == b'\n') {
+        let line = &fresh[consumed..consumed + pos];
+        consumed += pos + 1;
+        let Ok(line) = std::str::from_utf8(line) else {
+            continue;
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(result) = Json::parse(line)
+            .ok()
+            .and_then(|j| CellResult::from_json(&j).ok())
+        {
+            out.push(result);
+        }
+    }
+    *offset += consumed;
+    out
+}
+
+/// Collect every result any previous coordinator's workers left in
+/// `dir` — the cross-process half of `--resume`.
+fn scan_worker_files(dir: &Path) -> Vec<CellResult> {
+    let mut out = Vec::new();
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return out;
+    };
+    let mut paths: Vec<PathBuf> = entries
+        .flatten()
+        .map(|e| e.path())
+        .filter(|p| {
+            let name = p.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            name.starts_with("out-") && name.ends_with(".jsonl")
+        })
+        .collect();
+    paths.sort();
+    for path in paths {
+        let mut offset = 0;
+        out.extend(drain_results(&path, &mut offset));
+    }
+    out
+}
+
+/// Remove this module's files from the scratch directory (batch inputs,
+/// result streams, the crash-injection sentinel) — never anything else,
+/// since `--worker-dir` may point at a shared directory.
+fn clear_scratch(dir: &Path) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let ours = (name.starts_with("cells-") && name.ends_with(".json"))
+            || (name.starts_with("out-") && name.ends_with(".jsonl"))
+            || name == DIED_SENTINEL;
+        if ours {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+// ---- the coordinator ---------------------------------------------------
+
+/// One in-flight worker subprocess and the batch it owns.
+struct Running {
+    child: Child,
+    indices: Vec<usize>,
+    attempt: usize,
+    out: PathBuf,
+    offset: usize,
+}
+
+/// Merge freshly streamed results into the done-map, printing one
+/// aggregated progress line per new cell. Returns whether anything new
+/// landed. Duplicates (a retried batch re-running a cell whose first
+/// result line arrived late) and out-of-range indices are ignored.
+fn absorb(
+    results: Vec<CellResult>,
+    done: &mut BTreeMap<usize, CellResult>,
+    completed: &mut usize,
+    n: usize,
+    verbose: bool,
+) -> bool {
+    let mut progressed = false;
+    for result in results {
+        if result.index >= n || done.contains_key(&result.index) {
+            continue;
+        }
+        *completed += 1;
+        progressed = true;
+        if verbose {
+            println!(
+                "{}",
+                sweep_progress_line(
+                    *completed,
+                    n,
+                    &result.spec,
+                    result.seed,
+                    result.lr,
+                    &result.outcome_line()
+                )
+            );
+        }
+        done.insert(result.index, result);
+    }
+    progressed
+}
+
+/// Run a sweep across worker subprocesses and merge the results into a
+/// [`SweepReport`] in deterministic grid order.
+///
+/// Cells already present in `prior` (the reloaded `--out` CSV) or — with
+/// [`MpOptions::recover`] — in leftover worker result files are reused
+/// and marked `skipped`, exactly like
+/// [`run_sweep_resumed`](crate::sweep::run_sweep_resumed); everything
+/// else is sharded into batches and dispatched to `mkor sweep-worker`
+/// subprocesses of the **current executable** (this function is only
+/// meaningful from the `mkor` binary). A worker that dies mid-batch has
+/// its unfinished cells re-dispatched up to [`MpOptions::max_attempts`]
+/// times; cells still unfinished after that are reported as panicked
+/// rows, never a dead sweep.
+pub fn run_sweep_mp(
+    grid: &SweepGrid,
+    opts: &SweepOptions,
+    mp: &MpOptions,
+    prior: Option<&SweepReport>,
+) -> anyhow::Result<SweepReport> {
+    let n = grid.cells.len();
+    // Workers rebuild each cell from (spec, task label, seed, lr); every
+    // task must survive the label → TaskKind round-trip EXACTLY — a glue
+    // task with a custom TaskConfig shares the label of the default one
+    // but would train a different workload in the workers. TaskKind has
+    // no PartialEq; the derived Debug form covers every field.
+    for cell in &grid.cells {
+        let label = task_label(&cell.task);
+        let rebuilt = task_by_name(&label).map_err(|_| {
+            anyhow::anyhow!(
+                "multi-process sweeps need CLI-resolvable task names; `{label}` is not one"
+            )
+        })?;
+        anyhow::ensure!(
+            format!("{rebuilt:?}") == format!("{:?}", cell.task),
+            "multi-process sweeps can only run tasks exactly as `--task {label}` builds \
+             them; this grid's `{label}` task has a custom configuration ({:?}) that \
+             would not survive the worker round-trip — use the in-process executor",
+            cell.task
+        );
+    }
+    std::fs::create_dir_all(&mp.scratch)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", mp.scratch.display()))?;
+    let recovered = SweepReport {
+        cells: if mp.recover {
+            scan_worker_files(&mp.scratch)
+        } else {
+            clear_scratch(&mp.scratch);
+            Vec::new()
+        },
+    };
+
+    let mut done: BTreeMap<usize, CellResult> = BTreeMap::new();
+    let mut completed = 0usize;
+    for cell in &grid.cells {
+        let run = opts.run_for_cell(cell);
+        let spec = cell.spec.canonical();
+        let task = task_label(&cell.task);
+        // One resume key everywhere: SweepReport::reuse_keyed, the same
+        // lookup-and-mark run_sweep_resumed uses (panicked rows re-run).
+        // Worker result files carry full records and win over bare CSV
+        // summary rows.
+        let hit = recovered
+            .reuse_keyed(&spec, &task, cell.seed, run.lr, cell.index)
+            .or_else(|| {
+                prior.and_then(|p| p.reuse_keyed(&spec, &task, cell.seed, run.lr, cell.index))
+            });
+        if let Some(prev) = hit {
+            completed += 1;
+            if opts.verbose {
+                let outcome = format!("skipped ({} in prior report)", prev.status.label());
+                println!(
+                    "{}",
+                    sweep_progress_line(completed, n, &spec, cell.seed, run.lr, &outcome)
+                );
+            }
+            done.insert(cell.index, prev);
+        }
+    }
+
+    let pending: Vec<usize> = (0..n).filter(|i| !done.contains_key(i)).collect();
+    // MpOptions::new clamps, but the fields are pub — a literal with
+    // workers: 0 would otherwise busy-spin below without ever spawning.
+    let worker_cap = mp.workers.max(1);
+    let mut queue: VecDeque<(Vec<usize>, usize)> = shard_batches(&pending, worker_cap, mp.batch)
+        .into_iter()
+        .map(|batch| (batch, 1))
+        .collect();
+
+    let exe = std::env::current_exe()
+        .map_err(|e| anyhow::anyhow!("resolving the worker executable: {e}"))?;
+    let pid = std::process::id();
+    let mut running: Vec<Running> = Vec::new();
+    let mut next_id = 0usize;
+
+    // The dispatch loop runs in a closure so that any error path reaps
+    // the still-running workers below — a failed coordinator must not
+    // leave orphaned subprocesses training into the scratch directory.
+    let mut dispatch = || -> anyhow::Result<()> {
+        while !queue.is_empty() || !running.is_empty() {
+            // Keep `worker_cap` subprocesses busy.
+            while running.len() < worker_cap {
+                let Some((indices, attempt)) = queue.pop_front() else {
+                    break;
+                };
+                let id = next_id;
+                next_id += 1;
+                let cells_path = mp.scratch.join(format!("cells-{pid}-{id}.json"));
+                let out_path = mp.scratch.join(format!("out-{pid}-{id}.jsonl"));
+                write_batch_file(&cells_path, grid, &indices, &opts.run)?;
+                let child = Command::new(&exe)
+                    .arg("sweep-worker")
+                    .arg("--cells-json")
+                    .arg(&cells_path)
+                    .arg("--out")
+                    .arg(&out_path)
+                    .stdout(Stdio::null())
+                    .spawn()
+                    .map_err(|e| anyhow::anyhow!("spawning {}: {e}", exe.display()))?;
+                running.push(Running {
+                    child,
+                    indices,
+                    attempt,
+                    out: out_path,
+                    offset: 0,
+                });
+            }
+
+            // Stream completed cells out of every live worker's result file.
+            let mut progressed = false;
+            for r in &mut running {
+                let fresh = drain_results(&r.out, &mut r.offset);
+                progressed |= absorb(fresh, &mut done, &mut completed, n, opts.verbose);
+            }
+
+            // Reap exited workers; re-dispatch whatever a dead one left undone.
+            let mut still = Vec::new();
+            for mut r in running.drain(..) {
+                match r.child.try_wait() {
+                    Ok(None) => still.push(r),
+                    Ok(Some(status)) => {
+                        progressed = true;
+                        let fresh = drain_results(&r.out, &mut r.offset);
+                        absorb(fresh, &mut done, &mut completed, n, opts.verbose);
+                        let missing: Vec<usize> = r
+                            .indices
+                            .iter()
+                            .copied()
+                            .filter(|i| !done.contains_key(i))
+                            .collect();
+                        if missing.is_empty() {
+                            continue;
+                        }
+                        if r.attempt < mp.max_attempts {
+                            if opts.verbose {
+                                println!(
+                                    "worker exited ({status}) with {} cells unfinished; \
+                                     re-dispatching (attempt {}/{})",
+                                    missing.len(),
+                                    r.attempt + 1,
+                                    mp.max_attempts
+                                );
+                            }
+                            queue.push_back((missing, r.attempt + 1));
+                        } else {
+                            // Workers run their batch sequentially, so the
+                            // first missing cell is the one the worker kept
+                            // dying on. Condemn only it; the rest were
+                            // never attempted this lineage and restart
+                            // fresh — one deterministically-crashing cell
+                            // must not take its whole batch down. Each
+                            // exhausted lineage retires exactly one cell,
+                            // so this always terminates.
+                            let culprit = missing[0];
+                            let cell = &grid.cells[culprit];
+                            let lr = opts.run_for_cell(cell).lr;
+                            let msg = format!(
+                                "worker died ({status}) on every one of {} dispatch attempts",
+                                mp.max_attempts
+                            );
+                            let lost = vec![CellResult::panicked(cell, lr, msg)];
+                            absorb(lost, &mut done, &mut completed, n, opts.verbose);
+                            if missing.len() > 1 {
+                                queue.push_back((missing[1..].to_vec(), 1));
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        return Err(anyhow::anyhow!("waiting on a sweep worker: {e}"));
+                    }
+                }
+            }
+            running = still;
+
+            if !progressed && !running.is_empty() {
+                std::thread::sleep(Duration::from_millis(40));
+            }
+        }
+        Ok(())
+    };
+    if let Err(e) = dispatch() {
+        for r in &mut running {
+            let _ = r.child.kill();
+            let _ = r.child.wait();
+        }
+        return Err(e);
+    }
+
+    let cells: Vec<CellResult> = grid
+        .cells
+        .iter()
+        .map(|cell| {
+            done.remove(&cell.index).unwrap_or_else(|| {
+                // Unreachable by construction (every pending index is
+                // dispatched until done or marked panicked), but a lost
+                // cell must surface as a failed row, never a crash.
+                let lr = opts.run_for_cell(cell).lr;
+                CellResult::panicked(cell, lr, "cell was never dispatched".to_string())
+            })
+        })
+        .collect();
+
+    if !mp.keep_scratch {
+        clear_scratch(&mp.scratch);
+        let _ = std::fs::remove_dir(&mp.scratch); // only if now empty
+    }
+    Ok(SweepReport { cells })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::convergence::TaskKind;
+    use crate::sweep::executor::run_sweep;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let pid = std::process::id();
+        let dir = std::env::temp_dir().join(format!("mkor-dispatch-{pid}-{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_opts() -> SweepOptions {
+        SweepOptions {
+            jobs: 2,
+            run: RunOpts {
+                steps: 4,
+                workers: 1,
+                batch: 16,
+                eval_every: 2,
+                hidden: vec![8],
+                ..Default::default()
+            },
+            verbose: false,
+        }
+    }
+
+    #[test]
+    fn shard_batches_covers_every_index_in_order() {
+        // Auto batch size: one batch per worker, remainder up front.
+        let idx: Vec<usize> = (0..9).collect();
+        let b = shard_batches(&idx, 2, 0);
+        assert_eq!(b, vec![(0..5).collect::<Vec<_>>(), (5..9).collect()]);
+        // Explicit batch size wins over the worker count.
+        let b = shard_batches(&idx, 2, 4);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[2], vec![8]);
+        let flat: Vec<usize> = b.into_iter().flatten().collect();
+        assert_eq!(flat, idx, "order preserved across batches");
+        // Degenerate shapes.
+        assert!(shard_batches(&[], 4, 0).is_empty());
+        assert_eq!(shard_batches(&[3], 0, 0), vec![vec![3]]);
+        assert_eq!(shard_batches(&idx, 100, 0).len(), 9);
+    }
+
+    #[test]
+    fn batch_files_roundtrip_cells_and_run_options() {
+        let dir = tmp_dir("batchfile");
+        let task = TaskKind::Images;
+        let grid = SweepGrid::parse("sgd:momentum={0.5,0.9},lr={1,0.1};adam", &task, 3).unwrap();
+        let mut run = tiny_opts().run;
+        run.target_metric = Some(0.25);
+        run.checkpoint_every = 2;
+        run.checkpoint_dir = Some(dir.join("ckpt"));
+        let path = dir.join("cells.json");
+        write_batch_file(&path, &grid, &[1, 4], &run).unwrap();
+        let (re_run, cells) = read_batch_file(&path).unwrap();
+        assert_eq!(re_run.steps, run.steps);
+        assert_eq!(re_run.hidden, run.hidden);
+        assert_eq!(re_run.target_metric, Some(0.25));
+        assert_eq!(re_run.checkpoint_every, 2);
+        assert_eq!(re_run.checkpoint_dir, run.checkpoint_dir);
+        assert_eq!(cells.len(), 2);
+        // Global indices, specs, seeds and the lr axis all survive.
+        assert_eq!(cells[0].index, 1);
+        assert_eq!(cells[0].spec, grid.cells[1].spec);
+        assert_eq!(cells[0].lr, grid.cells[1].lr);
+        assert_eq!(cells[1].index, 4);
+        assert_eq!(cells[1].spec.canonical(), "adam");
+        assert_eq!(cells[1].seed, 3);
+        assert_eq!(cells[1].lr, None);
+        assert_eq!(task_label(&cells[0].task), "images");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn huge_seeds_survive_the_wire_format_exactly() {
+        // 2^53 + 1 is not representable as f64; seeds travel as strings.
+        let dir = tmp_dir("bigseed");
+        let task = TaskKind::Images;
+        let grid = SweepGrid::parse("sgd:seed={9007199254740993}", &task, 0).unwrap();
+        assert_eq!(grid.cells[0].seed, 9007199254740993);
+        let path = dir.join("cells.json");
+        write_batch_file(&path, &grid, &[0], &tiny_opts().run).unwrap();
+        let (_, cells) = read_batch_file(&path).unwrap();
+        assert_eq!(cells[0].seed, 9007199254740993, "seed must not round");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_batch_file_rejects_version_skew_and_garbage() {
+        let dir = tmp_dir("badbatch");
+        let path = dir.join("cells.json");
+        std::fs::write(&path, "{\"format\": 99, \"run\": {}, \"cells\": []}").unwrap();
+        let e = read_batch_file(&path).unwrap_err().to_string();
+        assert!(e.contains("format 99"), "{e}");
+        std::fs::write(&path, "{\"format\": 1, \"cells\": []}").unwrap();
+        let e = read_batch_file(&path).unwrap_err().to_string();
+        assert!(e.contains("run"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn worker_results_merge_byte_identically_with_the_thread_executor() {
+        // The core determinism contract, in-process: run_worker over the
+        // full grid, parse its result stream, and the reassembled report
+        // must produce the same deterministic artifacts as run_sweep.
+        let dir = tmp_dir("workerparity");
+        let task = TaskKind::Images;
+        let grid = SweepGrid::parse("sgd:momentum={0.5,0.9};adam x seed=0..2", &task, 3).unwrap();
+        let opts = tiny_opts();
+        let reference = run_sweep(&grid, &opts);
+
+        let cells_path = dir.join("cells.json");
+        let out_path = dir.join("out-0.jsonl");
+        let all: Vec<usize> = (0..grid.len()).collect();
+        write_batch_file(&cells_path, &grid, &all, &opts.run).unwrap();
+        run_worker(&cells_path, &out_path).unwrap();
+
+        let mut offset = 0;
+        let mut results = drain_results(&out_path, &mut offset);
+        assert_eq!(results.len(), grid.len());
+        results.sort_by_key(|r| r.index);
+        let merged = SweepReport { cells: results };
+        assert_eq!(
+            merged.to_csv_deterministic(),
+            reference.to_csv_deterministic()
+        );
+        let (a, b) = (merged.to_json_with(true), reference.to_json_with(true));
+        assert_eq!(format!("{a:#}"), format!("{b:#}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drain_results_skips_torn_lines_until_completed() {
+        let dir = tmp_dir("torn");
+        let task = TaskKind::Images;
+        let grid = SweepGrid::parse("sgd;adam", &task, 0).unwrap();
+        let opts = tiny_opts();
+        let report = run_sweep(&grid, &opts);
+        let full: Vec<String> = report.cells.iter().map(|c| c.to_json().to_string()).collect();
+
+        let path = dir.join("out-0.jsonl");
+        // One complete line plus the torn prefix of a second (killed
+        // mid-write): only the complete line is consumed.
+        let torn = &full[1][..full[1].len() / 2];
+        std::fs::write(&path, format!("{}\n{torn}", full[0])).unwrap();
+        let mut offset = 0;
+        let got = drain_results(&path, &mut offset);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].index, 0);
+        // The retry appends the full line; a later drain picks it up
+        // and the garbage line is dropped without consuming the cell.
+        std::fs::write(&path, format!("{}\n{torn}\n{}\n", full[0], full[1])).unwrap();
+        let got = drain_results(&path, &mut offset);
+        assert_eq!(got.len(), 1, "torn line dropped, full line parsed");
+        assert_eq!(got[0].index, 1);
+        // Scan-from-scratch (coordinator resume) sees both complete cells.
+        let all = scan_worker_files(&dir);
+        assert_eq!(all.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_scratch_only_touches_dispatch_files() {
+        let dir = tmp_dir("clear");
+        std::fs::write(dir.join("cells-1-0.json"), "{}").unwrap();
+        std::fs::write(dir.join("out-1-0.jsonl"), "").unwrap();
+        std::fs::write(dir.join(DIED_SENTINEL), "").unwrap();
+        std::fs::write(dir.join("keep.csv"), "precious").unwrap();
+        clear_scratch(&dir);
+        let left: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(left, vec!["keep.csv"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

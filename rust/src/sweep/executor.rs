@@ -9,9 +9,10 @@
 //! cell seeds its own RNGs and shares no state, the merged report's
 //! results are identical for any `jobs` width.
 
+use crate::coordinator::metrics::sweep_progress_line;
 use crate::experiments::convergence::{run_record, RunOpts};
-use crate::sweep::grid::SweepGrid;
-use crate::sweep::report::{CellResult, CellStatus, SweepReport};
+use crate::sweep::grid::{SweepCell, SweepGrid};
+use crate::sweep::report::{CellResult, SweepReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -42,8 +43,34 @@ impl Default for SweepOptions {
     }
 }
 
+impl SweepOptions {
+    /// The run options one cell actually trains with: the cell's seed —
+    /// and, for cells carrying an `lr` axis, its learning rate — override
+    /// the shared options, and when the shared options request
+    /// checkpointing (`run.checkpoint_every > 0` with a `checkpoint_dir`),
+    /// each cell snapshots into its own `cell-<index>` subdirectory with
+    /// resume enabled, so an interrupted cell continues mid-run instead of
+    /// restarting. Both the in-process executor and the multi-process
+    /// workers derive per-cell options through this one method — that is
+    /// what keeps `--jobs` and `--workers` results identical.
+    pub fn run_for_cell(&self, cell: &SweepCell) -> RunOpts {
+        let mut run = self.run.clone();
+        run.seed = cell.seed;
+        if let Some(lr) = cell.lr {
+            run.lr = lr;
+        }
+        if run.checkpoint_every > 0 {
+            if let Some(root) = &self.run.checkpoint_dir {
+                run.checkpoint_dir = Some(root.join(format!("cell-{}", cell.index)));
+                run.resume = true;
+            }
+        }
+        run
+    }
+}
+
 /// Extract a human-readable message from a panic payload.
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -118,44 +145,34 @@ pub fn run_sweep_resumed(
     let done = AtomicUsize::new(0);
     let results = fan_out(n, opts.jobs, |i| {
         let cell = &grid.cells[i];
-        let mut run = opts.run.clone();
-        run.seed = cell.seed;
-        if let Some(lr) = cell.lr {
-            run.lr = lr;
-        }
+        let run = opts.run_for_cell(cell);
         let spec = cell.spec.canonical();
         let task = crate::sweep::grid::task_label(&cell.task);
-        if let Some(prev) = prior.and_then(|p| p.find_keyed(&spec, &task, cell.seed, run.lr)) {
-            if !matches!(prev.status, CellStatus::Panicked(_)) {
-                let k = done.fetch_add(1, Ordering::SeqCst) + 1;
-                if opts.verbose {
-                    println!(
-                        "[{k}/{n}] {spec} seed={} lr={} → skipped ({} in prior report)",
-                        cell.seed,
-                        run.lr,
-                        prev.status.label()
-                    );
-                }
-                let mut reused = prev.clone();
-                reused.index = cell.index;
-                reused.skipped = true;
-                return reused;
+        let reused =
+            prior.and_then(|p| p.reuse_keyed(&spec, &task, cell.seed, run.lr, cell.index));
+        if let Some(reused) = reused {
+            let k = done.fetch_add(1, Ordering::SeqCst) + 1;
+            if opts.verbose {
+                let outcome =
+                    format!("skipped ({} in prior report)", reused.status.label());
+                println!(
+                    "{}",
+                    sweep_progress_line(k, n, &spec, cell.seed, run.lr, &outcome)
+                );
             }
+            return reused;
         }
         let name = format!("{spec}#s{}", cell.seed);
         let record = run_record(&cell.task, &cell.spec, &name, &run);
+        let result = CellResult::from_record(cell, run.lr, record);
         let k = done.fetch_add(1, Ordering::SeqCst) + 1;
         if opts.verbose {
-            let status = if record.diverged { "DIVERGED" } else { "ok" };
             println!(
-                "[{k}/{n}] {spec} seed={} lr={} → {status}, loss {:.5} after {} steps",
-                cell.seed,
-                run.lr,
-                record.final_loss(),
-                record.steps.len()
+                "{}",
+                sweep_progress_line(k, n, &spec, cell.seed, run.lr, &result.outcome_line())
             );
         }
-        CellResult::from_record(cell, run.lr, record)
+        result
     });
     let cells = grid
         .cells
@@ -234,6 +251,27 @@ mod tests {
         // The lr axis reached the harness; the spec stayed clean.
         assert_eq!(report.cells[2].lr, 0.01);
         assert_eq!(report.cells[2].spec, "adam");
+    }
+
+    #[test]
+    fn run_for_cell_overrides_seed_lr_and_checkpoint_dir() {
+        let task = TaskKind::Images;
+        let grid = SweepGrid::parse("sgd:lr={1,0.1} x seed=0..2", &task, 9).unwrap();
+        let mut opts = SweepOptions::default();
+        opts.run.checkpoint_every = 5;
+        opts.run.checkpoint_dir = Some(std::path::PathBuf::from("ckpt"));
+        let run = opts.run_for_cell(&grid.cells[3]);
+        assert_eq!(run.seed, 1);
+        assert_eq!(run.lr, 0.1);
+        assert!(run.resume, "per-cell checkpoints resume an interrupted cell");
+        assert_eq!(
+            run.checkpoint_dir.as_deref(),
+            Some(std::path::Path::new("ckpt/cell-3"))
+        );
+        // Without checkpointing requested, the knobs pass through untouched.
+        let plain = SweepOptions::default().run_for_cell(&grid.cells[0]);
+        assert_eq!((plain.seed, plain.lr), (0, 1.0));
+        assert!(!plain.resume && plain.checkpoint_dir.is_none());
     }
 
     #[test]

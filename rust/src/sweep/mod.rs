@@ -13,7 +13,12 @@
 //! 2. [`executor`] fans the cells out over a bounded pool of worker
 //!    threads, each building its own trainer; a diverged or panicked cell
 //!    becomes a failed [`CellResult`], never a dead sweep.
-//! 3. [`report`] merges the per-cell run records into one [`SweepReport`]
+//! 3. [`dispatch`] is the process-level tier of the same fan-out:
+//!    `mkor sweep --workers N` shards the grid into cell batches, runs
+//!    each in a crash-isolated `mkor sweep-worker` subprocess, streams
+//!    per-cell JSON results back, re-dispatches what a killed worker
+//!    left unfinished, and resumes across coordinator restarts.
+//! 4. [`report`] merges the per-cell run records into one [`SweepReport`]
 //!    with per-cell final-loss / converged-at / wall-time, written as CSV
 //!    (one row per cell, canonical spec string as key) and JSON.
 //!
@@ -22,6 +27,8 @@
 //! ```text
 //! mkor sweep --specs "mkor:f={1,10,100};lamb;kfac:damping={0.01,0.1}" \
 //!     --task glue --steps 300 --jobs 8 --out results/sweep.csv
+//! # same grid, fanned out over 4 crash-isolated worker processes:
+//! mkor sweep --specs "..." --task glue --workers 4 --out results/sweep.csv
 //! ```
 //!
 //! and the library path is three calls:
@@ -34,14 +41,27 @@
 //! ```
 //!
 //! Determinism contract: the grid order and every cell's results depend
-//! only on the sweep string and the seeds — `--jobs 8` and `--jobs 1`
-//! produce identical cells (`SweepReport::to_csv_deterministic` is
-//! byte-identical; only measured wall-clock columns differ).
+//! only on the sweep string and the seeds — `--jobs 8`, `--workers 4`
+//! and `--jobs 1` produce identical cells
+//! (`SweepReport::to_csv_deterministic` is byte-identical; only measured
+//! wall-clock columns differ). Grid expansion itself is pure and cheap:
+//!
+//! ```
+//! use mkor::experiments::convergence::TaskKind;
+//! use mkor::sweep::SweepGrid;
+//!
+//! let grid = SweepGrid::parse("mkor:f={1,10};lamb x seed=0..2", &TaskKind::Images, 0).unwrap();
+//! let specs: Vec<String> = grid.cells.iter().map(|c| c.spec.canonical()).collect();
+//! assert_eq!(specs, ["mkor:f=1", "mkor:f=10", "lamb", "lamb"]);
+//! assert_eq!(grid.cells[3].seed, 1);
+//! ```
 
+pub mod dispatch;
 pub mod executor;
 pub mod grid;
 pub mod report;
 
+pub use dispatch::{run_sweep_mp, run_worker, shard_batches, MpOptions};
 pub use executor::{fan_out, run_sweep, run_sweep_resumed, SweepOptions};
 pub use grid::{task_by_name, task_label, SweepCell, SweepError, SweepGrid};
 pub use report::{CellResult, CellStatus, CellSummary, SweepReport};

@@ -148,6 +148,98 @@ impl CellResult {
         }
         self.loaded.as_ref().map_or(0.0, |s| s.wall_secs)
     }
+
+    /// The outcome half of a progress line
+    /// (`ok, loss 0.52341 after 40 steps`) — shared by the in-process
+    /// executor and the multi-process dispatcher so `--jobs` and
+    /// `--workers` sweeps report identically.
+    pub fn outcome_line(&self) -> String {
+        match &self.status {
+            CellStatus::Panicked(msg) => format!("PANICKED: {msg}"),
+            status => {
+                let label = match status {
+                    CellStatus::Diverged => "DIVERGED",
+                    _ => "ok",
+                };
+                match self.final_loss() {
+                    Some(l) => {
+                        format!("{label}, loss {l:.5} after {} steps", self.steps_run())
+                    }
+                    None => format!("{label}, no recorded steps"),
+                }
+            }
+        }
+    }
+
+    /// Serialize for the per-worker result stream of `mkor sweep
+    /// --workers N` (one compact JSON object per line): the cell identity
+    /// (index/spec/task/seed/lr), the status (plus the panic message when
+    /// panicked), and — for completed cells — the full lossless
+    /// [`RunRecord`] via [`RunRecord::to_json_full`], so the coordinator's
+    /// merged CSV/JSON artifacts are byte-identical to an in-process run's.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("index", Json::Num(self.index as f64))
+            .set("spec", Json::Str(self.spec.clone()))
+            .set("task", Json::Str(self.task.clone()))
+            // Seeds are u64; JSON numbers are f64 and corrupt > 2^53, so
+            // they travel as strings (the resume key must match exactly).
+            .set("seed", seed_to_json(self.seed))
+            .set("lr", Json::Num(self.lr as f64))
+            .set("status", Json::Str(self.status.label().to_string()));
+        if let CellStatus::Panicked(msg) = &self.status {
+            j.set("panic", Json::Str(msg.clone()));
+        }
+        if let Some(record) = &self.record {
+            j.set("record", record.to_json_full());
+        }
+        j
+    }
+
+    /// Parse a result written by [`CellResult::to_json`]. Completed
+    /// (ok/diverged) results must carry their record — every report column
+    /// derives from it — while panicked results never do.
+    pub fn from_json(j: &Json) -> Result<CellResult, String> {
+        let num = |key: &str| -> Result<f64, String> {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("cell result: missing/invalid `{key}`"))
+        };
+        let str_field = |key: &str| -> Result<String, String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("cell result: missing/invalid `{key}`"))
+        };
+        let status = match str_field("status")?.as_str() {
+            "ok" => CellStatus::Ok,
+            "diverged" => CellStatus::Diverged,
+            "panicked" => CellStatus::Panicked(
+                j.get("panic").and_then(Json::as_str).unwrap_or("").to_string(),
+            ),
+            other => return Err(format!("cell result: unknown status `{other}`")),
+        };
+        let record = match j.get("record") {
+            Some(r) => Some(RunRecord::from_json(r)?),
+            None => None,
+        };
+        if record.is_none() && !matches!(status, CellStatus::Panicked(_)) {
+            return Err("cell result: completed cell without a record".to_string());
+        }
+        let seed = seed_from_json(j.get("seed"))
+            .ok_or_else(|| "cell result: missing/invalid `seed`".to_string())?;
+        Ok(CellResult {
+            index: num("index")? as usize,
+            spec: str_field("spec")?,
+            task: str_field("task")?,
+            seed,
+            lr: num("lr")? as f32,
+            status,
+            record,
+            loaded: None,
+            skipped: false,
+        })
+    }
 }
 
 /// The merged artifact of one sweep.
@@ -190,13 +282,36 @@ impl SweepReport {
 
     /// Full-key lookup — canonical spec + task label + seed + lr — the
     /// resume key of [`run_sweep_resumed`](crate::sweep::run_sweep_resumed).
-    /// The task matters on multi-task grids ([`SweepGrid::for_tasks`]
-    /// (crate::sweep::SweepGrid::for_tasks)), where every task's cell
-    /// shares the same spec/seed/lr.
+    /// The task matters on multi-task grids
+    /// ([`SweepGrid::for_tasks`](crate::sweep::SweepGrid::for_tasks)),
+    /// where every task's cell shares the same spec/seed/lr.
     pub fn find_keyed(&self, spec: &str, task: &str, seed: u64, lr: f32) -> Option<&CellResult> {
         self.cells
             .iter()
             .find(|c| c.spec == spec && c.task == task && c.seed == seed && c.lr == lr)
+    }
+
+    /// The resume reuse both executors share: a *completed* (non-panicked
+    /// — panicked rows re-run) prior cell under the full resume key,
+    /// cloned, renumbered to `index` and marked `skipped`. Keeping this in
+    /// one place is what keeps `--jobs` and `--workers` resume skipping
+    /// the exact same cells.
+    pub fn reuse_keyed(
+        &self,
+        spec: &str,
+        task: &str,
+        seed: u64,
+        lr: f32,
+        index: usize,
+    ) -> Option<CellResult> {
+        self.find_keyed(spec, task, seed, lr)
+            .filter(|c| !matches!(c.status, CellStatus::Panicked(_)))
+            .map(|c| {
+                let mut reused = c.clone();
+                reused.index = index;
+                reused.skipped = true;
+                reused
+            })
     }
 
     /// Build the report table; `wall` appends the wall-clock column.
@@ -276,7 +391,10 @@ impl SweepReport {
                 j.set("cell", Json::Num(c.index as f64))
                     .set("spec", Json::Str(c.spec.clone()))
                     .set("task", Json::Str(c.task.clone()))
-                    .set("seed", Json::Num(c.seed as f64))
+                    // Seeds are u64 and an f64 JSON number corrupts
+                    // > 2^53; the artifact carries them exactly, as the
+                    // CSV already does.
+                    .set("seed", seed_to_json(c.seed))
                     .set("lr", Json::Num(c.lr as f64))
                     .set("status", Json::Str(c.status.label().to_string()))
                     .set("steps", Json::Num(c.steps_run() as f64))
@@ -399,6 +517,23 @@ impl SweepReport {
             });
         }
         Ok(SweepReport { cells })
+    }
+}
+
+/// Encode a u64 seed for the worker wire formats: JSON numbers are f64
+/// and corrupt values above 2^53, so seeds travel as decimal strings —
+/// the resume key (canonical spec + task + seed + lr) must match exactly.
+pub(crate) fn seed_to_json(seed: u64) -> Json {
+    Json::Str(seed.to_string())
+}
+
+/// Decode a seed written by [`seed_to_json`]; plain numbers are accepted
+/// too (hand-written batch files).
+pub(crate) fn seed_from_json(j: Option<&Json>) -> Option<u64> {
+    match j {
+        Some(Json::Str(s)) => s.parse().ok(),
+        Some(Json::Num(n)) => Some(*n as u64),
+        _ => None,
     }
 }
 
@@ -596,6 +731,71 @@ mod tests {
         let e = SweepReport::load_csv(&path).unwrap_err();
         assert!(e.to_string().contains("weird"), "{e}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cell_result_json_roundtrips_for_the_worker_stream() {
+        let r = toy_report();
+        for cell in &r.cells {
+            // Compact one-line form, as written to the worker .jsonl files.
+            let line = cell.to_json().to_string();
+            assert!(!line.contains('\n'), "{line}");
+            let re = CellResult::from_json(&Json::parse(&line).unwrap())
+                .unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(re.index, cell.index);
+            assert_eq!(re.spec, cell.spec);
+            assert_eq!(re.task, cell.task);
+            assert_eq!(re.seed, cell.seed);
+            assert_eq!(re.lr.to_bits(), cell.lr.to_bits());
+            assert_eq!(re.status, cell.status);
+            assert_eq!(re.steps_run(), cell.steps_run());
+            assert_eq!(re.final_loss(), cell.final_loss());
+        }
+        // The reconstructed report renders the exact same artifacts.
+        let re = SweepReport {
+            cells: r
+                .cells
+                .iter()
+                .map(|c| CellResult::from_json(&c.to_json()).unwrap())
+                .collect(),
+        };
+        assert_eq!(re.to_csv_deterministic(), r.to_csv_deterministic());
+        let (a, b) = (re.to_json_with(true), r.to_json_with(true));
+        assert_eq!(format!("{a:#}"), format!("{b:#}"));
+    }
+
+    #[test]
+    fn huge_seeds_roundtrip_in_the_worker_stream() {
+        // Seeds above 2^53 would round through an f64 JSON number; the
+        // wire format carries them as strings instead.
+        let cell = toy_cell(0, "sgd", 9007199254740993);
+        let r = CellResult::from_record(&cell, 0.1, toy_record("sgd", &[1.0]));
+        let re = CellResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(re.seed, 9007199254740993);
+    }
+
+    #[test]
+    fn cell_result_from_json_rejects_incomplete_results() {
+        let r = toy_report();
+        // A completed cell without its record is unusable for merging.
+        let mut j = r.cells[0].to_json();
+        j.set("record", Json::Null);
+        let j = Json::parse(&j.to_string().replace(",\"record\":null", "")).unwrap();
+        assert!(CellResult::from_json(&j).unwrap_err().contains("record"));
+        // Unknown statuses are named in the error.
+        let mut j = r.cells[0].to_json();
+        j.set("status", Json::Str("weird".to_string()));
+        assert!(CellResult::from_json(&j).unwrap_err().contains("weird"));
+    }
+
+    #[test]
+    fn outcome_lines_cover_every_status() {
+        let r = toy_report();
+        assert!(r.cells[0].outcome_line().starts_with("ok, loss 1.00000"));
+        assert!(r.cells[1].outcome_line().contains("PANICKED: boom"));
+        let mut diverged = r.cells[0].clone();
+        diverged.status = CellStatus::Diverged;
+        assert!(diverged.outcome_line().starts_with("DIVERGED"));
     }
 
     #[test]

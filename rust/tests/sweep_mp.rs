@@ -1,0 +1,183 @@
+//! Multi-process sweep e2e through the real `mkor` binary: `--workers N`
+//! must produce byte-identical deterministic CSV/JSON artifacts to an
+//! in-process `--jobs 1` run — including after a worker is killed
+//! mid-batch (re-dispatch) and after the whole coordinator dies and the
+//! sweep is re-run with `--resume` (cross-process recovery from the
+//! worker result files).
+
+use mkor::experiments::convergence::{RunOpts, TaskKind};
+use mkor::sweep::dispatch::{write_batch_file, WORKER_EXIT_AFTER_ENV};
+use mkor::sweep::SweepGrid;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_mkor");
+
+/// The 3×3 acceptance grid (f × damping).
+const SPECS: &str = "kfac:f={5,10,50},damping={0.01,0.03,0.1}";
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mkor-mp-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The shared `mkor sweep` invocation: tiny cells, deterministic
+/// artifacts. Every run in this file layers flags on top of these.
+fn sweep_cmd(csv: &Path, json: &Path) -> Command {
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "sweep",
+        "--specs",
+        SPECS,
+        "--task",
+        "images",
+        "--steps",
+        "4",
+        "--cell-workers",
+        "1",
+        "--batch",
+        "16",
+        "--hidden",
+        "16",
+        "--eval-every",
+        "2",
+        "--deterministic",
+    ]);
+    cmd.arg("--out").arg(csv).arg("--json").arg(json);
+    cmd
+}
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("spawning mkor");
+    let stdout = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(
+        out.status.success(),
+        "mkor failed ({:?}):\n--- stdout ---\n{stdout}\n--- stderr ---\n{}",
+        out.status,
+        String::from_utf8_lossy(&out.stderr)
+    );
+    stdout
+}
+
+fn read(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// Single-process reference artifacts for the acceptance grid.
+fn reference(dir: &Path) -> (String, String) {
+    let csv = dir.join("ref.csv");
+    let json = dir.join("ref.json");
+    run_ok(sweep_cmd(&csv, &json).args(["--jobs", "1", "--quiet"]));
+    (read(&csv), read(&json))
+}
+
+#[test]
+fn two_workers_match_jobs1_byte_for_byte() {
+    let dir = tmp("clean");
+    let (ref_csv, ref_json) = reference(&dir);
+    assert_eq!(ref_csv.trim().lines().count(), 1 + 9, "{ref_csv}");
+
+    let csv = dir.join("mp.csv");
+    let json = dir.join("mp.json");
+    run_ok(sweep_cmd(&csv, &json).args(["--workers", "2", "--quiet"]));
+    assert_eq!(read(&csv), ref_csv, "CSV must not depend on the fan-out mode");
+    assert_eq!(read(&json), ref_json, "JSON must not depend on the fan-out mode");
+    // Full records crossed the process boundary: loss series present.
+    assert!(read(&json).contains("\"loss\""));
+    // Scratch is cleaned up after a fully successful sweep.
+    assert!(!dir.join("mp.csv.workers").exists());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn killed_worker_is_redispatched_and_artifacts_stay_identical() {
+    let dir = tmp("kill");
+    let (ref_csv, _) = reference(&dir);
+
+    // Crash injection: the first worker exits hard after one cell; its
+    // sentinel file keeps the re-dispatched batch alive.
+    let csv = dir.join("killed.csv");
+    let json = dir.join("killed.json");
+    let scratch = dir.join("scratch-kill");
+    let stdout = run_ok(
+        sweep_cmd(&csv, &json)
+            .args(["--workers", "2", "--keep-worker-files"])
+            .arg("--worker-dir")
+            .arg(&scratch)
+            .env(WORKER_EXIT_AFTER_ENV, "1"),
+    );
+    assert!(
+        scratch.join("worker-died.once").exists(),
+        "the injected worker death must actually have fired"
+    );
+    assert!(
+        stdout.contains("re-dispatching"),
+        "coordinator must report the re-dispatch:\n{stdout}"
+    );
+    assert_eq!(
+        read(&csv),
+        ref_csv,
+        "a killed worker must not change the merged artifact"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_recovers_worker_results_across_process_boundaries() {
+    let dir = tmp("resume");
+    let (ref_csv, ref_json) = reference(&dir);
+
+    // Manufacture the scratch state a killed coordinator leaves behind:
+    // one worker completed the first 4 cells (results in its .jsonl), the
+    // CSV was never written. The grid and run options mirror sweep_cmd's
+    // flags exactly, so the resume keys line up.
+    let task = TaskKind::Images;
+    let grid = SweepGrid::parse(SPECS, &task, 0).unwrap();
+    assert_eq!(grid.len(), 9);
+    let run = RunOpts {
+        lr: 0.1,
+        steps: 4,
+        workers: 1,
+        batch: 16,
+        seed: 0,
+        eval_every: 2,
+        hidden: vec![16],
+        ..Default::default()
+    };
+    let scratch = dir.join("scratch-resume");
+    std::fs::create_dir_all(&scratch).unwrap();
+    let batch = scratch.join("cells-dead-0.json");
+    write_batch_file(&batch, &grid, &[0, 1, 2, 3], &run).unwrap();
+    let mut worker = Command::new(BIN);
+    worker
+        .arg("sweep-worker")
+        .arg("--cells-json")
+        .arg(&batch)
+        .arg("--out")
+        .arg(scratch.join("out-dead-0.jsonl"));
+    run_ok(&mut worker);
+
+    // `--resume` scans the leftover worker files, skips those 4 cells,
+    // and dispatches only the missing 5 — same bytes as a straight run.
+    let csv = dir.join("resumed.csv");
+    let json = dir.join("resumed.json");
+    let stdout = run_ok(
+        sweep_cmd(&csv, &json)
+            .args(["--workers", "2", "--resume"])
+            .arg("--worker-dir")
+            .arg(&scratch),
+    );
+    let skipped = stdout.matches("skipped (ok in prior report)").count();
+    assert_eq!(skipped, 4, "exactly the recovered cells skip:\n{stdout}");
+    assert!(stdout.contains("(4 reused)"), "{stdout}");
+    assert_eq!(read(&csv), ref_csv, "resumed CSV must match the straight run");
+    assert_eq!(
+        read(&json),
+        ref_json,
+        "worker files carry full records, so even the JSON loss series survive a resume"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

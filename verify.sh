@@ -3,7 +3,11 @@
 #   1. cargo build --release          — the library and the `mkor` binary
 #   2. cargo test -q                  — unit + integration tests
 #   3. cargo build --release --all-targets — benches/examples compile too
-#   4. cargo fmt --check              — soft by default (the seed tree
+#   4. cargo doc --no-deps            — rustdoc gate, warnings denied
+#      (broken intra-doc links and malformed doc blocks are fatal)
+#   5. docs link check                — every relative markdown link in
+#      README.md and docs/ must resolve to a real file
+#   6. cargo fmt --check              — soft by default (the seed tree
 #      predates rustfmt enforcement); set FMT=strict to make it fatal
 set -euo pipefail
 cd "$(dirname "$0")"
@@ -16,6 +20,35 @@ cargo test -q
 
 echo "== cargo build --release --all-targets (benches + examples) =="
 cargo build --release --all-targets
+
+echo "== cargo doc --no-deps (RUSTDOCFLAGS=-D warnings) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== docs link check (README.md, docs/*.md) =="
+python3 - <<'EOF'
+import os, re, sys
+
+bad = []
+files = ["README.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir("docs") if f.endswith(".md")
+)
+link = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+for path in files:
+    text = open(path, encoding="utf-8").read()
+    # Strip fenced code blocks: their brackets are code, not links.
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in link.findall(text):
+        if target.startswith(("http://", "https://", "#", "mailto:")):
+            continue
+        rel = target.split("#")[0]
+        if rel and not os.path.exists(os.path.join(os.path.dirname(path), rel)):
+            bad.append(f"{path}: broken link -> {target}")
+for b in bad:
+    print(b, file=sys.stderr)
+if bad:
+    sys.exit(1)
+print(f"checked {len(files)} markdown files, all relative links resolve")
+EOF
 
 echo "== rustfmt --check rust/src/{sweep,checkpoint} (fmt-strict modules) =="
 if command -v rustfmt >/dev/null 2>&1; then
