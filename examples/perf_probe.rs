@@ -14,7 +14,9 @@ fn main() {
         let mut inv = Matrix::rand_spd(d, 0.1, &mut rng);
         let v: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
         let mut scratch = vec![0.0f32; d];
-        let r = bench_fn("sm", 0.3, || mkor::optim::Mkor::sm_update(&mut inv, &v, 0.99, &mut scratch));
+        let r = bench_fn("sm", 0.3, || {
+            mkor::optim::Mkor::sm_update(&mut inv, &v, 0.99, &mut scratch)
+        });
         let gb = (d as f64 * d as f64 * 4.0 * 2.0) / r.median_secs / 1e9; // read+write J
         println!("sm_update d={d}: {} ({gb:.2} GB/s effective)", fmt_secs(r.median_secs));
         inv.blend_identity(0.5); // keep bounded

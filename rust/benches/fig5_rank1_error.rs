@@ -23,7 +23,11 @@ fn main() {
             h_opt.add(s.optimal_rank1_err);
             h_mean.add(s.mean_rank1_err.min(0.9999));
         }
-        let label = if side == "a" { "activations (right factor)" } else { "input gradients (left factor)" };
+        let label = if side == "a" {
+            "activations (right factor)"
+        } else {
+            "input gradients (left factor)"
+        };
         println!("--- {label}: optimal rank-1 relative-error distribution ---");
         print!("{}", h_opt.ascii(40));
         println!("--- {label}: MKOR mean-vector rank-1 error distribution ---");
@@ -64,7 +68,9 @@ fn main() {
     println!("{}", t.render());
 
     // CSV dump of every sample.
-    let mut csv = String::from("step,layer,side,optimal_rank1_err,mean_rank1_err,lambda_max,lambda_min,cond\n");
+    let mut csv = String::from(
+        "step,layer,side,optimal_rank1_err,mean_rank1_err,lambda_max,lambda_min,cond\n",
+    );
     for s in &samples {
         csv.push_str(&format!(
             "{},{},{},{},{},{},{},{}\n",

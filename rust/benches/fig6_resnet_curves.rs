@@ -31,7 +31,8 @@ fn main() {
     }
 
     let target = 0.82;
-    let mut t = Table::new(&["Optimizer", "final acc", "steps to 82%", "paper epochs (75.9% target)"]);
+    let mut t =
+        Table::new(&["Optimizer", "final acc", "steps to 82%", "paper epochs (75.9% target)"]);
     let paper = ["88 (SGD)", "54 (KAISA)", "57 (MKOR), 1.49x faster than SGD"];
     for ((label, r), p) in curves.iter().zip(paper) {
         t.row(&[

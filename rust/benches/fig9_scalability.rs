@@ -51,7 +51,10 @@ fn main() {
     std::fs::create_dir_all("results").ok();
     std::fs::write(Path::new("results/fig9_scalability.csv"), csv).unwrap();
 
-    println!("measured in-process ring all-reduce (payload = MKOR rank-1 vs KFAC factors, one 1024-dim layer):\n");
+    println!(
+        "measured in-process ring all-reduce (payload = MKOR rank-1 vs KFAC factors, \
+         one 1024-dim layer):\n"
+    );
     let mut t2 = Table::new(&["workers", "payload", "bytes/worker", "wall time"]);
     for w in [2usize, 4, 8] {
         for (label, n) in [("MKOR 2d", 2 * 1024usize), ("KFAC 4d^2", 4 * 1024 * 1024)] {

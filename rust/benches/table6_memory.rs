@@ -30,7 +30,8 @@ fn main() {
     println!("=== Table 6: per-GPU memory (GB) ===\n");
     let bert = specs::bert_large();
     let rn = specs::resnet50();
-    let mut t = Table::new(&["Model", "MKOR", "KFAC/KAISA", "LAMB", "SGD", "paper (MKOR/KFAC/LAMB|SGD)"]);
+    let mut t =
+        Table::new(&["Model", "MKOR", "KFAC/KAISA", "LAMB", "SGD", "paper (MKOR/KFAC/LAMB|SGD)"]);
     t.row(&[
         "ResNet-50".into(),
         format!("{:.2}", total_gb(OptimizerKind::Mkor, &rn)),

@@ -8,7 +8,7 @@
 //! and the arithmetic are the real thing, including optional bf16
 //! quantization of the wire format (MKOR's half-precision sync).
 
-use crate::linalg::half::{bf16_bits_to_f32, f32_to_bf16_bits};
+use crate::linalg::half::{accumulate_bf16_wire, quantize_bf16_into, write_bf16_wire};
 
 /// Accounting from one collective call.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -45,6 +45,10 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
         return AllreduceStats { bytes_per_worker: 0, steps: 0 };
     }
     let chunks = chunk_bounds(n, w);
+    let max_chunk = chunks.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
+    // One payload scratch reused for every send (the "wire"): the collective
+    // stays allocation-free per step no matter how many ranks circulate.
+    let mut payload = vec![0.0f32; max_chunk];
     let mut bytes = 0usize;
 
     // Reduce-scatter: at step s, rank r sends chunk (r−s) to rank r+1,
@@ -55,9 +59,9 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
             let send_chunk = (r + w - s) % w;
             let dst = (r + 1) % w;
             let (lo, hi) = chunks[send_chunk];
-            // Move the chunk (copy = the "wire"), accumulate at dst.
-            let payload: Vec<f32> = bufs[r][lo..hi].to_vec();
-            for (d, &p) in bufs[dst][lo..hi].iter_mut().zip(&payload) {
+            let wire = &mut payload[..hi - lo];
+            wire.copy_from_slice(&bufs[r][lo..hi]);
+            for (d, &p) in bufs[dst][lo..hi].iter_mut().zip(wire.iter()) {
                 *d += p;
             }
             bytes += (hi - lo) * 4;
@@ -69,8 +73,9 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
             let send_chunk = (r + 1 + w - s) % w;
             let dst = (r + 1) % w;
             let (lo, hi) = chunks[send_chunk];
-            let payload: Vec<f32> = bufs[r][lo..hi].to_vec();
-            bufs[dst][lo..hi].copy_from_slice(&payload);
+            let wire = &mut payload[..hi - lo];
+            wire.copy_from_slice(&bufs[r][lo..hi]);
+            bufs[dst][lo..hi].copy_from_slice(wire);
             bytes += (hi - lo) * 4;
         }
     }
@@ -88,6 +93,12 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
 /// quantized before the "send" and dequantized at the receiver, halving
 /// bytes at the cost of bounded rounding error (Lemma 3.2 regime). The
 /// local accumulations still happen in fp32.
+///
+/// The wire is one reused `u16` scratch buffer and the receive side goes
+/// through the fused `half.rs` paths ([`accumulate_bf16_wire`] /
+/// [`write_bf16_wire`]) — no intermediate f32 round-trip buffer is ever
+/// materialized. Numerics are identical to the unfused formulation
+/// (decode-then-accumulate element-wise, in the same order).
 pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
     let w = bufs.len();
     assert!(w > 0);
@@ -97,6 +108,8 @@ pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
         return AllreduceStats { bytes_per_worker: 0, steps: 0 };
     }
     let chunks = chunk_bounds(n, w);
+    let max_chunk = chunks.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
+    let mut wire_scratch = vec![0u16; max_chunk];
     let mut bytes = 0usize;
 
     for s in 0..w - 1 {
@@ -104,10 +117,9 @@ pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
             let send_chunk = (r + w - s) % w;
             let dst = (r + 1) % w;
             let (lo, hi) = chunks[send_chunk];
-            let wire: Vec<u16> = bufs[r][lo..hi].iter().map(|&x| f32_to_bf16_bits(x)).collect();
-            for (d, &h) in bufs[dst][lo..hi].iter_mut().zip(&wire) {
-                *d += bf16_bits_to_f32(h);
-            }
+            let wire = &mut wire_scratch[..hi - lo];
+            quantize_bf16_into(&bufs[r][lo..hi], wire);
+            accumulate_bf16_wire(wire, &mut bufs[dst][lo..hi]);
             bytes += (hi - lo) * 2;
         }
     }
@@ -116,10 +128,9 @@ pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
             let send_chunk = (r + 1 + w - s) % w;
             let dst = (r + 1) % w;
             let (lo, hi) = chunks[send_chunk];
-            let wire: Vec<u16> = bufs[r][lo..hi].iter().map(|&x| f32_to_bf16_bits(x)).collect();
-            for (d, &h) in bufs[dst][lo..hi].iter_mut().zip(&wire) {
-                *d = bf16_bits_to_f32(h);
-            }
+            let wire = &mut wire_scratch[..hi - lo];
+            quantize_bf16_into(&bufs[r][lo..hi], wire);
+            write_bf16_wire(wire, &mut bufs[dst][lo..hi]);
             bytes += (hi - lo) * 2;
         }
     }

@@ -61,7 +61,8 @@ impl Dataset {
         let mut rng = Rng::new(cfg.seed ^ 0x5EED);
         // Basis of the intrinsic subspace: dim × rank, random Gaussian
         // (approximately orthogonal columns at these scales).
-        let basis = Matrix::randn(cfg.dim, cfg.intrinsic_rank, 1.0 / (cfg.dim as f32).sqrt(), &mut rng);
+        let basis =
+            Matrix::randn(cfg.dim, cfg.intrinsic_rank, 1.0 / (cfg.dim as f32).sqrt(), &mut rng);
         // Class means inside the subspace.
         let mut means = Vec::with_capacity(cfg.classes);
         for _ in 0..cfg.classes {

@@ -37,6 +37,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod model;
 pub mod optim;
+pub mod perf;
 pub mod runtime;
 pub mod sweep;
 pub mod util;

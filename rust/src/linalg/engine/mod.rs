@@ -1,0 +1,295 @@
+//! Parallel tiled execution engine for the dense linalg hot paths.
+//!
+//! This is the CPU analogue of the Pallas kernel in
+//! `python/compile/kernels/precond.py`: explicit tiles as the unit of
+//! work. Operands are packed into contiguous panels ([`tile`]), an 8×8
+//! register-tile microkernel does the arithmetic ([`microkernel`]), a
+//! persistent worker pool executes partitions ([`pool`]), and a
+//! deterministic row-partitioned schedule decides who computes what
+//! ([`schedule`]).
+//!
+//! **Determinism invariant** — every entry point here is *bitwise
+//! identical at any thread count*: output rows are owned exclusively by
+//! one part, per-element accumulation order is a pure function of the
+//! problem shape and the constant tile sizes, and partitioning never
+//! feeds back into the numerics. `ops.rs` additionally guarantees that
+//! its engine-vs-serial dispatch depends on problem size only, so a
+//! training run's results cannot change with `--threads` — the property
+//! the checkpoint-resume and sweep byte-equality suites rely on.
+//!
+//! Call forms: the GEMM takes [`MatrixView`]s, so `A·B`, `A·Bᵀ` and
+//! `Aᵀ·B` are all the same routine with stride-swapped views — no
+//! transpose is ever materialized.
+
+pub mod microkernel;
+pub mod pool;
+pub mod schedule;
+pub mod tile;
+
+pub use pool::{hw_threads, set_threads, threads};
+pub use schedule::{GEMM_PAR_MIN_WORK, SLICE_PAR_MIN_ELEMS};
+
+use crate::linalg::{Matrix, MatrixView};
+use microkernel::{kernel_8x8, store_tile};
+use schedule::{partition, RowSlices};
+use tile::{pack_a_panel, pack_b_chunk, strips, KC, MR, NR};
+
+/// `C = A · B` over views, tiled and fanned out over `threads` parts.
+/// `c` is overwritten. Shapes: `a` is m×k, `b` is k×n, `c` is m×n.
+pub fn gemm_into(a: MatrixView<'_>, b: MatrixView<'_>, c: &mut Matrix, threads: usize) {
+    assert_eq!(a.cols(), b.rows(), "gemm shape mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    let (m, n) = (a.rows(), b.cols());
+    c.data_mut().fill(0.0);
+    if m == 0 || n == 0 || a.cols() == 0 {
+        return;
+    }
+    let row_blocks = m.div_ceil(MR);
+    let block_bounds = partition(row_blocks, threads);
+    let row_bounds: Vec<(usize, usize)> = block_bounds
+        .iter()
+        .map(|&(b0, b1)| ((b0 * MR).min(m), (b1 * MR).min(m)))
+        .collect();
+    let parts = row_bounds.len();
+    let slices = RowSlices::new(c.data_mut(), n, row_bounds.clone());
+    let work = |p: usize| {
+        // SAFETY: the pool runs each part exactly once, on one thread;
+        // windows of distinct parts are disjoint by construction.
+        let cpart = unsafe { slices.part(p) };
+        let (r0, r1) = row_bounds[p];
+        gemm_part(a, b, cpart, r0, r1);
+    };
+    pool::global().run(parts, &work);
+}
+
+/// One part's share of the GEMM: rows `[r0, r1)` of `C`, all columns.
+/// Loop order is k-chunk outer (one B pack per chunk, amortized over the
+/// part's row blocks), row block middle, column strip inner.
+fn gemm_part(a: MatrixView<'_>, b: MatrixView<'_>, cpart: &mut [f32], r0: usize, r1: usize) {
+    let (k, n) = (a.cols(), b.cols());
+    let nstrips = strips(n);
+    let mut pa = vec![0.0f32; MR * KC];
+    let mut pb = vec![0.0f32; nstrips * NR * KC];
+    let mut k0 = 0;
+    while k0 < k {
+        let klen = KC.min(k - k0);
+        pack_b_chunk(b, k0, klen, &mut pb);
+        let mut i0 = r0;
+        while i0 < r1 {
+            let mr = MR.min(r1 - i0);
+            pack_a_panel(a, i0, mr, k0, klen, &mut pa);
+            for s in 0..nstrips {
+                let j0 = s * NR;
+                let nv = NR.min(n - j0);
+                let mut acc = [[0.0f32; NR]; MR];
+                kernel_8x8(klen, &pa, &pb[s * klen * NR..(s + 1) * klen * NR], &mut acc);
+                store_tile(&acc, cpart, i0 - r0, n, j0, mr, nv);
+            }
+            i0 += MR;
+        }
+        k0 += KC;
+    }
+}
+
+/// `y = A · x`, rows partitioned. Per-row accumulation is the same
+/// ascending zip as the serial path, so this is bitwise equal to
+/// `ops::matvec_into` at any thread count (including 1).
+pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    let bounds = partition(a.rows(), threads);
+    let slices = RowSlices::new(y, 1, bounds);
+    let work = |p: usize| {
+        // SAFETY: see gemm_into.
+        let ypart = unsafe { slices.part(p) };
+        let (r0, _) = slices.rows(p);
+        for (off, yi) in ypart.iter_mut().enumerate() {
+            let row = a.row(r0 + off);
+            let mut acc = 0.0f32;
+            for (&r, &v) in row.iter().zip(x) {
+                acc += r * v;
+            }
+            *yi = acc;
+        }
+    };
+    pool::global().run(slices.parts(), &work);
+}
+
+/// `y = Aᵀ · x`, output columns partitioned. Each part sweeps the rows of
+/// `A` in ascending order over its own column window — the same per-element
+/// order as the serial path, so bitwise equal at any thread count.
+pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    y.fill(0.0);
+    let bounds = partition(a.cols(), threads);
+    let slices = RowSlices::new(y, 1, bounds);
+    let work = |p: usize| {
+        // SAFETY: see gemm_into.
+        let ypart = unsafe { slices.part(p) };
+        let (j0, j1) = slices.rows(p);
+        for i in 0..a.rows() {
+            let xi = x[i];
+            let row = &a.row(i)[j0..j1];
+            for (yj, &r) in ypart.iter_mut().zip(row) {
+                *yj += xi * r;
+            }
+        }
+    };
+    pool::global().run(slices.parts(), &work);
+}
+
+/// Fused symmetric rank-1 update `A = alpha*A + beta·u uᵀ`, rows
+/// partitioned; each row's sweep is identical to the serial path.
+pub fn scaled_rank1_update(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32], threads: usize) {
+    assert!(a.is_square());
+    assert_eq!(a.rows(), u.len());
+    let n = u.len();
+    let bounds = partition(n, threads);
+    let slices = RowSlices::new(a.data_mut(), n, bounds);
+    let work = |p: usize| {
+        // SAFETY: see gemm_into.
+        let apart = unsafe { slices.part(p) };
+        let (r0, r1) = slices.rows(p);
+        for (off, i) in (r0..r1).enumerate() {
+            let bu = beta * u[i];
+            let row = &mut apart[off * n..(off + 1) * n];
+            for (rv, &uj) in row.iter_mut().zip(u) {
+                *rv = alpha * *rv + bu * uj;
+            }
+        }
+    };
+    pool::global().run(slices.parts(), &work);
+}
+
+/// Column mean of a `d×b` matrix (the paper's rank-1 batch approximation,
+/// Algorithm 1 lines 2–3), rows partitioned; f64 accumulation per row as
+/// in the serial path.
+pub fn col_mean_into(a: &Matrix, out: &mut [f32], threads: usize) {
+    let (d, b) = (a.rows(), a.cols());
+    assert!(b > 0);
+    assert_eq!(out.len(), d);
+    let bounds = partition(d, threads);
+    let slices = RowSlices::new(out, 1, bounds);
+    let work = |p: usize| {
+        // SAFETY: see gemm_into.
+        let opart = unsafe { slices.part(p) };
+        let (r0, _) = slices.rows(p);
+        for (off, o) in opart.iter_mut().enumerate() {
+            let row = a.row(r0 + off);
+            *o = (row.iter().map(|&x| x as f64).sum::<f64>() / b as f64) as f32;
+        }
+    };
+    pool::global().run(slices.parts(), &work);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+    use crate::util::Rng;
+
+    fn naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for p in 0..a.cols() {
+                    s += a[(i, p)] as f64 * b[(p, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    fn assert_bitwise(a: &Matrix, b: &Matrix, what: &str) {
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.cols(), b.cols());
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive_on_ragged_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (70, 129, 33)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c = Matrix::zeros(m, n);
+            gemm_into(a.view(), b.view(), &mut c, 3);
+            assert!(c.max_abs_diff(&naive(&a, &b)) < 1e-3, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_bitwise_identical_across_thread_counts() {
+        let mut rng = Rng::new(12);
+        for &(m, k, n) in &[(13, 7, 11), (70, 129, 33), (64, 300, 8), (257, 40, 19)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let mut c1 = Matrix::zeros(m, n);
+            gemm_into(a.view(), b.view(), &mut c1, 1);
+            for t in [2usize, 7, 16] {
+                let mut ct = Matrix::zeros(m, n);
+                gemm_into(a.view(), b.view(), &mut ct, t);
+                assert_bitwise(&c1, &ct, "gemm threads=1 vs {t} at {m}x{k}x{n}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_handles_transposed_views() {
+        let mut rng = Rng::new(13);
+        let a = Matrix::randn(13, 7, 1.0, &mut rng);
+        let bt = Matrix::randn(11, 7, 1.0, &mut rng); // B = btᵀ is 7×11
+        let mut c = Matrix::zeros(13, 11);
+        gemm_into(a.view(), bt.t_view(), &mut c, 2);
+        let want = naive(&a, &bt.transpose());
+        assert!(c.max_abs_diff(&want) < 1e-3);
+
+        let at = Matrix::randn(7, 13, 1.0, &mut rng); // A = atᵀ is 13×7
+        let b = Matrix::randn(7, 5, 1.0, &mut rng);
+        let mut c2 = Matrix::zeros(13, 5);
+        gemm_into(at.t_view(), b.view(), &mut c2, 2);
+        assert!(c2.max_abs_diff(&naive(&at.transpose(), &b)) < 1e-3);
+    }
+
+    #[test]
+    fn rowwise_kernels_bitwise_match_serial_ops() {
+        let mut rng = Rng::new(14);
+        let a = Matrix::randn(70, 33, 1.0, &mut rng);
+        let x: Vec<f32> = (0..33).map(|_| rng.gaussian_f32()).collect();
+        let xr: Vec<f32> = (0..70).map(|_| rng.gaussian_f32()).collect();
+        for t in [1usize, 2, 7] {
+            let mut y = vec![0.0f32; 70];
+            matvec_into(&a, &x, &mut y, t);
+            let want = ops::matvec(&a, &x);
+            assert!(y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()), "matvec t={t}");
+
+            let mut yt = vec![0.0f32; 33];
+            matvec_t_into(&a, &xr, &mut yt, t);
+            let want_t = ops::matvec_t(&a, &xr);
+            assert!(
+                yt.iter().zip(&want_t).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "matvec_t t={t}"
+            );
+
+            let mut m = Matrix::rand_spd(33, 0.1, &mut Rng::new(5));
+            let mut want_m = m.clone();
+            scaled_rank1_update(&mut m, 0.9, 0.2, &x, t);
+            ops::scaled_rank1_update(&mut want_m, 0.9, 0.2, &x);
+            assert_bitwise(&m, &want_m, "rank1 t={t}");
+
+            let mut cm = vec![0.0f32; 70];
+            col_mean_into(&a, &mut cm, t);
+            let want_cm = ops::col_mean(&a);
+            assert!(
+                cm.iter().zip(&want_cm).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "col_mean t={t}"
+            );
+        }
+    }
+}

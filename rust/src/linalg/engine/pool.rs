@@ -1,0 +1,275 @@
+//! Persistent worker pool for the tiled engine.
+//!
+//! One process-wide pool ([`global`]) spawns detached worker threads lazily
+//! (up to [`hw_threads`]) and keeps them parked on a condvar between
+//! dispatches, so a hot optimizer step pays a queue push + wakeup instead
+//! of a thread spawn per GEMM. [`Pool::run`] fans a borrowed closure out
+//! over `parts` logical partitions: parts `1..parts` are queued for the
+//! workers, part `0` runs on the calling thread, and the call blocks until
+//! every part has finished — which is what makes handing workers a
+//! *borrowed* (non-`'static`) closure sound (see the safety comment in
+//! `run`).
+//!
+//! The pool never decides *what* any part computes — partitioning is the
+//! scheduler's job ([`super::schedule`]) and is a pure function of the
+//! problem shape, so results cannot depend on which worker ran which part
+//! or on how many workers exist.
+//!
+//! Thread-count resolution: [`set_threads`] (the `mkor perf --threads`
+//! knob) wins, then the `MKOR_THREADS` environment variable, then
+//! [`hw_threads`]. All of it only affects speed, never results: every
+//! engine kernel is bitwise identical at any thread count.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Upper bound on pool workers (queue pressure beyond this many cores is
+/// not a regime the in-process engine targets).
+pub const MAX_THREADS: usize = 64;
+
+thread_local! {
+    /// Set inside pool workers: a kernel that re-enters the engine from a
+    /// worker runs serially instead of queueing (no pool-in-pool
+    /// deadlocks; results are identical either way).
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Completion latch: counts outstanding worker parts, records panics.
+struct Latch {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(parts: usize) -> Latch {
+        Latch { state: Mutex::new((parts, false)), cv: Condvar::new() }
+    }
+
+    fn done(&self, panicked: bool) {
+        let mut st = self.state.lock().unwrap();
+        st.0 -= 1;
+        st.1 |= panicked;
+        if st.0 == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until every part is done; returns whether any part panicked.
+    fn wait(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.0 > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        st.1
+    }
+}
+
+/// One queued partition of a dispatch. The closure reference has had its
+/// lifetime erased; `Pool::run` guarantees the referent outlives the job
+/// (it blocks on the latch before returning).
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    part: usize,
+    latch: Arc<Latch>,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    cv: Condvar,
+}
+
+/// The persistent pool. Construct via [`global`].
+pub struct Pool {
+    shared: Arc<Shared>,
+    spawned: Mutex<usize>,
+}
+
+impl Pool {
+    fn new() -> Pool {
+        Pool {
+            shared: Arc::new(Shared { queue: Mutex::new(VecDeque::new()), cv: Condvar::new() }),
+            spawned: Mutex::new(0),
+        }
+    }
+
+    /// Make sure at least `want` workers exist (capped at [`MAX_THREADS`]).
+    fn ensure_workers(&self, want: usize) {
+        let want = want.min(MAX_THREADS);
+        let mut spawned = self.spawned.lock().unwrap();
+        while *spawned < want {
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("mkor-engine-{spawned}"))
+                .spawn(move || worker_loop(shared))
+                .expect("engine pool: failed to spawn worker");
+            *spawned += 1;
+        }
+    }
+
+    /// Run `f(part)` for every `part in 0..parts`, fanning parts `1..`
+    /// out to the pool while the caller computes part 0. Blocks until all
+    /// parts complete; propagates a panic if any part panicked.
+    ///
+    /// Called from a pool worker (nested dispatch) or with `parts <= 1`,
+    /// it degenerates to a serial loop on the calling thread.
+    pub fn run(&self, parts: usize, f: &(dyn Fn(usize) + Sync)) {
+        if parts <= 1 || IN_POOL.with(|p| p.get()) {
+            for part in 0..parts {
+                f(part);
+            }
+            return;
+        }
+        self.ensure_workers(parts - 1);
+        let latch = Arc::new(Latch::new(parts - 1));
+        // SAFETY: the only thing unsafe here is erasing the closure's
+        // lifetime so it can sit in the 'static job queue. The borrow
+        // stays valid for as long as any worker can touch it because this
+        // function does not return — not even by unwinding — until
+        // `latch.wait()` has observed every queued part finished: the
+        // caller's own part is run under `catch_unwind`, the wait happens
+        // unconditionally, and only then is a caught panic resumed.
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), _>(f) };
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for part in 1..parts {
+                q.push_back(Job { f: f_static, part, latch: Arc::clone(&latch) });
+            }
+        }
+        self.shared.cv.notify_all();
+        let mine = catch_unwind(AssertUnwindSafe(|| f(0)));
+        let worker_panicked = latch.wait();
+        if let Err(payload) = mine {
+            std::panic::resume_unwind(payload);
+        }
+        if worker_panicked {
+            panic!("engine pool: a worker part panicked");
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    IN_POOL.with(|p| p.set(true));
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                q = shared.cv.wait(q).unwrap();
+            }
+        };
+        let ok = catch_unwind(AssertUnwindSafe(|| (job.f)(job.part))).is_ok();
+        job.latch.done(!ok);
+    }
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide engine pool.
+pub fn global() -> &'static Pool {
+    POOL.get_or_init(Pool::new)
+}
+
+/// `0` = unset (fall through to `MKOR_THREADS` / hardware).
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+static DEFAULT_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Hardware thread count (cached `available_parallelism`).
+pub fn hw_threads() -> usize {
+    static HW: OnceLock<usize> = OnceLock::new();
+    *HW.get_or_init(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+/// Pin the engine's thread count (e.g. `mkor perf --threads N`). Clamped
+/// to `1..=MAX_THREADS`. Affects wall-clock only — never results.
+pub fn set_threads(n: usize) {
+    THREADS.store(n.clamp(1, MAX_THREADS), Ordering::Relaxed);
+}
+
+/// The thread count engine dispatches resolve to: [`set_threads`] if set,
+/// else `MKOR_THREADS`, else [`hw_threads`].
+pub fn threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t > 0 {
+        return t;
+    }
+    *DEFAULT_THREADS.get_or_init(|| {
+        std::env::var("MKOR_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(hw_threads)
+            .clamp(1, MAX_THREADS)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn run_executes_every_part_exactly_once() {
+        for parts in [1usize, 2, 3, 8, 17] {
+            let hits: Vec<AtomicUsize> = (0..parts).map(|_| AtomicUsize::new(0)).collect();
+            global().run(parts, &|p| {
+                hits[p].fetch_add(1, Ordering::SeqCst);
+            });
+            for (p, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "part {p} of {parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_sees_borrowed_state_and_sums_correctly() {
+        let inputs: Vec<u64> = (0..1000).collect();
+        let partial: Vec<AtomicU64> = (0..4).map(|_| AtomicU64::new(0)).collect();
+        global().run(4, &|p| {
+            let chunk = inputs.len() / 4;
+            let lo = p * chunk;
+            let hi = if p == 3 { inputs.len() } else { lo + chunk };
+            partial[p].store(inputs[lo..hi].iter().sum(), Ordering::SeqCst);
+        });
+        let total: u64 = partial.iter().map(|a| a.load(Ordering::SeqCst)).sum();
+        assert_eq!(total, 1000 * 999 / 2);
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            global().run(4, &|p| {
+                if p == 2 {
+                    panic!("boom in part 2");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn repeated_dispatches_reuse_the_pool() {
+        // Exercise the park/wake cycle: many small dispatches must all
+        // complete (a deadlock here would hang the test).
+        let counter = AtomicUsize::new(0);
+        for _ in 0..50 {
+            global().run(3, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 150);
+    }
+
+    #[test]
+    fn thread_count_resolution_clamps() {
+        // Only checks invariants on the resolved value: tests share the
+        // global, so this avoids pinning an exact number.
+        assert!(threads() >= 1 && threads() <= MAX_THREADS);
+        assert!(hw_threads() >= 1);
+    }
+}

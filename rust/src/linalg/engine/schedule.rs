@@ -1,0 +1,170 @@
+//! Deterministic row-partitioned tile scheduling.
+//!
+//! Every parallel kernel in the engine partitions its *output rows* into
+//! contiguous ranges — one per logical part — computed by [`partition`]
+//! from the problem shape alone. Combined with two invariants this makes
+//! results bitwise identical at any thread count:
+//!
+//! 1. **Exclusive ownership** — each output row belongs to exactly one
+//!    part, so there are no cross-thread accumulations, no atomics, and no
+//!    reduction trees whose shape depends on worker count.
+//! 2. **Fixed per-row order** — within a part, the floating-point
+//!    accumulation order for each output element is a pure function of the
+//!    shape and the engine's (constant) tile sizes, never of the partition
+//!    bounds.
+//!
+//! [`RowSlices`] hands each part an exclusive `&mut` window of the output
+//! buffer (contiguous, because outputs are row-major and parts own
+//! contiguous row ranges); disjointness is asserted at construction.
+//!
+//! Dispatch thresholds live here too: `ops.rs` consults them to decide
+//! engine vs. serial-fallback, and they are functions of the problem size
+//! ONLY — never of the thread count — so the code path (and therefore the
+//! numerics) cannot change between `--threads 1` and `--threads 64`.
+
+use std::marker::PhantomData;
+
+/// Engine GEMM cut-over: dispatch to the tiled engine when `m·k·n` is at
+/// least this much work (≈ a 128³ product). Below it the serial blocked
+/// path wins on packing overhead.
+pub const GEMM_PAR_MIN_WORK: usize = 1 << 21;
+
+/// Cut-over for row-partitioned O(n²) kernels (matvec, rank-1 update,
+/// col-mean): dispatch when the touched element count reaches this.
+pub const SLICE_PAR_MIN_ELEMS: usize = 1 << 18;
+
+/// Split `units` work units into at most `parts` contiguous ranges,
+/// balanced to within one unit, in ascending order. Pure function of its
+/// arguments; never returns empty ranges (fewer parts come back when
+/// `units < parts`).
+pub fn partition(units: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(units.max(1));
+    if units == 0 {
+        return vec![(0, 0)];
+    }
+    let base = units / parts;
+    let rem = units % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, units);
+    out
+}
+
+/// Disjoint per-part `&mut` windows over one row-major output buffer.
+///
+/// Construction checks that the row ranges are ascending, disjoint, and
+/// in bounds; [`RowSlices::part`] then hands out raw exclusive windows.
+/// The scheduler's contract — each part index is executed by exactly one
+/// worker, exactly once per dispatch — is what makes that sound.
+pub struct RowSlices<'a> {
+    ptr: *mut f32,
+    cols: usize,
+    bounds: Vec<(usize, usize)>,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: RowSlices only allows access to disjoint windows of the
+// underlying buffer (asserted in `new`), and the pool runs each part on
+// one thread. The raw pointer is what makes these impls non-automatic.
+unsafe impl Send for RowSlices<'_> {}
+unsafe impl Sync for RowSlices<'_> {}
+
+impl<'a> RowSlices<'a> {
+    /// Wrap `data` (a row-major buffer of `cols`-wide rows) with one
+    /// window per entry of `bounds` (half-open row ranges).
+    pub fn new(data: &'a mut [f32], cols: usize, bounds: Vec<(usize, usize)>) -> Self {
+        let rows = if cols == 0 { 0 } else { data.len() / cols };
+        debug_assert_eq!(rows * cols, data.len(), "buffer is not rows×cols");
+        let mut prev_end = 0usize;
+        for &(r0, r1) in &bounds {
+            assert!(
+                r0 >= prev_end && r0 <= r1 && r1 <= rows,
+                "row ranges must be ascending, disjoint, in-bounds"
+            );
+            prev_end = r1;
+        }
+        RowSlices { ptr: data.as_mut_ptr(), cols, bounds, _marker: PhantomData }
+    }
+
+    /// Number of parts.
+    pub fn parts(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// The row range of part `p`.
+    pub fn rows(&self, p: usize) -> (usize, usize) {
+        self.bounds[p]
+    }
+
+    /// Exclusive window of part `p`.
+    ///
+    /// # Safety
+    /// Each part index must be materialized by at most one thread at a
+    /// time (the scheduler assigns each part to exactly one worker per
+    /// dispatch). Windows of distinct parts never alias by construction.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn part(&self, p: usize) -> &mut [f32] {
+        let (r0, r1) = self.bounds[p];
+        std::slice::from_raw_parts_mut(self.ptr.add(r0 * self.cols), (r1 - r0) * self.cols)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_and_balances() {
+        for &(units, parts) in &[(10usize, 3usize), (7, 7), (3, 8), (100, 1), (1, 1), (64, 7)] {
+            let ranges = partition(units, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut next = 0;
+            let mut sizes = Vec::new();
+            for (lo, hi) in &ranges {
+                assert_eq!(*lo, next, "contiguous");
+                assert!(hi > lo, "no empty ranges for units={units}");
+                sizes.push(hi - lo);
+                next = *hi;
+            }
+            assert_eq!(next, units, "full coverage");
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced to within one unit");
+        }
+    }
+
+    #[test]
+    fn partition_is_deterministic_in_shape_only() {
+        assert_eq!(partition(64, 4), partition(64, 4));
+        assert_eq!(partition(0, 4), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn row_slices_hand_out_disjoint_windows() {
+        let mut buf = vec![0.0f32; 6 * 4];
+        let bounds = partition(6, 3);
+        let slices = RowSlices::new(&mut buf, 4, bounds);
+        for p in 0..slices.parts() {
+            let w = unsafe { slices.part(p) };
+            for v in w.iter_mut() {
+                *v += (p + 1) as f32;
+            }
+        }
+        // Each row was written by exactly its owner.
+        for (i, chunk) in buf.chunks(4).enumerate() {
+            let owner = (i / 2 + 1) as f32;
+            assert!(chunk.iter().all(|&v| v == owner), "row {i}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "ascending, disjoint")]
+    fn overlapping_bounds_rejected() {
+        let mut buf = vec![0.0f32; 12];
+        let _ = RowSlices::new(&mut buf, 4, vec![(0, 2), (1, 3)]);
+    }
+}

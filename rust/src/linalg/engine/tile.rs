@@ -1,0 +1,140 @@
+//! Packed panels: the tile wire format the microkernel consumes.
+//!
+//! The engine copies operands into small contiguous scratch buffers before
+//! multiplying, exactly like the Pallas kernel's HBM→VMEM block copies in
+//! `python/compile/kernels/precond.py` (BlockSpec tiles there, packed
+//! panels here): the microkernel then streams unit-stride panels regardless
+//! of the original operand layout, which is what lets one code path serve
+//! `A·B`, `A·Bᵀ` and `Aᵀ·B` — the transposed forms arrive as stride-swapped
+//! [`MatrixView`]s and the packing loop absorbs the stride.
+//!
+//! Layouts (`MR`/`NR` are the microkernel tile edges, `KC` the k-chunk):
+//!
+//! * **A panel** — `MR` rows × `klen` depth, stored depth-major:
+//!   `pa[p*MR + r] = A[i0+r, k0+p]`. Rows past the matrix edge pack as
+//!   zero, so the microkernel never branches on ragged shapes.
+//! * **B chunk** — `klen` depth × all columns, stored strip-major: strip
+//!   `s` covers columns `[s*NR, s*NR+NR)` and occupies the contiguous
+//!   range `pb[s*klen*NR ..][.. klen*NR]` with `pb_strip[p*NR + c] =
+//!   B[k0+p, s*NR+c]` (edge columns zero-padded).
+//!
+//! Zero padding is sound for the *packed* operand because padded lanes are
+//! never written back (the store loop clips to the valid tile), and it
+//! must never be "optimized" into a skip-if-zero branch: the §Perf note in
+//! `ops.rs` measured data-dependent branches in these loops at a 1.3–3×
+//! slowdown, and the engine's panels inherit the no-branch rule.
+
+use crate::linalg::MatrixView;
+
+/// Microkernel tile rows (output rows per A panel).
+pub const MR: usize = 8;
+/// Microkernel tile columns (output columns per B strip).
+pub const NR: usize = 8;
+/// Depth (k) chunk: panels cover at most this much of the contraction per
+/// pass, keeping pa + one B strip resident in L1/L2.
+pub const KC: usize = 256;
+
+/// Pack `A[i0..i0+mr, k0..k0+klen]` into `pa` (depth-major, zero-padded to
+/// `MR` rows). `pa` must hold at least `klen * MR` elements.
+pub fn pack_a_panel(
+    a: MatrixView<'_>,
+    i0: usize,
+    mr: usize,
+    k0: usize,
+    klen: usize,
+    pa: &mut [f32],
+) {
+    debug_assert!(mr >= 1 && mr <= MR && i0 + mr <= a.rows() && k0 + klen <= a.cols());
+    debug_assert!(pa.len() >= klen * MR);
+    for p in 0..klen {
+        let dst = &mut pa[p * MR..p * MR + MR];
+        for (r, d) in dst.iter_mut().enumerate() {
+            *d = if r < mr { a.get(i0 + r, k0 + p) } else { 0.0 };
+        }
+    }
+}
+
+/// Number of `NR`-wide strips covering `n` columns.
+pub fn strips(n: usize) -> usize {
+    n.div_ceil(NR)
+}
+
+/// Pack `B[k0..k0+klen, ..]` into `pb` strip-major (see module docs).
+/// `pb` must hold at least `strips(b.cols()) * klen * NR` elements.
+pub fn pack_b_chunk(b: MatrixView<'_>, k0: usize, klen: usize, pb: &mut [f32]) {
+    let n = b.cols();
+    debug_assert!(k0 + klen <= b.rows());
+    debug_assert!(pb.len() >= strips(n) * klen * NR);
+    for s in 0..strips(n) {
+        let j0 = s * NR;
+        let nv = NR.min(n - j0);
+        let strip = &mut pb[s * klen * NR..(s + 1) * klen * NR];
+        if b.row_contiguous() {
+            // Fast path: each source row segment is contiguous.
+            for p in 0..klen {
+                let src = &b.row(k0 + p)[j0..j0 + nv];
+                let dst = &mut strip[p * NR..p * NR + NR];
+                dst[..nv].copy_from_slice(src);
+                dst[nv..].fill(0.0);
+            }
+        } else {
+            for p in 0..klen {
+                let dst = &mut strip[p * NR..p * NR + NR];
+                for (c, d) in dst.iter_mut().enumerate() {
+                    *d = if c < nv { b.get(k0 + p, j0 + c) } else { 0.0 };
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::Rng;
+
+    #[test]
+    fn a_panel_layout_and_padding() {
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(5, 9, 1.0, &mut rng);
+        let (i0, mr, k0, klen) = (2, 3, 4, 5);
+        let mut pa = vec![f32::NAN; klen * MR];
+        pack_a_panel(a.view(), i0, mr, k0, klen, &mut pa);
+        for p in 0..klen {
+            for r in 0..MR {
+                let want = if r < mr { a[(i0 + r, k0 + p)] } else { 0.0 };
+                assert_eq!(pa[p * MR + r], want, "p={p} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn b_chunk_layout_matches_view_for_both_stride_forms() {
+        let mut rng = Rng::new(2);
+        let b = Matrix::randn(11, 13, 1.0, &mut rng);
+        for view in [b.view(), b.t_view()] {
+            let (k0, klen) = (3, 7);
+            let mut pb = vec![f32::NAN; strips(view.cols()) * klen * NR];
+            pack_b_chunk(view, k0, klen, &mut pb);
+            for s in 0..strips(view.cols()) {
+                for p in 0..klen {
+                    for c in 0..NR {
+                        let j = s * NR + c;
+                        let want = if j < view.cols() { view.get(k0 + p, j) } else { 0.0 };
+                        assert_eq!(pb[s * klen * NR + p * NR + c], want, "s={s} p={p} c={c}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn strip_count() {
+        assert_eq!(strips(0), 0);
+        assert_eq!(strips(1), 1);
+        assert_eq!(strips(8), 1);
+        assert_eq!(strips(9), 2);
+        assert_eq!(strips(64), 8);
+    }
+}

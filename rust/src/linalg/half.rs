@@ -100,6 +100,34 @@ pub fn bf16_bits_to_f32(h: u16) -> f32 {
     f32::from_bits((h as u32) << 16)
 }
 
+/// Quantize a slice into a preallocated bf16 wire buffer (no allocation:
+/// the collective layer reuses one scratch buffer across ring steps).
+pub fn quantize_bf16_into(xs: &[f32], wire: &mut [u16]) {
+    assert_eq!(xs.len(), wire.len());
+    for (h, &x) in wire.iter_mut().zip(xs) {
+        *h = f32_to_bf16_bits(x);
+    }
+}
+
+/// Fused receive-and-accumulate: `dst[i] += decode(wire[i])` in fp32.
+/// This is the reduce-scatter receiver's whole job — no intermediate f32
+/// buffer is materialized between the wire and the accumulator.
+pub fn accumulate_bf16_wire(wire: &[u16], dst: &mut [f32]) {
+    assert_eq!(wire.len(), dst.len());
+    for (d, &h) in dst.iter_mut().zip(wire) {
+        *d += bf16_bits_to_f32(h);
+    }
+}
+
+/// Fused receive-and-store: `dst[i] = decode(wire[i])` (the all-gather
+/// receiver's job), again with no intermediate f32 buffer.
+pub fn write_bf16_wire(wire: &[u16], dst: &mut [f32]) {
+    assert_eq!(wire.len(), dst.len());
+    for (d, &h) in dst.iter_mut().zip(wire) {
+        *d = bf16_bits_to_f32(h);
+    }
+}
+
 /// Quantization formats the collectives can use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum HalfKind {
@@ -205,6 +233,24 @@ mod tests {
             for (a, b) in xs.iter().zip(&rt) {
                 assert!((a - b).abs() / a.abs() < 0.01, "{kind:?}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn fused_wire_paths_match_roundtrip() {
+        let xs = [1.0f32, -2.5, 0.125, 100.0, 0.0, -0.0078];
+        let mut wire = vec![0u16; xs.len()];
+        quantize_bf16_into(&xs, &mut wire);
+        assert_eq!(wire, quantize(&xs, HalfKind::Bf16), "same wire bits");
+
+        let mut acc = [10.0f32; 6];
+        accumulate_bf16_wire(&wire, &mut acc);
+        let mut store = [f32::NAN; 6];
+        write_bf16_wire(&wire, &mut store);
+        let rt = roundtrip(&xs, HalfKind::Bf16);
+        for i in 0..xs.len() {
+            assert_eq!(acc[i].to_bits(), (10.0 + rt[i]).to_bits(), "acc[{i}]");
+            assert_eq!(store[i].to_bits(), rt[i].to_bits(), "store[{i}]");
         }
     }
 

@@ -218,6 +218,117 @@ impl Matrix {
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
+
+    /// Borrow the matrix as a strided [`MatrixView`] (row stride = `cols`,
+    /// col stride = 1).
+    #[inline]
+    pub fn view(&self) -> MatrixView<'_> {
+        MatrixView {
+            data: &self.data,
+            rows: self.rows,
+            cols: self.cols,
+            row_stride: self.cols,
+            col_stride: 1,
+        }
+    }
+
+    /// Borrow the matrix as its transpose, without copying: the view swaps
+    /// the strides, so `self.t_view().get(i, j) == self[(j, i)]`.
+    #[inline]
+    pub fn t_view(&self) -> MatrixView<'_> {
+        self.view().t()
+    }
+}
+
+/// Read-only strided view into a matrix's storage: a logical `rows × cols`
+/// matrix whose element `(i, j)` lives at `data[i·row_stride + j·col_stride]`.
+///
+/// A transpose is a stride swap instead of a copy, which is what lets the
+/// tiled engine ([`crate::linalg::engine`]) serve the NN/NT/TN GEMM call
+/// forms with one packed-panel code path: the packing routines read through
+/// a view and never materialize `Aᵀ` or `Bᵀ`.
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+    col_stride: usize,
+}
+
+impl<'a> MatrixView<'a> {
+    /// Build a view over a raw buffer. Panics if the largest reachable
+    /// index falls outside `data`.
+    pub fn new(
+        data: &'a [f32],
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+        col_stride: usize,
+    ) -> Self {
+        if rows > 0 && cols > 0 {
+            let last = (rows - 1) * row_stride + (cols - 1) * col_stride;
+            assert!(
+                last < data.len(),
+                "view exceeds buffer: last index {last} >= len {}",
+                data.len()
+            );
+        }
+        MatrixView { data, rows, cols, row_stride, col_stride }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    #[inline]
+    pub fn col_stride(&self) -> usize {
+        self.col_stride
+    }
+
+    /// Element `(i, j)` through the strides.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.row_stride + j * self.col_stride]
+    }
+
+    /// The transposed view (stride swap, no copy).
+    #[inline]
+    pub fn t(&self) -> MatrixView<'a> {
+        MatrixView {
+            data: self.data,
+            rows: self.cols,
+            cols: self.rows,
+            row_stride: self.col_stride,
+            col_stride: self.row_stride,
+        }
+    }
+
+    /// True when logical row `i` is contiguous in memory (col stride 1) —
+    /// the packing fast path.
+    #[inline]
+    pub fn row_contiguous(&self) -> bool {
+        self.col_stride == 1
+    }
+
+    /// Logical row `i` as a slice — only valid for row-contiguous views.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        debug_assert!(self.row_contiguous() && i < self.rows);
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
 }
 
 impl Index<(usize, usize)> for Matrix {
@@ -301,5 +412,34 @@ mod tests {
     #[should_panic]
     fn from_vec_size_checked() {
         let _ = Matrix::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn views_read_through_strides() {
+        let mut rng = Rng::new(7);
+        let m = Matrix::randn(5, 3, 1.0, &mut rng);
+        let v = m.view();
+        let t = m.t_view();
+        assert_eq!((v.rows(), v.cols()), (5, 3));
+        assert_eq!((t.rows(), t.cols()), (3, 5));
+        for i in 0..5 {
+            for j in 0..3 {
+                assert_eq!(v.get(i, j), m[(i, j)]);
+                assert_eq!(t.get(j, i), m[(i, j)]);
+            }
+        }
+        // Double transpose is the identity view.
+        let tt = t.t();
+        assert_eq!(tt.get(4, 2), m[(4, 2)]);
+        assert!(v.row_contiguous());
+        assert!(!t.row_contiguous() || m.rows() == 1);
+        assert_eq!(v.row(2), m.row(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "view exceeds buffer")]
+    fn view_bounds_checked() {
+        let data = vec![0.0f32; 5];
+        let _ = MatrixView::new(&data, 2, 3, 3, 1);
     }
 }

@@ -9,10 +9,11 @@
 
 pub mod cholesky;
 pub mod eigen;
+pub mod engine;
 pub mod half;
 pub mod inverse;
 pub mod lowrank;
 pub mod matrix;
 pub mod ops;
 
-pub use matrix::Matrix;
+pub use matrix::{Matrix, MatrixView};

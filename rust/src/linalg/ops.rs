@@ -1,25 +1,46 @@
-//! Matrix/vector kernels: cache-blocked matmul (plain and transposed
-//! variants), matvec, outer products, and the fused rank-1 symmetric update
-//! at the heart of MKOR's Sherman–Morrison step.
+//! Matrix/vector kernels: matmul (plain and transposed variants), matvec,
+//! outer products, and the fused rank-1 symmetric update at the heart of
+//! MKOR's Sherman–Morrison step.
 //!
 //! These are the L3 hot paths: the preconditioning step (Equation 2) is two
 //! matmuls, and the SM factor update (Equations 5/6) is one matvec + one
-//! scaled outer product. The matmul is written j-innermost so the compiler
-//! auto-vectorizes the contiguous row updates; `matmul_nt` packs nothing and
-//! is used when the right operand is logically transposed.
+//! scaled outer product.
+//!
+//! Since the engine landed, the entry points here are **thin dispatchers**:
+//! above a size threshold they hand the work to the parallel tiled engine
+//! ([`crate::linalg::engine`]); below it they run the serial fallbacks
+//! (exposed as `*_serial` for baselines and parity tests). The dispatch
+//! decision is a pure function of the problem size — never the thread
+//! count — and every engine kernel is bitwise deterministic at any thread
+//! count, so results cannot change with `--threads`. Every optimizer gets
+//! the speedup with zero call-site churn.
+//!
+//! §Perf note, still binding: **no data-dependent zero-skip branches** in
+//! any inner loop (serial or packed). Skipping `x == 0.0` blocks
+//! vectorization and was measured at a 1.3–3× slowdown; padded/zero lanes
+//! multiply through instead.
 
-use super::Matrix;
+use super::{engine, Matrix};
 
-/// Tile edge for the blocked matmul. Swept in the §Perf pass (32/64/128):
-/// 128 wins slightly at d≤256 and ties above, and keeps three f32 tiles
-/// ≈192KB — within this host's L2. See EXPERIMENTS.md §Perf.
+/// Tile edge for the serial blocked matmul. Swept in the §Perf pass
+/// (32/64/128): 128 wins slightly at d≤256 and ties above, and keeps three
+/// f32 tiles ≈192KB — within this host's L2. See EXPERIMENTS.md §Perf.
 const BLOCK: usize = 128;
+
+/// Column unroll for the serial `matmul_nt` path: four dot-product
+/// accumulators share one streaming pass over A's row.
+const NT_JB: usize = 4;
+
+/// `m·k·n` for the engine-vs-serial GEMM decision (size only, see module
+/// docs; saturating so absurd shapes still dispatch rather than overflow).
+fn gemm_work(m: usize, k: usize, n: usize) -> usize {
+    m.saturating_mul(k).saturating_mul(n)
+}
 
 /// `C = A · B`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
-    let (m, n) = (a.rows(), b.cols());
-    let mut c = Matrix::zeros(m, n);
+    let mut c = Matrix::zeros(a.rows(), b.cols());
     matmul_into(a, b, &mut c);
     c
 }
@@ -27,6 +48,19 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 /// `C = A · B` writing into a preallocated output (hot-loop variant; the
 /// coordinator reuses buffers to keep allocation out of the step path).
 pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.cols());
+    if gemm_work(a.rows(), a.cols(), b.cols()) >= engine::GEMM_PAR_MIN_WORK {
+        engine::gemm_into(a.view(), b.view(), c, engine::threads());
+    } else {
+        matmul_into_serial(a, b, c);
+    }
+}
+
+/// Serial blocked `C = A · B` (the sub-threshold fallback, and the perf
+/// suite's single-thread baseline).
+pub fn matmul_into_serial(a: &Matrix, b: &Matrix, c: &mut Matrix) {
     assert_eq!(a.cols(), b.rows(), "matmul shape mismatch");
     assert_eq!(c.rows(), a.rows());
     assert_eq!(c.cols(), b.cols());
@@ -42,9 +76,7 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
                 let j_end = (jj + BLOCK).min(n);
                 for i in ii..i_end {
                     // 2-way k-unroll: two broadcast FMAs per pass over C's
-                    // row keeps more of the loop in registers. No zero-skip
-                    // branch — it blocks vectorization (§Perf: removing it
-                    // was a 1.3-3x win).
+                    // row keeps more of the loop in registers.
                     let mut p = kk;
                     while p + 1 < k_end {
                         let aip0 = a[(i, p)];
@@ -76,42 +108,103 @@ pub fn matmul_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
 /// `C = A · Bᵀ` without materializing the transpose.
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    let mut c = Matrix::zeros(a.rows(), b.rows());
+    matmul_nt_into(a, b, &mut c);
+    c
+}
+
+/// `C = A · Bᵀ` into a preallocated output.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.rows());
+    if gemm_work(a.rows(), a.cols(), b.rows()) >= engine::GEMM_PAR_MIN_WORK {
+        // Bᵀ is just B with swapped strides; the engine packs through it.
+        engine::gemm_into(a.view(), b.t_view(), c, engine::threads());
+    } else {
+        matmul_nt_into_serial(a, b, c);
+    }
+}
+
+/// Serial `C = A · Bᵀ`: both operands stream row-contiguous, so this is a
+/// bank of dot products — unrolled `NT_JB` wide so four accumulators share
+/// each pass over A's row (the fully-naive one-dot-at-a-time loop re-read
+/// A's row per output column).
+pub fn matmul_nt_into_serial(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.cols(), b.cols(), "matmul_nt shape mismatch");
+    assert_eq!(c.rows(), a.rows());
+    assert_eq!(c.cols(), b.rows());
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
-    let mut c = Matrix::zeros(m, n);
     for i in 0..m {
         let arow = a.row(i);
-        for j in 0..n {
+        let mut j = 0;
+        while j + NT_JB <= n {
+            let (b0, b1) = (b.row(j), b.row(j + 1));
+            let (b2, b3) = (b.row(j + 2), b.row(j + 3));
+            let (mut s0, mut s1) = (0.0f32, 0.0f32);
+            let (mut s2, mut s3) = (0.0f32, 0.0f32);
+            for p in 0..k {
+                let av = arow[p];
+                s0 += av * b0[p];
+                s1 += av * b1[p];
+                s2 += av * b2[p];
+                s3 += av * b3[p];
+            }
+            let crow = &mut c.row_mut(i)[j..j + NT_JB];
+            crow.copy_from_slice(&[s0, s1, s2, s3]);
+            j += NT_JB;
+        }
+        while j < n {
             let brow = b.row(j);
             let mut acc = 0.0f32;
             for p in 0..k {
                 acc += arow[p] * brow[p];
             }
             c[(i, j)] = acc;
+            j += 1;
         }
     }
-    c
 }
 
 /// `C = Aᵀ · B` without materializing the transpose.
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    let mut c = Matrix::zeros(a.cols(), b.cols());
+    matmul_tn_into(a, b, &mut c);
+    c
+}
+
+/// `C = Aᵀ · B` into a preallocated output.
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    assert_eq!(c.rows(), a.cols());
+    assert_eq!(c.cols(), b.cols());
+    if gemm_work(a.cols(), a.rows(), b.cols()) >= engine::GEMM_PAR_MIN_WORK {
+        engine::gemm_into(a.t_view(), b.view(), c, engine::threads());
+    } else {
+        matmul_tn_into_serial(a, b, c);
+    }
+}
+
+/// Serial `C = Aᵀ · B` (p-outer so both row reads are contiguous). No
+/// zero-skip on `aip` — see the §Perf note in the module docs.
+pub fn matmul_tn_into_serial(a: &Matrix, b: &Matrix, c: &mut Matrix) {
+    assert_eq!(a.rows(), b.rows(), "matmul_tn shape mismatch");
+    assert_eq!(c.rows(), a.cols());
+    assert_eq!(c.cols(), b.cols());
     let (m, k, n) = (a.cols(), a.rows(), b.cols());
-    let mut c = Matrix::zeros(m, n);
+    c.data_mut().fill(0.0);
     for p in 0..k {
         let arow = a.row(p);
         let brow = b.row(p);
         for i in 0..m {
             let aip = arow[i];
-            if aip == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in 0..n {
-                crow[j] += aip * brow[j];
+            let crow = &mut c.row_mut(i)[..n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += aip * bv;
             }
         }
     }
-    c
 }
 
 /// `y = A · x`.
@@ -122,8 +215,21 @@ pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
     y
 }
 
-/// `y = A · x` into a preallocated output.
+/// `y = A · x` into a preallocated output. The engine's row-partitioned
+/// variant uses the identical per-row loop, so this is bitwise equal to
+/// [`matvec_into_serial`] on every path.
 pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.cols(), x.len());
+    assert_eq!(a.rows(), y.len());
+    if a.rows().saturating_mul(a.cols()) >= engine::SLICE_PAR_MIN_ELEMS {
+        engine::matvec_into(a, x, y, engine::threads());
+    } else {
+        matvec_into_serial(a, x, y);
+    }
+}
+
+/// Serial `y = A · x`.
+pub fn matvec_into_serial(a: &Matrix, x: &[f32], y: &mut [f32]) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
     for (i, yi) in y.iter_mut().enumerate() {
@@ -136,21 +242,31 @@ pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32]) {
     }
 }
 
-/// `y = Aᵀ · x`.
+/// `y = Aᵀ · x`. No zero-skip on `x[i]` — see the §Perf note in the module
+/// docs; engine and serial paths are bitwise equal.
 pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
     assert_eq!(a.rows(), x.len(), "matvec_t shape mismatch");
     let mut y = vec![0.0f32; a.cols()];
+    if a.rows().saturating_mul(a.cols()) >= engine::SLICE_PAR_MIN_ELEMS {
+        engine::matvec_t_into(a, x, &mut y, engine::threads());
+    } else {
+        matvec_t_into_serial(a, x, &mut y);
+    }
+    y
+}
+
+/// Serial `y = Aᵀ · x` (row-outer so A streams contiguously).
+pub fn matvec_t_into_serial(a: &Matrix, x: &[f32], y: &mut [f32]) {
+    assert_eq!(a.rows(), x.len());
+    assert_eq!(a.cols(), y.len());
+    y.fill(0.0);
     for i in 0..a.rows() {
         let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
         let row = a.row(i);
         for (yj, &r) in y.iter_mut().zip(row) {
             *yj += xi * r;
         }
     }
-    y
 }
 
 /// Dot product with f64 accumulation.
@@ -188,7 +304,20 @@ pub fn outer(x: &[f32], y: &[f32]) -> Matrix {
 ///
 /// This is the SM-update hot loop (lines 7–8 of Algorithm 1 after the matvec
 /// `u = J⁻¹g` is computed): one pass over A, no temporary d×d allocation.
+/// Engine and serial paths are bitwise equal.
 pub fn scaled_rank1_update(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32]) {
+    assert!(a.is_square());
+    assert_eq!(a.rows(), u.len());
+    let n = u.len();
+    if n.saturating_mul(n) >= engine::SLICE_PAR_MIN_ELEMS {
+        engine::scaled_rank1_update(a, alpha, beta, u, engine::threads());
+    } else {
+        scaled_rank1_update_serial(a, alpha, beta, u);
+    }
+}
+
+/// Serial fused rank-1 update.
+pub fn scaled_rank1_update_serial(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32]) {
     assert!(a.is_square());
     assert_eq!(a.rows(), u.len());
     let n = u.len();
@@ -202,16 +331,29 @@ pub fn scaled_rank1_update(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32]) {
 }
 
 /// Mean of the columns of `A` (d×b → d) — the paper's rank-1 approximation
-/// of a batch (lines 2–3 of Algorithm 1).
+/// of a batch (lines 2–3 of Algorithm 1). Engine and serial paths are
+/// bitwise equal.
 pub fn col_mean(a: &Matrix) -> Vec<f32> {
     let (d, b) = (a.rows(), a.cols());
     assert!(b > 0);
     let mut out = vec![0.0f32; d];
-    for i in 0..d {
-        let row = a.row(i);
-        out[i] = (row.iter().map(|&x| x as f64).sum::<f64>() / b as f64) as f32;
+    if d.saturating_mul(b) >= engine::SLICE_PAR_MIN_ELEMS {
+        engine::col_mean_into(a, &mut out, engine::threads());
+    } else {
+        col_mean_into_serial(a, &mut out);
     }
     out
+}
+
+/// Serial column mean (f64 row accumulation).
+pub fn col_mean_into_serial(a: &Matrix, out: &mut [f32]) {
+    let (d, b) = (a.rows(), a.cols());
+    assert!(b > 0);
+    assert_eq!(out.len(), d);
+    for (i, o) in out.iter_mut().enumerate() {
+        let row = a.row(i);
+        *o = (row.iter().map(|&x| x as f64).sum::<f64>() / b as f64) as f32;
+    }
 }
 
 /// Mean of the rows of `A` (b×d → d).
@@ -259,6 +401,20 @@ mod tests {
     }
 
     #[test]
+    fn matmul_dispatches_to_engine_above_threshold() {
+        // 160³ = 4.1M ≥ GEMM_PAR_MIN_WORK: exercises the engine path
+        // through the public entry point (and the serial baseline agrees).
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(160, 160, 1.0, &mut rng);
+        let b = Matrix::randn(160, 160, 1.0, &mut rng);
+        assert!(160 * 160 * 160 >= engine::GEMM_PAR_MIN_WORK);
+        let c = matmul(&a, &b);
+        let mut serial = Matrix::zeros(160, 160);
+        matmul_into_serial(&a, &b, &mut serial);
+        assert!(c.max_abs_diff(&serial) < 1e-2);
+    }
+
+    #[test]
     fn matmul_nt_tn_consistent() {
         let mut rng = Rng::new(2);
         let a = Matrix::randn(13, 7, 1.0, &mut rng);
@@ -272,6 +428,34 @@ mod tests {
         let f1 = matmul_tn(&d, &e);
         let f2 = matmul(&d.transpose(), &e);
         assert!(f1.max_abs_diff(&f2) < 1e-4);
+    }
+
+    #[test]
+    fn zero_heavy_inputs_multiply_through() {
+        // The zero-skip branches are gone; sparse-ish inputs must still be
+        // exactly right (zeros contribute zero, not skipped bookkeeping).
+        let mut rng = Rng::new(8);
+        let mut a = Matrix::randn(9, 6, 1.0, &mut rng);
+        let b = Matrix::randn(9, 5, 1.0, &mut rng);
+        for i in 0..9 {
+            for j in 0..6 {
+                if (i + j) % 2 == 0 {
+                    a[(i, j)] = 0.0;
+                }
+            }
+        }
+        let c = matmul_tn(&a, &b);
+        assert!(c.max_abs_diff(&naive_matmul(&a.transpose(), &b)) < 1e-4);
+
+        let mut x = vec![0.0f32; 9];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = if i % 3 == 0 { 0.0 } else { i as f32 };
+        }
+        let y = matvec_t(&a, &x);
+        let ym = matmul_tn(&a, &Matrix::from_vec(9, 1, x.clone()));
+        for j in 0..6 {
+            assert!((y[j] - ym[(j, 0)]).abs() < 1e-4);
+        }
     }
 
     #[test]

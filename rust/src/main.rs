@@ -39,6 +39,11 @@
 //!              (step, spec, task, per-component file/hash/bytes) after
 //!              validating every blob; `--dump [component]` adds the
 //!              `StateDict` contents as JSON.
+//! * `perf`   — run the benchmark suite (GEMM GFLOP/s serial vs. engine,
+//!              per-optimizer steps/sec, ring all-reduce GB/s) and print a
+//!              report. `--quick` for the CI smoke policy, `--json PATH` to
+//!              emit the versioned schema, `--threads N` to pin the engine
+//!              pool (results never change with N — only speed).
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 
@@ -72,6 +77,7 @@ fn main() {
             0
         }
         Some("specs") => cmd_specs(),
+        Some("perf") => cmd_perf(&args),
         Some("sim") => cmd_sim(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("sweep-worker") => cmd_sweep_worker(&args),
@@ -79,7 +85,7 @@ fn main() {
         Some("train") => cmd_train(&args),
         _ => {
             eprintln!(
-                "usage: mkor <train|sim|sweep|ckpt|specs|version> [--flags]\n\
+                "usage: mkor <train|sim|sweep|ckpt|perf|specs|version> [--flags]\n\
                  see README.md for details"
             );
             2
@@ -120,6 +126,36 @@ fn cmd_specs() -> i32 {
     }
     println!("BERT-Large per-step costs (Table 1 instantiated):");
     println!("{}", t.render());
+    0
+}
+
+/// `mkor perf [--quick] [--json PATH] [--threads N]`: run the benchmark
+/// suite (README "Measuring performance") and optionally emit the
+/// versioned JSON report — `BENCH_mkor.json` is a committed instance.
+fn cmd_perf(args: &Args) -> i32 {
+    let quick = args.flag("quick");
+    let threads = args.usize_or("threads", mkor::linalg::engine::hw_threads());
+    if threads == 0 {
+        eprintln!("error: --threads must be at least 1");
+        return 2;
+    }
+    println!(
+        "running perf suite ({} policy, {threads} threads)...",
+        if quick { "quick" } else { "full" }
+    );
+    let report = mkor::perf::run_suite(quick, threads);
+    print!("{}", report.render());
+    if let Err(e) = report.validate() {
+        eprintln!("error: report failed validation: {e}");
+        return 1;
+    }
+    if let Some(out) = args.get("json") {
+        if let Err(e) = report.save(Path::new(out)) {
+            eprintln!("saving {out}: {e:#}");
+            return 1;
+        }
+        println!("wrote {out}");
+    }
     0
 }
 

@@ -203,8 +203,10 @@ impl Optimizer for Kfac {
             }
             if inv_step {
                 let st = &mut self.layers[idx];
-                st.l_inv = Kfac::damped_inverse(&st.l_cov, self.cfg.damping, &mut self.inversion_failures);
-                st.r_inv = Kfac::damped_inverse(&st.r_cov, self.cfg.damping, &mut self.inversion_failures);
+                st.l_inv =
+                    Kfac::damped_inverse(&st.l_cov, self.cfg.damping, &mut self.inversion_failures);
+                st.r_inv =
+                    Kfac::damped_inverse(&st.r_cov, self.cfg.damping, &mut self.inversion_failures);
                 // KAISA synchronizes covariances *and* inverses: 4d² floats
                 // (Table 1's O(4d²) communication).
                 let s = &self.shapes[idx];

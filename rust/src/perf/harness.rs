@@ -1,0 +1,100 @@
+//! Measurement harness: warmup + repeat + median-of-k wall-clock timers.
+//!
+//! Every number the perf suite reports comes through [`time_median`]: the
+//! workload runs `warmup` untimed passes (page in buffers, spin up the
+//! engine pool, settle the branch predictors), then `repeats` timed passes,
+//! and the **median** is the headline figure — robust to the occasional
+//! descheduling blip that poisons means and minima on shared hosts. Min and
+//! max ride along so a report reader can judge spread.
+
+use std::time::Instant;
+
+/// Warmup/repeat policy for one measurement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimerConfig {
+    /// Untimed passes before measurement starts.
+    pub warmup: usize,
+    /// Timed passes; the median of these is the reported figure.
+    pub repeats: usize,
+}
+
+impl TimerConfig {
+    /// CI-friendly: enough to smoke-test the plumbing, not to publish.
+    pub fn quick() -> TimerConfig {
+        TimerConfig { warmup: 1, repeats: 3 }
+    }
+
+    /// Publication policy for `BENCH_mkor.json`.
+    pub fn full() -> TimerConfig {
+        TimerConfig { warmup: 3, repeats: 9 }
+    }
+}
+
+/// One measurement: median/min/max seconds over the timed repeats.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    pub median_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+    pub repeats: usize,
+}
+
+/// Run `f` under `cfg` (warmup passes untimed, then `repeats` timed) and
+/// summarize the per-pass wall-clock times.
+pub fn time_median(cfg: TimerConfig, mut f: impl FnMut()) -> Timing {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let repeats = cfg.repeats.max(1);
+    let mut samples = Vec::with_capacity(repeats);
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        median_secs: crate::util::stats::quantile_sorted(&samples, 0.5),
+        min_secs: samples[0],
+        max_secs: samples[repeats - 1],
+        repeats,
+    }
+}
+
+/// `units / median_secs`, guarding the degenerate zero-duration case (a
+/// sub-resolution workload reports 0 throughput rather than inf — callers
+/// treat that as "too small to measure").
+pub fn throughput(units: f64, t: &Timing) -> f64 {
+    if t.median_secs > 0.0 {
+        units / t.median_secs
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_within_min_max_and_counts_repeats() {
+        let mut n = 0u64;
+        let t = time_median(TimerConfig { warmup: 2, repeats: 5 }, || {
+            n += 1;
+            // A tiny but nonzero workload.
+            std::hint::black_box((0..500).sum::<u64>());
+        });
+        assert_eq!(n, 7, "warmup + repeats passes");
+        assert_eq!(t.repeats, 5);
+        assert!(t.min_secs <= t.median_secs && t.median_secs <= t.max_secs);
+        assert!(t.min_secs >= 0.0);
+    }
+
+    #[test]
+    fn throughput_guards_zero_duration() {
+        let zero = Timing::default();
+        assert_eq!(throughput(1e9, &zero), 0.0);
+        let t = Timing { median_secs: 0.5, min_secs: 0.4, max_secs: 0.6, repeats: 3 };
+        assert!((throughput(3.0, &t) - 6.0).abs() < 1e-12);
+    }
+}

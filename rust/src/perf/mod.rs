@@ -1,0 +1,24 @@
+//! Performance benchmark subsystem behind `mkor perf`.
+//!
+//! Three pieces, cleanly layered:
+//!
+//! * [`harness`] — warmup/repeat/median-of-k timers; every reported figure
+//!   is a median over repeated timed passes.
+//! * [`suite`] — what gets measured: GEMM GFLOP/s (serial blocked kernels
+//!   vs. the tiled engine, all transpose forms), per-optimizer steps/sec
+//!   through the spec registry, and ring all-reduce GB/s (fp32 + bf16).
+//! * [`report`] — the versioned JSON schema (`schema_version`, host and
+//!   timer metadata, one array per section) with parse-back and validation;
+//!   `BENCH_mkor.json` at the repo root is a committed instance.
+//!
+//! CLI: `mkor perf [--quick] [--json PATH] [--threads N]`. `--quick` is the
+//! CI smoke policy (fewer repeats, smaller sweeps); `--threads` pins the
+//! engine pool (results are bitwise independent of it — only speed moves).
+
+pub mod harness;
+pub mod report;
+pub mod suite;
+
+pub use harness::{throughput, time_median, TimerConfig, Timing};
+pub use report::{PerfReport, SCHEMA_VERSION};
+pub use suite::run_suite;

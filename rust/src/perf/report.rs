@@ -1,0 +1,312 @@
+//! Versioned perf-report schema: serialize, parse back, validate.
+//!
+//! `mkor perf --json` emits exactly this layout (schema_version 1):
+//!
+//! ```json
+//! {
+//!   "allreduce": [{"bf16_gbps": ..., "elems": ..., "fp32_gbps": ..., "workers": ...}],
+//!   "gemm": [{"d": ..., "engine_gflops": ..., "kind": "nn", "serial_gflops": ..., "speedup": ...}],
+//!   "host": {"arch": "...", "hw_threads": ..., "os": "...", "threads": ...},
+//!   "optimizers": [{"name": "sgd", "steps_per_sec": ...}],
+//!   "quick": false,
+//!   "schema_version": 1,
+//!   "timer": {"repeats": 9, "warmup": 3}
+//! }
+//! ```
+//!
+//! Keys are alphabetical (the JSON writer sorts objects), so committed
+//! reports diff cleanly. [`PerfReport::from_json`] round-trips the schema
+//! and [`PerfReport::validate`] enforces the invariants CI's perf-smoke job
+//! checks: version match, thread count recorded, non-empty sections, every
+//! number finite.
+
+use super::suite::{GemmPoint, OptPoint, RingPoint};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Current report schema version. Bump when the layout changes shape.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Everything one `mkor perf` run measured, plus host/timer metadata.
+#[derive(Clone, Debug)]
+pub struct PerfReport {
+    pub schema_version: u64,
+    pub quick: bool,
+    /// Engine thread count the run was pinned to.
+    pub threads: usize,
+    pub hw_threads: usize,
+    pub os: String,
+    pub arch: String,
+    pub warmup: usize,
+    pub repeats: usize,
+    pub gemm: Vec<GemmPoint>,
+    pub optimizers: Vec<OptPoint>,
+    pub allreduce: Vec<RingPoint>,
+}
+
+impl PerfReport {
+    pub fn to_json(&self) -> Json {
+        let mut host = Json::obj();
+        host.set("os", Json::Str(self.os.clone()))
+            .set("arch", Json::Str(self.arch.clone()))
+            .set("threads", Json::Num(self.threads as f64))
+            .set("hw_threads", Json::Num(self.hw_threads as f64));
+        let mut timer = Json::obj();
+        timer
+            .set("warmup", Json::Num(self.warmup as f64))
+            .set("repeats", Json::Num(self.repeats as f64));
+        let gemm = self
+            .gemm
+            .iter()
+            .map(|g| {
+                let mut o = Json::obj();
+                o.set("kind", Json::Str(g.kind.clone()))
+                    .set("d", Json::Num(g.d as f64))
+                    .set("serial_gflops", Json::Num(g.serial_gflops))
+                    .set("engine_gflops", Json::Num(g.engine_gflops))
+                    .set("speedup", Json::Num(g.speedup));
+                o
+            })
+            .collect();
+        let opts = self
+            .optimizers
+            .iter()
+            .map(|o| {
+                let mut j = Json::obj();
+                j.set("name", Json::Str(o.name.clone()))
+                    .set("steps_per_sec", Json::Num(o.steps_per_sec));
+                j
+            })
+            .collect();
+        let ring = self
+            .allreduce
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("workers", Json::Num(r.workers as f64))
+                    .set("elems", Json::Num(r.elems as f64))
+                    .set("fp32_gbps", Json::Num(r.fp32_gbps))
+                    .set("bf16_gbps", Json::Num(r.bf16_gbps));
+                o
+            })
+            .collect();
+        let mut root = Json::obj();
+        root.set("schema_version", Json::Num(self.schema_version as f64))
+            .set("quick", Json::Bool(self.quick))
+            .set("host", host)
+            .set("timer", timer)
+            .set("gemm", Json::Arr(gemm))
+            .set("optimizers", Json::Arr(opts))
+            .set("allreduce", Json::Arr(ring));
+        root
+    }
+
+    /// Parse a report back from its JSON form (round-trip of [`to_json`]).
+    pub fn from_json(j: &Json) -> Result<PerfReport> {
+        let version = j.require_usize("schema_version")? as u64;
+        if version != SCHEMA_VERSION {
+            bail!("unsupported perf schema version {version} (expected {SCHEMA_VERSION})");
+        }
+        let host = j.get("host").ok_or_else(|| anyhow!("missing `host`"))?;
+        let timer = j.get("timer").ok_or_else(|| anyhow!("missing `timer`"))?;
+        let num = |o: &Json, key: &str| -> Result<f64> {
+            o.get(key).and_then(Json::as_f64).ok_or_else(|| anyhow!("missing/invalid `{key}`"))
+        };
+        let arr = |key: &str| -> Result<Vec<Json>> {
+            Ok(j.get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("missing/invalid `{key}`"))?
+                .to_vec())
+        };
+        let mut gemm = Vec::new();
+        for g in arr("gemm")? {
+            gemm.push(GemmPoint {
+                kind: g.require_str("kind")?.to_string(),
+                d: g.require_usize("d")?,
+                serial_gflops: num(&g, "serial_gflops")?,
+                engine_gflops: num(&g, "engine_gflops")?,
+                speedup: num(&g, "speedup")?,
+            });
+        }
+        let mut optimizers = Vec::new();
+        for o in arr("optimizers")? {
+            optimizers.push(OptPoint {
+                name: o.require_str("name")?.to_string(),
+                steps_per_sec: num(&o, "steps_per_sec")?,
+            });
+        }
+        let mut allreduce = Vec::new();
+        for r in arr("allreduce")? {
+            allreduce.push(RingPoint {
+                workers: r.require_usize("workers")?,
+                elems: r.require_usize("elems")?,
+                fp32_gbps: num(&r, "fp32_gbps")?,
+                bf16_gbps: num(&r, "bf16_gbps")?,
+            });
+        }
+        Ok(PerfReport {
+            schema_version: version,
+            quick: j.get("quick").and_then(Json::as_bool).unwrap_or(false),
+            threads: host.require_usize("threads")?,
+            hw_threads: host.require_usize("hw_threads")?,
+            os: host.require_str("os")?.to_string(),
+            arch: host.require_str("arch")?.to_string(),
+            warmup: timer.require_usize("warmup")?,
+            repeats: timer.require_usize("repeats")?,
+            gemm,
+            optimizers,
+            allreduce,
+        })
+    }
+
+    /// The invariants CI's perf-smoke job enforces on emitted reports.
+    pub fn validate(&self) -> Result<()> {
+        if self.schema_version != SCHEMA_VERSION {
+            bail!("schema_version {} != {SCHEMA_VERSION}", self.schema_version);
+        }
+        if self.threads == 0 || self.hw_threads == 0 {
+            bail!("thread metadata not recorded");
+        }
+        if self.gemm.is_empty() || self.optimizers.is_empty() || self.allreduce.is_empty() {
+            bail!("empty report section");
+        }
+        for g in &self.gemm {
+            for (label, v) in
+                [("serial", g.serial_gflops), ("engine", g.engine_gflops), ("speedup", g.speedup)]
+            {
+                if !v.is_finite() || v < 0.0 {
+                    bail!("gemm {} d={}: non-finite {label} figure {v}", g.kind, g.d);
+                }
+            }
+        }
+        for o in &self.optimizers {
+            if !o.steps_per_sec.is_finite() || o.steps_per_sec < 0.0 {
+                bail!("optimizer {}: non-finite steps/sec {}", o.name, o.steps_per_sec);
+            }
+        }
+        for r in &self.allreduce {
+            if !r.fp32_gbps.is_finite() || !r.bf16_gbps.is_finite() {
+                bail!("allreduce w={} n={}: non-finite throughput", r.workers, r.elems);
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate, then pretty-print to `path`.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.validate()?;
+        self.to_json().to_file(path).with_context(|| format!("writing {}", path.display()))
+    }
+
+    /// Human-readable console rendering.
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "perf report (schema v{}, {} threads of {}, {}/{}, {} warmup + {} repeats{})",
+            self.schema_version,
+            self.threads,
+            self.hw_threads,
+            self.os,
+            self.arch,
+            self.warmup,
+            self.repeats,
+            if self.quick { ", quick" } else { "" }
+        );
+        let _ = writeln!(s, "\nGEMM (GFLOP/s, serial vs engine):");
+        for g in &self.gemm {
+            let _ = writeln!(
+                s,
+                "  {:>2} d={:<4} serial {:>7.2}  engine {:>7.2}  ({:>5.2}x)",
+                g.kind, g.d, g.serial_gflops, g.engine_gflops, g.speedup
+            );
+        }
+        let _ = writeln!(s, "\nOptimizer steps/sec (proxy-GLUE, spec registry):");
+        for o in &self.optimizers {
+            let _ = writeln!(s, "  {:<8} {:>9.1}", o.name, o.steps_per_sec);
+        }
+        let _ = writeln!(s, "\nRing all-reduce (GB/s wire throughput):");
+        for r in &self.allreduce {
+            let _ = writeln!(
+                s,
+                "  w={} n={:<8} fp32 {:>6.2}  bf16 {:>6.2}",
+                r.workers, r.elems, r.fp32_gbps, r.bf16_gbps
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> PerfReport {
+        PerfReport {
+            schema_version: SCHEMA_VERSION,
+            quick: true,
+            threads: 4,
+            hw_threads: 8,
+            os: "linux".into(),
+            arch: "x86_64".into(),
+            warmup: 1,
+            repeats: 3,
+            gemm: vec![GemmPoint {
+                kind: "nn".into(),
+                d: 256,
+                serial_gflops: 5.5,
+                engine_gflops: 20.25,
+                speedup: 20.25 / 5.5,
+            }],
+            optimizers: vec![OptPoint { name: "mkor".into(), steps_per_sec: 750.5 }],
+            allreduce: vec![RingPoint {
+                workers: 4,
+                elems: 65536,
+                fp32_gbps: 5.75,
+                bf16_gbps: 3.125,
+            }],
+        }
+    }
+
+    #[test]
+    fn schema_round_trips() {
+        let r = sample();
+        let j = r.to_json();
+        let text = format!("{j:#}");
+        let back = PerfReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.schema_version, r.schema_version);
+        assert_eq!(back.threads, 4);
+        assert_eq!(back.gemm.len(), 1);
+        assert_eq!(back.gemm[0].kind, "nn");
+        assert_eq!(back.gemm[0].d, 256);
+        assert_eq!(back.gemm[0].engine_gflops, 20.25);
+        assert_eq!(back.optimizers[0].name, "mkor");
+        assert_eq!(back.optimizers[0].steps_per_sec, 750.5);
+        assert_eq!(back.allreduce[0].elems, 65536);
+        assert_eq!(back.allreduce[0].bf16_gbps, 3.125);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut j = sample().to_json();
+        j.set("schema_version", Json::Num(99.0));
+        assert!(PerfReport::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_reports() {
+        let mut r = sample();
+        r.threads = 0;
+        assert!(r.validate().is_err());
+
+        let mut r = sample();
+        r.gemm.clear();
+        assert!(r.validate().is_err());
+
+        let mut r = sample();
+        r.optimizers[0].steps_per_sec = f64::NAN;
+        assert!(r.validate().is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! The benchmark suite: what `mkor perf` measures.
+//!
+//! Three sections, matching the three performance-critical layers:
+//!
+//! * **GEMM** — GFLOP/s of the serial blocked kernels vs. the tiled engine
+//!   at the same sizes (`nn`/`nt`/`tn` forms), the direct measure of the
+//!   engine's win on the preconditioning matmuls (Equation 2).
+//! * **Optimizers** — end-to-end steps/sec for every name in the spec
+//!   registry ([`ALL_OPTIMIZERS`]) on the proxy-GLUE workload, through the
+//!   same [`TrainerBuilder`] path `mkor sim` uses.
+//! * **All-reduce** — effective GB/s of the ring collective
+//!   ([`crate::collective::ring`]) in fp32 and bf16 wire formats.
+//!
+//! Every figure is a median-of-k measurement via [`harness`]; the suite
+//! only *collects* numbers — layout/serialization live in [`super::report`].
+
+use super::harness::{self, throughput, TimerConfig};
+use super::report::PerfReport;
+use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
+use crate::coordinator::{Target, TrainerBuilder};
+use crate::data::classification::{Dataset, TaskConfig};
+use crate::linalg::{engine, ops, Matrix};
+use crate::model::{Activation, Mlp};
+use crate::optim::{OptimizerSpec, ALL_OPTIMIZERS};
+use crate::util::Rng;
+
+/// One GEMM operating point: serial vs. engine at a square size.
+#[derive(Clone, Debug)]
+pub struct GemmPoint {
+    /// `"nn"`, `"nt"` or `"tn"` — which transpose form was multiplied.
+    pub kind: String,
+    /// Square problem edge (`d×d·d×d`).
+    pub d: usize,
+    pub serial_gflops: f64,
+    pub engine_gflops: f64,
+    /// `engine_gflops / serial_gflops`.
+    pub speedup: f64,
+}
+
+/// Steps/sec for one optimizer from the spec registry.
+#[derive(Clone, Debug)]
+pub struct OptPoint {
+    pub name: String,
+    pub steps_per_sec: f64,
+}
+
+/// Ring all-reduce throughput at one (workers, payload) point.
+#[derive(Clone, Debug)]
+pub struct RingPoint {
+    pub workers: usize,
+    /// Elements per worker buffer.
+    pub elems: usize,
+    pub fp32_gbps: f64,
+    pub bf16_gbps: f64,
+}
+
+/// GEMM sizes the suite sweeps (quick keeps the tail off CI).
+pub fn gemm_sizes(quick: bool) -> &'static [usize] {
+    if quick {
+        &[64, 128, 256]
+    } else {
+        &[64, 128, 256, 384, 512]
+    }
+}
+
+fn gflops(d: usize, t: &harness::Timing) -> f64 {
+    throughput(2.0 * (d * d * d) as f64, t) / 1e9
+}
+
+/// Measure serial-vs-engine GFLOP/s for all three transpose forms.
+pub fn run_gemm(cfg: TimerConfig, threads: usize, quick: bool) -> Vec<GemmPoint> {
+    let mut rng = Rng::new(2024);
+    let mut out = Vec::new();
+    for &d in gemm_sizes(quick) {
+        let a = Matrix::randn(d, d, 1.0, &mut rng);
+        let b = Matrix::randn(d, d, 1.0, &mut rng);
+        let mut c = Matrix::zeros(d, d);
+        for kind in ["nn", "nt", "tn"] {
+            let serial = time_serial(kind, cfg, &a, &b, &mut c);
+            let engine_t = time_engine(kind, cfg, threads, &a, &b, &mut c);
+            let (sg, eg) = (gflops(d, &serial), gflops(d, &engine_t));
+            out.push(GemmPoint {
+                kind: kind.to_string(),
+                d,
+                serial_gflops: sg,
+                engine_gflops: eg,
+                speedup: if sg > 0.0 { eg / sg } else { 0.0 },
+            });
+        }
+    }
+    out
+}
+
+fn time_serial(
+    kind: &str,
+    cfg: TimerConfig,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) -> harness::Timing {
+    match kind {
+        "nn" => harness::time_median(cfg, || ops::matmul_into_serial(a, b, c)),
+        "nt" => harness::time_median(cfg, || ops::matmul_nt_into_serial(a, b, c)),
+        _ => harness::time_median(cfg, || ops::matmul_tn_into_serial(a, b, c)),
+    }
+}
+
+fn time_engine(
+    kind: &str,
+    cfg: TimerConfig,
+    threads: usize,
+    a: &Matrix,
+    b: &Matrix,
+    c: &mut Matrix,
+) -> harness::Timing {
+    match kind {
+        "nn" => harness::time_median(cfg, || engine::gemm_into(a.view(), b.view(), c, threads)),
+        "nt" => harness::time_median(cfg, || engine::gemm_into(a.view(), b.t_view(), c, threads)),
+        _ => harness::time_median(cfg, || engine::gemm_into(a.t_view(), b.view(), c, threads)),
+    }
+}
+
+/// Measure end-to-end steps/sec for every registered optimizer on the
+/// proxy-GLUE task (same model family and trainer path as `mkor sim`).
+pub fn run_optimizers(cfg: TimerConfig, quick: bool) -> Vec<OptPoint> {
+    let steps_per_pass = if quick { 2 } else { 5 };
+    let mut task_cfg = TaskConfig::new("qnli-proxy", 64, 2);
+    task_cfg.seed = 7;
+    let ds = Dataset::generate(task_cfg);
+    let batches = ds.epoch_batches(64, 0);
+    let mut out = Vec::new();
+    for &name in ALL_OPTIMIZERS {
+        let spec = OptimizerSpec::parse(name).expect("registry name parses");
+        let mut rng = Rng::new(7);
+        let model = Mlp::new(&[64, 96, 48, 2], Activation::Relu, &mut rng);
+        let mut trainer = TrainerBuilder::new(model)
+            .optimizer(spec)
+            .constant_lr(0.05)
+            .workers(2)
+            .run_name(format!("perf-{name}"))
+            .try_build()
+            .expect("perf trainer builds");
+        let mut cursor = 0usize;
+        let t = harness::time_median(cfg, || {
+            for _ in 0..steps_per_pass {
+                let b = &batches[cursor % batches.len()];
+                cursor += 1;
+                let _ = trainer.step(&b.x, &Target::Labels(b.labels.clone()));
+            }
+        });
+        out.push(OptPoint {
+            name: name.to_string(),
+            steps_per_sec: throughput(steps_per_pass as f64, &t),
+        });
+    }
+    out
+}
+
+/// (workers, elements-per-buffer) points the ring sweep measures.
+pub fn ring_shapes(quick: bool) -> &'static [(usize, usize)] {
+    if quick {
+        &[(4, 16384)]
+    } else {
+        &[(4, 65536), (8, 1048576)]
+    }
+}
+
+/// Measure ring all-reduce throughput (fp32 and bf16 wire). Reported GB/s
+/// is total bytes moved across the ring per second (`bytes_per_worker × W`).
+/// The timed passes re-reduce the same buffers — the data movement and
+/// arithmetic per pass are identical regardless of the values.
+pub fn run_ring(cfg: TimerConfig) -> Vec<RingPoint> {
+    run_ring_shaped(cfg, ring_shapes(false))
+}
+
+/// [`run_ring`] over explicit shapes (the quick path narrows the sweep).
+pub fn run_ring_shaped(cfg: TimerConfig, shapes: &[(usize, usize)]) -> Vec<RingPoint> {
+    let mut out = Vec::new();
+    for &(w, n) in shapes {
+        let mut rng = Rng::new(99);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..w).map(|_| (0..n).map(|_| rng.gaussian_f32()).collect()).collect();
+        let stats = allreduce_mean(&mut bufs);
+        let total_bytes = (stats.bytes_per_worker * w) as f64;
+        let t32 = harness::time_median(cfg, || {
+            allreduce_mean(&mut bufs);
+        });
+        let t16 = harness::time_median(cfg, || {
+            allreduce_mean_bf16(&mut bufs);
+        });
+        out.push(RingPoint {
+            workers: w,
+            elems: n,
+            fp32_gbps: throughput(total_bytes, &t32) / 1e9,
+            // bf16 moves half the bytes; report its own wire volume.
+            bf16_gbps: throughput(total_bytes / 2.0, &t16) / 1e9,
+        });
+    }
+    out
+}
+
+/// Run the whole suite and assemble the versioned report.
+pub fn run_suite(quick: bool, threads: usize) -> PerfReport {
+    let cfg = if quick { TimerConfig::quick() } else { TimerConfig::full() };
+    engine::set_threads(threads);
+    PerfReport {
+        schema_version: super::report::SCHEMA_VERSION,
+        quick,
+        threads,
+        hw_threads: engine::hw_threads(),
+        os: std::env::consts::OS.to_string(),
+        arch: std::env::consts::ARCH.to_string(),
+        warmup: cfg.warmup,
+        repeats: cfg.repeats,
+        gemm: run_gemm(cfg, threads, quick),
+        optimizers: run_optimizers(cfg, quick),
+        allreduce: run_ring_shaped(cfg, ring_shapes(quick)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_section_covers_all_kinds_and_sizes() {
+        // Smallest possible measurement: 1 repeat, tiny sizes — checks the
+        // plumbing, not the numbers.
+        let cfg = TimerConfig { warmup: 0, repeats: 1 };
+        let mut rng = Rng::new(1);
+        let a = Matrix::randn(32, 32, 1.0, &mut rng);
+        let b = Matrix::randn(32, 32, 1.0, &mut rng);
+        let mut c = Matrix::zeros(32, 32);
+        for kind in ["nn", "nt", "tn"] {
+            let t = time_serial(kind, cfg, &a, &b, &mut c);
+            assert!(t.median_secs >= 0.0, "{kind}");
+            let t = time_engine(kind, cfg, 2, &a, &b, &mut c);
+            assert!(t.median_secs >= 0.0, "{kind}");
+        }
+    }
+
+    #[test]
+    fn ring_section_reports_finite_throughput() {
+        let cfg = TimerConfig { warmup: 0, repeats: 1 };
+        let pts = run_ring_shaped(cfg, &[(2, 256)]);
+        assert_eq!(pts.len(), 1);
+        assert!(pts[0].fp32_gbps.is_finite() && pts[0].fp32_gbps >= 0.0);
+        assert!(pts[0].bf16_gbps.is_finite() && pts[0].bf16_gbps >= 0.0);
+    }
+}

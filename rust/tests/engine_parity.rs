@@ -1,0 +1,226 @@
+//! Parallel-vs-serial bitwise-equality properties for every dispatched
+//! linalg kernel, across thread counts and ragged shapes — the determinism
+//! invariant the engine promises (`rust/src/linalg/engine/`): results are
+//! **bitwise identical at any `--threads`**, because row ownership is
+//! exclusive, per-element accumulation order is fixed by the problem shape
+//! and the constant tile sizes, and the engine/serial dispatch depends on
+//! problem size only.
+//!
+//! Also covers the perf-report schema round trip (the contract CI's
+//! perf-smoke job validates against).
+
+use mkor::linalg::{engine, ops, Matrix};
+use mkor::perf::{PerfReport, TimerConfig};
+use mkor::util::json::Json;
+use mkor::util::Rng;
+
+/// Thread counts the properties sweep (1 = serial baseline; 7 is
+/// deliberately ragged against every shape below).
+const THREADS: &[usize] = &[1, 2, 7];
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+/// Shapes straddling the GEMM dispatch threshold, ragged on purpose.
+/// (161·133·129 ≈ 2.8M ≥ 2²¹ forces the engine path; the small ones stay
+/// on the serial path at every thread count.)
+fn gemm_shapes() -> Vec<(usize, usize, usize)> {
+    vec![(13, 7, 11), (70, 129, 33), (161, 133, 129), (160, 160, 160)]
+}
+
+#[test]
+fn matmul_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(100);
+    for (m, k, n) in gemm_shapes() {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        engine::set_threads(1);
+        let base = ops::matmul(&a, &b);
+        for &t in THREADS {
+            engine::set_threads(t);
+            let c = ops::matmul(&a, &b);
+            assert_bits_eq(base.data(), c.data(), &format!("matmul {m}x{k}x{n} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn matmul_nt_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(101);
+    for (m, k, n) in gemm_shapes() {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(n, k, 1.0, &mut rng); // B is n×k, C = A·Bᵀ
+        engine::set_threads(1);
+        let base = ops::matmul_nt(&a, &b);
+        for &t in THREADS {
+            engine::set_threads(t);
+            let c = ops::matmul_nt(&a, &b);
+            assert_bits_eq(base.data(), c.data(), &format!("matmul_nt {m}x{k}x{n} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn matmul_tn_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(102);
+    for (m, k, n) in gemm_shapes() {
+        let a = Matrix::randn(k, m, 1.0, &mut rng); // A is k×m, C = Aᵀ·B
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        engine::set_threads(1);
+        let base = ops::matmul_tn(&a, &b);
+        for &t in THREADS {
+            engine::set_threads(t);
+            let c = ops::matmul_tn(&a, &b);
+            assert_bits_eq(base.data(), c.data(), &format!("matmul_tn {m}x{k}x{n} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn matvec_variants_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(103);
+    // 520×521 ≥ 2¹⁸ elements forces the engine path; 37×19 stays serial.
+    for (rows, cols) in [(37usize, 19usize), (520, 521)] {
+        let a = Matrix::randn(rows, cols, 1.0, &mut rng);
+        let x: Vec<f32> = (0..cols).map(|_| rng.gaussian_f32()).collect();
+        let xr: Vec<f32> = (0..rows).map(|_| rng.gaussian_f32()).collect();
+        engine::set_threads(1);
+        let base = ops::matvec(&a, &x);
+        let base_t = ops::matvec_t(&a, &xr);
+        for &t in THREADS {
+            engine::set_threads(t);
+            assert_bits_eq(&base, &ops::matvec(&a, &x), &format!("matvec {rows}x{cols} t={t}"));
+            assert_bits_eq(
+                &base_t,
+                &ops::matvec_t(&a, &xr),
+                &format!("matvec_t {rows}x{cols} t={t}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn rank1_update_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(104);
+    for n in [23usize, 520] {
+        let init = Matrix::rand_spd(n, 0.1, &mut rng);
+        let u: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        engine::set_threads(1);
+        let mut base = init.clone();
+        ops::scaled_rank1_update(&mut base, 0.95, 0.05, &u);
+        for &t in THREADS {
+            engine::set_threads(t);
+            let mut m = init.clone();
+            ops::scaled_rank1_update(&mut m, 0.95, 0.05, &u);
+            assert_bits_eq(base.data(), m.data(), &format!("rank1 n={n} t={t}"));
+        }
+    }
+}
+
+#[test]
+fn col_mean_bitwise_identical_across_thread_counts() {
+    let mut rng = Rng::new(105);
+    // d×b capture shapes: small serial case and an engine-path case
+    // (600×512 ≥ 2¹⁸), plus a ragged b.
+    for (d, b) in [(33usize, 17usize), (600, 512), (601, 437)] {
+        let a = Matrix::randn(d, b, 1.0, &mut rng);
+        engine::set_threads(1);
+        let base = ops::col_mean(&a);
+        for &t in THREADS {
+            engine::set_threads(t);
+            assert_bits_eq(&base, &ops::col_mean(&a), &format!("col_mean {d}x{b} t={t}"));
+        }
+    }
+}
+
+/// The fused Sherman–Morrison sequence MKOR runs per layer (Algorithm 1):
+/// col-mean of the d×b capture → matvec through the inverse → dot →
+/// fused rank-1 update. Chained across several iterations it must stay
+/// bitwise identical whatever the thread count — this is exactly the
+/// property the checkpoint-resume byte-equality suite leans on.
+#[test]
+fn sm_update_sequence_bitwise_identical_across_thread_counts() {
+    fn run(threads: usize) -> Matrix {
+        engine::set_threads(threads);
+        let mut rng = Rng::new(106);
+        let d = 520; // d² above the slice threshold: engine path engaged
+        let mut inv = Matrix::rand_spd(d, 0.1, &mut rng);
+        for step in 0..3 {
+            let capture = Matrix::randn(d, 64, 1.0, &mut rng);
+            let v = ops::col_mean(&capture);
+            let mut u = vec![0.0f32; d];
+            ops::matvec_into(&inv, &v, &mut u);
+            let denom = 1.0 + ops::dot(&v, &u) as f32;
+            let gamma = 0.9 + 0.01 * step as f32;
+            ops::scaled_rank1_update(&mut inv, 1.0 / gamma, -1.0 / (gamma * denom), &u);
+        }
+        inv
+    }
+    let base = run(1);
+    for &t in &[2usize, 7] {
+        let got = run(t);
+        assert_bits_eq(base.data(), got.data(), &format!("sm sequence t={t}"));
+    }
+}
+
+/// The dispatch wiring itself: the test shapes above genuinely straddle
+/// the thresholds (guards against silently shifting a constant so the
+/// "engine path" cases quietly all go serial).
+#[test]
+fn dispatch_thresholds_are_straddled_by_test_shapes() {
+    assert!(13 * 7 * 11 < engine::GEMM_PAR_MIN_WORK);
+    assert!(161 * 133 * 129 >= engine::GEMM_PAR_MIN_WORK);
+    assert!(160 * 160 * 160 >= engine::GEMM_PAR_MIN_WORK);
+    assert!(37 * 19 < engine::SLICE_PAR_MIN_ELEMS);
+    assert!(520 * 521 >= engine::SLICE_PAR_MIN_ELEMS);
+    assert!(600 * 512 >= engine::SLICE_PAR_MIN_ELEMS);
+    assert!(520 * 520 >= engine::SLICE_PAR_MIN_ELEMS);
+}
+
+/// Perf-report schema contract: emit → parse → same content, and the
+/// emitted text is valid JSON with the versioned keys CI checks for.
+#[test]
+fn perf_report_schema_round_trips_through_text() {
+    let report = PerfReport {
+        schema_version: mkor::perf::SCHEMA_VERSION,
+        quick: true,
+        threads: 2,
+        hw_threads: 8,
+        os: "linux".into(),
+        arch: "x86_64".into(),
+        warmup: TimerConfig::quick().warmup,
+        repeats: TimerConfig::quick().repeats,
+        gemm: vec![mkor::perf::suite::GemmPoint {
+            kind: "nt".into(),
+            d: 128,
+            serial_gflops: 4.5,
+            engine_gflops: 9.0,
+            speedup: 2.0,
+        }],
+        optimizers: vec![mkor::perf::suite::OptPoint {
+            name: "mkor-h".into(),
+            steps_per_sec: 1250.25,
+        }],
+        allreduce: vec![mkor::perf::suite::RingPoint {
+            workers: 4,
+            elems: 16384,
+            fp32_gbps: 4.5,
+            bf16_gbps: 2.25,
+        }],
+    };
+    report.validate().expect("sample report valid");
+    let text = format!("{:#}", report.to_json());
+    let parsed = Json::parse(&text).expect("emitted report is valid JSON");
+    assert_eq!(parsed.require_usize("schema_version").unwrap(), 1);
+    assert!(parsed.get("host").unwrap().require_usize("threads").unwrap() == 2);
+    let back = PerfReport::from_json(&parsed).expect("round trip");
+    assert_eq!(back.gemm[0].kind, "nt");
+    assert_eq!(back.gemm[0].engine_gflops, 9.0);
+    assert_eq!(back.optimizers[0].steps_per_sec, 1250.25);
+    assert_eq!(back.allreduce[0].bf16_gbps, 2.25);
+    back.validate().expect("parsed report valid");
+}

@@ -44,7 +44,8 @@ fn mkor_step_artifact_matches_rust_algorithm() {
         })
         .collect();
     let spd = |d: usize, rng: &mut Rng| -> Matrix { Matrix::rand_spd(d, 0.3, rng) };
-    let linvs: Vec<Matrix> = meta.factor_dims.iter().map(|&(_, dout)| spd(dout, &mut rng)).collect();
+    let linvs: Vec<Matrix> =
+        meta.factor_dims.iter().map(|&(_, dout)| spd(dout, &mut rng)).collect();
     let rinvs: Vec<Matrix> = meta.factor_dims.iter().map(|&(din, _)| spd(din, &mut rng)).collect();
     let a_vecs: Vec<Vec<f32>> = meta
         .factor_dims
