@@ -27,6 +27,7 @@
 
 use crate::checkpoint::state::{fnv1a64, StateDict, StateError};
 use crate::coordinator::RunRecord;
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -130,12 +131,15 @@ impl Checkpoint {
     /// readable manifest whose blobs are intact — either the old
     /// checkpoint or the new one.
     pub fn save(&self, dir: &Path) -> Result<(), CheckpointError> {
+        let t0 = obs::enabled().then(std::time::Instant::now);
         std::fs::create_dir_all(dir).map_err(|e| CheckpointError::io(dir, e))?;
         let mut keep: Vec<String> = Vec::new();
         let mut components = Json::obj();
+        let mut total_bytes = 0usize;
         for (name, sd) in &self.components {
             let file = format!("{name}-{}.bin", self.step);
             let bytes = sd.to_bytes();
+            total_bytes += bytes.len();
             let path = dir.join(&file);
             std::fs::write(&path, &bytes).map_err(|e| CheckpointError::io(&path, e))?;
             let mut meta = Json::obj();
@@ -180,6 +184,16 @@ impl Checkpoint {
                 }
             }
         }
+        if let Some(t0) = t0 {
+            obs::emit(
+                TraceEvent::new(EventKind::CkptSave)
+                    .num("step", self.step as f64)
+                    .num("components", self.components.len() as f64)
+                    .num("bytes", total_bytes as f64)
+                    .num("secs", t0.elapsed().as_secs_f64()),
+            );
+            obs::registry::with_global(|r| r.inc("checkpoint.saves", 1));
+        }
         Ok(())
     }
 
@@ -187,6 +201,7 @@ impl Checkpoint {
     /// well-formed, version supported, every component blob present with a
     /// matching content hash and a decodable state dict.
     pub fn load(dir: &Path) -> Result<Checkpoint, CheckpointError> {
+        let t0 = obs::enabled().then(std::time::Instant::now);
         let manifest_path = dir.join(MANIFEST_FILE);
         if !manifest_path.is_file() {
             return Err(CheckpointError::MissingManifest(dir.to_path_buf()));
@@ -268,6 +283,15 @@ impl Checkpoint {
             }
         };
 
+        if let Some(t0) = t0 {
+            obs::emit(
+                TraceEvent::new(EventKind::CkptRestore)
+                    .num("step", step as f64)
+                    .num("components", components.len() as f64)
+                    .num("secs", t0.elapsed().as_secs_f64()),
+            );
+            obs::registry::with_global(|r| r.inc("checkpoint.restores", 1));
+        }
         Ok(Checkpoint {
             step,
             spec,

@@ -9,6 +9,7 @@
 //! quantization of the wire format (MKOR's half-precision sync).
 
 use crate::linalg::half::{accumulate_bf16_wire, quantize_bf16_into, write_bf16_wire};
+use crate::obs::{self, EventKind, TraceEvent};
 
 /// Accounting from one collective call.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -17,6 +18,24 @@ pub struct AllreduceStats {
     pub bytes_per_worker: usize,
     /// Number of communication steps (latency terms).
     pub steps: usize,
+}
+
+/// Trace one completed collective (callers already checked
+/// [`obs::enabled`], so the disabled path never reaches here).
+fn trace_allreduce(wire: &str, workers: usize, stats: &AllreduceStats, secs: f64) {
+    obs::emit(
+        TraceEvent::new(EventKind::Allreduce)
+            .label("wire", wire)
+            .num("workers", workers as f64)
+            .num("bytes_per_worker", stats.bytes_per_worker as f64)
+            .num("comm_steps", stats.steps as f64)
+            .num("secs", secs),
+    );
+    obs::registry::with_global(|r| {
+        r.inc("collective.allreduces", 1);
+        r.inc("collective.bytes_per_worker", stats.bytes_per_worker as u64);
+        r.observe("collective.allreduce_secs", secs);
+    });
 }
 
 /// Chunk boundaries for `n` elements over `w` ranks.
@@ -44,6 +63,7 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
     if w == 1 {
         return AllreduceStats { bytes_per_worker: 0, steps: 0 };
     }
+    let t0 = obs::enabled().then(std::time::Instant::now);
     let chunks = chunk_bounds(n, w);
     let max_chunk = chunks.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
     // One payload scratch reused for every send (the "wire"): the collective
@@ -86,7 +106,11 @@ pub fn allreduce_mean(bufs: &mut [Vec<f32>]) -> AllreduceStats {
             *v *= inv_w;
         }
     }
-    AllreduceStats { bytes_per_worker: bytes / w, steps: 2 * (w - 1) }
+    let stats = AllreduceStats { bytes_per_worker: bytes / w, steps: 2 * (w - 1) };
+    if let Some(t0) = t0 {
+        trace_allreduce("fp32", w, &stats, t0.elapsed().as_secs_f64());
+    }
+    stats
 }
 
 /// Ring all-reduce (mean) with bf16 wire format: every payload is
@@ -107,6 +131,7 @@ pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
     if w == 1 {
         return AllreduceStats { bytes_per_worker: 0, steps: 0 };
     }
+    let t0 = obs::enabled().then(std::time::Instant::now);
     let chunks = chunk_bounds(n, w);
     let max_chunk = chunks.iter().map(|&(lo, hi)| hi - lo).max().unwrap_or(0);
     let mut wire_scratch = vec![0u16; max_chunk];
@@ -140,7 +165,11 @@ pub fn allreduce_mean_bf16(bufs: &mut [Vec<f32>]) -> AllreduceStats {
             *v *= inv_w;
         }
     }
-    AllreduceStats { bytes_per_worker: bytes / w, steps: 2 * (w - 1) }
+    let stats = AllreduceStats { bytes_per_worker: bytes / w, steps: 2 * (w - 1) };
+    if let Some(t0) = t0 {
+        trace_allreduce("bf16", w, &stats, t0.elapsed().as_secs_f64());
+    }
+    stats
 }
 
 #[cfg(test)]

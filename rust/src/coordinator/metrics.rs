@@ -35,6 +35,13 @@ pub struct StepRecord {
     pub grad_comm_bytes: usize,
     /// Second-order sync bytes (per worker).
     pub sync_comm_bytes: usize,
+    /// Whether the optimizer ran a factor-inversion update this step
+    /// (MKOR's Sherman–Morrison rank-1 step, KFAC's re-inversion, …) —
+    /// so records and traces agree on when inversions happened.
+    pub inverse_updated: bool,
+    /// Wall seconds this step spent in second-order phases (factor
+    /// update + preconditioning), from the trainer's phase timers.
+    pub second_order_secs: f64,
 }
 
 /// A whole run.
@@ -162,7 +169,9 @@ impl RunRecord {
                     .set("lr", Json::Num(s.lr as f64))
                     .set("wall_secs", Json::Num(s.wall_secs))
                     .set("grad_comm_bytes", Json::Num(s.grad_comm_bytes as f64))
-                    .set("sync_comm_bytes", Json::Num(s.sync_comm_bytes as f64));
+                    .set("sync_comm_bytes", Json::Num(s.sync_comm_bytes as f64))
+                    .set("inverse_updated", Json::Bool(s.inverse_updated))
+                    .set("second_order_secs", Json::Num(s.second_order_secs));
                 j
             })
             .collect();
@@ -216,6 +225,16 @@ impl RunRecord {
                 wall_secs: num("wall_secs")?,
                 grad_comm_bytes: num("grad_comm_bytes")? as usize,
                 sync_comm_bytes: num("sync_comm_bytes")? as usize,
+                // Absent in pre-observability records (old checkpoints):
+                // default rather than fail, like legacy `null` losses.
+                inverse_updated: s
+                    .get("inverse_updated")
+                    .and_then(Json::as_bool)
+                    .unwrap_or(false),
+                second_order_secs: s
+                    .get("second_order_secs")
+                    .and_then(Json::as_f64)
+                    .unwrap_or(0.0),
             });
         }
         Ok(RunRecord {
@@ -271,6 +290,8 @@ mod tests {
                     wall_secs: 0.5,
                     grad_comm_bytes: 100,
                     sync_comm_bytes: 10,
+                    inverse_updated: true,
+                    second_order_secs: 0.125,
                 },
                 StepRecord {
                     step: 1,
@@ -280,6 +301,8 @@ mod tests {
                     wall_secs: 0.5,
                     grad_comm_bytes: 100,
                     sync_comm_bytes: 0,
+                    inverse_updated: false,
+                    second_order_secs: 0.0,
                 },
             ],
             diverged: false,
@@ -325,6 +348,12 @@ mod tests {
             assert_eq!(a.lr.to_bits(), b.lr.to_bits());
             assert_eq!(a.grad_comm_bytes, b.grad_comm_bytes);
             assert_eq!(a.sync_comm_bytes, b.sync_comm_bytes);
+            assert_eq!(a.inverse_updated, b.inverse_updated);
+            assert_eq!(
+                a.second_order_secs.to_bits(),
+                b.second_order_secs.to_bits(),
+                "second_order_secs must be bitwise"
+            );
         }
         // A messy f64 survives the text round-trip bitwise.
         let mut r2 = sample_run();
@@ -335,6 +364,27 @@ mod tests {
         // A record without `steps` is rejected with the field name.
         let e = RunRecord::from_json(&sample_run().to_json()).unwrap_err();
         assert!(e.contains("steps"), "{e}");
+    }
+
+    #[test]
+    fn pre_observability_records_parse_with_defaults() {
+        // Records written before `inverse_updated`/`second_order_secs`
+        // existed (old checkpoints, old worker files) must still parse.
+        let mut j = sample_run().to_json_full();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(steps)) = o.get_mut("steps") {
+                for s in steps {
+                    if let Json::Obj(so) = s {
+                        so.remove("inverse_updated");
+                        so.remove("second_order_secs");
+                    }
+                }
+            }
+        }
+        let re = RunRecord::from_json(&j).unwrap();
+        assert!(!re.steps[0].inverse_updated);
+        assert_eq!(re.steps[0].second_order_secs, 0.0);
+        assert_eq!(re.steps[0].loss, 2.0);
     }
 
     #[test]

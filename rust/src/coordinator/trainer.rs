@@ -19,6 +19,7 @@ use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
 use crate::coordinator::metrics::{RunRecord, StepRecord};
 use crate::linalg::Matrix;
 use crate::model::{accuracy, mse_loss, softmax_xent, Capture, Mlp};
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::optim::schedule::{Constant, LrSchedule};
 use crate::optim::{Optimizer, OptimizerSpec};
 use crate::util::timer::PhaseTimer;
@@ -569,11 +570,21 @@ impl Trainer {
         self.phases.add("allreduce", t_comm.elapsed());
 
         // ---- optimizer step on the leader -------------------------------
+        // Bracket the optimizer call with phase-timer snapshots so the
+        // step record carries its second-order share (factor + precond)
+        // and whether a factor inversion ran — pure reads of timing the
+        // optimizer already does, never a perturbation of it.
+        let so_before =
+            self.phases.total_secs("factor") + self.phases.total_secs("precond");
+        let factor_steps_before = self.phases.count("factor");
         {
             // Split so the optimizer borrows only the leader replica.
             let (leader, _rest) = self.replicas.split_first_mut().unwrap();
             self.opt.step(&mut leader.layers, &caps, lr, &mut self.phases);
         }
+        let second_order_secs =
+            self.phases.total_secs("factor") + self.phases.total_secs("precond") - so_before;
+        let inverse_updated = self.phases.count("factor") > factor_steps_before;
         self.opt.observe_loss(loss);
         self.schedule.observe(self.t, loss);
 
@@ -593,14 +604,34 @@ impl Trainer {
         }
         self.phases.add("broadcast", t_bc.elapsed());
 
+        let wall_secs = t0.elapsed().as_secs_f64();
+        let sync_bytes = self.opt.sync_bytes_last_step();
+        if obs::enabled() {
+            obs::emit(
+                TraceEvent::new(EventKind::Step)
+                    .num("step", self.t as f64)
+                    .num("secs", wall_secs)
+                    .num("loss", loss)
+                    .num("second_order_secs", second_order_secs)
+                    .num("grad_bytes", grad_bytes as f64)
+                    .num("sync_bytes", sync_bytes as f64),
+            );
+            obs::registry::with_global(|r| {
+                r.inc("trainer.steps", 1);
+                r.observe("trainer.step_secs", wall_secs);
+                r.observe("trainer.second_order_secs", second_order_secs);
+            });
+        }
         self.record.steps.push(StepRecord {
             step: self.t,
             loss,
             eval_metric: None,
             lr,
-            wall_secs: t0.elapsed().as_secs_f64(),
+            wall_secs,
             grad_comm_bytes: grad_bytes,
-            sync_comm_bytes: self.opt.sync_bytes_last_step(),
+            sync_comm_bytes: sync_bytes,
+            inverse_updated,
+            second_order_secs,
         });
         self.t += 1;
         Some(loss)
@@ -617,6 +648,8 @@ impl Trainer {
             wall_secs: wall,
             grad_comm_bytes: 0,
             sync_comm_bytes: 0,
+            inverse_updated: false,
+            second_order_secs: 0.0,
         });
         self.t += 1;
     }
@@ -635,6 +668,15 @@ impl Trainer {
                 (loss, None)
             }
         };
+        if obs::enabled() {
+            let mut ev = TraceEvent::new(EventKind::Eval)
+                .num("step", self.t as f64)
+                .num("loss", loss);
+            if let Some(m) = metric {
+                ev = ev.num("metric", m);
+            }
+            obs::emit(ev);
+        }
         if let Some(rec) = self.record.steps.last_mut() {
             rec.eval_metric = metric.or(Some(-loss));
         }
@@ -934,6 +976,25 @@ mod tests {
         assert!(tr.phases.count("factor") > 0);
         assert!(tr.phases.count("precond") > 0);
         assert!(tr.phases.count("update") > 0);
+        // The step records agree with the phase timers: every step where a
+        // factor inversion ran is flagged, and its record carries the
+        // second-order timing.
+        let inv_steps: Vec<usize> = tr
+            .record
+            .steps
+            .iter()
+            .filter(|s| s.inverse_updated)
+            .map(|s| s.step)
+            .collect();
+        // The "factor" phase is timed once per layer per factor step.
+        let n_layers = tr.leader().layers.len();
+        assert_eq!(inv_steps.len() * n_layers, tr.phases.count("factor"));
+        assert!(inv_steps.contains(&0), "step 0 is always a factor step");
+        assert!(tr.record.steps.iter().all(|s| s.second_order_secs >= 0.0));
+        assert!(
+            tr.record.steps.iter().any(|s| s.second_order_secs > 0.0),
+            "precond time must land in the step records"
+        );
     }
 
     #[test]

@@ -30,9 +30,28 @@ pub use pool::{hw_threads, set_threads, threads};
 pub use schedule::{GEMM_PAR_MIN_WORK, SLICE_PAR_MIN_ELEMS};
 
 use crate::linalg::{Matrix, MatrixView};
+use crate::obs::{self, EventKind, TraceEvent};
 use microkernel::{kernel_8x8, store_tile};
 use schedule::{partition, RowSlices};
 use tile::{pack_a_panel, pack_b_chunk, strips, KC, MR, NR};
+
+/// Trace one engine dispatch (`op` distinguishes the GEMM from the
+/// rowwise kernels). Callers already checked [`obs::enabled`].
+fn trace_dispatch(op: &str, m: usize, n: usize, k: usize, threads: usize, secs: f64) {
+    obs::emit(
+        TraceEvent::new(EventKind::Gemm)
+            .label("op", op)
+            .num("m", m as f64)
+            .num("n", n as f64)
+            .num("k", k as f64)
+            .num("threads", threads as f64)
+            .num("secs", secs),
+    );
+    obs::registry::with_global(|r| {
+        r.inc("engine.dispatches", 1);
+        r.observe(&format!("engine.{op}_secs"), secs);
+    });
+}
 
 /// `C = A · B` over views, tiled and fanned out over `threads` parts.
 /// `c` is overwritten. Shapes: `a` is m×k, `b` is k×n, `c` is m×n.
@@ -45,6 +64,7 @@ pub fn gemm_into(a: MatrixView<'_>, b: MatrixView<'_>, c: &mut Matrix, threads: 
     if m == 0 || n == 0 || a.cols() == 0 {
         return;
     }
+    let t0 = obs::enabled().then(std::time::Instant::now);
     let row_blocks = m.div_ceil(MR);
     let block_bounds = partition(row_blocks, threads);
     let row_bounds: Vec<(usize, usize)> = block_bounds
@@ -61,6 +81,9 @@ pub fn gemm_into(a: MatrixView<'_>, b: MatrixView<'_>, c: &mut Matrix, threads: 
         gemm_part(a, b, cpart, r0, r1);
     };
     pool::global().run(parts, &work);
+    if let Some(t0) = t0 {
+        trace_dispatch("gemm", m, n, a.cols(), parts, t0.elapsed().as_secs_f64());
+    }
 }
 
 /// One part's share of the GEMM: rows `[r0, r1)` of `C`, all columns.
@@ -98,6 +121,7 @@ fn gemm_part(a: MatrixView<'_>, b: MatrixView<'_>, cpart: &mut [f32], r0: usize,
 pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
     assert_eq!(a.cols(), x.len());
     assert_eq!(a.rows(), y.len());
+    let t0 = obs::enabled().then(std::time::Instant::now);
     let bounds = partition(a.rows(), threads);
     let slices = RowSlices::new(y, 1, bounds);
     let work = |p: usize| {
@@ -114,6 +138,9 @@ pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
         }
     };
     pool::global().run(slices.parts(), &work);
+    if let Some(t0) = t0 {
+        trace_dispatch("matvec", a.rows(), 1, a.cols(), slices.parts(), t0.elapsed().as_secs_f64());
+    }
 }
 
 /// `y = Aᵀ · x`, output columns partitioned. Each part sweeps the rows of
@@ -122,6 +149,7 @@ pub fn matvec_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
 pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
     assert_eq!(a.rows(), x.len());
     assert_eq!(a.cols(), y.len());
+    let t0 = obs::enabled().then(std::time::Instant::now);
     y.fill(0.0);
     let bounds = partition(a.cols(), threads);
     let slices = RowSlices::new(y, 1, bounds);
@@ -138,6 +166,16 @@ pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
         }
     };
     pool::global().run(slices.parts(), &work);
+    if let Some(t0) = t0 {
+        trace_dispatch(
+            "matvec_t",
+            a.cols(),
+            1,
+            a.rows(),
+            slices.parts(),
+            t0.elapsed().as_secs_f64(),
+        );
+    }
 }
 
 /// Fused symmetric rank-1 update `A = alpha*A + beta·u uᵀ`, rows
@@ -145,6 +183,7 @@ pub fn matvec_t_into(a: &Matrix, x: &[f32], y: &mut [f32], threads: usize) {
 pub fn scaled_rank1_update(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32], threads: usize) {
     assert!(a.is_square());
     assert_eq!(a.rows(), u.len());
+    let t0 = obs::enabled().then(std::time::Instant::now);
     let n = u.len();
     let bounds = partition(n, threads);
     let slices = RowSlices::new(a.data_mut(), n, bounds);
@@ -161,6 +200,9 @@ pub fn scaled_rank1_update(a: &mut Matrix, alpha: f32, beta: f32, u: &[f32], thr
         }
     };
     pool::global().run(slices.parts(), &work);
+    if let Some(t0) = t0 {
+        trace_dispatch("rank1", n, n, 1, slices.parts(), t0.elapsed().as_secs_f64());
+    }
 }
 
 /// Column mean of a `d×b` matrix (the paper's rank-1 batch approximation,
@@ -170,6 +212,7 @@ pub fn col_mean_into(a: &Matrix, out: &mut [f32], threads: usize) {
     let (d, b) = (a.rows(), a.cols());
     assert!(b > 0);
     assert_eq!(out.len(), d);
+    let t0 = obs::enabled().then(std::time::Instant::now);
     let bounds = partition(d, threads);
     let slices = RowSlices::new(out, 1, bounds);
     let work = |p: usize| {
@@ -182,6 +225,9 @@ pub fn col_mean_into(a: &Matrix, out: &mut [f32], threads: usize) {
         }
     };
     pool::global().run(slices.parts(), &work);
+    if let Some(t0) = t0 {
+        trace_dispatch("col_mean", d, 1, b, slices.parts(), t0.elapsed().as_secs_f64());
+    }
 }
 
 #[cfg(test)]

@@ -44,8 +44,15 @@
 //!              report. `--quick` for the CI smoke policy, `--json PATH` to
 //!              emit the versioned schema, `--threads N` to pin the engine
 //!              pool (results never change with N — only speed).
+//! * `trace`  — `trace summarize <t.jsonl>` prints the per-phase breakdown
+//!              of a `--trace` file (count/total/mean/p50/p99 per event
+//!              kind plus share of step time); `trace cat <t.jsonl>`
+//!              prints every event as one line.
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
+//!
+//! Every command accepts `--trace PATH` (or `MKOR_TRACE=PATH`) to write a
+//! JSONL trace of the run; telemetry never changes artifact bytes.
 
 use mkor::bench_utils::Table;
 use mkor::cli::Args;
@@ -56,6 +63,7 @@ use mkor::data::images::{ImageConfig, ImageGen};
 use mkor::data::text::{MlmBatchGen, TextConfig};
 use mkor::experiments::convergence::RunOpts;
 use mkor::model::{specs, Activation, Mlp};
+use mkor::obs;
 use mkor::optim::OptimizerSpec;
 use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
 use mkor::runtime::ArtifactBundle;
@@ -71,7 +79,21 @@ use std::path::{Path, PathBuf};
 fn main() {
     mkor::util::logging::init_from_env();
     let args = Args::from_env();
-    let code = match args.command() {
+    let cmd = args.command();
+    // `--trace PATH` installs the process-global JSONL sink before the
+    // command runs; MKOR_TRACE is the env fallback. The `trace` reader
+    // subcommand never traces itself.
+    if cmd != Some("trace") {
+        if let Some(path) = args.get("trace") {
+            if let Err(e) = obs::install(Path::new(path)) {
+                eprintln!("error: --trace: {e:#}");
+                std::process::exit(2);
+            }
+        } else {
+            obs::sink::init_from_env();
+        }
+    }
+    let code = match cmd {
         Some("version") => {
             println!("mkor {}", mkor::VERSION);
             0
@@ -83,15 +105,71 @@ fn main() {
         Some("sweep-worker") => cmd_sweep_worker(&args),
         Some("ckpt") => cmd_ckpt(&args),
         Some("train") => cmd_train(&args),
+        Some("trace") => cmd_trace(&args),
         _ => {
             eprintln!(
-                "usage: mkor <train|sim|sweep|ckpt|perf|specs|version> [--flags]\n\
+                "usage: mkor <train|sim|sweep|ckpt|perf|trace|specs|version> [--flags]\n\
                  see README.md for details"
             );
             2
         }
     };
+    // Unconditional teardown: a no-op when no sink was installed.
+    match obs::finish() {
+        Some(Ok(receipt)) => {
+            obs::log::note(&format!(
+                "trace: {} events -> {}",
+                receipt.events,
+                receipt.path.display()
+            ));
+        }
+        Some(Err(e)) => eprintln!("trace: {e:#}"),
+        None => {}
+    }
     std::process::exit(code);
+}
+
+/// `mkor trace summarize|cat <trace.jsonl>`: decode a `--trace` file back
+/// through the validating reader and either aggregate it (per-kind
+/// count/total/mean/p50/p99 and share of total step time) or print every
+/// event as one human-readable line.
+fn cmd_trace(args: &Args) -> i32 {
+    let usage = || eprintln!("usage: mkor trace <summarize|cat> <trace.jsonl>");
+    let Some(action) = args.positional.get(1).map(String::as_str) else {
+        usage();
+        return 2;
+    };
+    let Some(path) = args.positional.get(2) else {
+        usage();
+        return 2;
+    };
+    let log = match obs::read_trace(Path::new(path)) {
+        Ok(log) => log,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    if log.torn_tail {
+        eprintln!("warning: skipped a torn final line (the writer died mid-write)");
+    }
+    match action {
+        "summarize" => {
+            println!("{path}: {} events", log.events.len());
+            print!("{}", obs::TraceSummary::from_events(&log.events).render());
+            0
+        }
+        "cat" => {
+            for ev in &log.events {
+                println!("{}", ev.render());
+            }
+            0
+        }
+        _ => {
+            usage();
+            2
+        }
+    }
 }
 
 fn cmd_specs() -> i32 {
@@ -139,11 +217,17 @@ fn cmd_perf(args: &Args) -> i32 {
         eprintln!("error: --threads must be at least 1");
         return 2;
     }
-    println!(
+    obs::log::progress(&format!(
         "running perf suite ({} policy, {threads} threads)...",
         if quick { "quick" } else { "full" }
-    );
-    let report = mkor::perf::run_suite(quick, threads);
+    ));
+    let mut report = mkor::perf::run_suite(quick, threads);
+    // Record where this run's trace went (if anywhere) so a saved report
+    // points at its own phase-level evidence.
+    if obs::enabled() {
+        report.trace =
+            args.get("trace").map(str::to_string).or_else(|| std::env::var("MKOR_TRACE").ok());
+    }
     print!("{}", report.render());
     if let Err(e) = report.validate() {
         eprintln!("error: report failed validation: {e}");
@@ -243,7 +327,7 @@ fn cmd_sim(args: &Args) -> i32 {
             return 2;
         }
     };
-    println!("optimizer spec: {}", spec.canonical());
+    obs::log::progress(&format!("optimizer spec: {}", spec.canonical()));
     let run_name = format!("sim-{task}-{}", spec.canonical());
     let mut builder = TrainerBuilder::new(model)
         .optimizer(spec)
@@ -287,7 +371,10 @@ fn cmd_sim(args: &Args) -> i32 {
     // run for a bitwise-identical continuation.
     let start = trainer.steps_done();
     if start > 0 {
-        println!("resumed at step {start} ({} recorded steps)", trainer.record.steps.len());
+        obs::log::note(&format!(
+            "resumed at step {start} ({} recorded steps)",
+            trainer.record.steps.len()
+        ));
     }
     // Held-out eval batch (only drawn when evals are requested).
     let eval_batch = if eval_every > 0 { Some(next_batch()) } else { None };
@@ -299,7 +386,7 @@ fn cmd_sim(args: &Args) -> i32 {
         match trainer.step(&x, &target) {
             Some(loss) => {
                 if s % 20 == 0 {
-                    println!("step {s:>5}  loss {loss:.5}");
+                    obs::log::progress(&format!("step {s:>5}  loss {loss:.5}"));
                 }
             }
             None => {
@@ -311,11 +398,11 @@ fn cmd_sim(args: &Args) -> i32 {
             if let Some((ex, et)) = &eval_batch {
                 let (l, acc) = trainer.evaluate(ex, et);
                 match acc {
-                    Some(a) => println!("  eval acc {a:.4} (loss {l:.5})"),
-                    None => println!("  eval loss {l:.5}"),
+                    Some(a) => obs::log::progress(&format!("  eval acc {a:.4} (loss {l:.5})")),
+                    None => obs::log::progress(&format!("  eval loss {l:.5}")),
                 }
                 if trainer.converged() {
-                    println!("reached target at step {s}");
+                    obs::log::note(&format!("reached target at step {s}"));
                     trainer.checkpoint_tick();
                     break;
                 }
@@ -428,17 +515,17 @@ fn cmd_sweep(args: &Args) -> i32 {
     // `--cell-workers`); surface the repurposing so old invocations are
     // not silently reinterpreted.
     if workers > 0 && args.get("cell-workers").is_none() {
-        println!(
+        obs::log::note(&format!(
             "note: --workers now selects the process fan-out ({workers} subprocesses); \
              per-cell data-parallel workers stay at {} (set --cell-workers to change)",
             opts.run.workers
-        );
+        ));
     }
     if workers > 0 && args.get("jobs").is_some() {
-        println!(
+        obs::log::note(&format!(
             "note: --jobs is ignored with --workers: each of the {workers} worker \
              processes runs its cell batch serially"
-        );
+        ));
     }
 
     // --resume: reload prior results from --out and skip completed cells
@@ -457,7 +544,10 @@ fn cmd_sweep(args: &Args) -> i32 {
         if path.is_file() {
             match SweepReport::load_csv(path) {
                 Ok(prior) => {
-                    println!("resuming: {} prior cells loaded from {out}", prior.cells.len());
+                    obs::log::note(&format!(
+                        "resuming: {} prior cells loaded from {out}",
+                        prior.cells.len()
+                    ));
                     Some(prior)
                 }
                 Err(e) => {
@@ -477,13 +567,13 @@ fn cmd_sweep(args: &Args) -> i32 {
     } else {
         format!("{} jobs", opts.jobs)
     };
-    println!(
+    obs::log::progress(&format!(
         "sweep: {} cells × {} steps on `{}`, {}",
         grid.len(),
         opts.run.steps,
         args.get_or("task", "glue"),
         fan_label
-    );
+    ));
     let report = if workers > 0 {
         // Multi-process fan-out: one subprocess per cell batch, results
         // streamed back through the scratch directory and merged in grid
@@ -712,7 +802,7 @@ fn cmd_train(args: &Args) -> i32 {
         match trainer.step(&batch) {
             Ok(loss) => {
                 if s % 5 == 0 {
-                    println!("step {s:>5}  loss {loss:.5}");
+                    obs::log::progress(&format!("step {s:>5}  loss {loss:.5}"));
                 }
             }
             Err(e) => {
@@ -722,7 +812,7 @@ fn cmd_train(args: &Args) -> i32 {
         }
         if eval_every > 0 && (s + 1) % eval_every == 0 {
             match trainer.evaluate(&eval_batch) {
-                Ok(l) => println!("  eval loss {l:.5}"),
+                Ok(l) => obs::log::progress(&format!("  eval loss {l:.5}")),
                 Err(e) => eprintln!("  eval failed: {e:#}"),
             }
         }

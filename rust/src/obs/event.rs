@@ -1,0 +1,338 @@
+//! The versioned trace event: what one JSONL line in a `--trace` file is.
+//!
+//! Every line is one compact JSON object:
+//!
+//! ```text
+//! {"fields":{"secs":0.0021,"step":40},"kind":"inverse_update","span":17,"t":1.203,"v":1}
+//! ```
+//!
+//! * `v` — [`TRACE_FORMAT_VERSION`]; readers reject a skewed version the
+//!   same way [`crate::perf::PerfReport::from_json`] rejects a skewed
+//!   `schema_version`, instead of mis-decoding.
+//! * `t` — seconds since the process trace clock's epoch (monotonic
+//!   [`std::time::Instant`], not wall time — it never goes backwards).
+//! * `span` — process-unique event id; `parent` (optional) nests an event
+//!   under an enclosing one (a `gemm` under the `step` that dispatched it).
+//! * `kind` — the closed [`EventKind`] vocabulary; unknown kinds are a
+//!   schema violation, not a silent pass-through.
+//! * `fields` — kind-specific payload (`secs`, `step`, `bytes`, shapes…)
+//!   as a sorted object, so encoded bytes are stable.
+//!
+//! Events are validated before they are written ([`TraceEvent::validate`])
+//! and re-validated as they are read back — a trace that parses is a trace
+//! whose numbers can be trusted.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Version stamp carried by every event line (`"v"`).
+pub const TRACE_FORMAT_VERSION: u64 = 1;
+
+/// The closed vocabulary of things a trace can record.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// One trainer step (duration + loss + step index).
+    Step,
+    /// A factor-inversion step: the Sherman–Morrison rank-1 updates of
+    /// L⁻¹/R⁻¹ ran this step (Equations 5/6; cadence is `1/f`).
+    InverseUpdate,
+    /// The norm-based stabilizer clipped a factor inverse.
+    StabilizerTrigger,
+    /// MKOR-H handed off from MKOR to its first-order fallback.
+    MkorhSwitch,
+    /// One parallel-engine dispatch (GEMM or rowwise op) with shape.
+    Gemm,
+    /// One ring all-reduce (bytes on the wire + duration).
+    Allreduce,
+    /// A checkpoint directory was written.
+    CkptSave,
+    /// Training state was restored from a checkpoint.
+    CkptRestore,
+    /// A sweep worker subprocess was launched.
+    WorkerSpawn,
+    /// A sweep worker exited with cells unfinished.
+    WorkerDead,
+    /// A dead worker's remaining cells were dispatched again.
+    Redispatch,
+    /// One sweep cell finished (either executor tier).
+    CellDone,
+    /// A held-out evaluation ran.
+    Eval,
+}
+
+impl EventKind {
+    /// Every kind, in rendering order for summaries.
+    pub const ALL: [EventKind; 13] = [
+        EventKind::Step,
+        EventKind::InverseUpdate,
+        EventKind::StabilizerTrigger,
+        EventKind::MkorhSwitch,
+        EventKind::Gemm,
+        EventKind::Allreduce,
+        EventKind::CkptSave,
+        EventKind::CkptRestore,
+        EventKind::WorkerSpawn,
+        EventKind::WorkerDead,
+        EventKind::Redispatch,
+        EventKind::CellDone,
+        EventKind::Eval,
+    ];
+
+    /// Wire name (the `"kind"` field).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Step => "step",
+            EventKind::InverseUpdate => "inverse_update",
+            EventKind::StabilizerTrigger => "stabilizer_trigger",
+            EventKind::MkorhSwitch => "mkorh_switch",
+            EventKind::Gemm => "gemm",
+            EventKind::Allreduce => "allreduce",
+            EventKind::CkptSave => "ckpt_save",
+            EventKind::CkptRestore => "ckpt_restore",
+            EventKind::WorkerSpawn => "worker_spawn",
+            EventKind::WorkerDead => "worker_dead",
+            EventKind::Redispatch => "redispatch",
+            EventKind::CellDone => "cell_done",
+            EventKind::Eval => "eval",
+        }
+    }
+
+    /// Inverse of [`EventKind::as_str`].
+    pub fn parse(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// What can be wrong with an event line.
+#[derive(Debug, thiserror::Error)]
+pub enum TraceError {
+    #[error("unsupported trace format version {found} (expected {expected})")]
+    Version { found: u64, expected: u64 },
+    #[error("unknown event kind `{0}`")]
+    UnknownKind(String),
+    #[error("malformed trace event: {0}")]
+    Malformed(String),
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_SPAN: AtomicU64 = AtomicU64::new(1);
+
+/// Seconds since the process trace epoch (first call wins the epoch).
+/// Monotonic: derived from [`Instant`], never from wall time.
+pub fn now_secs() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Allocate a fresh process-unique span id.
+pub fn next_span() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One trace event (see the module docs for the wire layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    /// Seconds since the trace epoch.
+    pub t_secs: f64,
+    /// Process-unique event id.
+    pub span: u64,
+    /// Enclosing span, if this event is nested under one.
+    pub parent: Option<u64>,
+    pub kind: EventKind,
+    /// Kind-specific payload, key-sorted.
+    pub fields: BTreeMap<String, Json>,
+}
+
+impl TraceEvent {
+    /// Stamp a new event of `kind` with the current trace time and a
+    /// fresh span id.
+    pub fn new(kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            t_secs: now_secs(),
+            span: next_span(),
+            parent: None,
+            kind,
+            fields: BTreeMap::new(),
+        }
+    }
+
+    /// Builder: attach a numeric field.
+    pub fn num(mut self, key: &str, v: f64) -> TraceEvent {
+        self.fields.insert(key.to_string(), Json::Num(v));
+        self
+    }
+
+    /// Builder: attach a string field.
+    pub fn label(mut self, key: &str, v: &str) -> TraceEvent {
+        self.fields.insert(key.to_string(), Json::Str(v.to_string()));
+        self
+    }
+
+    /// Builder: nest under `parent`.
+    pub fn under(mut self, parent: u64) -> TraceEvent {
+        self.parent = Some(parent);
+        self
+    }
+
+    /// `fields["secs"]`, the duration most kinds carry.
+    pub fn secs(&self) -> Option<f64> {
+        self.fields.get("secs").and_then(Json::as_f64)
+    }
+
+    /// Encode as a JSON object (sorted keys → stable bytes).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("v", Json::Num(TRACE_FORMAT_VERSION as f64))
+            .set("t", Json::Num(self.t_secs))
+            .set("span", Json::Num(self.span as f64))
+            .set("kind", Json::Str(self.kind.as_str().to_string()))
+            .set("fields", Json::Obj(self.fields.clone()));
+        if let Some(p) = self.parent {
+            j.set("parent", Json::Num(p as f64));
+        }
+        j
+    }
+
+    /// Encode as one compact JSONL line (no trailing newline).
+    pub fn to_jsonl(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode one event, rejecting version skew and unknown kinds.
+    pub fn from_json(j: &Json) -> Result<TraceEvent, TraceError> {
+        let v = j
+            .get("v")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| TraceError::Malformed("missing `v`".into()))? as u64;
+        if v != TRACE_FORMAT_VERSION {
+            return Err(TraceError::Version { found: v, expected: TRACE_FORMAT_VERSION });
+        }
+        let kind_s = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| TraceError::Malformed("missing `kind`".into()))?;
+        let kind =
+            EventKind::parse(kind_s).ok_or_else(|| TraceError::UnknownKind(kind_s.to_string()))?;
+        let t_secs = j
+            .get("t")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| TraceError::Malformed("missing `t`".into()))?;
+        let span = j
+            .get("span")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| TraceError::Malformed("missing `span`".into()))? as u64;
+        let parent = j.get("parent").and_then(Json::as_f64).map(|p| p as u64);
+        let fields = match j.get("fields") {
+            Some(Json::Obj(m)) => m.clone(),
+            Some(_) => return Err(TraceError::Malformed("`fields` is not an object".into())),
+            None => BTreeMap::new(),
+        };
+        let ev = TraceEvent { t_secs, span, parent, kind, fields };
+        ev.validate()?;
+        Ok(ev)
+    }
+
+    /// Decode one JSONL line.
+    pub fn from_jsonl(line: &str) -> Result<TraceEvent, TraceError> {
+        let j = Json::parse(line).map_err(|e| TraceError::Malformed(e.to_string()))?;
+        TraceEvent::from_json(&j)
+    }
+
+    /// Check invariants shared by writer and reader: finite non-negative
+    /// timestamp, finite non-negative duration when one is present.
+    pub fn validate(&self) -> Result<(), TraceError> {
+        if !self.t_secs.is_finite() || self.t_secs < 0.0 {
+            return Err(TraceError::Malformed(format!("bad timestamp {}", self.t_secs)));
+        }
+        if let Some(s) = self.secs() {
+            if !s.is_finite() || s < 0.0 {
+                return Err(TraceError::Malformed(format!("bad duration {s}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// One human-readable line for `mkor trace cat`.
+    pub fn render(&self) -> String {
+        let mut out = format!("[{:>10.6}] {:<18}", self.t_secs, self.kind.as_str());
+        for (k, v) in &self.fields {
+            out.push_str(&format!(" {k}={v}"));
+        }
+        if let Some(p) = self.parent {
+            out.push_str(&format!(" parent={p}"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::parse(k.as_str()), Some(k), "{k:?}");
+        }
+        assert_eq!(EventKind::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn jsonl_round_trip_is_lossless() {
+        let ev = TraceEvent {
+            t_secs: 1.25,
+            span: 17,
+            parent: Some(3),
+            kind: EventKind::Gemm,
+            fields: BTreeMap::from([
+                ("m".to_string(), Json::Num(64.0)),
+                ("op".to_string(), Json::Str("gemm".to_string())),
+                ("secs".to_string(), Json::Num(0.002)),
+            ]),
+        };
+        let line = ev.to_jsonl();
+        assert!(!line.contains('\n'), "one line per event");
+        let back = TraceEvent::from_jsonl(&line).unwrap();
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn version_skew_is_rejected() {
+        let mut j = TraceEvent::new(EventKind::Step).to_json();
+        j.set("v", Json::Num(99.0));
+        let err = TraceEvent::from_json(&j).unwrap_err();
+        assert!(
+            matches!(err, TraceError::Version { found: 99, expected: 1 }),
+            "{err}"
+        );
+        assert!(err.to_string().contains("unsupported trace format version 99"));
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let mut j = TraceEvent::new(EventKind::Step).to_json();
+        j.set("kind", Json::Str("warp_drive".to_string()));
+        let err = TraceEvent::from_json(&j).unwrap_err();
+        assert!(matches!(err, TraceError::UnknownKind(ref k) if k == "warp_drive"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_numbers() {
+        let mut ev = TraceEvent::new(EventKind::Step);
+        ev.t_secs = f64::NAN;
+        assert!(ev.validate().is_err());
+        let ev = TraceEvent::new(EventKind::Step).num("secs", -1.0);
+        assert!(ev.validate().is_err());
+        assert!(TraceEvent::new(EventKind::Step).num("secs", 0.5).validate().is_ok());
+    }
+
+    #[test]
+    fn spans_are_unique_and_time_is_monotonic() {
+        let a = TraceEvent::new(EventKind::Step);
+        let b = TraceEvent::new(EventKind::Step);
+        assert_ne!(a.span, b.span);
+        assert!(b.t_secs >= a.t_secs);
+    }
+}

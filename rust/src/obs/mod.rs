@@ -1,0 +1,47 @@
+//! Structured observability: trace events, the process-global sink, the
+//! metrics registry and the leveled log front end.
+//!
+//! The paper's whole argument is about *where the time goes* — MKOR wins
+//! by making the second-order factor update cheap enough to run every
+//! `1/f` steps (Table 1), and evaluating that claim needs per-phase
+//! wall-clock breakdowns: inverse-update vs. gradient step vs.
+//! communication. This module is that substrate:
+//!
+//! * [`event`] — the versioned [`event::TraceEvent`] JSONL schema
+//!   (monotonic timestamp, span ids, a closed kind vocabulary,
+//!   validate-before-write, version-skew rejection on read);
+//! * [`sink`] — the process-global sink behind `--trace PATH` /
+//!   `MKOR_TRACE`: bounded channel into a background flusher, one-branch
+//!   no-op when disabled;
+//! * [`registry`] — counters/gauges/histograms with deterministic dumps;
+//!   [`registry::Hist`] is the repo's single quantile implementation
+//!   (the perf harness' median-of-k and `trace summarize`'s p50/p99 both
+//!   use it);
+//! * [`summary`] — `mkor trace summarize` aggregation: per-kind
+//!   count/total/mean/p50/p99 and time-share of `step`;
+//! * [`log`] — the leveled, torn-line-free progress front end
+//!   (`MKOR_LOG=quiet|info|debug`).
+//!
+//! Instrumented layers: the trainer (`step`/`allreduce`/`eval`), MKOR
+//! and MKOR-H (`inverse_update`/`stabilizer_trigger`/`mkorh_switch`),
+//! the parallel linalg engine (`gemm` per dispatch), the ring collective,
+//! the checkpoint subsystem (`ckpt_save`/`ckpt_restore`) and both sweep
+//! executors (`cell_done`, `worker_spawn`/`worker_dead`/`redispatch`).
+//!
+//! **Invariant — telemetry never perturbs numerics.** Instrumentation
+//! only reads clocks and copies already-computed values; it takes no RNG
+//! draws and mutates no training state. Deterministic run artifacts
+//! (sweep CSV/JSON, loss series) are byte-identical with tracing on vs.
+//! off — asserted in `rust/tests/trace_obs.rs`, in the same spirit as the
+//! engine's threads-N ≡ threads-1 parity rule.
+
+pub mod event;
+pub mod log;
+pub mod registry;
+pub mod sink;
+pub mod summary;
+
+pub use event::{EventKind, TraceError, TraceEvent, TRACE_FORMAT_VERSION};
+pub use registry::{Hist, Registry};
+pub use sink::{emit, enabled, finish, install, TraceReceipt};
+pub use summary::{read_trace, TraceLog, TraceSummary};

@@ -1,0 +1,330 @@
+//! The metrics registry: counters, gauges and histograms with a
+//! deterministic dump.
+//!
+//! [`Hist`] is the repo's one quantile-bearing sample accumulator: the
+//! perf harness' median-of-k ([`crate::perf::time_median`]), the trace
+//! summarizer's per-kind p50/p99 and the live registry all use it, so
+//! every reported quantile in the repo is the same linear-interpolated
+//! definition ([`crate::util::stats::quantile_sorted`]). It retains exact
+//! samples (the populations here are small: k repeats, per-kind event
+//! counts) and derives fixed power-of-two bucket counts on demand for
+//! dump output.
+//!
+//! The process-global [`global`] registry is fed by the same
+//! instrumentation sites as the trace sink, under the same
+//! [`super::sink::enabled`] branch — with tracing off, nothing here is
+//! touched. Dumps ([`Registry::render`]/[`Registry::to_json`]) iterate
+//! sorted maps, so equal content always produces equal bytes.
+
+use crate::util::json::Json;
+use crate::util::stats::quantile_sorted;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Sample-retaining histogram with exact quantiles and fixed log2 buckets.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Hist {
+    samples: Vec<f64>,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Record one observation. Non-finite samples are rejected (they would
+    /// poison every quantile) — a caller bug, not data.
+    pub fn add(&mut self, x: f64) {
+        if x.is_finite() {
+            self.samples.push(x);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> Option<f64> {
+        if self.samples.is_empty() {
+            None
+        } else {
+            Some(self.total() / self.samples.len() as f64)
+        }
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        self.samples.iter().copied().reduce(f64::min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        self.samples.iter().copied().reduce(f64::max)
+    }
+
+    /// Linear-interpolated quantile, `q` in `[0, 1]`; `None` when empty.
+    /// One sample returns that sample at every `q`.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        if self.samples.is_empty() {
+            return None;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(quantile_sorted(&s, q))
+    }
+
+    /// Fixed log2 bucket counts: bucket `i` holds samples in
+    /// `[2^(i+lo_exp-1), 2^(i+lo_exp))` with the first/last buckets
+    /// catching under/overflow. Bucket edges depend only on the constants
+    /// below — never on the data — so dumps are comparable across runs.
+    pub fn log2_buckets(&self) -> [u64; Self::BUCKETS] {
+        let mut counts = [0u64; Self::BUCKETS];
+        for &x in &self.samples {
+            counts[Self::bucket_of(x)] += 1;
+        }
+        counts
+    }
+
+    /// Number of fixed buckets in [`Hist::log2_buckets`].
+    pub const BUCKETS: usize = 32;
+    /// Exponent of the first bucket's upper edge: bucket 0 is `< 2^-24 s`
+    /// (~60 ns), bucket 31 is `≥ 2^6 s` (64 s+).
+    const LO_EXP: i32 = -24;
+
+    fn bucket_of(x: f64) -> usize {
+        if x <= 0.0 {
+            return 0;
+        }
+        let e = x.log2().floor() as i64 - (Self::LO_EXP as i64 - 1);
+        e.clamp(0, Self::BUCKETS as i64 - 1) as usize
+    }
+
+    /// Fold another histogram's samples in.
+    pub fn merge(&mut self, other: &Hist) {
+        self.samples.extend_from_slice(&other.samples);
+    }
+}
+
+/// Counters, gauges and histograms keyed by name (sorted, so dumps are
+/// deterministic for equal content).
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, Hist>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Add `by` to the named counter (creating it at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set the named gauge to its latest value.
+    pub fn gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    /// Record one sample into the named histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.hists.entry(name.to_string()).or_default().add(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&Hist> {
+        self.hists.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    /// Deterministic text dump: one `name value` line per metric, sorted
+    /// within each section.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.counters {
+            out.push_str(&format!("counter {k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            out.push_str(&format!("gauge {k} {v}\n"));
+        }
+        for (k, h) in &self.hists {
+            let (mean, p50, p99) = match (h.mean(), h.quantile(0.5), h.quantile(0.99)) {
+                (Some(m), Some(a), Some(b)) => (m, a, b),
+                _ => continue, // empty hist: nothing to report
+            };
+            out.push_str(&format!(
+                "hist {k} count={} total={:.9} mean={:.9} p50={:.9} p99={:.9}\n",
+                h.count(),
+                h.total(),
+                mean,
+                p50,
+                p99
+            ));
+        }
+        out
+    }
+
+    /// Deterministic JSON dump (same content as [`Registry::render`]).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, Json::Num(*v));
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            let mut o = Json::obj();
+            o.set("count", Json::Num(h.count() as f64))
+                .set("total", Json::Num(h.total()));
+            if let (Some(m), Some(p50), Some(p99)) =
+                (h.mean(), h.quantile(0.5), h.quantile(0.99))
+            {
+                o.set("mean", Json::Num(m))
+                    .set("p50", Json::Num(p50))
+                    .set("p99", Json::Num(p99));
+            }
+            hists.set(k, o);
+        }
+        let mut j = Json::obj();
+        j.set("counters", counters).set("gauges", gauges).set("hists", hists);
+        j
+    }
+}
+
+static GLOBAL: Mutex<Option<Registry>> = Mutex::new(None);
+
+/// Run `f` against the process-global registry (created on first use).
+/// Callers gate on [`super::sink::enabled`] first, so with tracing off
+/// the global registry is never even allocated.
+pub fn with_global<T>(f: impl FnOnce(&mut Registry) -> T) -> T {
+    let mut guard = GLOBAL.lock().unwrap();
+    f(guard.get_or_insert_with(Registry::new))
+}
+
+/// Snapshot the global registry (empty if it was never touched).
+pub fn global_snapshot() -> Registry {
+    GLOBAL.lock().unwrap().clone().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_empty_is_none() {
+        let h = Hist::new();
+        assert_eq!(h.quantile(0.5), None);
+        assert_eq!(h.mean(), None);
+        assert_eq!(h.min(), None);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.total(), 0.0);
+    }
+
+    #[test]
+    fn quantile_one_sample_is_that_sample() {
+        let mut h = Hist::new();
+        h.add(3.25);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Some(3.25), "q={q}");
+        }
+        assert_eq!(h.mean(), Some(3.25));
+    }
+
+    #[test]
+    fn quantile_all_equal_is_the_value() {
+        let mut h = Hist::new();
+        for _ in 0..7 {
+            h.add(2.0);
+        }
+        assert_eq!(h.quantile(0.5), Some(2.0));
+        assert_eq!(h.quantile(0.99), Some(2.0));
+        assert_eq!(h.min(), Some(2.0));
+        assert_eq!(h.max(), Some(2.0));
+    }
+
+    #[test]
+    fn quantile_interpolates_and_ignores_insertion_order() {
+        let mut h = Hist::new();
+        for x in [10.0, 0.0] {
+            h.add(x);
+        }
+        assert_eq!(h.quantile(0.25), Some(2.5));
+        assert_eq!(h.quantile(0.5), Some(5.0));
+    }
+
+    #[test]
+    fn nonfinite_samples_are_rejected() {
+        let mut h = Hist::new();
+        h.add(f64::NAN);
+        h.add(f64::INFINITY);
+        h.add(1.0);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), Some(1.0));
+    }
+
+    #[test]
+    fn log2_buckets_are_fixed_and_cover_extremes() {
+        let mut h = Hist::new();
+        h.add(0.0); // bucket 0
+        h.add(1e-9); // far underflow → bucket 0
+        h.add(1.5); // 2^0..2^1
+        h.add(1e9); // far overflow → last bucket
+        let b = h.log2_buckets();
+        assert_eq!(b.iter().sum::<u64>(), 4);
+        assert_eq!(b[0], 2);
+        assert_eq!(b[Hist::BUCKETS - 1], 1);
+        assert_eq!(b[Hist::bucket_of(1.5)], 1);
+    }
+
+    #[test]
+    fn registry_dump_is_deterministic() {
+        let mut a = Registry::new();
+        let mut b = Registry::new();
+        // Same content, different insertion order.
+        a.inc("steps", 3);
+        a.gauge("pool_occupancy", 0.5);
+        a.observe("step_secs", 1.0);
+        a.observe("step_secs", 3.0);
+        b.observe("step_secs", 1.0);
+        b.observe("step_secs", 3.0);
+        b.gauge("pool_occupancy", 0.5);
+        b.inc("steps", 1);
+        b.inc("steps", 2);
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(a.render().contains("counter steps 3"));
+        assert!(a.render().contains("hist step_secs count=2"));
+        assert_eq!(a.counter("steps"), 3);
+        assert_eq!(a.hist("step_secs").unwrap().quantile(0.5), Some(2.0));
+    }
+
+    #[test]
+    fn empty_hist_is_skipped_in_render_but_counted_in_json() {
+        let mut r = Registry::new();
+        r.observe("x", f64::NAN); // rejected → hist exists but empty
+        assert!(!r.render().contains("hist x"));
+        let j = r.to_json();
+        assert_eq!(
+            j.get("hists").unwrap().get("x").unwrap().get("count").unwrap().as_usize(),
+            Some(0)
+        );
+    }
+}

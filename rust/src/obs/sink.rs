@@ -1,0 +1,193 @@
+//! The process-global trace sink: where instrumented code sends events.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Disabled must be almost free.** Every instrumented path guards on
+//!    [`enabled`] — one relaxed atomic load — before it builds an event or
+//!    reads a clock. With no sink installed the hot paths pay one branch.
+//! 2. **Telemetry must never perturb numerics.** The sink only observes:
+//!    it takes no RNG draws, changes no shared training state, and the
+//!    artifact-bytes invariant (trace-on ≡ trace-off) is asserted by
+//!    `rust/tests/trace_obs.rs`.
+//! 3. **Writers must not stall trainers.** Events are encoded on the
+//!    emitting thread, then handed to a background flusher through a
+//!    bounded channel ([`CHANNEL_BOUND`] lines) that batches them into a
+//!    `BufWriter`. Backpressure (a full channel) blocks the emitter
+//!    briefly rather than dropping events — a trace with holes is worse
+//!    than a slightly slower traced run.
+//!
+//! Lifecycle: [`install`] (from `--trace PATH` or `MKOR_TRACE`) →
+//! instrumented code calls [`emit`] → [`finish`] joins the flusher and
+//! reports the line count. `install` after `install` is an error;
+//! `finish` with no sink is a no-op (so CLI teardown is unconditional).
+
+use super::event::TraceEvent;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+/// Bounded channel depth between emitters and the flush thread.
+const CHANNEL_BOUND: usize = 8192;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<ActiveSink>> = Mutex::new(None);
+
+struct ActiveSink {
+    tx: SyncSender<String>,
+    flusher: JoinHandle<std::io::Result<u64>>,
+    path: PathBuf,
+}
+
+/// What [`finish`] reports about a completed trace.
+#[derive(Clone, Debug)]
+pub struct TraceReceipt {
+    pub path: PathBuf,
+    /// Event lines written to the file.
+    pub events: u64,
+}
+
+/// The one branch every instrumented path takes. True iff a sink is
+/// installed and accepting events.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install a JSONL file sink at `path` (parent directories are created).
+/// Errors if a sink is already active or the file can't be created.
+pub fn install(path: &Path) -> anyhow::Result<()> {
+    let mut guard = SINK.lock().unwrap();
+    if let Some(active) = guard.as_ref() {
+        anyhow::bail!(
+            "a trace sink is already active (writing {}); finish it first",
+            active.path.display()
+        );
+    }
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| anyhow::anyhow!("creating {}: {e}", dir.display()))?;
+        }
+    }
+    let file = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+    let (tx, rx) = sync_channel::<String>(CHANNEL_BOUND);
+    let flusher = std::thread::Builder::new()
+        .name("mkor-trace-flush".to_string())
+        .spawn(move || flush_loop(rx, file))
+        .map_err(|e| anyhow::anyhow!("spawning trace flusher: {e}"))?;
+    *guard = Some(ActiveSink { tx, flusher, path: path.to_path_buf() });
+    ENABLED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+fn flush_loop(rx: Receiver<String>, file: std::fs::File) -> std::io::Result<u64> {
+    let mut w = BufWriter::new(file);
+    let mut lines = 0u64;
+    // Ends when every sender is dropped (finish() takes the sink).
+    for line in rx {
+        w.write_all(line.as_bytes())?;
+        w.write_all(b"\n")?;
+        lines += 1;
+    }
+    w.flush()?;
+    Ok(lines)
+}
+
+/// Send one event to the active sink. No-op (one branch) when disabled.
+/// Invalid events are a caller bug and are dropped rather than written —
+/// the trace file only ever holds lines that re-validate on read.
+pub fn emit(ev: TraceEvent) {
+    if !enabled() {
+        return;
+    }
+    if ev.validate().is_err() {
+        debug_assert!(false, "invalid trace event: {ev:?}");
+        return;
+    }
+    let line = ev.to_jsonl();
+    // Clone the sender out of the lock so slow disk I/O (a full channel)
+    // never blocks other emitters on the mutex.
+    let tx = match SINK.lock().unwrap().as_ref() {
+        Some(active) => active.tx.clone(),
+        None => return, // racing a finish(); the trace is closing anyway
+    };
+    let _ = tx.send(line);
+}
+
+/// Tear the sink down: stop accepting events, drain the channel, flush
+/// the file. Returns what was written, or `None` if no sink was active.
+pub fn finish() -> Option<anyhow::Result<TraceReceipt>> {
+    let active = SINK.lock().unwrap().take()?;
+    ENABLED.store(false, Ordering::Relaxed);
+    let ActiveSink { tx, flusher, path } = active;
+    drop(tx); // hang up: the flusher drains and exits
+    let res = match flusher.join() {
+        Ok(Ok(events)) => Ok(TraceReceipt { path, events }),
+        Ok(Err(e)) => Err(anyhow::anyhow!("writing {}: {e}", path.display())),
+        Err(_) => Err(anyhow::anyhow!("trace flusher panicked")),
+    };
+    Some(res)
+}
+
+/// Install a sink from `MKOR_TRACE` (a JSONL path) if one is named and
+/// none is active. CLI `--trace` flags take precedence by installing
+/// first. Failures warn rather than abort: tracing is never load-bearing.
+pub fn init_from_env() {
+    let Ok(path) = std::env::var("MKOR_TRACE") else {
+        return;
+    };
+    if path.is_empty() || enabled() {
+        return;
+    }
+    if let Err(e) = install(Path::new(&path)) {
+        crate::log_warn!("MKOR_TRACE: {e:#}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::EventKind;
+
+    // One test owns the whole install→emit→finish lifecycle: the sink is
+    // process-global, so splitting this across #[test] fns would race.
+    #[test]
+    fn lifecycle_writes_valid_jsonl_and_double_install_fails() {
+        let dir = std::env::temp_dir().join(format!("mkor-obs-sink-{}", std::process::id()));
+        let path = dir.join("t.jsonl");
+        assert!(!enabled());
+        emit(TraceEvent::new(EventKind::Step)); // disabled: dropped, no panic
+        assert!(finish().is_none());
+
+        install(&path).unwrap();
+        assert!(enabled());
+        assert!(install(&path).is_err(), "second install must fail");
+        emit(TraceEvent::new(EventKind::Step).num("secs", 0.5).num("step", 0.0));
+        emit(TraceEvent::new(EventKind::Allreduce).num("secs", 0.1).num("bytes", 4096.0));
+        // Invalid events are dropped, not written (release builds; under
+        // debug_assertions this would fire the assert instead).
+        if !cfg!(debug_assertions) {
+            let mut bad = TraceEvent::new(EventKind::Step);
+            bad.t_secs = f64::NAN;
+            emit(bad);
+        }
+        let receipt = finish().unwrap().unwrap();
+        assert!(!enabled());
+        assert_eq!(receipt.events, 2);
+        assert_eq!(receipt.path, path);
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let ev = TraceEvent::from_jsonl(lines[0]).unwrap();
+        assert_eq!(ev.kind, EventKind::Step);
+        assert_eq!(ev.secs(), Some(0.5));
+        let ev = TraceEvent::from_jsonl(lines[1]).unwrap();
+        assert_eq!(ev.kind, EventKind::Allreduce);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Trace aggregation: what `mkor trace summarize` prints.
+//!
+//! Reads a `--trace` JSONL file back through the validating
+//! [`TraceEvent::from_jsonl`] decoder and folds it into one [`Hist`] per
+//! event kind, rendered as the Anil-style per-phase breakdown table —
+//! count / total / mean / p50 / p99 per kind, plus each kind's share of
+//! total `step` time (where the inverse-update and all-reduce phases of
+//! a run actually spend their wall-clock).
+//!
+//! Reader tolerance matches the sweep coordinator's JSONL tailing
+//! ([`crate::sweep::dispatch`]): a torn *final* line (no trailing
+//! newline — the writer died mid-line) is skipped and counted, but a
+//! malformed or version-skewed complete line is an error — those mean
+//! the file is not a trace this binary understands.
+
+use super::event::{EventKind, TraceEvent};
+use super::registry::Hist;
+use crate::bench_utils::{fmt_secs, Table};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A decoded trace file.
+#[derive(Clone, Debug, Default)]
+pub struct TraceLog {
+    pub events: Vec<TraceEvent>,
+    /// True if the file ended in a torn (newline-less, unparseable) line.
+    pub torn_tail: bool,
+}
+
+/// Read and validate a JSONL trace file.
+pub fn read_trace(path: &Path) -> anyhow::Result<TraceLog> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let mut log = TraceLog::default();
+    let complete = text.ends_with('\n');
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match TraceEvent::from_jsonl(line) {
+            Ok(ev) => log.events.push(ev),
+            Err(e) => {
+                if i + 1 == lines.len() && !complete {
+                    log.torn_tail = true; // writer died mid-line; drop it
+                } else {
+                    anyhow::bail!("{} line {}: {e}", path.display(), i + 1);
+                }
+            }
+        }
+    }
+    Ok(log)
+}
+
+/// Per-kind aggregates over one trace.
+#[derive(Clone, Debug, Default)]
+pub struct TraceSummary {
+    /// Occurrences per kind (every event counts, timed or not).
+    pub counts: BTreeMap<EventKind, usize>,
+    /// Duration samples per kind (only events carrying `secs`).
+    pub secs: BTreeMap<EventKind, Hist>,
+}
+
+impl TraceSummary {
+    pub fn from_events(events: &[TraceEvent]) -> TraceSummary {
+        let mut s = TraceSummary::default();
+        for ev in events {
+            *s.counts.entry(ev.kind).or_insert(0) += 1;
+            if let Some(d) = ev.secs() {
+                s.secs.entry(ev.kind).or_default().add(d);
+            }
+        }
+        s
+    }
+
+    /// Total recorded `step` time — the denominator of the share column.
+    pub fn step_total_secs(&self) -> f64 {
+        self.secs.get(&EventKind::Step).map_or(0.0, Hist::total)
+    }
+
+    /// The per-kind breakdown table. Kinds appear in [`EventKind::ALL`]
+    /// order; kinds absent from the trace are omitted; kinds without
+    /// durations (lifecycle markers) render `-` in the timing columns.
+    pub fn render(&self) -> String {
+        let step_total = self.step_total_secs();
+        let mut t = Table::new(&["kind", "count", "total", "mean", "p50", "p99", "% of step"]);
+        for kind in EventKind::ALL {
+            let Some(&count) = self.counts.get(&kind) else {
+                continue;
+            };
+            let row = match self.secs.get(&kind) {
+                Some(h) if h.count() > 0 => {
+                    let share = if step_total > 0.0 {
+                        format!("{:.1}%", h.total() / step_total * 100.0)
+                    } else {
+                        "-".to_string()
+                    };
+                    [
+                        kind.as_str().to_string(),
+                        count.to_string(),
+                        fmt_secs(h.total()),
+                        fmt_secs(h.mean().unwrap()),
+                        fmt_secs(h.quantile(0.5).unwrap()),
+                        fmt_secs(h.quantile(0.99).unwrap()),
+                        share,
+                    ]
+                }
+                _ => [
+                    kind.as_str().to_string(),
+                    count.to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                    "-".to_string(),
+                ],
+            };
+            t.row(&row);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, secs: Option<f64>) -> TraceEvent {
+        let mut e = TraceEvent::new(kind);
+        if let Some(s) = secs {
+            e = e.num("secs", s);
+        }
+        e
+    }
+
+    #[test]
+    fn summarize_golden_output() {
+        let events = vec![
+            ev(EventKind::Step, Some(0.1)),
+            ev(EventKind::Allreduce, Some(0.02)),
+            ev(EventKind::Step, Some(0.1)),
+            ev(EventKind::InverseUpdate, Some(0.05)),
+            ev(EventKind::Allreduce, Some(0.02)),
+            ev(EventKind::WorkerSpawn, None),
+        ];
+        let s = TraceSummary::from_events(&events);
+        let expected = "\
++----------------+-------+-----------+-----------+-----------+-----------+-----------+
+| kind           | count | total     | mean      | p50       | p99       | % of step |
++----------------+-------+-----------+-----------+-----------+-----------+-----------+
+| step           | 2     | 200.00 ms | 100.00 ms | 100.00 ms | 100.00 ms | 100.0%    |
+| inverse_update | 1     | 50.00 ms  | 50.00 ms  | 50.00 ms  | 50.00 ms  | 25.0%     |
+| allreduce      | 2     | 40.00 ms  | 20.00 ms  | 20.00 ms  | 20.00 ms  | 20.0%     |
+| worker_spawn   | 1     | -         | -         | -         | -         | -         |
++----------------+-------+-----------+-----------+-----------+-----------+-----------+
+";
+        assert_eq!(s.render(), expected);
+    }
+
+    #[test]
+    fn share_column_dashes_without_step_events() {
+        let s = TraceSummary::from_events(&[ev(EventKind::Gemm, Some(0.01))]);
+        assert_eq!(s.step_total_secs(), 0.0);
+        let r = s.render();
+        assert!(r.contains("| gemm"), "{r}");
+        assert!(r.contains("| -"), "{r}");
+    }
+
+    #[test]
+    fn read_trace_round_trips_and_tolerates_torn_tail() {
+        let dir = std::env::temp_dir().join(format!("mkor-obs-summary-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let a = ev(EventKind::Step, Some(0.5));
+        let b = ev(EventKind::CellDone, None).num("index", 3.0);
+        let mut text = format!("{}\n{}\n", a.to_jsonl(), b.to_jsonl());
+        text.push_str("{\"v\":1,\"t\":0.1,\"spa"); // torn tail: writer died
+        std::fs::write(&path, &text).unwrap();
+        let log = read_trace(&path).unwrap();
+        assert!(log.torn_tail);
+        assert_eq!(log.events.len(), 2);
+        assert_eq!(log.events[0], a);
+        assert_eq!(log.events[1], b);
+
+        // A malformed COMPLETE line is an error, not a skip.
+        std::fs::write(&path, "not json\n").unwrap();
+        assert!(read_trace(&path).is_err());
+
+        // Version skew anywhere is an error.
+        let mut skew = a.to_json();
+        skew.set("v", crate::util::json::Json::Num(2.0));
+        std::fs::write(&path, format!("{skew}\n")).unwrap();
+        let err = read_trace(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported trace format version 2"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

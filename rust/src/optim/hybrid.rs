@@ -10,6 +10,7 @@
 
 use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::model::{Capture, Dense, LayerShape};
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::optim::first_order::SgdMomentum;
 use crate::optim::mkor::{Mkor, MkorConfig};
 use crate::optim::{Optimizer, OptimizerSpec};
@@ -74,6 +75,17 @@ impl MkorH {
                     && rate < self.switch_cfg.switch_ratio * self.peak_rate
                 {
                     self.switched_at = Some(self.t);
+                    if obs::enabled() {
+                        obs::emit(
+                            TraceEvent::new(EventKind::MkorhSwitch)
+                                .num("step", self.t as f64)
+                                .num("rate", rate)
+                                .num("peak_rate", self.peak_rate),
+                        );
+                        obs::registry::with_global(|r| {
+                            r.gauge("mkorh.switched_at", self.t as f64)
+                        });
+                    }
                 }
             }
         }

@@ -27,6 +27,7 @@ use crate::checkpoint::{Checkpointable, StateDict, StateError};
 use crate::linalg::half::{self, HalfKind};
 use crate::linalg::{ops, Matrix};
 use crate::model::{Capture, Dense, LayerShape};
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::optim::first_order::{Adam, AdamConfig, Lamb, SgdMomentum};
 use crate::optim::rescale::rescale_to_gradient_norm;
 use crate::optim::stabilizer::{stabilize, StabilizerConfig};
@@ -262,6 +263,31 @@ impl Optimizer for Mkor {
                 Mkor::sm_update(&mut st.l_inv, &g, self.cfg.gamma, &mut st.scratch_out);
                 Mkor::sm_update(&mut st.r_inv, &a, self.cfg.gamma, &mut st.scratch_in);
                 timer.add("factor", t0.elapsed());
+                if obs::enabled() {
+                    if r1.triggered || r2.triggered {
+                        obs::emit(
+                            TraceEvent::new(EventKind::StabilizerTrigger)
+                                .num("step", self.t as f64)
+                                .num("layer", idx as f64)
+                                .num("left", u8::from(r1.triggered) as f64)
+                                .num("right", u8::from(r2.triggered) as f64),
+                        );
+                    }
+                    obs::emit(
+                        TraceEvent::new(EventKind::InverseUpdate)
+                            .num("step", self.t as f64)
+                            .num("layer", idx as f64)
+                            .num("secs", t0.elapsed().as_secs_f64()),
+                    );
+                    obs::registry::with_global(|r| {
+                        r.inc("mkor.inverse_updates", 1);
+                        let trig = u64::from(r1.triggered) + u64::from(r2.triggered);
+                        if trig > 0 {
+                            r.inc("mkor.stabilizer_triggers", trig);
+                        }
+                        r.observe("mkor.factor_secs", t0.elapsed().as_secs_f64());
+                    });
+                }
             }
             // ---- precondition + rescale (lines 9–10) -------------------
             let st = &mut self.layers[idx];

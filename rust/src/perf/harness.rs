@@ -5,8 +5,12 @@
 //! engine pool, settle the branch predictors), then `repeats` timed passes,
 //! and the **median** is the headline figure — robust to the occasional
 //! descheduling blip that poisons means and minima on shared hosts. Min and
-//! max ride along so a report reader can judge spread.
+//! max ride along so a report reader can judge spread. The per-pass samples
+//! fold through [`Hist`] — the same quantile implementation `mkor trace
+//! summarize` uses — so the two subsystems can never disagree on what a
+//! median is.
 
+use crate::obs::Hist;
 use std::time::Instant;
 
 /// Warmup/repeat policy for one measurement.
@@ -46,17 +50,16 @@ pub fn time_median(cfg: TimerConfig, mut f: impl FnMut()) -> Timing {
         f();
     }
     let repeats = cfg.repeats.max(1);
-    let mut samples = Vec::with_capacity(repeats);
+    let mut samples = Hist::new();
     for _ in 0..repeats {
         let t0 = Instant::now();
         f();
-        samples.push(t0.elapsed().as_secs_f64());
+        samples.add(t0.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     Timing {
-        median_secs: crate::util::stats::quantile_sorted(&samples, 0.5),
-        min_secs: samples[0],
-        max_secs: samples[repeats - 1],
+        median_secs: samples.quantile(0.5).unwrap_or(0.0),
+        min_secs: samples.min().unwrap_or(0.0),
+        max_secs: samples.max().unwrap_or(0.0),
         repeats,
     }
 }

@@ -42,6 +42,10 @@ pub struct PerfReport {
     pub gemm: Vec<GemmPoint>,
     pub optimizers: Vec<OptPoint>,
     pub allreduce: Vec<RingPoint>,
+    /// Path of the JSONL trace written alongside this run (`--trace`),
+    /// when one was. Absent from the JSON when `None`, so untraced
+    /// reports keep their exact historical byte layout.
+    pub trace: Option<String>,
 }
 
 impl PerfReport {
@@ -98,6 +102,9 @@ impl PerfReport {
             .set("gemm", Json::Arr(gemm))
             .set("optimizers", Json::Arr(opts))
             .set("allreduce", Json::Arr(ring));
+        if let Some(trace) = &self.trace {
+            root.set("trace", Json::Str(trace.clone()));
+        }
         root
     }
 
@@ -156,6 +163,7 @@ impl PerfReport {
             gemm,
             optimizers,
             allreduce,
+            trace: j.get("trace").and_then(Json::as_str).map(str::to_string),
         })
     }
 
@@ -266,6 +274,7 @@ mod tests {
                 fp32_gbps: 5.75,
                 bf16_gbps: 3.125,
             }],
+            trace: None,
         }
     }
 
@@ -285,6 +294,17 @@ mod tests {
         assert_eq!(back.optimizers[0].steps_per_sec, 750.5);
         assert_eq!(back.allreduce[0].elems, 65536);
         assert_eq!(back.allreduce[0].bf16_gbps, 3.125);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_field_round_trips_and_is_omitted_when_none() {
+        let r = sample();
+        assert!(r.to_json().get("trace").is_none(), "None must not change the layout");
+        let mut r = sample();
+        r.trace = Some("perf.trace.jsonl".into());
+        let back = PerfReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.trace.as_deref(), Some("perf.trace.jsonl"));
         back.validate().unwrap();
     }
 

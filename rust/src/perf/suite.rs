@@ -215,6 +215,7 @@ pub fn run_suite(quick: bool, threads: usize) -> PerfReport {
         gemm: run_gemm(cfg, threads, quick),
         optimizers: run_optimizers(cfg, quick),
         allreduce: run_ring_shaped(cfg, ring_shapes(quick)),
+        trace: None,
     }
 }
 

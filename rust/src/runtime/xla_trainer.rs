@@ -366,6 +366,8 @@ impl XlaTrainer {
             wall_secs: t0.elapsed().as_secs_f64(),
             grad_comm_bytes: grad_bytes,
             sync_comm_bytes: sync_bytes,
+            inverse_updated: factor_step && !self.switched,
+            second_order_secs: 0.0,
         });
         self.t += 1;
         Ok(loss)

@@ -52,6 +52,7 @@
 
 use crate::coordinator::metrics::sweep_progress_line;
 use crate::experiments::convergence::{run_record, RunOpts};
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::optim::OptimizerSpec;
 use crate::sweep::executor::{panic_message, SweepOptions};
 use crate::sweep::grid::{task_by_name, task_label, SweepCell, SweepGrid};
@@ -449,17 +450,24 @@ fn absorb(
         *completed += 1;
         progressed = true;
         if verbose {
-            println!(
-                "{}",
-                sweep_progress_line(
-                    *completed,
-                    n,
-                    &result.spec,
-                    result.seed,
-                    result.lr,
-                    &result.outcome_line()
-                )
+            obs::log::progress(&sweep_progress_line(
+                *completed,
+                n,
+                &result.spec,
+                result.seed,
+                result.lr,
+                &result.outcome_line(),
+            ));
+        }
+        if obs::enabled() {
+            obs::emit(
+                TraceEvent::new(EventKind::CellDone)
+                    .label("spec", &result.spec)
+                    .label("status", result.status.label())
+                    .num("cell", result.index as f64)
+                    .num("seed", result.seed as f64),
             );
+            obs::registry::with_global(|r| r.inc("sweep.cells_done", 1));
         }
         done.insert(result.index, result);
     }
@@ -536,10 +544,9 @@ pub fn run_sweep_mp(
             completed += 1;
             if opts.verbose {
                 let outcome = format!("skipped ({} in prior report)", prev.status.label());
-                println!(
-                    "{}",
-                    sweep_progress_line(completed, n, &spec, cell.seed, run.lr, &outcome)
-                );
+                obs::log::progress(&sweep_progress_line(
+                    completed, n, &spec, cell.seed, run.lr, &outcome,
+                ));
             }
             done.insert(cell.index, prev);
         }
@@ -584,6 +591,15 @@ pub fn run_sweep_mp(
                     .stdout(Stdio::null())
                     .spawn()
                     .map_err(|e| anyhow::anyhow!("spawning {}: {e}", exe.display()))?;
+                if obs::enabled() {
+                    obs::emit(
+                        TraceEvent::new(EventKind::WorkerSpawn)
+                            .num("worker", id as f64)
+                            .num("cells", indices.len() as f64)
+                            .num("attempt", attempt as f64),
+                    );
+                    obs::registry::with_global(|r| r.inc("sweep.workers_spawned", 1));
+                }
                 running.push(Running {
                     child,
                     indices,
@@ -618,14 +634,29 @@ pub fn run_sweep_mp(
                         if missing.is_empty() {
                             continue;
                         }
+                        if obs::enabled() {
+                            obs::emit(
+                                TraceEvent::new(EventKind::WorkerDead)
+                                    .num("unfinished", missing.len() as f64)
+                                    .num("attempt", r.attempt as f64),
+                            );
+                            obs::registry::with_global(|r| r.inc("sweep.workers_dead", 1));
+                        }
                         if r.attempt < mp.max_attempts {
                             if opts.verbose {
-                                println!(
+                                obs::log::progress(&format!(
                                     "worker exited ({status}) with {} cells unfinished; \
                                      re-dispatching (attempt {}/{})",
                                     missing.len(),
                                     r.attempt + 1,
                                     mp.max_attempts
+                                ));
+                            }
+                            if obs::enabled() {
+                                obs::emit(
+                                    TraceEvent::new(EventKind::Redispatch)
+                                        .num("cells", missing.len() as f64)
+                                        .num("attempt", (r.attempt + 1) as f64),
                                 );
                             }
                             queue.push_back((missing, r.attempt + 1));

@@ -11,6 +11,7 @@
 
 use crate::coordinator::metrics::sweep_progress_line;
 use crate::experiments::convergence::{run_record, RunOpts};
+use crate::obs::{self, EventKind, TraceEvent};
 use crate::sweep::grid::{SweepCell, SweepGrid};
 use crate::sweep::report::{CellResult, SweepReport};
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -155,22 +156,49 @@ pub fn run_sweep_resumed(
             if opts.verbose {
                 let outcome =
                     format!("skipped ({} in prior report)", reused.status.label());
-                println!(
-                    "{}",
-                    sweep_progress_line(k, n, &spec, cell.seed, run.lr, &outcome)
+                obs::log::progress(&sweep_progress_line(
+                    k, n, &spec, cell.seed, run.lr, &outcome,
+                ));
+            }
+            if obs::enabled() {
+                obs::emit(
+                    TraceEvent::new(EventKind::CellDone)
+                        .label("spec", &spec)
+                        .num("cell", cell.index as f64)
+                        .num("seed", cell.seed as f64)
+                        .num("skipped", 1.0),
                 );
             }
             return reused;
         }
         let name = format!("{spec}#s{}", cell.seed);
+        let t_cell = std::time::Instant::now();
         let record = run_record(&cell.task, &cell.spec, &name, &run);
         let result = CellResult::from_record(cell, run.lr, record);
         let k = done.fetch_add(1, Ordering::SeqCst) + 1;
         if opts.verbose {
-            println!(
-                "{}",
-                sweep_progress_line(k, n, &spec, cell.seed, run.lr, &result.outcome_line())
+            obs::log::progress(&sweep_progress_line(
+                k,
+                n,
+                &spec,
+                cell.seed,
+                run.lr,
+                &result.outcome_line(),
+            ));
+        }
+        if obs::enabled() {
+            obs::emit(
+                TraceEvent::new(EventKind::CellDone)
+                    .label("spec", &spec)
+                    .label("status", result.status.label())
+                    .num("cell", cell.index as f64)
+                    .num("seed", cell.seed as f64)
+                    .num("secs", t_cell.elapsed().as_secs_f64()),
             );
+            obs::registry::with_global(|r| {
+                r.inc("sweep.cells_done", 1);
+                r.observe("sweep.cell_secs", t_cell.elapsed().as_secs_f64());
+            });
         }
         result
     });

@@ -597,6 +597,8 @@ mod tests {
                     wall_secs: 0.25,
                     grad_comm_bytes: 0,
                     sync_comm_bytes: 0,
+                    inverse_updated: false,
+                    second_order_secs: 0.0,
                 })
                 .collect(),
             diverged: false,

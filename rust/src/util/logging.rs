@@ -18,12 +18,14 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
 
-/// Initialize from `MKOR_LOG` (error|warn|info|debug). Safe to call twice.
+/// Initialize from `MKOR_LOG` (quiet|error|warn|info|debug). Safe to call
+/// twice. `quiet` keeps warnings/errors but silences Info-level progress
+/// output (the CLI's `--quiet`-equivalent, as an env knob).
 pub fn init_from_env() {
     if let Ok(v) = std::env::var("MKOR_LOG") {
         let lvl = match v.to_ascii_lowercase().as_str() {
             "error" => Level::Error,
-            "warn" => Level::Warn,
+            "warn" | "quiet" => Level::Warn,
             "debug" => Level::Debug,
             _ => Level::Info,
         };

@@ -1,0 +1,98 @@
+//! The observability layer's load-bearing invariant, asserted end to end:
+//! **telemetry never perturbs numerics**. A traced sweep must produce
+//! deterministic artifacts (CSV and JSON) byte-identical to the untraced
+//! run's, while the trace file itself decodes into valid events covering
+//! the instrumented phases (step / inverse_update / allreduce / cell_done).
+//!
+//! One `#[test]` fn owns the whole flow: the sink is process-global, so
+//! splitting install → run → finish across tests in this binary would race.
+
+use mkor::experiments::convergence::{RunOpts, TaskKind};
+use mkor::obs::{self, EventKind, TraceSummary};
+use mkor::sweep::{run_sweep, SweepGrid, SweepOptions};
+
+fn tiny_opts(jobs: usize) -> SweepOptions {
+    SweepOptions {
+        jobs,
+        run: RunOpts {
+            steps: 6,
+            // Two data-parallel workers per cell so the ring collective
+            // actually runs (w=1 short-circuits without touching the wire
+            // and emits no allreduce events).
+            workers: 2,
+            batch: 16,
+            eval_every: 3,
+            hidden: vec![16],
+            ..Default::default()
+        },
+        verbose: false,
+    }
+}
+
+#[test]
+fn traced_sweep_artifacts_are_byte_identical_and_the_trace_decodes() {
+    let task = TaskKind::Images;
+    // A 3×3 mkor grid: f=2 guarantees inverse updates inside the 6-step
+    // budget, and crossing gamma exercises distinct cells.
+    let grid =
+        SweepGrid::parse("mkor:f={2,3,5},gamma={0.9,0.95,0.99}", &task, 0).unwrap();
+    assert_eq!(grid.len(), 9);
+    let opts = tiny_opts(2);
+
+    // Baseline: tracing disabled (no sink installed).
+    assert!(!obs::enabled());
+    let untraced = run_sweep(&grid, &opts);
+    let (base_csv, base_json) =
+        (untraced.to_csv_deterministic(), format!("{:#}", untraced.to_json_with(true)));
+
+    // Same sweep with the JSONL sink live.
+    let dir = std::env::temp_dir().join(format!("mkor-trace-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let trace_path = dir.join("sweep.trace.jsonl");
+    obs::install(&trace_path).unwrap();
+    assert!(obs::enabled());
+    let traced = run_sweep(&grid, &opts);
+    let receipt = obs::finish().unwrap().unwrap();
+    assert!(!obs::enabled());
+    assert!(receipt.events > 0, "a traced sweep must write events");
+
+    // The invariant: trace-on ≡ trace-off, byte for byte.
+    assert_eq!(base_csv, traced.to_csv_deterministic());
+    assert_eq!(base_json, format!("{:#}", traced.to_json_with(true)));
+
+    // The trace file re-validates line by line and covers the phases the
+    // acceptance walkthrough keys on.
+    let log = obs::read_trace(&trace_path).unwrap();
+    assert!(!log.torn_tail);
+    assert_eq!(log.events.len() as u64, receipt.events);
+    let count =
+        |k: EventKind| log.events.iter().filter(|e| e.kind == k).count();
+    // 9 cells × 6 steps, each step timed.
+    assert_eq!(count(EventKind::Step), 9 * 6);
+    assert_eq!(count(EventKind::CellDone), 9);
+    assert!(count(EventKind::InverseUpdate) > 0, "f<=5 over 6 steps must invert");
+    assert!(count(EventKind::Allreduce) > 0, "2 workers per cell must all-reduce");
+    // Every timed event carries a sane duration.
+    for ev in &log.events {
+        if let Some(s) = ev.secs() {
+            assert!(s.is_finite() && s >= 0.0, "{ev:?}");
+        }
+    }
+
+    // The summarize table has the rows the CLI walkthrough greps for.
+    let rendered = TraceSummary::from_events(&log.events).render();
+    for row in ["| step", "| inverse_update", "| allreduce", "| cell_done"] {
+        assert!(rendered.contains(row), "missing {row:?} in:\n{rendered}");
+    }
+
+    // The registry saw the same run. Registry updates are gated on the
+    // sink like events are, so the untraced baseline contributed nothing
+    // and the traced sweep accounts for every tally exactly.
+    let reg = obs::registry::global_snapshot();
+    assert!(reg.counter("mkor.inverse_updates") > 0);
+    assert!(reg.counter("collective.allreduces") > 0);
+    assert_eq!(reg.counter("sweep.cells_done"), 9);
+    assert_eq!(reg.counter("trainer.steps"), 9 * 6);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
