@@ -24,7 +24,7 @@
 
 use crate::checkpoint::state::{StateDict, StateError};
 use crate::linalg::Matrix;
-use crate::model::{Dense, Mlp};
+use crate::model::{Dense, Mlp, Transformer};
 use crate::util::Rng;
 
 /// Save/restore interface for stateful training components.
@@ -133,6 +133,28 @@ impl Checkpointable for Mlp {
     }
 }
 
+impl Checkpointable for Transformer {
+    fn state_dict(&self) -> StateDict {
+        // Same layer{i} layout as the MLP: the learnable state IS the flat
+        // Dense list (the positional table is configuration — rebuilt from
+        // TransformerConfig — and forward caches are per-batch scratch).
+        let mut sd = StateDict::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            sd.put_dict(&format!("layer{i}"), layer.state_dict());
+        }
+        sd
+    }
+
+    fn load_state_dict(&mut self, state: &StateDict) -> Result<(), StateError> {
+        let expected: Vec<String> = (0..self.layers.len()).map(|i| format!("layer{i}")).collect();
+        state.check_keys_exact(&expected)?;
+        for (i, layer) in self.layers.iter_mut().enumerate() {
+            layer.load_state_dict(state.dict(&format!("layer{i}"))?)?;
+        }
+        Ok(())
+    }
+}
+
 impl Checkpointable for Rng {
     fn state_dict(&self) -> StateDict {
         let (s, spare) = self.state();
@@ -184,6 +206,33 @@ mod tests {
         let mut deeper = Mlp::new(&[4, 6, 6, 2], Activation::Tanh, &mut rng);
         let e = deeper.load_state_dict(&sd).unwrap_err();
         assert!(matches!(e, StateError::MissingKey { .. }), "{e:?}");
+    }
+
+    #[test]
+    fn transformer_roundtrip_restores_exact_weights() {
+        use crate::model::TransformerConfig;
+        let cfg = TransformerConfig {
+            vocab: 9,
+            d_model: 8,
+            n_heads: 2,
+            n_blocks: 1,
+            d_ff: 12,
+            seq_len: 4,
+        };
+        let mut rng = Rng::new(5);
+        let net = Transformer::new(cfg, &mut rng);
+        let sd = net.state_dict();
+        let mut other = Transformer::new(cfg, &mut rng);
+        other.load_state_dict(&sd).unwrap();
+        for (a, b) in net.layers.iter().zip(&other.layers) {
+            assert_eq!(a.w.data(), b.w.data());
+            assert_eq!(a.bias, b.bias);
+        }
+        assert_eq!(other.state_dict(), sd);
+        // A deeper model rejects the load by key set (layer count).
+        let mut deeper =
+            Transformer::new(TransformerConfig { n_blocks: 2, ..cfg }, &mut rng);
+        assert!(deeper.load_state_dict(&sd).is_err());
     }
 
     #[test]

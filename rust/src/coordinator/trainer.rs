@@ -18,7 +18,7 @@ use crate::checkpoint::{Checkpoint, CheckpointError, Checkpointable, StateDict};
 use crate::collective::ring::{allreduce_mean, allreduce_mean_bf16};
 use crate::coordinator::metrics::{RunRecord, StepRecord};
 use crate::linalg::Matrix;
-use crate::model::{accuracy, mse_loss, softmax_xent, Capture, Mlp};
+use crate::model::{accuracy, mse_loss, softmax_xent, Capture, Model};
 use crate::obs::{self, EventKind, TraceEvent};
 use crate::optim::schedule::{Constant, LrSchedule};
 use crate::optim::{Optimizer, OptimizerSpec};
@@ -91,7 +91,7 @@ impl Default for TrainerConfig {
 ///     .build();
 /// ```
 pub struct TrainerBuilder {
-    model: Mlp,
+    model: Box<dyn Model>,
     spec: OptimizerSpec,
     schedule: Box<dyn LrSchedule + Send>,
     cfg: TrainerConfig,
@@ -101,7 +101,13 @@ pub struct TrainerBuilder {
 impl TrainerBuilder {
     /// Start from a model; defaults: SGD-momentum, constant LR 0.1, and
     /// [`TrainerConfig::default`] (4 workers, fp32 wire).
-    pub fn new(model: Mlp) -> Self {
+    pub fn new(model: impl Model + 'static) -> Self {
+        TrainerBuilder::new_boxed(Box::new(model))
+    }
+
+    /// [`TrainerBuilder::new`] for an already-boxed model (the task
+    /// dispatchers pick the substrate at runtime).
+    pub fn new_boxed(model: Box<dyn Model>) -> Self {
         TrainerBuilder {
             model,
             spec: OptimizerSpec::default(),
@@ -228,7 +234,7 @@ impl TrainerBuilder {
 pub struct Trainer {
     cfg: TrainerConfig,
     /// replicas[0] is the leader.
-    replicas: Vec<Mlp>,
+    replicas: Vec<Box<dyn Model>>,
     opt: Box<dyn Optimizer + Send>,
     schedule: Box<dyn LrSchedule + Send>,
     pub phases: PhaseTimer,
@@ -245,22 +251,26 @@ impl Trainer {
         note = "use TrainerBuilder::new(model).optimizer(spec)...build()"
     )]
     pub fn new(
-        model: Mlp,
+        model: impl Model + 'static,
         opt: Box<dyn Optimizer + Send>,
         schedule: Box<dyn LrSchedule + Send>,
         cfg: TrainerConfig,
     ) -> Self {
-        Trainer::from_parts(model, opt, schedule, cfg)
+        Trainer::from_parts(Box::new(model), opt, schedule, cfg)
     }
 
     fn from_parts(
-        model: Mlp,
+        model: Box<dyn Model>,
         opt: Box<dyn Optimizer + Send>,
         schedule: Box<dyn LrSchedule + Send>,
         cfg: TrainerConfig,
     ) -> Self {
         assert!(cfg.workers >= 1);
-        let replicas = vec![model; cfg.workers];
+        let mut replicas = Vec::with_capacity(cfg.workers);
+        replicas.push(model);
+        for _ in 1..cfg.workers {
+            replicas.push(replicas[0].clone_model());
+        }
         let record = RunRecord {
             name: cfg.run_name.clone(),
             optimizer: opt.name().to_string(),
@@ -287,8 +297,8 @@ impl Trainer {
         self.t
     }
 
-    pub fn leader(&self) -> &Mlp {
-        &self.replicas[0]
+    pub fn leader(&self) -> &dyn Model {
+        self.replicas[0].as_ref()
     }
 
     pub fn optimizer(&self) -> &dyn Optimizer {
@@ -300,7 +310,7 @@ impl Trainer {
     fn broadcast_leader(&mut self) {
         let (leader, rest) = self.replicas.split_first_mut().unwrap();
         for replica in rest {
-            for (dst, src) in replica.layers.iter_mut().zip(&leader.layers) {
+            for (dst, src) in replica.layers_mut().iter_mut().zip(leader.layers()) {
                 dst.w.data_mut().copy_from_slice(src.w.data());
                 dst.bias.copy_from_slice(&src.bias);
             }
@@ -438,6 +448,10 @@ impl Trainer {
         let b = x.cols();
         let ranges = self.shard_ranges(b);
         let lr = self.schedule.lr(self.t);
+        // Targets index OUTPUT columns: one input column yields `k` of them
+        // (k = seq_len for the transformer, whose positions unroll into the
+        // batch), so target shards scale the column ranges by k.
+        let k = self.replicas[0].cols_per_sample();
 
         // ---- per-worker forward/backward (threads) ----------------------
         let shards: Vec<(Matrix, Target)> = ranges
@@ -448,11 +462,11 @@ impl Trainer {
                     sx.row_mut(r).copy_from_slice(&x.row(r)[lo..hi]);
                 }
                 let st = match target {
-                    Target::Labels(l) => Target::Labels(l[lo..hi].to_vec()),
+                    Target::Labels(l) => Target::Labels(l[lo * k..hi * k].to_vec()),
                     Target::Dense(y) => {
-                        let mut sy = Matrix::zeros(y.rows(), hi - lo);
+                        let mut sy = Matrix::zeros(y.rows(), (hi - lo) * k);
                         for r in 0..y.rows() {
-                            sy.row_mut(r).copy_from_slice(&y.row(r)[lo..hi]);
+                            sy.row_mut(r).copy_from_slice(&y.row(r)[lo * k..hi * k]);
                         }
                         Target::Dense(sy)
                     }
@@ -497,7 +511,7 @@ impl Trainer {
             return None;
         }
 
-        let n_layers = self.replicas[0].layers.len();
+        let n_layers = self.replicas[0].layers().len();
         let mut grad_bytes = 0usize;
         let mut caps: Vec<Capture> = Vec::with_capacity(n_layers);
         let t_comm = std::time::Instant::now();
@@ -507,7 +521,7 @@ impl Trainer {
                 .iter()
                 .map(|(_, c)| {
                     if c.is_empty() {
-                        vec![0.0; self.replicas[0].layers[layer].w.len()]
+                        vec![0.0; self.replicas[0].layers()[layer].w.len()]
                     } else {
                         c[layer].dw.data().to_vec()
                     }
@@ -520,12 +534,12 @@ impl Trainer {
             };
             grad_bytes += stats.bytes_per_worker;
             let dw = Matrix::from_vec(
-                self.replicas[0].layers[layer].w.rows(),
-                self.replicas[0].layers[layer].w.cols(),
+                self.replicas[0].layers()[layer].w.rows(),
+                self.replicas[0].layers()[layer].w.cols(),
                 bufs[0].clone(),
             );
             // Bias gradients: plain mean (small).
-            let dout = self.replicas[0].layers[layer].w.rows();
+            let dout = self.replicas[0].layers()[layer].w.rows();
             let mut db = vec![0.0f32; dout];
             let mut contributors = 0usize;
             for (_, c) in &results {
@@ -540,7 +554,7 @@ impl Trainer {
                 *v /= contributors.max(1) as f32;
             }
             // Concatenate A and G across workers (leader's global view).
-            let din = self.replicas[0].layers[layer].w.cols();
+            let din = self.replicas[0].layers()[layer].w.cols();
             let total_cols: usize = results
                 .iter()
                 .filter(|(_, c)| !c.is_empty())
@@ -580,7 +594,7 @@ impl Trainer {
         {
             // Split so the optimizer borrows only the leader replica.
             let (leader, _rest) = self.replicas.split_first_mut().unwrap();
-            self.opt.step(&mut leader.layers, &caps, lr, &mut self.phases);
+            self.opt.step(leader.layers_mut(), &caps, lr, &mut self.phases);
         }
         let second_order_secs =
             self.phases.total_secs("factor") + self.phases.total_secs("precond") - so_before;
@@ -597,7 +611,7 @@ impl Trainer {
         let t_bc = std::time::Instant::now();
         let (leader, rest) = self.replicas.split_first_mut().unwrap();
         for replica in rest {
-            for (dst, src) in replica.layers.iter_mut().zip(&leader.layers) {
+            for (dst, src) in replica.layers_mut().iter_mut().zip(leader.layers()) {
                 dst.w.data_mut().copy_from_slice(src.w.data());
                 dst.bias.copy_from_slice(&src.bias);
             }
@@ -607,15 +621,17 @@ impl Trainer {
         let wall_secs = t0.elapsed().as_secs_f64();
         let sync_bytes = self.opt.sync_bytes_last_step();
         if obs::enabled() {
-            obs::emit(
-                TraceEvent::new(EventKind::Step)
-                    .num("step", self.t as f64)
-                    .num("secs", wall_secs)
-                    .num("loss", loss)
-                    .num("second_order_secs", second_order_secs)
-                    .num("grad_bytes", grad_bytes as f64)
-                    .num("sync_bytes", sync_bytes as f64),
-            );
+            let mut ev = TraceEvent::new(EventKind::Step)
+                .num("step", self.t as f64)
+                .num("secs", wall_secs)
+                .num("loss", loss)
+                .num("second_order_secs", second_order_secs)
+                .num("grad_bytes", grad_bytes as f64)
+                .num("sync_bytes", sync_bytes as f64);
+            if !self.cfg.checkpoint_task.is_empty() {
+                ev = ev.label("task", &self.cfg.checkpoint_task);
+            }
+            obs::emit(ev);
             obs::registry::with_global(|r| {
                 r.inc("trainer.steps", 1);
                 r.observe("trainer.step_secs", wall_secs);
@@ -710,7 +726,7 @@ impl Trainer {
 mod tests {
     use super::*;
     use crate::data::classification::{Dataset, TaskConfig};
-    use crate::model::Activation;
+    use crate::model::{Activation, Mlp};
     use crate::util::Rng;
 
     fn make_trainer_lr(
@@ -833,7 +849,7 @@ mod tests {
         for (i, (a, b)) in straight_losses.iter().zip(&resumed_losses).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "loss diverged at step {i}");
         }
-        for (a, b) in straight.leader().layers.iter().zip(&resumed.leader().layers) {
+        for (a, b) in straight.leader().layers().iter().zip(resumed.leader().layers()) {
             assert_eq!(a.w.data(), b.w.data());
             assert_eq!(a.bias, b.bias);
         }
@@ -987,7 +1003,7 @@ mod tests {
             .map(|s| s.step)
             .collect();
         // The "factor" phase is timed once per layer per factor step.
-        let n_layers = tr.leader().layers.len();
+        let n_layers = tr.leader().layers().len();
         assert_eq!(inv_steps.len() * n_layers, tr.phases.count("factor"));
         assert!(inv_steps.contains(&0), "step 0 is always a factor step");
         assert!(tr.record.steps.iter().all(|s| s.second_order_secs >= 0.0));

@@ -188,6 +188,52 @@ impl MlmBatchGen {
     }
 }
 
+/// A causal-LM batch: `x` is a `seq_len×b` matrix of token ids (f32 — the
+/// [`Transformer`](crate::model::Transformer) reads them back as indices);
+/// `labels[j·seq_len + t]` is sample `j`'s NEXT token after position `t`,
+/// matching the model's unrolled output-column order so the batch plugs
+/// straight into `softmax_xent`.
+#[derive(Clone, Debug)]
+pub struct CausalBatch {
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+}
+
+/// Next-token-prediction batches over a [`Corpus`] for the causal
+/// transformer proxy (`charlm` task): each sample is a fresh length
+/// `seq_len+1` sequence — the first `seq_len` tokens are input, positions
+/// shifted by one are the targets.
+pub struct CausalLmBatchGen {
+    corpus: Corpus,
+    pub seq_len: usize,
+    rng: Rng,
+}
+
+impl CausalLmBatchGen {
+    pub fn new(cfg: TextConfig, seq_len: usize, seed: u64) -> Self {
+        CausalLmBatchGen { corpus: Corpus::new(cfg), seq_len, rng: Rng::new(seed ^ 0xCA5A1) }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.corpus.vocab()
+    }
+
+    /// Next batch of `b` sequences.
+    pub fn next_batch(&mut self, b: usize) -> CausalBatch {
+        let s = self.seq_len;
+        let mut x = Matrix::zeros(s, b);
+        let mut labels = Vec::with_capacity(b * s);
+        for j in 0..b {
+            let seq = self.corpus.sample_sequence(s + 1, &mut self.rng);
+            for t in 0..s {
+                x[(t, j)] = seq[t] as f32;
+                labels.push(seq[t + 1] as usize);
+            }
+        }
+        CausalBatch { x, labels }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,6 +284,28 @@ mod tests {
         assert_eq!(tgts.len(), toks.len());
         let nmask: f32 = mask.iter().sum();
         assert!(nmask >= 4.0);
+    }
+
+    #[test]
+    fn causal_batches_align_labels_with_the_shifted_sequence() {
+        let cfg = TextConfig { vocab: 48, ..Default::default() };
+        let mut g = CausalLmBatchGen::new(cfg.clone(), 16, 7);
+        let b = g.next_batch(3);
+        assert_eq!((b.x.rows(), b.x.cols()), (16, 3));
+        assert_eq!(b.labels.len(), 3 * 16, "one target per unrolled position");
+        for j in 0..3 {
+            for t in 0..15 {
+                // labels[j·s+t] is the token the model sees at (t+1, j):
+                // next-token prediction, in output-column order.
+                assert_eq!(b.labels[j * 16 + t], b.x[(t + 1, j)] as usize);
+            }
+            assert!(b.labels[j * 16 + 15] < 48, "final target drawn from the vocab");
+        }
+        // Deterministic per seed.
+        let mut g2 = CausalLmBatchGen::new(cfg, 16, 7);
+        let b2 = g2.next_batch(3);
+        assert_eq!(b.x.data(), b2.x.data());
+        assert_eq!(b.labels, b2.labels);
     }
 
     #[test]

@@ -6,8 +6,8 @@ use crate::checkpoint::Checkpoint;
 use crate::coordinator::{RunRecord, Target, TrainerBuilder};
 use crate::data::classification::{Dataset, TaskConfig};
 use crate::data::images::{ImageConfig, ImageGen};
-use crate::data::text::{MlmBatchGen, TextConfig};
-use crate::model::{Activation, Mlp};
+use crate::data::text::{CausalLmBatchGen, MlmBatchGen, TextConfig};
+use crate::model::{Activation, Mlp, Model, Transformer, TransformerConfig};
 use crate::optim::OptimizerSpec;
 use crate::util::Rng;
 
@@ -23,6 +23,12 @@ pub enum TaskKind {
     Autoencoder,
     /// A materialized Gaussian-mixture task (GLUE proxies).
     Glue(TaskConfig),
+    /// Next-token prediction with the causal-transformer proxy
+    /// ([`Transformer`]) on the Markov–Zipf corpus — the workload where
+    /// MKOR-H's switching rule matters (§3.2: transformer pre-training).
+    /// Sequence positions fold into the batch, so each step's captures
+    /// carry `batch·seq_len` sample columns.
+    CharLm { vocab: usize, seq_len: usize },
 }
 
 /// Result of one run.
@@ -78,7 +84,8 @@ pub struct RunOpts {
     /// smaller γ than the paper's long-run value lets the factors adapt
     /// within the budget).
     pub gamma: Option<f32>,
-    /// Hidden widths of the proxy model.
+    /// Hidden widths of the proxy model (MLP tasks only; the `charlm`
+    /// transformer's dimensions come from [`TransformerConfig::proxy`]).
     pub hidden: Vec<usize>,
     /// Convergence target recorded into the run record (accuracy for
     /// labeled tasks, loss for dense) — checked at each eval.
@@ -218,6 +225,7 @@ fn run_core(
         Img(ImageGen),
         Auto(ImageGen),
         Glue(Dataset, u64, Vec<crate::data::Batch>),
+        CharLm(CausalLmBatchGen),
     }
     let (mut src, dims): (Src, Vec<usize>) = match task {
         TaskKind::TextClass { feat_dim, vocab } => {
@@ -254,27 +262,46 @@ fn run_core(
             dims.push(cfg.classes);
             (Src::Glue(ds, 0, Vec::new()), dims)
         }
+        TaskKind::CharLm { vocab, seq_len } => {
+            let gen = CausalLmBatchGen::new(
+                TextConfig { vocab: *vocab, seed: opts.seed, ..Default::default() },
+                *seq_len,
+                opts.seed ^ 0x7E,
+            );
+            (Src::CharLm(gen), Vec::new())
+        }
     };
 
-    let act = match task {
-        TaskKind::Autoencoder => Activation::Tanh,
-        TaskKind::TextClass { .. } => Activation::Gelu,
-        _ => Activation::Relu,
+    // Pick the substrate: the charlm task trains the causal transformer,
+    // everything else an MLP shaped by `dims`.
+    let model: Box<dyn Model> = match task {
+        TaskKind::CharLm { vocab, seq_len } => {
+            Box::new(Transformer::new(TransformerConfig::proxy(*vocab, *seq_len), &mut rng))
+        }
+        _ => {
+            let act = match task {
+                TaskKind::Autoencoder => Activation::Tanh,
+                TaskKind::TextClass { .. } => Activation::Gelu,
+                _ => Activation::Relu,
+            };
+            Box::new(Mlp::new(&dims, act, &mut rng))
+        }
     };
-    let model = Mlp::new(&dims, act, &mut rng);
-    let mut builder = TrainerBuilder::new(model)
+    let mut builder = TrainerBuilder::new_boxed(model)
         .optimizer(spec.clone())
         .constant_lr(opts.lr)
         .workers(opts.workers)
-        .run_name(run_name);
+        .run_name(run_name)
+        // Always label the run with its task: the checkpoint manifest and
+        // the per-step trace events both carry it.
+        .checkpoint_task(crate::sweep::grid::task_label(task));
     if let Some(target) = opts.target_metric {
         builder = builder.target_metric(target);
     }
     if let Some(dir) = &opts.checkpoint_dir {
         builder = builder
             .checkpoint_dir(dir.clone())
-            .checkpoint_every(opts.checkpoint_every)
-            .checkpoint_task(crate::sweep::grid::task_label(task));
+            .checkpoint_every(opts.checkpoint_every);
         if opts.resume && Checkpoint::exists(dir) {
             builder = builder.resume_from(dir.clone());
         }
@@ -308,14 +335,23 @@ fn run_core(
                 let batch = queue.pop().unwrap();
                 (batch.x, Target::Labels(batch.labels))
             }
+            Src::CharLm(gen) => {
+                let batch = gen.next_batch(b);
+                (batch.x, Target::Labels(batch.labels))
+            }
         }
     };
 
-    // Held-out eval batch (fresh draw / test split).
+    // Held-out eval batch (fresh draw / test split). The charlm eval draw
+    // is smaller — 64 sequences unroll to 64·seq_len eval columns.
     let eval = match &mut src {
         Src::Glue(ds, _, _) => {
             let t = ds.test_batch();
             Some((t.x, Target::Labels(t.labels)))
+        }
+        s @ Src::CharLm(_) => {
+            let (x, t) = next(s, 64);
+            Some((x, t))
         }
         s => {
             let (x, t) = next(s, 256);
@@ -364,6 +400,27 @@ mod tests {
             let r = run_convergence(&task, name, &opts);
             assert!(!r.diverged, "{name}");
             assert_eq!(r.losses.len(), 60);
+            assert!(r.final_loss() < r.losses[0], "{name}: no improvement");
+        }
+    }
+
+    #[test]
+    fn charlm_task_trains_the_transformer() {
+        // The issue's acceptance workload: the causal-transformer proxy
+        // under MKOR and under MKOR-H with a non-default switch_beta.
+        let task = TaskKind::CharLm { vocab: 48, seq_len: 16 };
+        let opts = RunOpts {
+            steps: 30,
+            batch: 16,
+            lr: 0.05,
+            workers: 2,
+            hidden: Vec::new(),
+            ..Default::default()
+        };
+        for name in ["mkor:f=10", "mkor-h:min_steps=5,switch_beta=0.8"] {
+            let r = run_convergence(&task, name, &opts);
+            assert!(!r.diverged, "{name}");
+            assert_eq!(r.losses.len(), 30, "{name}");
             assert!(r.final_loss() < r.losses[0], "{name}: no improvement");
         }
     }

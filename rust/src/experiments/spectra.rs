@@ -6,7 +6,7 @@ use crate::coordinator::{Target, TrainerBuilder};
 use crate::data::images::{ImageConfig, ImageGen};
 use crate::linalg::eigen::{condition_number, jacobi_eigen};
 use crate::linalg::lowrank::{covariance, mean_rank1_error, optimal_rank1_error};
-use crate::model::{Activation, Mlp};
+use crate::model::{Activation, Mlp, Model};
 use crate::optim::OptimizerSpec;
 use crate::util::Rng;
 
@@ -57,7 +57,7 @@ pub fn collect_spectra(
         let b = gen.next_batch(64);
         if step % sample_every == 0 {
             // Forward/backward on a clone for capture sampling.
-            let mut probe = trainer.leader().clone();
+            let mut probe = trainer.leader().clone_model();
             let out = probe.forward(&b.x);
             let (_, dl) = crate::model::softmax_xent(&out, &b.labels);
             let caps = probe.backward(&dl);

@@ -10,7 +10,8 @@
 //!              (`--optimizer name[:key=val,...]`, e.g. `--optimizer
 //!              mkor:f=10,backend=lamb,backend.beta1=0.95`; names:
 //!              mkor|mkor-h|kfac|sngd|eva|sgd|adam|lamb), `--task
-//!              glue|images|autoencoder|text`, `--steps`, `--workers`,
+//!              glue|images|autoencoder|text|charlm` (charlm trains the
+//!              causal-transformer proxy), `--steps`, `--workers`,
 //!              `--eval-every`, `--target`, `--quantized`. Checkpointing:
 //!              `--checkpoint-every N --checkpoint-dir D` snapshots every
 //!              N steps; `--resume-from D` restores and continues
@@ -60,9 +61,9 @@ use mkor::coordinator::{Target, TrainerBuilder};
 use mkor::costmodel::complexity::{model_step_cost, OptimizerKind};
 use mkor::data::classification::{Dataset, TaskConfig};
 use mkor::data::images::{ImageConfig, ImageGen};
-use mkor::data::text::{MlmBatchGen, TextConfig};
+use mkor::data::text::{CausalLmBatchGen, MlmBatchGen, TextConfig};
 use mkor::experiments::convergence::RunOpts;
-use mkor::model::{specs, Activation, Mlp};
+use mkor::model::{specs, Activation, Mlp, Model, Transformer, TransformerConfig};
 use mkor::obs;
 use mkor::optim::OptimizerSpec;
 use mkor::runtime::xla_trainer::{XlaTrainer, XlaTrainerConfig};
@@ -259,13 +260,13 @@ fn cmd_sim(args: &Args) -> i32 {
 
     let mut rng = Rng::new(seed);
     type BatchFn = Box<dyn FnMut() -> (mkor::linalg::Matrix, Target)>;
-    let (model, mut next_batch): (Mlp, BatchFn) = match task {
+    let (model, mut next_batch): (Box<dyn Model>, BatchFn) = match task {
         "images" => {
             let mut gen = ImageGen::new(ImageConfig::default(), seed);
             let model =
                 Mlp::new(&[gen.dim(), 128, 64, gen.classes()], Activation::Relu, &mut rng);
             (
-                model,
+                Box::new(model),
                 Box::new(move || {
                     let b = gen.next_batch(64);
                     (b.x, Target::Labels(b.labels))
@@ -277,7 +278,7 @@ fn cmd_sim(args: &Args) -> i32 {
             let d = gen.dim();
             let model = Mlp::new(&[d, 128, 32, 128, d], Activation::Tanh, &mut rng);
             (
-                model,
+                Box::new(model),
                 Box::new(move || {
                     let b = gen.next_autoencoder_batch(64);
                     (b.x, Target::Dense(b.y))
@@ -289,9 +290,28 @@ fn cmd_sim(args: &Args) -> i32 {
             let vocab = gen.vocab();
             let model = Mlp::new(&[256, 256, vocab], Activation::Gelu, &mut rng);
             (
-                model,
+                Box::new(model),
                 Box::new(move || {
                     let b = gen.next_dense(64, 256, 6);
+                    (b.x, Target::Labels(b.labels))
+                }),
+            )
+        }
+        "charlm" => {
+            // Causal-transformer proxy: 16-token next-token prediction on
+            // the Markov–Zipf corpus; 16 sequences per batch unroll to 256
+            // capture columns.
+            let mut gen = CausalLmBatchGen::new(
+                TextConfig { vocab: 48, seed, ..Default::default() },
+                16,
+                seed,
+            );
+            let model =
+                Transformer::new(TransformerConfig::proxy(gen.vocab(), 16), &mut rng);
+            (
+                Box::new(model),
+                Box::new(move || {
+                    let b = gen.next_batch(16);
                     (b.x, Target::Labels(b.labels))
                 }),
             )
@@ -305,7 +325,7 @@ fn cmd_sim(args: &Args) -> i32 {
             let mut epoch = 0u64;
             let mut queue: Vec<mkor::data::Batch> = Vec::new();
             (
-                model,
+                Box::new(model),
                 Box::new(move || {
                     if queue.is_empty() {
                         queue = ds.epoch_batches(64, epoch);
@@ -329,7 +349,7 @@ fn cmd_sim(args: &Args) -> i32 {
     };
     obs::log::progress(&format!("optimizer spec: {}", spec.canonical()));
     let run_name = format!("sim-{task}-{}", spec.canonical());
-    let mut builder = TrainerBuilder::new(model)
+    let mut builder = TrainerBuilder::new_boxed(model)
         .optimizer(spec)
         .constant_lr(lr)
         .workers(workers)
@@ -433,7 +453,7 @@ fn cmd_sweep(args: &Args) -> i32 {
     let Some(specs) = args.get("specs") else {
         eprintln!(
             "usage: mkor sweep --specs \"mkor:f={{1,10,100}};lamb;kfac:damping={{0.01,0.1}}\" \
-             [--task glue|images|autoencoder|text] [--steps N] [--jobs J] [--lr LR] \
+             [--task glue|images|autoencoder|text|charlm] [--steps N] [--jobs J] [--lr LR] \
              [--cell-workers W] [--batch B] [--seed S] [--eval-every N] [--target M] \
              [--hidden 96,48] [--out sweep.csv] [--json sweep.json] \
              [--workers N] [--worker-batch B] [--worker-dir D] [--keep-worker-files] \
@@ -779,6 +799,7 @@ fn cmd_train(args: &Args) -> i32 {
         inv_freq: args.usize_or("inv-freq", 10),
         half_sync: !args.flag("no-half-sync"),
         hybrid_switch_ratio: if args.flag("hybrid") { Some(0.1) } else { None },
+        hybrid_switch_beta: args.f64_or("switch-beta", 0.95),
         ..Default::default()
     };
     let mut trainer = XlaTrainer::new(bundle, init, cfg);

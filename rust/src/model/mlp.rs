@@ -16,7 +16,7 @@ pub enum Activation {
 
 impl Activation {
     #[inline]
-    fn apply(self, z: f32) -> f32 {
+    pub(crate) fn apply(self, z: f32) -> f32 {
         match self {
             Activation::Linear => z,
             Activation::Relu => z.max(0.0),
@@ -30,7 +30,7 @@ impl Activation {
 
     /// Derivative evaluated at pre-activation `z`.
     #[inline]
-    fn grad(self, z: f32) -> f32 {
+    pub(crate) fn grad(self, z: f32) -> f32 {
         match self {
             Activation::Linear => 1.0,
             Activation::Relu => {

@@ -1,24 +1,38 @@
-//! Rust-native neural network with per-layer activation/gradient capture.
+//! Rust-native neural networks with per-layer activation/gradient capture.
 //!
 //! The convergence experiments (Figures 2/4/6/11/12, Tables 2/3/5) need to
 //! train real models under eight different optimizers, and KFAC-family
 //! optimizers need, per layer `m`, the batch of input activations
 //! `A_t^{m-1} ∈ R^{d_in×b}` and pre-activation input gradients
-//! `G_t^m ∈ R^{d_out×b}` — exactly the quantities Algorithm 1 consumes. The
-//! [`Mlp`] here is a column-sample (d×b) fully-connected network whose
-//! backward pass returns those captures for every layer.
+//! `G_t^m ∈ R^{d_out×b}` — exactly the quantities Algorithm 1 consumes.
+//! Two substrates implement that contract behind the [`Model`] trait:
 //!
-//! The ~100M-parameter transformer path lives in JAX (L2) and is executed
-//! from Rust via `runtime`; this module is the substrate for the many
-//! smaller optimizer-comparison experiments where the paper itself uses an
-//! autoencoder / AlexNet-scale models (§4 "Inversion Frequency", §8.12).
+//! * [`Mlp`] — a column-sample (d×b) fully-connected network, the proxy
+//!   for the paper's autoencoder / AlexNet-scale experiments (§4
+//!   "Inversion Frequency", §8.12);
+//! * [`Transformer`] — a small causal transformer ([`transformer`]) whose
+//!   attention/MLP projections are plain [`Dense`] layers, so every
+//!   optimizer in the registry preconditions it unchanged. Sequence
+//!   positions fold into the batch dimension
+//!   ([`Model::cols_per_sample`]), which is the `b·s` effective-batch
+//!   regime the paper's complexity argument is about.
+//!
+//! The ~100M-parameter transformer path additionally lives in JAX (L2) and
+//! is executed from Rust via `runtime`; the [`Transformer`] here is the
+//! Rust-native proxy that exercises the same layer structure at
+//! experiment scale.
 
 pub mod loss;
 pub mod mlp;
 pub mod specs;
+pub mod transformer;
 
 pub use loss::{accuracy, mse_loss, softmax_xent};
 pub use mlp::{Activation, Capture, Dense, Mlp};
+pub use transformer::{Transformer, TransformerConfig};
+
+use crate::checkpoint::Checkpointable;
+use crate::linalg::Matrix;
 
 /// Shape of one learnable layer (used by optimizers to allocate state and
 /// by the cost model to price steps at paper scale).
@@ -36,5 +50,90 @@ impl LayerShape {
     /// Parameter count (weights only; biases are first-order everywhere).
     pub fn params(&self) -> usize {
         self.d_in * self.d_out
+    }
+}
+
+/// A trainable network the [`Trainer`](crate::coordinator::Trainer) can
+/// drive: forward/backward with per-layer KFAC-style [`Capture`]s, plus a
+/// flat [`Dense`] parameter list the optimizers step directly.
+///
+/// Object-safe on purpose — the trainer holds `Box<dyn Model>` replicas so
+/// one step loop serves every substrate. The contract mirrors [`Mlp`]:
+///
+/// * `forward` caches whatever `backward` needs; `infer` never touches
+///   training state;
+/// * `backward` consumes the loss gradient at the network *output* (the
+///   1/batch averaging already folded in by [`loss`]'s functions) and
+///   returns one capture per entry of `layers()`, in the same order;
+/// * `cols_per_sample` declares how many output columns one input column
+///   produces — 1 for the MLP, `seq_len` for the transformer, whose
+///   sequence positions unroll into the batch dimension. Targets and
+///   capture widths scale by this factor.
+pub trait Model: Checkpointable + Send {
+    /// Training forward pass (caches intermediates for [`Model::backward`]).
+    fn forward(&mut self, x: &Matrix) -> Matrix;
+
+    /// Inference-only forward (no caching, doesn't disturb training state).
+    fn infer(&self, x: &Matrix) -> Matrix;
+
+    /// Backward from `dL/dy` at the network output; returns per-layer
+    /// captures in `layers()` order.
+    fn backward(&mut self, dldy: &Matrix) -> Vec<Capture>;
+
+    /// The learnable layers, in capture order.
+    fn layers(&self) -> &[Dense];
+
+    /// Mutable view for the optimizer's parameter update.
+    fn layers_mut(&mut self) -> &mut [Dense];
+
+    /// Clone into a fresh boxed replica (data-parallel workers).
+    fn clone_model(&self) -> Box<dyn Model>;
+
+    /// Output columns produced per input column (see trait docs).
+    fn cols_per_sample(&self) -> usize {
+        1
+    }
+
+    /// Per-layer shapes, as optimizers allocate state from them.
+    fn shapes(&self) -> Vec<LayerShape> {
+        self.layers().iter().map(Dense::shape).collect()
+    }
+
+    fn num_params(&self) -> usize {
+        self.layers().iter().map(|l| l.w.len() + l.bias.len()).sum()
+    }
+
+    /// True if any parameter is non-finite (divergence detector used by
+    /// the Table 5 learning-rate sweep).
+    fn diverged(&self) -> bool {
+        self.layers()
+            .iter()
+            .any(|l| !l.w.all_finite() || l.bias.iter().any(|b| !b.is_finite()))
+    }
+}
+
+impl Model for Mlp {
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        Mlp::forward(self, x)
+    }
+
+    fn infer(&self, x: &Matrix) -> Matrix {
+        Mlp::infer(self, x)
+    }
+
+    fn backward(&mut self, dldy: &Matrix) -> Vec<Capture> {
+        Mlp::backward(self, dldy)
+    }
+
+    fn layers(&self) -> &[Dense] {
+        &self.layers
+    }
+
+    fn layers_mut(&mut self) -> &mut [Dense] {
+        &mut self.layers
+    }
+
+    fn clone_model(&self) -> Box<dyn Model> {
+        Box::new(self.clone())
     }
 }

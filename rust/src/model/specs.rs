@@ -140,6 +140,28 @@ pub fn alexnet() -> ModelSpec {
     ModelSpec { name: "AlexNet".into(), layers, effective_batch: 128 }
 }
 
+/// A GPT-2-small-scale causal LM, expressed through the SAME
+/// [`TransformerConfig::layer_shapes`](crate::model::TransformerConfig)
+/// the live [`Transformer`](crate::model::Transformer) proxy builds from —
+/// the cost model prices exactly the layer structure the Rust-native
+/// substrate trains (fused QKV per block, tied unembedding not re-counted).
+/// Effective batch = 8 sequences × 1024 tokens.
+pub fn causal_lm() -> ModelSpec {
+    let cfg = crate::model::TransformerConfig {
+        vocab: 50257,
+        d_model: 768,
+        n_heads: 12,
+        n_blocks: 12,
+        d_ff: 3072,
+        seq_len: 1024,
+    };
+    ModelSpec {
+        name: "Causal-LM-small".into(),
+        layers: cfg.layer_shapes(),
+        effective_batch: 8 * 1024,
+    }
+}
+
 /// The autoencoder of the Figure 4 experiment (CIFAR-100-shaped).
 pub fn autoencoder_spec() -> ModelSpec {
     let dims = [3072usize, 1024, 256, 64, 256, 1024, 3072];
@@ -158,6 +180,7 @@ pub fn by_name(name: &str) -> Option<ModelSpec> {
         "resnet50" => Some(resnet50()),
         "alexnet" => Some(alexnet()),
         "autoencoder" => Some(autoencoder_spec()),
+        "causal-lm" => Some(causal_lm()),
         _ => None,
     }
 }
@@ -190,6 +213,18 @@ mod tests {
     fn alexnet_param_count_in_range() {
         let p = alexnet().params() as f64 / 1e6;
         assert!(p > 15.0 && p < 26.0, "params={p}M"); // paper: 20.3M
+    }
+
+    #[test]
+    fn causal_lm_param_count_in_range() {
+        // GPT-2-small scale: ~124M (embed 38.6M + 12 × 7.1M blocks; tied
+        // unembedding counted once, as in the live Transformer).
+        let spec = causal_lm();
+        let p = spec.params() as f64 / 1e6;
+        assert!(p > 115.0 && p < 135.0, "params={p}M");
+        // Fused QKV appears as ONE (768 → 2304) layer per block.
+        assert!(spec.layers.iter().any(|l| l.d_in == 768 && l.d_out == 3 * 768));
+        assert_eq!(spec.layers.len(), 1 + 4 * 12);
     }
 
     #[test]

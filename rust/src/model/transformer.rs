@@ -1,0 +1,640 @@
+//! A small causal transformer in the repo's from-scratch style, built so
+//! every optimizer in the registry preconditions it unchanged.
+//!
+//! Design choices, all in service of the KFAC-family capture contract:
+//!
+//! * **Every learnable projection is a [`Dense`]** in one flat list —
+//!   `[embed, (qkv, proj, fc1, fc2) × n_blocks]` — so the trainer's
+//!   all-reduce, the optimizers and the checkpoint machinery see exactly
+//!   the layer structure they already handle for [`Mlp`](super::Mlp).
+//! * **Q/K/V are fused into one `d_model → 3·d_model` projection**, i.e.
+//!   the three weight-shared heads of one token position share a single
+//!   Kronecker factor pair — Eschenhagen et al.'s "expand" setting for
+//!   weight-sharing layers (PAPERS.md). MKOR's `l_inv` for that layer is
+//!   `3d×3d`, its `r_inv` is `d×d`.
+//! * **Sequence positions fold into the batch dimension**: a `seq_len×b`
+//!   token batch unrolls to `n = b·s` activation columns (column `j·s+t`
+//!   is sample `j`, position `t`), so `col_mean` rank-1 vectors average
+//!   over `b·s` samples — the effective-batch regime the paper's
+//!   complexity argument (§1) is about.
+//! * **Tied unembedding**: logits are `W_embᵀ·h`, and the embedding's
+//!   capture `dw` sums both uses (embedding-side `G·A₀ᵀ` plus
+//!   unembedding-side `h·dlogitsᵀ`). The factor statistics `(a, g)` come
+//!   from the embedding-side use only, where `a` is the one-hot token
+//!   matrix — the mean-activation view of the input distribution.
+//! * **No LayerNorm**: the optimizers under study precondition linear
+//!   layers; normalization layers are first-order everywhere in the paper
+//!   and would add parameters outside the capture contract. Stability at
+//!   proxy depth (≤ a few blocks) comes from He-scaled init + residuals.
+//! * Positional information is a parameter-free sinusoidal table added to
+//!   the embedding output.
+//!
+//! Attention is exact causal softmax attention, per sample and head:
+//! `S = QᵀK/√hd` (lower-triangular), `P = softmax_rows(S)`,
+//! `O = V·Pᵀ`; the backward pass propagates through the softmax Jacobian
+//! (`dS_i = P_i ⊙ (dP_i − (dP_i·P_i))`) with masked entries contributing
+//! nothing because their probabilities are exactly zero.
+
+use crate::linalg::{ops, Matrix};
+use crate::model::{Activation, Capture, Dense, LayerShape};
+use crate::util::Rng;
+
+/// Transformer dimensions. `n_heads` must divide `d_model`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_blocks: usize,
+    /// MLP hidden width (the `fc1` output / `fc2` input dimension).
+    pub d_ff: usize,
+    /// Fixed sequence length of every batch.
+    pub seq_len: usize,
+}
+
+impl TransformerConfig {
+    /// The proxy scale the `charlm` task trains: small enough for CI,
+    /// deep enough (2 blocks, 4 heads) to exercise every projection kind.
+    pub fn proxy(vocab: usize, seq_len: usize) -> Self {
+        TransformerConfig { vocab, d_model: 32, n_heads: 4, n_blocks: 2, d_ff: 64, seq_len }
+    }
+
+    /// The flat learnable-layer list, in capture order:
+    /// `[embed, (qkv, proj, fc1, fc2) × n_blocks]`. Shared between the
+    /// live model and the paper-scale cost specs
+    /// ([`specs::causal_lm`](super::specs::causal_lm)).
+    pub fn layer_shapes(&self) -> Vec<LayerShape> {
+        let d = self.d_model;
+        let mut out = vec![LayerShape::new(self.vocab, d)];
+        for _ in 0..self.n_blocks {
+            out.push(LayerShape::new(d, 3 * d)); // fused Q/K/V (expand setting)
+            out.push(LayerShape::new(d, d)); // attention output projection
+            out.push(LayerShape::new(d, self.d_ff));
+            out.push(LayerShape::new(self.d_ff, d));
+        }
+        out
+    }
+}
+
+/// Per-block forward caches (everything the backward pass reads).
+#[derive(Clone, Debug)]
+struct BlockCache {
+    /// Block input = the qkv layer's `A`, d_model×n.
+    h_in: Matrix,
+    /// Fused q/k/v pre-activations (the qkv layer's linear output), 3d×n.
+    qkv: Matrix,
+    /// Concatenated head outputs = the proj layer's `A`, d_model×n.
+    attn_in: Matrix,
+    /// Post-attention residual stream = fc1's `A`, d_model×n.
+    h_mid: Matrix,
+    /// fc1 pre-activation (for the GELU derivative), d_ff×n.
+    z1: Matrix,
+    /// GELU(z1) = fc2's `A`, d_ff×n.
+    u: Matrix,
+    /// Causal softmax rows, one s×s matrix per (sample, head), sample-major.
+    probs: Vec<Matrix>,
+}
+
+#[derive(Clone, Debug)]
+struct FwdCache {
+    /// One-hot token matrix (the embedding layer's `A`), vocab×n.
+    a0: Matrix,
+    blocks: Vec<BlockCache>,
+    /// Final hidden state (the tied unembedding's input), d_model×n.
+    h_final: Matrix,
+}
+
+/// The causal transformer. See the module docs for the design contract.
+#[derive(Clone, Debug)]
+pub struct Transformer {
+    pub cfg: TransformerConfig,
+    /// Flat layer list: `[embed, (qkv, proj, fc1, fc2) × n_blocks]`.
+    pub layers: Vec<Dense>,
+    /// Sinusoidal positional table, d_model×seq_len (parameter-free).
+    pos: Matrix,
+    cache: Option<FwdCache>,
+}
+
+/// `W·a + bias` (no activation; callers apply GELU where needed).
+fn affine(layer: &Dense, a: &Matrix) -> Matrix {
+    let mut z = ops::matmul(&layer.w, a);
+    for i in 0..z.rows() {
+        let bi = layer.bias[i];
+        for v in z.row_mut(i) {
+            *v += bi;
+        }
+    }
+    z
+}
+
+fn row_sums(g: &Matrix) -> Vec<f32> {
+    (0..g.rows()).map(|i| g.row(i).iter().sum::<f32>()).collect()
+}
+
+impl Transformer {
+    pub fn new(cfg: TransformerConfig, rng: &mut Rng) -> Self {
+        assert!(cfg.n_heads > 0 && cfg.d_model % cfg.n_heads == 0, "n_heads must divide d_model");
+        assert!(cfg.seq_len > 0 && cfg.vocab > 0 && cfg.n_blocks > 0);
+        let d = cfg.d_model;
+        let mut layers = Vec::with_capacity(1 + 4 * cfg.n_blocks);
+        layers.push(Dense::init(LayerShape::new(cfg.vocab, d), Activation::Linear, rng));
+        for _ in 0..cfg.n_blocks {
+            layers.push(Dense::init(LayerShape::new(d, 3 * d), Activation::Linear, rng));
+            layers.push(Dense::init(LayerShape::new(d, d), Activation::Linear, rng));
+            layers.push(Dense::init(LayerShape::new(d, cfg.d_ff), Activation::Gelu, rng));
+            layers.push(Dense::init(LayerShape::new(cfg.d_ff, d), Activation::Linear, rng));
+        }
+        let mut pos = Matrix::zeros(d, cfg.seq_len);
+        for t in 0..cfg.seq_len {
+            for i in 0..d {
+                let freq = 10000f32.powf(-((i / 2) as f32 * 2.0) / d as f32);
+                let angle = t as f32 * freq;
+                pos[(i, t)] = if i % 2 == 0 { angle.sin() } else { angle.cos() };
+            }
+        }
+        Transformer { cfg, layers, pos, cache: None }
+    }
+
+    /// Training forward. `x` is a `seq_len×b` matrix of token ids; the
+    /// output is `vocab×(b·seq_len)` logits with column `j·s+t` holding
+    /// sample `j`'s next-token prediction at position `t`.
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let (out, cache) = self.run(x, true);
+        self.cache = cache;
+        out
+    }
+
+    /// Inference-only forward (no caching).
+    pub fn infer(&self, x: &Matrix) -> Matrix {
+        self.run(x, false).0
+    }
+
+    fn run(&self, x: &Matrix, keep: bool) -> (Matrix, Option<FwdCache>) {
+        let s = self.cfg.seq_len;
+        assert_eq!(x.rows(), s, "x is seq_len×batch token ids");
+        let b = x.cols();
+        let n = b * s;
+        let d = self.cfg.d_model;
+        let embed = &self.layers[0];
+        // One-hot unroll: column j·s+t is sample j, position t. The
+        // embedding output is computed by gather (bitwise what the one-hot
+        // matmul produces, at O(d·n) instead of O(vocab·d·n)); A₀ itself
+        // is still materialized because it IS the embedding's factor input.
+        let mut a0 = Matrix::zeros(self.cfg.vocab, n);
+        let mut h = Matrix::zeros(d, n);
+        for j in 0..b {
+            for t in 0..s {
+                let tok = x[(t, j)] as usize;
+                assert!(tok < self.cfg.vocab, "token id {tok} out of vocab {}", self.cfg.vocab);
+                let col = j * s + t;
+                a0[(tok, col)] = 1.0;
+                for r in 0..d {
+                    h[(r, col)] = embed.w[(r, tok)] + embed.bias[r] + self.pos[(r, t)];
+                }
+            }
+        }
+        let mut blocks = Vec::with_capacity(if keep { self.cfg.n_blocks } else { 0 });
+        for blk in 0..self.cfg.n_blocks {
+            let base = 1 + 4 * blk;
+            let qkv = affine(&self.layers[base], &h);
+            let (attn_in, probs) = self.attention(&qkv, b);
+            let proj_out = affine(&self.layers[base + 1], &attn_in);
+            let mut h_mid = h.clone();
+            for (hv, &p) in h_mid.data_mut().iter_mut().zip(proj_out.data()) {
+                *hv += p;
+            }
+            let z1 = affine(&self.layers[base + 2], &h_mid);
+            let mut u = z1.clone();
+            for v in u.data_mut() {
+                *v = Activation::Gelu.apply(*v);
+            }
+            let z2 = affine(&self.layers[base + 3], &u);
+            let mut h_out = h_mid.clone();
+            for (hv, &p) in h_out.data_mut().iter_mut().zip(z2.data()) {
+                *hv += p;
+            }
+            if keep {
+                blocks.push(BlockCache { h_in: h, qkv, attn_in, h_mid, z1, u, probs });
+            }
+            h = h_out;
+        }
+        // Tied unembedding: logits = W_embᵀ·h (no output bias).
+        let logits = ops::matmul_tn(&self.layers[0].w, &h);
+        let cache = keep.then(|| FwdCache { a0, blocks, h_final: h });
+        (logits, cache)
+    }
+
+    /// Causal multi-head attention over the fused `qkv` (3d×n). Returns
+    /// the concatenated head outputs (d×n) and the softmax rows per
+    /// (sample, head) for the backward pass.
+    fn attention(&self, qkv: &Matrix, b: usize) -> (Matrix, Vec<Matrix>) {
+        let s = self.cfg.seq_len;
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut out = Matrix::zeros(d, b * s);
+        let mut probs = Vec::with_capacity(b * nh);
+        for j in 0..b {
+            let c0 = j * s;
+            for head in 0..nh {
+                let (qr, kr, vr) = (head * hd, d + head * hd, 2 * d + head * hd);
+                let mut p = Matrix::zeros(s, s);
+                let mut scores = vec![0f32; s];
+                for i in 0..s {
+                    // Keys t ≤ i only (causal); stable softmax per row.
+                    let mut maxv = f32::NEG_INFINITY;
+                    for (t, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                        let mut dot = 0f32;
+                        for r in 0..hd {
+                            dot += qkv[(qr + r, c0 + i)] * qkv[(kr + r, c0 + t)];
+                        }
+                        *sc = dot * scale;
+                        maxv = maxv.max(*sc);
+                    }
+                    let mut z = 0f32;
+                    for sc in scores.iter_mut().take(i + 1) {
+                        *sc = (*sc - maxv).exp();
+                        z += *sc;
+                    }
+                    for t in 0..=i {
+                        p[(i, t)] = scores[t] / z;
+                    }
+                }
+                // o[:,i] = Σ_{t≤i} p[i][t]·v[:,t]
+                for i in 0..s {
+                    for r in 0..hd {
+                        let mut acc = 0f32;
+                        for t in 0..=i {
+                            acc += p[(i, t)] * qkv[(vr + r, c0 + t)];
+                        }
+                        out[(head * hd + r, c0 + i)] = acc;
+                    }
+                }
+                probs.push(p);
+            }
+        }
+        (out, probs)
+    }
+
+    /// Gradient through the attention mix: `dout` (d×n) → gradient wrt the
+    /// fused qkv pre-activations (3d×n).
+    fn attention_backward(
+        &self,
+        qkv: &Matrix,
+        probs: &[Matrix],
+        dout: &Matrix,
+        b: usize,
+    ) -> Matrix {
+        let s = self.cfg.seq_len;
+        let d = self.cfg.d_model;
+        let nh = self.cfg.n_heads;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut g = Matrix::zeros(3 * d, b * s);
+        for j in 0..b {
+            let c0 = j * s;
+            for head in 0..nh {
+                let p = &probs[j * nh + head];
+                let (qr, kr, vr) = (head * hd, d + head * hd, 2 * d + head * hd);
+                let or = head * hd;
+                // dV[:,t] = Σ_{i≥t} p[i][t]·dO[:,i]
+                for t in 0..s {
+                    for r in 0..hd {
+                        let mut acc = 0f32;
+                        for i in t..s {
+                            acc += p[(i, t)] * dout[(or + r, c0 + i)];
+                        }
+                        g[(vr + r, c0 + t)] = acc;
+                    }
+                }
+                // dP[i][t] = dO[:,i]·V[:,t]; softmax rows:
+                // dS_i = P_i ⊙ (dP_i − (dP_i·P_i)).
+                let mut ds = Matrix::zeros(s, s);
+                let mut dp = vec![0f32; s];
+                for i in 0..s {
+                    let mut inner = 0f32;
+                    for (t, dpt) in dp.iter_mut().enumerate().take(i + 1) {
+                        let mut acc = 0f32;
+                        for r in 0..hd {
+                            acc += dout[(or + r, c0 + i)] * qkv[(vr + r, c0 + t)];
+                        }
+                        *dpt = acc;
+                        inner += p[(i, t)] * acc;
+                    }
+                    for t in 0..=i {
+                        ds[(i, t)] = p[(i, t)] * (dp[t] - inner);
+                    }
+                }
+                // dQ[:,i] = scale·Σ_{t≤i} dS[i][t]·K[:,t]
+                for i in 0..s {
+                    for r in 0..hd {
+                        let mut acc = 0f32;
+                        for t in 0..=i {
+                            acc += ds[(i, t)] * qkv[(kr + r, c0 + t)];
+                        }
+                        g[(qr + r, c0 + i)] = acc * scale;
+                    }
+                }
+                // dK[:,t] = scale·Σ_{i≥t} dS[i][t]·Q[:,i]
+                for t in 0..s {
+                    for r in 0..hd {
+                        let mut acc = 0f32;
+                        for i in t..s {
+                            acc += ds[(i, t)] * qkv[(qr + r, c0 + i)];
+                        }
+                        g[(kr + r, c0 + t)] = acc * scale;
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    /// Backward from `dL/dlogits` (vocab×n, the 1/n batch averaging
+    /// already folded in by the loss). Returns one capture per layer in
+    /// `layers` order; see the module docs for the tied-embedding and
+    /// shared-QKV capture conventions.
+    pub fn backward(&mut self, dlogits: &Matrix) -> Vec<Capture> {
+        let cache = self.cache.as_ref().expect("forward() before backward()");
+        let b = dlogits.cols() / self.cfg.seq_len;
+        // Tied unembedding (logits = W_embᵀ·h_final): this use contributes
+        // h_final·dlogitsᵀ to the embedding's dw and routes the gradient
+        // into the stream as W_emb·dlogits.
+        let dw_tied = ops::matmul_nt(&cache.h_final, dlogits);
+        let mut dh = ops::matmul(&self.layers[0].w, dlogits);
+
+        let mut caps: Vec<Option<Capture>> = (0..self.layers.len()).map(|_| None).collect();
+        for blk in (0..self.cfg.n_blocks).rev() {
+            let base = 1 + 4 * blk;
+            let bc = &cache.blocks[blk];
+            // MLP sub-block: h_out = h_mid + fc2(gelu(fc1(h_mid))).
+            let g2 = dh.clone();
+            let dw2 = ops::matmul_nt(&g2, &bc.u);
+            let db2 = row_sums(&g2);
+            let mut g1 = ops::matmul_tn(&self.layers[base + 3].w, &g2);
+            for (gv, &zv) in g1.data_mut().iter_mut().zip(bc.z1.data()) {
+                *gv *= Activation::Gelu.grad(zv);
+            }
+            let dw1 = ops::matmul_nt(&g1, &bc.h_mid);
+            let db1 = row_sums(&g1);
+            let mut dh_mid = ops::matmul_tn(&self.layers[base + 2].w, &g1);
+            for (a, &bv) in dh_mid.data_mut().iter_mut().zip(dh.data()) {
+                *a += bv; // residual skip
+            }
+            // Attention sub-block: h_mid = h_in + proj(attn(qkv(h_in))).
+            let g_proj = dh_mid.clone();
+            let dw_proj = ops::matmul_nt(&g_proj, &bc.attn_in);
+            let db_proj = row_sums(&g_proj);
+            let d_attn_in = ops::matmul_tn(&self.layers[base + 1].w, &g_proj);
+            let g_qkv = self.attention_backward(&bc.qkv, &bc.probs, &d_attn_in, b);
+            let dw_qkv = ops::matmul_nt(&g_qkv, &bc.h_in);
+            let db_qkv = row_sums(&g_qkv);
+            let mut dh_in = ops::matmul_tn(&self.layers[base].w, &g_qkv);
+            for (a, &bv) in dh_in.data_mut().iter_mut().zip(dh_mid.data()) {
+                *a += bv; // residual skip
+            }
+            caps[base] = Some(Capture { a: bc.h_in.clone(), g: g_qkv, dw: dw_qkv, db: db_qkv });
+            caps[base + 1] =
+                Some(Capture { a: bc.attn_in.clone(), g: g_proj, dw: dw_proj, db: db_proj });
+            caps[base + 2] = Some(Capture { a: bc.h_mid.clone(), g: g1, dw: dw1, db: db1 });
+            caps[base + 3] = Some(Capture { a: bc.u.clone(), g: g2, dw: dw2, db: db2 });
+            dh = dh_in;
+        }
+        // Embedding: z = W·a₀ + bias, h₀ = z + pos (identity gradient).
+        // dw sums both uses of the tied weight; the factor inputs (a, g)
+        // stay embedding-side (one-hot a₀ against the stream gradient).
+        let g0 = dh;
+        let mut dw0 = ops::matmul_nt(&g0, &cache.a0);
+        for (w, &t) in dw0.data_mut().iter_mut().zip(dw_tied.data()) {
+            *w += t;
+        }
+        let db0 = row_sums(&g0);
+        caps[0] = Some(Capture { a: cache.a0.clone(), g: g0, dw: dw0, db: db0 });
+        caps.into_iter().map(Option::unwrap).collect()
+    }
+}
+
+impl crate::model::Model for Transformer {
+    fn forward(&mut self, x: &Matrix) -> Matrix {
+        Transformer::forward(self, x)
+    }
+
+    fn infer(&self, x: &Matrix) -> Matrix {
+        Transformer::infer(self, x)
+    }
+
+    fn backward(&mut self, dldy: &Matrix) -> Vec<Capture> {
+        Transformer::backward(self, dldy)
+    }
+
+    fn layers(&self) -> &[Dense] {
+        &self.layers
+    }
+
+    fn layers_mut(&mut self) -> &mut [Dense] {
+        &mut self.layers
+    }
+
+    fn clone_model(&self) -> Box<dyn crate::model::Model> {
+        Box::new(self.clone())
+    }
+
+    /// Sequence positions fold into the batch dimension: one input column
+    /// (one sequence) produces `seq_len` output columns.
+    fn cols_per_sample(&self) -> usize {
+        self.cfg.seq_len
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::softmax_xent;
+    use crate::model::Model;
+    use crate::optim::{OptimizerSpec, ALL_OPTIMIZERS};
+    use crate::util::timer::PhaseTimer;
+
+    fn tiny_cfg() -> TransformerConfig {
+        TransformerConfig { vocab: 11, d_model: 8, n_heads: 2, n_blocks: 2, d_ff: 12, seq_len: 5 }
+    }
+
+    fn token_batch(cfg: &TransformerConfig, b: usize, rng: &mut Rng) -> (Matrix, Vec<usize>) {
+        let mut x = Matrix::zeros(cfg.seq_len, b);
+        let mut labels = Vec::with_capacity(b * cfg.seq_len);
+        for j in 0..b {
+            for t in 0..cfg.seq_len {
+                x[(t, j)] = rng.next_below(cfg.vocab as u64) as f32;
+                labels.push(rng.next_below(cfg.vocab as u64) as usize);
+            }
+        }
+        (x, labels)
+    }
+
+    #[test]
+    fn layer_list_matches_the_shape_spec() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(1);
+        let net = Transformer::new(cfg, &mut rng);
+        assert_eq!(net.shapes(), cfg.layer_shapes());
+        assert_eq!(net.layers.len(), 1 + 4 * cfg.n_blocks);
+    }
+
+    #[test]
+    fn sequence_folds_into_batch() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(2);
+        let mut net = Transformer::new(cfg, &mut rng);
+        let (x, labels) = token_batch(&cfg, 3, &mut rng);
+        let out = net.forward(&x);
+        // vocab×(b·s) logits — 3 sequences unroll to 15 activation columns.
+        assert_eq!((out.rows(), out.cols()), (cfg.vocab, 3 * cfg.seq_len));
+        assert_eq!(net.cols_per_sample(), cfg.seq_len);
+        let (_, dl) = softmax_xent(&out, &labels);
+        let caps = net.backward(&dl);
+        assert_eq!(caps.len(), net.layers.len());
+        for (c, l) in caps.iter().zip(&net.layers) {
+            // Every capture sees the full b·s unrolled batch — what
+            // col_mean's rank-1 vectors average over.
+            assert_eq!(c.a.cols(), 3 * cfg.seq_len);
+            assert_eq!(c.g.cols(), 3 * cfg.seq_len);
+            assert_eq!((c.dw.rows(), c.dw.cols()), (l.w.rows(), l.w.cols()));
+            assert_eq!(c.db.len(), l.bias.len());
+        }
+    }
+
+    #[test]
+    fn shared_qkv_projection_shares_one_factor_pair() {
+        // The fused QKV layer is ONE Dense (Eschenhagen et al. "expand"):
+        // one d×d input factor and one 3d×3d output factor for all three
+        // of Q, K, V — not three separate pairs.
+        let cfg = tiny_cfg();
+        let d = cfg.d_model;
+        let mut rng = Rng::new(3);
+        let mut net = Transformer::new(cfg, &mut rng);
+        let (x, labels) = token_batch(&cfg, 4, &mut rng);
+        let out = net.forward(&x);
+        let (_, dl) = softmax_xent(&out, &labels);
+        let caps = net.backward(&dl);
+        assert_eq!(caps[1].a.rows(), d, "qkv factor input is the shared stream");
+        assert_eq!(caps[1].g.rows(), 3 * d, "qkv output gradient is the fused 3d block");
+
+        let mut opt = crate::optim::mkor::Mkor::new(&net.shapes(), Default::default());
+        let mut timer = PhaseTimer::new();
+        opt.step(&mut net.layers, &caps, 0.1, &mut timer);
+        let (l_inv, r_inv) = opt.factors(1);
+        assert_eq!((l_inv.rows(), l_inv.cols()), (3 * d, 3 * d));
+        assert_eq!((r_inv.rows(), r_inv.cols()), (d, d));
+    }
+
+    #[test]
+    fn causal_masking_blocks_future_positions() {
+        // Changing a token can only move logits at its own and LATER
+        // positions — earlier columns of the same sample stay bitwise
+        // identical, other samples are untouched.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(4);
+        let net = Transformer::new(cfg, &mut rng);
+        let (x, _) = token_batch(&cfg, 2, &mut rng);
+        let base = net.infer(&x);
+        let mut x2 = x.clone();
+        let flip_t = 3;
+        x2[(flip_t, 0)] = (x[(flip_t, 0)] as usize as u64 + 1) as f32 % cfg.vocab as f32;
+        let out = net.infer(&x2);
+        for j in 0..2 {
+            for t in 0..cfg.seq_len {
+                let col = j * cfg.seq_len + t;
+                let same = (0..cfg.vocab).all(|r| base[(r, col)].to_bits() == out[(r, col)].to_bits());
+                if j == 1 || t < flip_t {
+                    assert!(same, "sample {j} pos {t} must not see the future edit");
+                } else if t == flip_t {
+                    assert!(!same, "the edited position itself must move");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infer_matches_forward_and_leaves_training_state_alone() {
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(5);
+        let mut net = Transformer::new(cfg, &mut rng);
+        let (x, labels) = token_batch(&cfg, 2, &mut rng);
+        let out = net.forward(&x);
+        let quiet = net.infer(&x);
+        assert_eq!(out.data(), quiet.data());
+        // infer didn't clobber the forward cache — backward still works.
+        let (_, dl) = softmax_xent(&out, &labels);
+        let caps = net.backward(&dl);
+        assert_eq!(caps.len(), net.layers.len());
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Numerical check through every projection kind: the tied
+        // embedding (both uses summed), fused QKV + attention softmax,
+        // output projection, both MLP layers, and the residual paths.
+        let cfg = tiny_cfg();
+        let mut rng = Rng::new(42);
+        let mut net = Transformer::new(cfg, &mut rng);
+        let (x, labels) = token_batch(&cfg, 3, &mut rng);
+        let logits = net.forward(&x);
+        let (_, dlogits) = softmax_xent(&logits, &labels);
+        let caps = net.backward(&dlogits);
+
+        let eps = 1e-3f32;
+        for li in 0..net.layers.len() {
+            let (rows, cols) = (net.layers[li].w.rows(), net.layers[li].w.cols());
+            for &(i, j) in &[(0usize, 0usize), (1, 2), (rows - 1, cols - 1)] {
+                let orig = net.layers[li].w[(i, j)];
+                net.layers[li].w[(i, j)] = orig + eps;
+                let (lp, _) = softmax_xent(&net.infer(&x), &labels);
+                net.layers[li].w[(i, j)] = orig - eps;
+                let (lm, _) = softmax_xent(&net.infer(&x), &labels);
+                net.layers[li].w[(i, j)] = orig;
+                let num = (lp - lm) / (2.0 * eps as f64);
+                let ana = caps[li].dw[(i, j)] as f64;
+                assert!(
+                    (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                    "layer {li} ({i},{j}): numeric {num} vs analytic {ana}"
+                );
+            }
+            // One bias entry per layer.
+            let orig = net.layers[li].bias[0];
+            net.layers[li].bias[0] = orig + eps;
+            let (lp, _) = softmax_xent(&net.infer(&x), &labels);
+            net.layers[li].bias[0] = orig - eps;
+            let (lm, _) = softmax_xent(&net.infer(&x), &labels);
+            net.layers[li].bias[0] = orig;
+            let num = (lp - lm) / (2.0 * eps as f64);
+            let ana = caps[li].db[0] as f64;
+            assert!(
+                (num - ana).abs() < 2e-2 * (1.0 + num.abs()),
+                "layer {li} bias: numeric {num} vs analytic {ana}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_registry_optimizer_steps_the_transformer() {
+        // The whole point of the Dense-capture contract: all eight
+        // optimizers precondition the transformer with zero special cases.
+        let cfg = tiny_cfg();
+        for name in ALL_OPTIMIZERS {
+            let mut rng = Rng::new(7);
+            let mut net = Transformer::new(cfg, &mut rng);
+            let (x, labels) = token_batch(&cfg, 2, &mut rng);
+            let mut opt = OptimizerSpec::parse(name).unwrap().build(&net.shapes());
+            let mut timer = PhaseTimer::new();
+            for _ in 0..3 {
+                let out = net.forward(&x);
+                let (loss, dl) = softmax_xent(&out, &labels);
+                assert!(loss.is_finite(), "{name}");
+                let caps = net.backward(&dl);
+                opt.step(&mut net.layers, &caps, 0.05, &mut timer);
+                opt.observe_loss(loss);
+            }
+            assert!(!net.diverged(), "{name} produced non-finite weights");
+        }
+    }
+}

@@ -55,7 +55,7 @@ impl MkorH {
             mkor: Mkor::new(shapes, mkor_cfg),
             fallback: SgdMomentum::new(shapes, momentum),
             switch_cfg,
-            rate_ema: Ema::new(0.95),
+            rate_ema: Ema::new(switch_cfg.beta),
             peak_rate: 0.0,
             last_loss: None,
             switched_at: None,
@@ -295,6 +295,76 @@ mod tests {
         let mut c = MkorH::new(&shapes, MkorConfig::default(), cfg);
         c.load_state_dict(&sd2).unwrap();
         assert_eq!(c.switched_at(), a.switched_at());
+    }
+
+    #[test]
+    fn switch_beta_reaches_the_rate_ema() {
+        // Regression: `switch_beta` used to parse through the spec grammar
+        // but `MkorH::new` hardcoded `Ema::new(0.95)`, so the knob silently
+        // did nothing. Two betas on the same decline-then-plateau loss
+        // series must now produce *different* switch steps (the slower EMA
+        // takes longer to decay below the ratio threshold).
+        let shapes = [LayerShape::new(4, 4)];
+        let run = |beta: f64| {
+            let cfg = SwitchConfig { beta, switch_ratio: 0.1, min_steps: 10 };
+            let mut h = MkorH::new(&shapes, MkorConfig::default(), cfg);
+            let mut loss = 10.0;
+            for t in 0..400 {
+                h.t = t;
+                h.observe_loss(loss);
+                loss -= if t < 60 { 0.1 } else { 0.0 };
+            }
+            h.switched_at()
+        };
+        let fast = run(0.8).expect("beta=0.8 never switched");
+        let slow = run(0.99).expect("beta=0.99 never switched");
+        assert!(
+            fast < slow,
+            "switch step must move with beta: beta=0.8 at {fast}, beta=0.99 at {slow}"
+        );
+        // And the spec-grammar route carries the beta into construction:
+        // the built optimizer re-reports it via its canonical spec.
+        let spec = OptimizerSpec::parse("mkor-h:switch_beta=0.8,min_steps=10").unwrap();
+        let built = spec.build(&shapes);
+        assert!(
+            built.spec().canonical().contains("switch_beta=0.8"),
+            "{}",
+            built.spec().canonical()
+        );
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_configured_beta() {
+        // Beta is configuration, not state: the round-trip restores the EMA
+        // value/steps while the freshly-built hybrid supplies the beta. A
+        // resumed non-default-beta run must keep switching like the
+        // uninterrupted one (and unlike the default-beta run).
+        let shapes = [LayerShape::new(4, 4)];
+        let cfg = SwitchConfig { beta: 0.8, switch_ratio: 0.1, min_steps: 10 };
+        let mut a = MkorH::new(&shapes, MkorConfig::default(), cfg);
+        let mut loss = 10.0;
+        for t in 0..40 {
+            a.t = t;
+            a.observe_loss(loss);
+            loss -= 0.1;
+        }
+        let sd = a.state_dict();
+        let mut b = MkorH::new(&shapes, MkorConfig::default(), cfg);
+        b.load_state_dict(&sd).unwrap();
+        assert_eq!(b.switch_cfg.beta, 0.8);
+        assert_eq!(b.spec(), a.spec());
+        let mut loss_b = loss;
+        for t in 40..400 {
+            a.t = t;
+            b.t = t;
+            a.observe_loss(loss);
+            b.observe_loss(loss_b);
+            let d = if t < 60 { 0.1 } else { 0.0 };
+            loss -= d;
+            loss_b -= d;
+        }
+        assert!(a.switched());
+        assert_eq!(a.switched_at(), b.switched_at());
     }
 
     #[test]

@@ -262,7 +262,11 @@ impl Optimizer for Mkor {
                 // Lines 7–8: SM-based factor inversion.
                 Mkor::sm_update(&mut st.l_inv, &g, self.cfg.gamma, &mut st.scratch_out);
                 Mkor::sm_update(&mut st.r_inv, &a, self.cfg.gamma, &mut st.scratch_in);
-                timer.add("factor", t0.elapsed());
+                // One elapsed sample feeds the phase timer, the trace event
+                // and the histogram, so the three always agree on the same
+                // update (they used to sample the clock independently).
+                let factor_elapsed = t0.elapsed();
+                timer.add("factor", factor_elapsed);
                 if obs::enabled() {
                     if r1.triggered || r2.triggered {
                         obs::emit(
@@ -277,7 +281,7 @@ impl Optimizer for Mkor {
                         TraceEvent::new(EventKind::InverseUpdate)
                             .num("step", self.t as f64)
                             .num("layer", idx as f64)
-                            .num("secs", t0.elapsed().as_secs_f64()),
+                            .num("secs", factor_elapsed.as_secs_f64()),
                     );
                     obs::registry::with_global(|r| {
                         r.inc("mkor.inverse_updates", 1);
@@ -285,7 +289,7 @@ impl Optimizer for Mkor {
                         if trig > 0 {
                             r.inc("mkor.stabilizer_triggers", trig);
                         }
-                        r.observe("mkor.factor_secs", t0.elapsed().as_secs_f64());
+                        r.observe("mkor.factor_secs", factor_elapsed.as_secs_f64());
                     });
                 }
             }
@@ -318,20 +322,29 @@ impl Optimizer for Mkor {
     }
 
     fn state_bytes(&self) -> usize {
-        // Factor inverses (d_out² + d_in²) + two rank-1 vectors per layer;
-        // half precision halves the storage (Table 1's O(2d²/2)).
-        let elem = if self.cfg.half_sync.is_some() { 2 } else { 4 };
-        let factors: usize = self
+        // Factor inverses are held as f32 `Matrix` regardless of the wire
+        // format — `half_sync` quantizes only the 2d rank-1 vectors that
+        // cross the network, never L⁻¹/R⁻¹ themselves — so the inverses
+        // always count at 4 bytes. (Table 1's modeled ÷2 applies to the
+        // paper's half-precision *storage* variant of Lemma 3.2; this
+        // implementation keeps resident factors in f32 for the bitwise
+        // checkpoint/restore guarantees, and the ÷2 shows up only in
+        // `sync_bytes_last_step`.)
+        let vec_elem = if self.cfg.half_sync.is_some() { 2 } else { 4 };
+        let bytes: usize = self
             .shapes
             .iter()
-            .map(|s| s.d_out * s.d_out + s.d_in * s.d_in + s.d_out + s.d_in)
+            .map(|s| {
+                (s.d_out * s.d_out + s.d_in * s.d_in) * 4
+                    + (s.d_out + s.d_in) * vec_elem
+            })
             .sum();
         let backend = match &self.backend {
             BackendState::Sgd(b) => b.state_bytes(),
             BackendState::Adam(b) => b.state_bytes(),
             BackendState::Lamb(b) => b.state_bytes(),
         };
-        factors * elem + backend
+        bytes + backend
     }
 
     fn sync_bytes_last_step(&self) -> usize {
@@ -518,6 +531,32 @@ mod tests {
         let mut o2 = Mkor::new(&shapes, MkorConfig::default()); // bf16
         o2.step(&mut l1, std::slice::from_ref(&cap), 0.01, &mut timer);
         assert_eq!(o2.sync_bytes_last_step(), (64 + 64) * 2);
+    }
+
+    #[test]
+    fn state_bytes_counts_f32_inverses_and_half_wire_vectors() {
+        // The factor inverses live in f32 no matter what the wire format
+        // is; only the 2d rank-1 vectors shrink under half_sync. A bf16
+        // config must therefore differ from fp32 by exactly 2·(d_out+d_in)
+        // bytes per layer — not by half the factor storage.
+        let shapes = [LayerShape::new(8, 6), LayerShape::new(6, 4)];
+        let factor_bytes: usize = shapes
+            .iter()
+            .map(|s| (s.d_out * s.d_out + s.d_in * s.d_in) * 4)
+            .sum();
+        let vec_elems: usize = shapes.iter().map(|s| s.d_out + s.d_in).sum();
+
+        let mut full = MkorConfig::default();
+        full.half_sync = None;
+        let o_full = Mkor::new(&shapes, full);
+        let o_half = Mkor::new(&shapes, MkorConfig::default()); // bf16
+        let backend = match &o_full.backend {
+            BackendState::Sgd(b) => b.state_bytes(),
+            _ => unreachable!("default backend is SGD"),
+        };
+        assert_eq!(o_full.state_bytes(), factor_bytes + vec_elems * 4 + backend);
+        assert_eq!(o_half.state_bytes(), factor_bytes + vec_elems * 2 + backend);
+        assert_eq!(o_full.state_bytes() - o_half.state_bytes(), vec_elems * 2);
     }
 
     #[test]

@@ -38,6 +38,9 @@ pub struct XlaTrainerConfig {
     pub half_sync: bool,
     /// Enable the MKOR-H switch (None = plain MKOR).
     pub hybrid_switch_ratio: Option<f64>,
+    /// EMA smoothing of the loss-decrease rate the switch rule watches
+    /// (only meaningful with `hybrid_switch_ratio`).
+    pub hybrid_switch_beta: f64,
     /// Stabilizer threshold ε on ‖J⁻¹‖∞ (checked in Rust between steps).
     pub stabilizer_epsilon: f64,
     pub stabilizer_zeta: f32,
@@ -53,6 +56,7 @@ impl Default for XlaTrainerConfig {
             inv_freq: 10,
             half_sync: true,
             hybrid_switch_ratio: None,
+            hybrid_switch_beta: SwitchConfig::default().beta,
             stabilizer_epsilon: 100.0,
             stabilizer_zeta: 0.5,
         }
@@ -76,6 +80,7 @@ impl XlaTrainerConfig {
             Some(ratio) => {
                 let mut switch = SwitchConfig::default();
                 switch.switch_ratio = ratio;
+                switch.beta = self.hybrid_switch_beta;
                 OptimizerSpec::MkorH { mkor, switch }
             }
             None => OptimizerSpec::Mkor(mkor),
@@ -124,6 +129,7 @@ impl XlaTrainer {
             .iter()
             .map(|&(din, _)| identity_flat(din))
             .collect();
+        let switch_beta = cfg.hybrid_switch_beta;
         let spec = cfg.optimizer_spec();
         let record = RunRecord {
             name: format!("xla-{}", bundle.meta.preset),
@@ -141,7 +147,7 @@ impl XlaTrainer {
             record,
             t: 0,
             switched: false,
-            rate_ema: Ema::new(0.95),
+            rate_ema: Ema::new(switch_beta),
             peak_rate: 0.0,
             last_loss: None,
         }

@@ -94,7 +94,7 @@ impl fmt::Display for SweepError {
             SweepError::UnknownTask { name } => write!(
                 f,
                 "unknown task `{name}`; valid tasks: glue, images, \
-                 autoencoder, text"
+                 autoencoder, text, charlm"
             ),
         }
     }
@@ -235,6 +235,10 @@ pub fn task_by_name(name: &str) -> Result<TaskKind, SweepError> {
             feat_dim: 96,
             vocab: 64,
         }),
+        "charlm" => Ok(TaskKind::CharLm {
+            vocab: 48,
+            seq_len: 16,
+        }),
         _ => Err(SweepError::unknown_task(name)),
     }
 }
@@ -246,6 +250,7 @@ pub fn task_label(task: &TaskKind) -> String {
         TaskKind::Images => "images".to_string(),
         TaskKind::Autoencoder => "autoencoder".to_string(),
         TaskKind::TextClass { .. } => "text".to_string(),
+        TaskKind::CharLm { .. } => "charlm".to_string(),
     }
 }
 
@@ -649,7 +654,7 @@ mod tests {
 
     #[test]
     fn tasks_resolve_by_name() {
-        for name in ["glue", "images", "autoencoder", "text"] {
+        for name in ["glue", "images", "autoencoder", "text", "charlm"] {
             let task = task_by_name(name).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(task_label(&task), name);
         }

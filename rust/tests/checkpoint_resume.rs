@@ -13,7 +13,7 @@ use mkor::coordinator::{Target, TrainerBuilder};
 use mkor::data::classification::{Dataset, TaskConfig};
 use mkor::experiments::convergence::{run_record, RunOpts, TaskKind};
 use mkor::linalg::{ops, Matrix};
-use mkor::model::{Activation, Capture, Dense, LayerShape, Mlp};
+use mkor::model::{Activation, Capture, Dense, LayerShape, Mlp, Model};
 use mkor::optim::{Optimizer, OptimizerSpec, ALL_OPTIMIZERS};
 use mkor::util::timer::PhaseTimer;
 use mkor::util::Rng;
@@ -156,7 +156,7 @@ fn bitwise_resume_equivalence_for_key_specs() {
         for (step, (a, b)) in straight_losses.iter().zip(&resumed_losses).enumerate() {
             assert_eq!(a.to_bits(), b.to_bits(), "{spec}: loss differs at step {step}");
         }
-        for (a, b) in straight.leader().layers.iter().zip(&resumed.leader().layers) {
+        for (a, b) in straight.leader().layers().iter().zip(resumed.leader().layers()) {
             assert_eq!(a.w.data(), b.w.data(), "{spec}: final weights differ");
             assert_eq!(a.bias, b.bias, "{spec}: final biases differ");
         }

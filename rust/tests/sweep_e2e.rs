@@ -43,6 +43,29 @@ fn braced_3x3_grid_is_byte_identical_for_any_job_count() {
 }
 
 #[test]
+fn charlm_transformer_sweep_is_byte_identical_for_any_job_count() {
+    // The causal-transformer task folds sequence positions into the batch
+    // dimension, so its shard math is the k-scaled path in the trainer —
+    // the `--jobs 1` vs `--jobs N` contract must hold there too.
+    let task = TaskKind::CharLm { vocab: 48, seq_len: 16 };
+    let grid =
+        SweepGrid::parse("mkor:f=2;mkor-h:min_steps=2,switch_beta=0.8", &task, 3).unwrap();
+    assert_eq!(grid.len(), 2);
+    let mut opts = tiny_opts(1);
+    opts.run.steps = 4;
+    opts.run.batch = 8;
+    opts.run.hidden = Vec::new(); // charlm ignores hidden widths
+    let serial = run_sweep(&grid, &opts);
+    opts.jobs = 3;
+    let fanned = run_sweep(&grid, &opts);
+    assert_eq!(serial.to_csv_deterministic(), fanned.to_csv_deterministic());
+    for c in &fanned.cells {
+        assert_eq!(c.status, CellStatus::Ok, "{}", c.spec);
+        assert!(c.final_loss().is_finite(), "{}", c.spec);
+    }
+}
+
+#[test]
 fn seed_axis_and_templates_expand_into_independent_cells() {
     let task = TaskKind::Images;
     let grid = SweepGrid::parse("mkor:f={1,5};sgd x seed=0..2", &task, 7).unwrap();
