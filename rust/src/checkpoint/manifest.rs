@@ -24,6 +24,12 @@
 //! missing manifest, missing manifest key, unsupported version, hash
 //! mismatch, truncated/corrupt blob, wrong spec — is a distinct
 //! [`CheckpointError`].
+//!
+//! A *retention* policy can additionally stamp whole checkpoint
+//! directories: `step-<N>/` subdirectories (named by [`retained_dir_name`])
+//! under the rolling checkpoint directory survive the rolling save's
+//! file-level GC, and [`gc_retained`] prunes them to the `k` best by
+//! [`retained_metric`] (latest eval metric, else negated final loss).
 
 use crate::checkpoint::state::{fnv1a64, StateDict, StateError};
 use crate::coordinator::RunRecord;
@@ -304,6 +310,84 @@ impl Checkpoint {
     }
 }
 
+/// Name of the step-stamped retention subdirectory for `step`
+/// (`step-200`). Retained checkpoints live *under* the rolling checkpoint
+/// directory; the rolling save's GC only removes stamped files, so these
+/// subdirectories survive every later snapshot.
+pub fn retained_dir_name(step: usize) -> String {
+    format!("step-{step}")
+}
+
+/// Every retained checkpoint under `root`, as `(step, path)` pairs sorted
+/// by step. Entries that are not directories or do not parse as
+/// `step-<N>` are ignored (the rolling snapshot's blobs live alongside).
+pub fn list_retained(root: &Path) -> Vec<(usize, PathBuf)> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(root) {
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let Some(step) = name.strip_prefix("step-").and_then(|s| s.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            if entry.path().is_dir() {
+                out.push((step, entry.path()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Ranking metric of one retained checkpoint (higher is better): the most
+/// recent finite `eval_metric` in the directory's run record, falling
+/// back to the negated `final_loss` for runs that never evaluated. `None`
+/// when the directory has no readable record — [`gc_retained`] ranks such
+/// directories last.
+pub fn retained_metric(dir: &Path) -> Option<f64> {
+    let record_path = std::fs::read_dir(dir).ok()?.flatten().find_map(|e| {
+        let name = e.file_name().to_string_lossy().into_owned();
+        (name.starts_with("record-") && name.ends_with(".json")).then(|| e.path())
+    })?;
+    let record = Json::from_file(&record_path).ok()?;
+    if let Some(steps) = record.get("steps").and_then(Json::as_arr) {
+        for s in steps.iter().rev() {
+            let m = s.get("eval_metric").and_then(Json::as_f64).filter(|m| m.is_finite());
+            if let Some(m) = m {
+                return Some(m);
+            }
+        }
+    }
+    record
+        .get("final_loss")
+        .and_then(Json::as_f64)
+        .filter(|l| l.is_finite())
+        .map(|l| -l)
+}
+
+/// Prune retained checkpoints under `root` to the `keep_best` best by
+/// [`retained_metric`], ties broken toward the newest step; directories
+/// without a metric rank last. Returns the directories removed.
+/// `keep_best == 0` means keep everything.
+pub fn gc_retained(root: &Path, keep_best: usize) -> anyhow::Result<Vec<PathBuf>> {
+    if keep_best == 0 {
+        return Ok(Vec::new());
+    }
+    let mut ranked: Vec<(f64, usize, PathBuf)> = list_retained(root)
+        .into_iter()
+        .map(|(step, path)| (retained_metric(&path).unwrap_or(f64::NEG_INFINITY), step, path))
+        .collect();
+    // Best metric first; among equals, the newest step survives.
+    ranked.sort_by(|a, b| b.0.total_cmp(&a.0).then(b.1.cmp(&a.1)));
+    let mut removed = Vec::new();
+    for (_, _, path) in ranked.into_iter().skip(keep_best) {
+        std::fs::remove_dir_all(&path)
+            .map_err(|e| anyhow::anyhow!("removing {}: {e}", path.display()))?;
+        removed.push(path);
+    }
+    Ok(removed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -443,6 +527,73 @@ mod tests {
             .unwrap();
         let e = Checkpoint::load(&dir).unwrap_err();
         assert!(matches!(e, CheckpointError::BadVersion { found: 9, .. }), "{e:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Fabricate a retained `step-<N>/` directory holding only a run
+    /// record (all [`retained_metric`] reads).
+    fn retained_record(root: &Path, step: usize, eval: Option<f64>, final_loss: f64) {
+        let dir = root.join(retained_dir_name(step));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = Json::obj();
+        s.set("step", Json::Num(step as f64))
+            .set("loss", Json::Num(final_loss))
+            .set("eval_metric", eval.map_or(Json::Null, Json::Num));
+        let mut rec = Json::obj();
+        rec.set("final_loss", Json::Num(final_loss))
+            .set("steps", Json::Arr(vec![s]));
+        rec.to_file(&dir.join(format!("record-{step}.json"))).unwrap();
+    }
+
+    #[test]
+    fn retained_gc_keeps_best_k() {
+        let dir = temp_dir("retention");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Four retention points: three with eval metrics plus one that
+        // never evaluated (ranked by negated loss — below any accuracy).
+        retained_record(&dir, 2, Some(0.6), 1.4);
+        retained_record(&dir, 4, Some(0.9), 1.1);
+        retained_record(&dir, 6, Some(0.8), 1.0);
+        retained_record(&dir, 8, None, 0.9);
+        assert_eq!(list_retained(&dir).len(), 4);
+        assert_eq!(retained_metric(&dir.join("step-4")), Some(0.9));
+        assert_eq!(retained_metric(&dir.join("step-8")), Some(-0.9));
+        // keep_best = 0 keeps everything.
+        assert!(gc_retained(&dir, 0).unwrap().is_empty());
+        assert_eq!(list_retained(&dir).len(), 4);
+        // Keep the 2 best by eval metric: steps 4 (0.9) and 6 (0.8).
+        let removed = gc_retained(&dir, 2).unwrap();
+        assert_eq!(removed.len(), 2);
+        let kept: Vec<usize> = list_retained(&dir).into_iter().map(|(s, _)| s).collect();
+        assert_eq!(kept, vec![4, 6]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn retention_ties_keep_the_newest_step() {
+        let dir = temp_dir("retention-ties");
+        std::fs::create_dir_all(&dir).unwrap();
+        retained_record(&dir, 10, Some(0.5), 2.0);
+        retained_record(&dir, 20, Some(0.5), 2.0);
+        retained_record(&dir, 30, Some(0.5), 2.0);
+        gc_retained(&dir, 1).unwrap();
+        let kept: Vec<usize> = list_retained(&dir).into_iter().map(|(s, _)| s).collect();
+        assert_eq!(kept, vec![30]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rolling_save_gc_spares_retained_subdirectories() {
+        let dir = temp_dir("spare");
+        let mut ckpt = sample();
+        ckpt.save(&dir).unwrap();
+        retained_record(&dir, 17, Some(0.7), 1.0);
+        // A later rolling save GCs stamped *files* only — the retained
+        // subdirectory (and the record inside it) survives.
+        ckpt.step = 18;
+        ckpt.save(&dir).unwrap();
+        assert_eq!(list_retained(&dir), vec![(17, dir.join("step-17"))]);
+        assert_eq!(retained_metric(&dir.join("step-17")), Some(0.7));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -25,11 +25,12 @@
 //! mkor-h, kfac and lamb).
 //!
 //! Entry points: `TrainerBuilder::checkpoint_every/checkpoint_dir/
-//! resume_from`, the `RunOpts` checkpoint knobs in
-//! [`crate::experiments::convergence`], and the CLI
-//! (`mkor sim --checkpoint-every N --checkpoint-dir D --resume-from D`,
-//! `mkor sweep --resume`, `mkor ckpt inspect D` to print a checkpoint's
-//! manifest and state).
+//! resume_from` (plus `keep_every`/`keep_best` for step-stamped retention
+//! pruned to the best eval metrics — see [`manifest::gc_retained`]), the
+//! `RunOpts` checkpoint knobs in [`crate::experiments::convergence`], and
+//! the CLI (`mkor sim --checkpoint-every N --checkpoint-dir D
+//! --resume-from D --keep-every N --keep-best K`, `mkor sweep --resume`,
+//! `mkor ckpt inspect D` to print a checkpoint's manifest and state).
 //!
 //! The state layer is plain data and can be used directly:
 //!
@@ -49,6 +50,9 @@ pub mod manifest;
 pub mod snapshot;
 pub mod state;
 
-pub use manifest::{Checkpoint, CheckpointError, CHECKPOINT_FORMAT_VERSION, MANIFEST_FILE};
+pub use manifest::{
+    gc_retained, list_retained, retained_dir_name, retained_metric, Checkpoint, CheckpointError,
+    CHECKPOINT_FORMAT_VERSION, MANIFEST_FILE,
+};
 pub use snapshot::Checkpointable;
 pub use state::{fnv1a64, StateDict, StateError, Tensor, Value, STATE_FORMAT_VERSION};

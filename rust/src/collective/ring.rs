@@ -29,7 +29,8 @@ fn trace_allreduce(wire: &str, workers: usize, stats: &AllreduceStats, secs: f64
             .num("workers", workers as f64)
             .num("bytes_per_worker", stats.bytes_per_worker as f64)
             .num("comm_steps", stats.steps as f64)
-            .num("secs", secs),
+            .num("secs", secs)
+            .maybe_under(obs::span::current()),
     );
     obs::registry::with_global(|r| {
         r.inc("collective.allreduces", 1);

@@ -58,6 +58,15 @@ pub struct TrainerConfig {
     /// Task label recorded in the checkpoint manifest; resume validates it
     /// against the resuming run's label when both are non-empty.
     pub checkpoint_task: String,
+    /// Additionally *retain* a step-stamped checkpoint (`step-<t>/` under
+    /// `checkpoint_dir`) every n completed steps (0 = never). Unlike the
+    /// rolling snapshot, retained directories are not overwritten — they
+    /// are the restore points a best-k policy ranks.
+    pub keep_every: usize,
+    /// Keep only the `k` best retained checkpoints by eval metric,
+    /// garbage-collecting the rest after each retention save (0 = keep
+    /// all). Requires `keep_every`.
+    pub keep_best: usize,
 }
 
 impl Default for TrainerConfig {
@@ -71,6 +80,8 @@ impl Default for TrainerConfig {
             checkpoint_every: 0,
             checkpoint_dir: None,
             checkpoint_task: String::new(),
+            keep_every: 0,
+            keep_best: 0,
         }
     }
 }
@@ -197,6 +208,20 @@ impl TrainerBuilder {
         self
     }
 
+    /// Retain a step-stamped checkpoint (`step-<t>/` under the checkpoint
+    /// dir) every `n` completed steps (0 disables).
+    pub fn keep_every(mut self, n: usize) -> Self {
+        self.cfg.keep_every = n;
+        self
+    }
+
+    /// Keep only the `k` best retained checkpoints by eval metric
+    /// (0 keeps all). Only meaningful with [`TrainerBuilder::keep_every`].
+    pub fn keep_best(mut self, k: usize) -> Self {
+        self.cfg.keep_best = k;
+        self
+    }
+
     /// Restore model/optimizer/schedule state and the run record from a
     /// checkpoint directory at build time. The checkpoint's canonical spec
     /// string must match this builder's spec; shapes are validated as the
@@ -241,6 +266,12 @@ pub struct Trainer {
     pub record: RunRecord,
     t: usize,
     diverged: bool,
+    /// EMA of the training loss (β = 0.9), reported by heartbeats only —
+    /// it never enters the step records or any artifact.
+    loss_ema: Option<f64>,
+    /// Last heartbeat (emit instant, step count then); telemetry-gated
+    /// state, only touched when tracing is enabled.
+    heartbeat_mark: Option<(std::time::Instant, usize)>,
 }
 
 impl Trainer {
@@ -286,6 +317,8 @@ impl Trainer {
             record,
             t: 0,
             diverged: false,
+            loss_ema: None,
+            heartbeat_mark: None,
         }
     }
 
@@ -404,22 +437,47 @@ impl Trainer {
     /// record one eval short and break bitwise resume equivalence). A
     /// write failure warns and keeps training: losing a snapshot must not
     /// kill the run that produces the next.
+    ///
+    /// Two independent cadences share the hook: the rolling snapshot
+    /// (`checkpoint_every`, overwritten in place) and retention
+    /// (`keep_every`, step-stamped `step-<t>/` subdirectories pruned to
+    /// the `keep_best` best eval metrics).
     pub fn checkpoint_tick(&self) {
-        if self.cfg.checkpoint_every == 0
-            || self.t == 0
-            || self.t % self.cfg.checkpoint_every != 0
-        {
-            return;
-        }
         let Some(dir) = &self.cfg.checkpoint_dir else {
             return;
         };
-        if let Err(e) = self.save_checkpoint(dir) {
-            eprintln!(
-                "warning: checkpoint at step {} into {} failed: {e}",
-                self.t,
-                dir.display()
-            );
+        let due = |every: usize| every > 0 && self.t > 0 && self.t % every == 0;
+        // Rolling snapshot: overwritten in place, always the latest.
+        if due(self.cfg.checkpoint_every) {
+            if let Err(e) = self.save_checkpoint(dir) {
+                eprintln!(
+                    "warning: checkpoint at step {} into {} failed: {e}",
+                    self.t,
+                    dir.display()
+                );
+            }
+        }
+        // Retention: a step-stamped subdirectory that survives later
+        // rolling saves (the manifest GC removes stamped *files* only),
+        // then best-k garbage collection over all retained steps.
+        if due(self.cfg.keep_every) {
+            let retained = dir.join(crate::checkpoint::retained_dir_name(self.t));
+            if let Err(e) = self.save_checkpoint(&retained) {
+                eprintln!(
+                    "warning: retained checkpoint at step {} into {} failed: {e}",
+                    self.t,
+                    retained.display()
+                );
+            } else if self.cfg.keep_best > 0 {
+                match crate::checkpoint::gc_retained(dir, self.cfg.keep_best) {
+                    Ok(removed) => {
+                        for gone in removed {
+                            obs::log::debug(&format!("retention gc: {}", gone.display()));
+                        }
+                    }
+                    Err(e) => eprintln!("warning: retention gc under {}: {e}", dir.display()),
+                }
+            }
         }
     }
 
@@ -445,6 +503,11 @@ impl Trainer {
             return None;
         }
         let t0 = std::time::Instant::now();
+        // Root span of everything this step does; the guard closes when
+        // the function returns (divergence exits included). Phase spans
+        // and leaf events (gemm/allreduce/inverse_update) nest under it.
+        let step_span = obs::span::span("step");
+        let step_parent = step_span.id();
         let b = x.cols();
         let ranges = self.shard_ranges(b);
         let lr = self.schedule.lr(self.t);
@@ -485,11 +548,18 @@ impl Trainer {
                         if sx.cols() == 0 {
                             return (0.0f64, Vec::new());
                         }
+                        // Fresh threads have empty span stacks, so the
+                        // step span is handed off explicitly; engine
+                        // dispatches inside forward/backward then nest
+                        // under these phase spans automatically.
+                        let forward_span = obs::span::span_under("forward", step_parent);
                         let out = replica.forward(sx);
                         let (loss, dldy) = match st {
                             Target::Labels(l) => softmax_xent(&out, l),
                             Target::Dense(y) => mse_loss(&out, y),
                         };
+                        drop(forward_span);
+                        let _backward_span = obs::span::span_under("backward", step_parent);
                         (loss, replica.backward(&dldy))
                     })
                 })
@@ -510,11 +580,17 @@ impl Trainer {
             self.mark_diverged(loss, lr, t0.elapsed().as_secs_f64());
             return None;
         }
+        // Heartbeat bookkeeping (reported only; never enters artifacts).
+        self.loss_ema = Some(match self.loss_ema {
+            None => loss,
+            Some(ema) => 0.9 * ema + 0.1 * loss,
+        });
 
         let n_layers = self.replicas[0].layers().len();
         let mut grad_bytes = 0usize;
         let mut caps: Vec<Capture> = Vec::with_capacity(n_layers);
         let t_comm = std::time::Instant::now();
+        let comm_span = obs::span::span("allreduce");
         for layer in 0..n_layers {
             // All-reduce the per-worker weight gradients (real ring).
             let mut bufs: Vec<Vec<f32>> = results
@@ -581,6 +657,7 @@ impl Trainer {
             }
             caps.push(Capture { a, g, dw, db });
         }
+        drop(comm_span);
         self.phases.add("allreduce", t_comm.elapsed());
 
         // ---- optimizer step on the leader -------------------------------
@@ -609,11 +686,14 @@ impl Trainer {
 
         // ---- broadcast leader weights back to replicas ------------------
         let t_bc = std::time::Instant::now();
-        let (leader, rest) = self.replicas.split_first_mut().unwrap();
-        for replica in rest {
-            for (dst, src) in replica.layers_mut().iter_mut().zip(leader.layers()) {
-                dst.w.data_mut().copy_from_slice(src.w.data());
-                dst.bias.copy_from_slice(&src.bias);
+        {
+            let _broadcast_span = obs::span::span("broadcast");
+            let (leader, rest) = self.replicas.split_first_mut().unwrap();
+            for replica in rest {
+                for (dst, src) in replica.layers_mut().iter_mut().zip(leader.layers()) {
+                    dst.w.data_mut().copy_from_slice(src.w.data());
+                    dst.bias.copy_from_slice(&src.bias);
+                }
             }
         }
         self.phases.add("broadcast", t_bc.elapsed());
@@ -627,16 +707,37 @@ impl Trainer {
                 .num("loss", loss)
                 .num("second_order_secs", second_order_secs)
                 .num("grad_bytes", grad_bytes as f64)
-                .num("sync_bytes", sync_bytes as f64);
+                .num("sync_bytes", sync_bytes as f64)
+                .maybe_under(obs::span::current());
             if !self.cfg.checkpoint_task.is_empty() {
                 ev = ev.label("task", &self.cfg.checkpoint_task);
             }
             obs::emit(ev);
+            let state_bytes = self.opt.state_bytes();
             obs::registry::with_global(|r| {
                 r.inc("trainer.steps", 1);
                 r.observe("trainer.step_secs", wall_secs);
                 r.observe("trainer.second_order_secs", second_order_secs);
+                r.gauge("trainer.state_bytes", state_bytes as f64);
             });
+            // Liveness beacon every 10 steps: steps/sec since the last
+            // beacon, the loss EMA and the optimizer state footprint.
+            if self.t % 10 == 0 {
+                let steps_per_sec = match self.heartbeat_mark {
+                    Some((at, t_then)) => {
+                        (self.t - t_then) as f64 / at.elapsed().as_secs_f64().max(1e-9)
+                    }
+                    None => 0.0,
+                };
+                self.heartbeat_mark = Some((std::time::Instant::now(), self.t));
+                obs::emit(
+                    TraceEvent::new(EventKind::Heartbeat)
+                        .num("step", self.t as f64)
+                        .num("steps_per_sec", steps_per_sec)
+                        .num("loss_ema", self.loss_ema.unwrap_or(loss))
+                        .num("state_bytes", state_bytes as f64),
+                );
+            }
         }
         self.record.steps.push(StepRecord {
             step: self.t,
@@ -673,6 +774,7 @@ impl Trainer {
     /// Evaluate on a held-out batch: returns (loss, accuracy-if-labeled)
     /// and records the metric against the current step.
     pub fn evaluate(&mut self, x: &Matrix, target: &Target) -> (f64, Option<f64>) {
+        let _eval_span = obs::span::span("eval");
         let out = self.replicas[0].infer(x);
         let (loss, metric) = match target {
             Target::Labels(l) => {
@@ -687,7 +789,8 @@ impl Trainer {
         if obs::enabled() {
             let mut ev = TraceEvent::new(EventKind::Eval)
                 .num("step", self.t as f64)
-                .num("loss", loss);
+                .num("loss", loss)
+                .maybe_under(obs::span::current());
             if let Some(m) = metric {
                 ev = ev.num("metric", m);
             }

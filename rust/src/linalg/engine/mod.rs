@@ -36,7 +36,9 @@ use schedule::{partition, RowSlices};
 use tile::{pack_a_panel, pack_b_chunk, strips, KC, MR, NR};
 
 /// Trace one engine dispatch (`op` distinguishes the GEMM from the
-/// rowwise kernels). Callers already checked [`obs::enabled`].
+/// rowwise kernels). Callers already checked [`obs::enabled`]. The event
+/// nests under whatever span encloses the *dispatching* thread (the
+/// trainer's forward/backward, the optimizer's precond, …).
 fn trace_dispatch(op: &str, m: usize, n: usize, k: usize, threads: usize, secs: f64) {
     obs::emit(
         TraceEvent::new(EventKind::Gemm)
@@ -45,7 +47,8 @@ fn trace_dispatch(op: &str, m: usize, n: usize, k: usize, threads: usize, secs: 
             .num("n", n as f64)
             .num("k", k as f64)
             .num("threads", threads as f64)
-            .num("secs", secs),
+            .num("secs", secs)
+            .maybe_under(obs::span::current()),
     );
     obs::registry::with_global(|r| {
         r.inc("engine.dispatches", 1);

@@ -15,7 +15,9 @@
 //!              `--eval-every`, `--target`, `--quantized`. Checkpointing:
 //!              `--checkpoint-every N --checkpoint-dir D` snapshots every
 //!              N steps; `--resume-from D` restores and continues
-//!              bitwise-identically (run the same flags).
+//!              bitwise-identically (run the same flags); `--keep-every N`
+//!              retains step-stamped `step-<t>/` snapshots and
+//!              `--keep-best K` prunes them to the K best eval metrics.
 //! * `sweep`  — fan a grid of specs out and merge the results into one
 //!              CSV/JSON artifact: `--specs
 //!              "mkor:f={1,10,100};lamb;kfac:damping={0.01,0.1}"`,
@@ -47,8 +49,17 @@
 //!              pool (results never change with N — only speed).
 //! * `trace`  — `trace summarize <t.jsonl>` prints the per-phase breakdown
 //!              of a `--trace` file (count/total/mean/p50/p99 per event
-//!              kind plus share of step time); `trace cat <t.jsonl>`
-//!              prints every event as one line.
+//!              kind plus share of step time; `--strict` exits non-zero on
+//!              a torn tail); `trace cat <t.jsonl>` prints every event as
+//!              one line; `trace export <t.jsonl> --chrome out.json`
+//!              writes the Chrome trace-event form (load it in
+//!              `about:tracing`/Perfetto), `--span-tree` prints the nested
+//!              span aggregation; `trace diff BASE NEW [--max-regress
+//!              PCT]` compares two traces (or two saved perf reports) and
+//!              exits non-zero on a regression past the threshold.
+//! * `tail`   — follow a live `--trace` file in place: latest step/loss,
+//!              freshest heartbeat, per-kind counts
+//!              (`--interval-ms N`, `--for-secs S`, `--once`).
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 //!
@@ -82,9 +93,9 @@ fn main() {
     let args = Args::from_env();
     let cmd = args.command();
     // `--trace PATH` installs the process-global JSONL sink before the
-    // command runs; MKOR_TRACE is the env fallback. The `trace` reader
-    // subcommand never traces itself.
-    if cmd != Some("trace") {
+    // command runs; MKOR_TRACE is the env fallback. The `trace` and
+    // `tail` reader subcommands never trace themselves.
+    if cmd != Some("trace") && cmd != Some("tail") {
         if let Some(path) = args.get("trace") {
             if let Err(e) = obs::install(Path::new(path)) {
                 eprintln!("error: --trace: {e:#}");
@@ -107,9 +118,10 @@ fn main() {
         Some("ckpt") => cmd_ckpt(&args),
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
+        Some("tail") => cmd_tail(&args),
         _ => {
             eprintln!(
-                "usage: mkor <train|sim|sweep|ckpt|perf|trace|specs|version> [--flags]\n\
+                "usage: mkor <train|sim|sweep|ckpt|perf|trace|tail|specs|version> [--flags]\n\
                  see README.md for details"
             );
             2
@@ -130,16 +142,26 @@ fn main() {
     std::process::exit(code);
 }
 
-/// `mkor trace summarize|cat <trace.jsonl>`: decode a `--trace` file back
-/// through the validating reader and either aggregate it (per-kind
-/// count/total/mean/p50/p99 and share of total step time) or print every
-/// event as one human-readable line.
+/// `mkor trace <summarize|cat|export|diff> ...`: decode `--trace` files
+/// back through the validating reader and aggregate, dump, export or
+/// compare them. Results print to stdout; progress notes and warnings go
+/// through [`obs::log`], so `MKOR_LOG=quiet` leaves only the results.
 fn cmd_trace(args: &Args) -> i32 {
-    let usage = || eprintln!("usage: mkor trace <summarize|cat> <trace.jsonl>");
+    let usage = || {
+        eprintln!(
+            "usage: mkor trace summarize <trace.jsonl> [--strict]\n\
+             \x20      mkor trace cat <trace.jsonl>\n\
+             \x20      mkor trace export <trace.jsonl> [--chrome out.json] [--span-tree]\n\
+             \x20      mkor trace diff <base> <new> [--max-regress PCT]"
+        );
+    };
     let Some(action) = args.positional.get(1).map(String::as_str) else {
         usage();
         return 2;
     };
+    if action == "diff" {
+        return cmd_trace_diff(args);
+    }
     let Some(path) = args.positional.get(2) else {
         usage();
         return 2;
@@ -152,11 +174,17 @@ fn cmd_trace(args: &Args) -> i32 {
         }
     };
     if log.torn_tail {
-        eprintln!("warning: skipped a torn final line (the writer died mid-write)");
+        obs::log::warn("warning: skipped a torn final line (the writer died mid-write)");
+        // Version skew is already fatal in read_trace; --strict upgrades
+        // the only tolerated defect too, for CI gates on archived traces.
+        if args.flag("strict") {
+            eprintln!("error: --strict: trace has a torn tail");
+            return 1;
+        }
     }
     match action {
         "summarize" => {
-            println!("{path}: {} events", log.events.len());
+            obs::log::note(&format!("{path}: {} events", log.events.len()));
             print!("{}", obs::TraceSummary::from_events(&log.events).render());
             0
         }
@@ -166,10 +194,142 @@ fn cmd_trace(args: &Args) -> i32 {
             }
             0
         }
+        "export" => {
+            let mut exported = false;
+            if let Some(out) = args.get("chrome") {
+                let chrome = obs::chrome_trace_json(&log.events);
+                if let Err(e) = chrome.to_file(Path::new(out)) {
+                    eprintln!("saving {out}: {e:#}");
+                    return 1;
+                }
+                obs::log::note(&format!("wrote {out} (load in about:tracing or Perfetto)"));
+                exported = true;
+            }
+            if args.flag("span-tree") {
+                print!("{}", obs::render_span_tree(&log.events));
+                exported = true;
+            }
+            if !exported {
+                eprintln!("error: export needs --chrome OUT and/or --span-tree");
+                return 2;
+            }
+            0
+        }
         _ => {
             usage();
             2
         }
+    }
+}
+
+/// The `diff` half of [`cmd_trace`]: compare two runs and exit non-zero
+/// when any shared metric regressed past `--max-regress` percent
+/// (default 50). Inputs are two traces or two saved perf reports; a
+/// negative threshold fails on any non-improvement (CI passes
+/// `--max-regress -100` to prove the gate trips).
+fn cmd_trace_diff(args: &Args) -> i32 {
+    let (Some(base), Some(new)) = (args.positional.get(2), args.positional.get(3)) else {
+        eprintln!("usage: mkor trace diff <base> <new> [--max-regress PCT]");
+        return 2;
+    };
+    let max_regress = args.f64_or("max-regress", 50.0);
+    // A perf report is one JSON object carrying `schema_version`; a trace
+    // is JSONL (one event object per line). Both sides must be the same
+    // shape for the comparison to mean anything.
+    let as_report =
+        |p: &str| Json::from_file(Path::new(p)).ok().filter(|j| j.get("schema_version").is_some());
+    let diff = match (as_report(base), as_report(new)) {
+        (Some(b), Some(n)) => {
+            let parse = |j: &Json, path: &str| match mkor::perf::PerfReport::from_json(j) {
+                Ok(report) => Some(report),
+                Err(e) => {
+                    eprintln!("error: {path}: {e:#}");
+                    None
+                }
+            };
+            let (Some(b), Some(n)) = (parse(&b, base), parse(&n, new)) else {
+                return 1;
+            };
+            obs::TraceDiff::of_reports(&b, &n)
+        }
+        (None, None) => {
+            let read = |path: &str| match obs::read_trace(Path::new(path)) {
+                Ok(log) => Some(log.events),
+                Err(e) => {
+                    eprintln!("error: {path}: {e:#}");
+                    None
+                }
+            };
+            let (Some(b), Some(n)) = (read(base), read(new)) else {
+                return 1;
+            };
+            obs::TraceDiff::of_traces(&b, &n)
+        }
+        _ => {
+            eprintln!("error: cannot diff a perf report against a trace");
+            return 2;
+        }
+    };
+    print!("{}", diff.render());
+    let bad = diff.regressions(max_regress);
+    if bad.is_empty() {
+        obs::log::note(&format!(
+            "no regression beyond {max_regress}% across {} shared metrics",
+            diff.rows.len()
+        ));
+        return 0;
+    }
+    for row in &bad {
+        obs::log::warn(&format!("regressed: {} ({:+.1}%)", row.name, row.delta_pct));
+    }
+    eprintln!(
+        "error: {} of {} shared metrics regressed beyond {max_regress}%",
+        bad.len(),
+        diff.rows.len()
+    );
+    1
+}
+
+/// `mkor tail <trace.jsonl> [--interval-ms N] [--for-secs S] [--once]`:
+/// follow a live `--trace` file, rendering an aggregated view in place
+/// (latest step/loss, freshest heartbeat payload, per-kind counts). A
+/// file that does not exist yet and a torn tail both just wait — start
+/// the tail before or after the run. Runs until interrupted unless
+/// `--for-secs` bounds it (`--once` renders a single frame and exits).
+fn cmd_tail(args: &Args) -> i32 {
+    use std::io::{IsTerminal, Write};
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: mkor tail <trace.jsonl> [--interval-ms N] [--for-secs S] [--once]");
+        return 2;
+    };
+    let interval = std::time::Duration::from_millis(args.u64_or("interval-ms", 500));
+    let for_secs = args.f64_or("for-secs", f64::INFINITY);
+    let once = args.flag("once");
+    let mut follower = obs::TraceFollower::new(Path::new(path));
+    let mut view = obs::TailView::default();
+    // In-place redraw only on a real terminal; under a pipe (CI) each
+    // frame appends, keeping the output a plain readable log.
+    let ansi = std::io::stdout().is_terminal();
+    let t0 = std::time::Instant::now();
+    let mut drawn_lines = 0usize;
+    loop {
+        for ev in follower.poll() {
+            view.absorb(&ev);
+        }
+        let screen = view.render();
+        {
+            let mut out = std::io::stdout().lock();
+            if ansi && drawn_lines > 0 {
+                let _ = write!(out, "\x1b[{drawn_lines}A\x1b[J");
+            }
+            let _ = out.write_all(screen.as_bytes());
+            let _ = out.flush();
+        }
+        drawn_lines = screen.lines().count();
+        if once || t0.elapsed().as_secs_f64() >= for_secs {
+            return 0;
+        }
+        std::thread::sleep(interval);
     }
 }
 
@@ -366,12 +526,25 @@ fn cmd_sim(args: &Args) -> i32 {
         }
     }
     let checkpoint_every = args.usize_or("checkpoint-every", 0);
+    // Retention rides on checkpointing: --keep-every N stamps step-<t>/
+    // subdirectories that later saves never overwrite; --keep-best K
+    // prunes them to the K best eval metrics after each retention save.
+    let keep_every = args.usize_or("keep-every", 0);
+    let keep_best = args.usize_or("keep-best", 0);
+    if keep_best > 0 && keep_every == 0 {
+        eprintln!("error: --keep-best needs --keep-every (the retention cadence)");
+        return 2;
+    }
     match args.get("checkpoint-dir") {
         Some(dir) => {
-            builder = builder.checkpoint_dir(dir).checkpoint_every(checkpoint_every);
+            builder = builder
+                .checkpoint_dir(dir)
+                .checkpoint_every(checkpoint_every)
+                .keep_every(keep_every)
+                .keep_best(keep_best);
         }
-        None if checkpoint_every > 0 => {
-            eprintln!("error: --checkpoint-every needs --checkpoint-dir");
+        None if checkpoint_every > 0 || keep_every > 0 => {
+            eprintln!("error: --checkpoint-every/--keep-every need --checkpoint-dir");
             return 2;
         }
         None => {}
@@ -695,7 +868,9 @@ fn cmd_ckpt(args: &Args) -> i32 {
     };
     let dir = Path::new(dir);
     // Checkpoint::load re-hashes every component blob, so a clean inspect
-    // doubles as an integrity check.
+    // doubles as an integrity check. The note goes through obs::log so
+    // `MKOR_LOG=quiet` leaves only the inspection results on stdout.
+    obs::log::progress(&format!("validating checkpoint {} (blobs re-hashed)...", dir.display()));
     let ckpt = match Checkpoint::load(dir) {
         Ok(ckpt) => ckpt,
         Err(e) => {

@@ -1,0 +1,169 @@
+//! Chrome trace-event export: what `mkor trace export --chrome` writes.
+//!
+//! Converts a decoded trace into the Trace Event Format that
+//! `chrome://tracing`, Perfetto and speedscope all load: a root object
+//! with a `traceEvents` array of phase-coded records.
+//!
+//! * [`EventKind::SpanBegin`] / [`EventKind::SpanEnd`] become duration
+//!   pairs (`ph:"B"` / `ph:"E"`), named by the span's `name` field and
+//!   laid out on the virtual track (`tid`) the guard recorded — nesting
+//!   renders as stacked bars, exactly the paper's "where does the step
+//!   go" picture.
+//! * Point events carrying `secs` become complete events (`ph:"X"`,
+//!   back-dated by their duration so the bar ends at emit time).
+//! * Untimed lifecycle markers become instants (`ph:"i"`).
+//!
+//! The `pid` is the event's `worker` field when it has one (sweep
+//! executors tag subprocess lifecycle events), else 0 — one virtual
+//! process lane per worker. Every event's full `fields` payload rides
+//! along as `args`, so nothing the JSONL had is lost in the viewer.
+//!
+//! The output is deterministic: objects are key-sorted by the JSON
+//! writer and events keep trace order, so a fixed input trace exports to
+//! byte-stable JSON (pinned by the golden test below).
+
+use super::event::{EventKind, TraceEvent};
+use crate::util::json::Json;
+
+/// Microseconds, the unit Chrome trace timestamps are defined in.
+fn usecs(secs: f64) -> f64 {
+    secs * 1e6
+}
+
+fn chrome_event(ev: &TraceEvent) -> Json {
+    let num = |k: &str| ev.fields.get(k).and_then(Json::as_f64);
+    let mut o = Json::obj();
+    match ev.kind {
+        EventKind::SpanBegin | EventKind::SpanEnd => {
+            let name = ev.fields.get("name").and_then(Json::as_str).unwrap_or("span");
+            let ph = if ev.kind == EventKind::SpanBegin { "B" } else { "E" };
+            o.set("ph", Json::Str(ph.to_string()))
+                .set("ts", Json::Num(usecs(ev.t_secs)))
+                .set("name", Json::Str(name.to_string()))
+                .set("cat", Json::Str("span".to_string()));
+        }
+        _ => {
+            o.set("name", Json::Str(ev.kind.as_str().to_string()))
+                .set("cat", Json::Str("event".to_string()));
+            match ev.secs() {
+                // Timed point events are emitted *after* the work: the
+                // bar starts `secs` before the stamp (clamped to the
+                // epoch) and ends at it.
+                Some(secs) => {
+                    o.set("ph", Json::Str("X".to_string()))
+                        .set("ts", Json::Num(usecs((ev.t_secs - secs).max(0.0))))
+                        .set("dur", Json::Num(usecs(secs)));
+                }
+                None => {
+                    o.set("ph", Json::Str("i".to_string()))
+                        .set("ts", Json::Num(usecs(ev.t_secs)))
+                        .set("s", Json::Str("t".to_string()));
+                }
+            }
+        }
+    }
+    o.set("pid", Json::Num(num("worker").unwrap_or(0.0)))
+        .set("tid", Json::Num(num("tid").unwrap_or(0.0)))
+        .set("args", Json::Obj(ev.fields.clone()));
+    o
+}
+
+/// The full Chrome trace document for one decoded trace.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> Json {
+    let mut root = Json::obj();
+    root.set("displayTimeUnit", Json::Str("ms".to_string()))
+        .set("traceEvents", Json::Arr(events.iter().map(chrome_event).collect()));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    fn ev(
+        kind: EventKind,
+        t: f64,
+        span: u64,
+        parent: Option<u64>,
+        fields: &[(&str, Json)],
+    ) -> TraceEvent {
+        let fields: BTreeMap<String, Json> =
+            fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        TraceEvent { t_secs: t, span, parent, kind, fields }
+    }
+
+    /// The export is byte-stable for a fixed trace. All timestamps are
+    /// exact binary fractions so the µs values print as integers.
+    #[test]
+    fn chrome_export_golden_bytes() {
+        let events = vec![
+            ev(
+                EventKind::SpanBegin,
+                0.25,
+                1,
+                None,
+                &[("name", Json::Str("step".into())), ("tid", Json::Num(1.0))],
+            ),
+            ev(
+                EventKind::Gemm,
+                0.5,
+                2,
+                Some(1),
+                &[("m", Json::Num(8.0)), ("secs", Json::Num(0.25))],
+            ),
+            ev(EventKind::WorkerSpawn, 0.5, 3, None, &[("worker", Json::Num(2.0))]),
+            ev(
+                EventKind::SpanEnd,
+                0.75,
+                1,
+                None,
+                &[
+                    ("name", Json::Str("step".into())),
+                    ("secs", Json::Num(0.5)),
+                    ("tid", Json::Num(1.0)),
+                ],
+            ),
+        ];
+        let expected = concat!(
+            "{\"displayTimeUnit\":\"ms\",\"traceEvents\":[",
+            "{\"args\":{\"name\":\"step\",\"tid\":1},\"cat\":\"span\",\"name\":\"step\",",
+            "\"ph\":\"B\",\"pid\":0,\"tid\":1,\"ts\":250000},",
+            "{\"args\":{\"m\":8,\"secs\":0.25},\"cat\":\"event\",\"dur\":250000,",
+            "\"name\":\"gemm\",\"ph\":\"X\",\"pid\":0,\"tid\":0,\"ts\":250000},",
+            "{\"args\":{\"worker\":2},\"cat\":\"event\",\"name\":\"worker_spawn\",",
+            "\"ph\":\"i\",\"pid\":2,\"s\":\"t\",\"tid\":0,\"ts\":500000},",
+            "{\"args\":{\"name\":\"step\",\"secs\":0.5,\"tid\":1},\"cat\":\"span\",",
+            "\"name\":\"step\",\"ph\":\"E\",\"pid\":0,\"tid\":1,\"ts\":750000}",
+            "]}"
+        );
+        assert_eq!(chrome_trace_json(&events).to_string(), expected);
+    }
+
+    #[test]
+    fn timed_events_never_backdate_past_the_epoch() {
+        let e = ev(EventKind::Allreduce, 0.001, 1, None, &[("secs", Json::Num(0.5))]);
+        let j = chrome_trace_json(&[e]);
+        let rec = &j.get("traceEvents").unwrap().as_arr().unwrap()[0];
+        assert_eq!(rec.get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(rec.get("dur").unwrap().as_f64(), Some(500000.0));
+    }
+
+    #[test]
+    fn begin_end_counts_balance() {
+        let events = vec![
+            ev(EventKind::SpanBegin, 0.0, 1, None, &[("name", Json::Str("a".into()))]),
+            ev(EventKind::SpanEnd, 1.0, 1, None, &[("name", Json::Str("a".into()))]),
+        ];
+        let j = chrome_trace_json(&events);
+        let ph: Vec<String> = j
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|r| r.get("ph").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(ph, ["B", "E"]);
+    }
+}

@@ -1,0 +1,270 @@
+//! Perf regression gate: what `mkor trace diff BASE NEW` computes.
+//!
+//! Compares two runs metric by metric and flags regressions past a
+//! threshold, so CI can gate on "did this change make the hot paths
+//! slower". Two input shapes share one diff type:
+//!
+//! * **traces** ([`TraceDiff::of_traces`]) — per-kind median duration
+//!   (`kind:gemm`, `kind:inverse_update`…) and per-phase median span
+//!   time (`phase:forward`, `phase:precond`… from `span_end` markers),
+//!   both *lower-is-better*;
+//! * **perf reports** ([`TraceDiff::of_reports`]) — the
+//!   [`PerfReport`] throughput figures (`BENCH_mkor.json`'s schema):
+//!   GEMM GFLOP/s, optimizer steps/sec, ring GB/s, all
+//!   *higher-is-better*.
+//!
+//! Only metrics present in **both** inputs are compared — a kind that
+//! appears on one side only is a workload difference, not a regression.
+//! Medians (via [`Hist`]) keep the gate robust to the long tail one
+//! noisy outlier step would otherwise drag.
+
+use super::event::{EventKind, TraceEvent};
+use super::registry::Hist;
+use crate::bench_utils::{fmt_secs, Table};
+use crate::perf::report::PerfReport;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// One compared metric.
+#[derive(Clone, Debug)]
+pub struct MetricDiff {
+    pub name: String,
+    pub base: f64,
+    pub new: f64,
+    /// `(new - base) / base * 100`.
+    pub delta_pct: f64,
+    /// Throughput metrics regress downward; duration metrics upward.
+    pub higher_is_better: bool,
+}
+
+impl MetricDiff {
+    fn of(name: String, base: f64, new: f64, higher_is_better: bool) -> Option<MetricDiff> {
+        if !(base.is_finite() && new.is_finite()) || base <= 0.0 {
+            return None; // no meaningful percentage against a zero/bad base
+        }
+        let delta_pct = (new - base) / base * 100.0;
+        Some(MetricDiff { name, base, new, delta_pct, higher_is_better })
+    }
+
+    /// Did this metric move the *bad* way by more than `max_pct`?
+    pub fn regressed(&self, max_pct: f64) -> bool {
+        if self.higher_is_better {
+            self.delta_pct < -max_pct
+        } else {
+            self.delta_pct > max_pct
+        }
+    }
+}
+
+/// The full comparison of two runs.
+#[derive(Clone, Debug, Default)]
+pub struct TraceDiff {
+    pub rows: Vec<MetricDiff>,
+}
+
+/// Median duration per event kind and per span phase name.
+fn medians(events: &[TraceEvent]) -> (BTreeMap<EventKind, f64>, BTreeMap<String, f64>) {
+    let mut kinds: BTreeMap<EventKind, Hist> = BTreeMap::new();
+    let mut phases: BTreeMap<String, Hist> = BTreeMap::new();
+    for ev in events {
+        let Some(secs) = ev.secs() else { continue };
+        if ev.kind == EventKind::SpanEnd {
+            if let Some(name) = ev.fields.get("name").and_then(Json::as_str) {
+                phases.entry(name.to_string()).or_default().add(secs);
+            }
+        } else {
+            kinds.entry(ev.kind).or_default().add(secs);
+        }
+    }
+    let med = |h: &Hist| h.quantile(0.5).unwrap_or(0.0);
+    (
+        kinds.iter().map(|(&k, h)| (k, med(h))).collect(),
+        phases.iter().map(|(n, h)| (n.clone(), med(h))).collect(),
+    )
+}
+
+impl TraceDiff {
+    /// Compare two decoded traces (per-kind and per-phase medians).
+    pub fn of_traces(base: &[TraceEvent], new: &[TraceEvent]) -> TraceDiff {
+        let (bk, bp) = medians(base);
+        let (nk, np) = medians(new);
+        let mut rows = Vec::new();
+        for (kind, &b) in &bk {
+            if let Some(&n) = nk.get(kind) {
+                rows.extend(MetricDiff::of(format!("kind:{}", kind.as_str()), b, n, false));
+            }
+        }
+        for (phase, &b) in &bp {
+            if let Some(&n) = np.get(phase) {
+                rows.extend(MetricDiff::of(format!("phase:{phase}"), b, n, false));
+            }
+        }
+        TraceDiff { rows }
+    }
+
+    /// Compare two perf reports (throughput figures, higher-is-better).
+    pub fn of_reports(base: &PerfReport, new: &PerfReport) -> TraceDiff {
+        let mut b: BTreeMap<String, f64> = BTreeMap::new();
+        let mut n: BTreeMap<String, f64> = BTreeMap::new();
+        for (report, out) in [(base, &mut b), (new, &mut n)] {
+            for g in &report.gemm {
+                out.insert(format!("gemm:{}:d={} gflops", g.kind, g.d), g.engine_gflops);
+            }
+            for o in &report.optimizers {
+                out.insert(format!("opt:{} steps/sec", o.name), o.steps_per_sec);
+            }
+            for r in &report.allreduce {
+                out.insert(format!("ring:w={}:n={} fp32 gbps", r.workers, r.elems), r.fp32_gbps);
+                out.insert(format!("ring:w={}:n={} bf16 gbps", r.workers, r.elems), r.bf16_gbps);
+            }
+        }
+        let mut rows = Vec::new();
+        for (name, &bv) in &b {
+            if let Some(&nv) = n.get(name) {
+                rows.extend(MetricDiff::of(name.clone(), bv, nv, true));
+            }
+        }
+        TraceDiff { rows }
+    }
+
+    /// Every metric that moved the bad way by more than `max_pct`.
+    pub fn regressions(&self, max_pct: f64) -> Vec<&MetricDiff> {
+        self.rows.iter().filter(|r| r.regressed(max_pct)).collect()
+    }
+
+    /// The comparison table.
+    pub fn render(&self) -> String {
+        if self.rows.is_empty() {
+            return "no commensurable metrics (inputs share no kinds/phases)\n".to_string();
+        }
+        let fmt_val = |row: &MetricDiff, v: f64| {
+            if row.higher_is_better {
+                format!("{v:.2}")
+            } else {
+                fmt_secs(v)
+            }
+        };
+        let mut t = Table::new(&["metric", "base", "new", "delta", "direction"]);
+        for row in &self.rows {
+            t.row(&[
+                row.name.clone(),
+                fmt_val(row, row.base),
+                fmt_val(row, row.new),
+                format!("{:+.1}%", row.delta_pct),
+                if row.higher_is_better { "higher is better" } else { "lower is better" }
+                    .to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn timed(kind: EventKind, secs: f64) -> TraceEvent {
+        TraceEvent::new(kind).num("secs", secs)
+    }
+
+    fn phase(name: &str, secs: f64) -> TraceEvent {
+        TraceEvent::new(EventKind::SpanEnd).label("name", name).num("secs", secs)
+    }
+
+    fn base_events() -> Vec<TraceEvent> {
+        vec![
+            timed(EventKind::Step, 0.1),
+            timed(EventKind::Step, 0.12),
+            timed(EventKind::Gemm, 0.01),
+            phase("forward", 0.04),
+        ]
+    }
+
+    #[test]
+    fn self_diff_passes_and_inverted_threshold_fails_everything() {
+        let events = base_events();
+        let d = TraceDiff::of_traces(&events, &events);
+        assert!(!d.rows.is_empty());
+        assert!(d.rows.iter().all(|r| r.delta_pct == 0.0));
+        assert!(d.regressions(50.0).is_empty(), "identical runs never regress");
+        // The CI inversion trick: a negative threshold means "0% worse
+        // is already too much", so every compared metric trips.
+        assert_eq!(d.regressions(-100.0).len(), d.rows.len());
+    }
+
+    #[test]
+    fn injected_slowdown_is_caught_per_kind_and_per_phase() {
+        let base = base_events();
+        let slow: Vec<TraceEvent> = base
+            .iter()
+            .map(|e| {
+                let mut e = e.clone();
+                let secs = e.secs().unwrap() * 2.0;
+                e.num("secs", secs)
+            })
+            .collect();
+        let d = TraceDiff::of_traces(&base, &slow);
+        let bad: Vec<&str> = d.regressions(50.0).iter().map(|r| r.name.as_str()).collect();
+        assert!(bad.contains(&"kind:step"), "{bad:?}");
+        assert!(bad.contains(&"phase:forward"), "{bad:?}");
+        // A 2x *speedup* is not a regression for durations.
+        let d = TraceDiff::of_traces(&slow, &base);
+        assert!(d.regressions(50.0).is_empty());
+        assert!(d.render().contains("kind:gemm"));
+    }
+
+    #[test]
+    fn disjoint_kinds_produce_no_rows() {
+        let a = vec![timed(EventKind::Step, 0.1)];
+        let b = vec![timed(EventKind::Gemm, 0.1)];
+        let d = TraceDiff::of_traces(&a, &b);
+        assert!(d.rows.is_empty());
+        assert!(d.render().contains("no commensurable metrics"));
+    }
+
+    #[test]
+    fn report_diff_is_higher_is_better() {
+        let report = |scale: f64| {
+            let mut j = Json::obj();
+            let mut host = Json::obj();
+            host.set("os", Json::Str("linux".into()))
+                .set("arch", Json::Str("x86_64".into()))
+                .set("threads", Json::Num(2.0))
+                .set("hw_threads", Json::Num(4.0));
+            let mut timer = Json::obj();
+            timer.set("warmup", Json::Num(1.0)).set("repeats", Json::Num(3.0));
+            let mut gemm = Json::obj();
+            gemm.set("kind", Json::Str("nn".into()))
+                .set("d", Json::Num(128.0))
+                .set("serial_gflops", Json::Num(4.0))
+                .set("engine_gflops", Json::Num(16.0 * scale))
+                .set("speedup", Json::Num(4.0 * scale));
+            let mut opt = Json::obj();
+            opt.set("name", Json::Str("mkor".into()))
+                .set("steps_per_sec", Json::Num(100.0 * scale));
+            let mut ring = Json::obj();
+            ring.set("workers", Json::Num(4.0))
+                .set("elems", Json::Num(1024.0))
+                .set("fp32_gbps", Json::Num(8.0 * scale))
+                .set("bf16_gbps", Json::Num(4.0 * scale));
+            j.set("schema_version", Json::Num(1.0))
+                .set("quick", Json::Bool(true))
+                .set("host", host)
+                .set("timer", timer)
+                .set("gemm", Json::Arr(vec![gemm]))
+                .set("optimizers", Json::Arr(vec![opt]))
+                .set("allreduce", Json::Arr(vec![ring]));
+            PerfReport::from_json(&j).unwrap()
+        };
+        let (fast, slow) = (report(1.0), report(0.4));
+        // Throughput dropped 60% everywhere: every row regresses at 50%.
+        let d = TraceDiff::of_reports(&fast, &slow);
+        assert_eq!(d.rows.len(), 4);
+        assert_eq!(d.regressions(50.0).len(), 4);
+        // The other way around is an improvement, not a regression.
+        let d = TraceDiff::of_reports(&slow, &fast);
+        assert!(d.regressions(50.0).is_empty());
+        assert!(d.render().contains("opt:mkor steps/sec"));
+        assert!(d.render().contains("higher is better"));
+    }
+}

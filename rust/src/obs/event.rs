@@ -13,6 +13,8 @@
 //!   [`std::time::Instant`], not wall time — it never goes backwards).
 //! * `span` — process-unique event id; `parent` (optional) nests an event
 //!   under an enclosing one (a `gemm` under the `step` that dispatched it).
+//!   The begin/end markers of one RAII span (`span_begin`/`span_end`,
+//!   emitted by [`crate::obs::span`]) share a single `span` id.
 //! * `kind` — the closed [`EventKind`] vocabulary; unknown kinds are a
 //!   schema violation, not a silent pass-through.
 //! * `fields` — kind-specific payload (`secs`, `step`, `bytes`, shapes…)
@@ -61,11 +63,19 @@ pub enum EventKind {
     CellDone,
     /// A held-out evaluation ran.
     Eval,
+    /// An RAII [`crate::obs::span`] guard opened (begin marker; shares
+    /// its `span` id with the matching [`EventKind::SpanEnd`]).
+    SpanBegin,
+    /// The matching guard dropped (end marker; carries `secs`).
+    SpanEnd,
+    /// Periodic liveness beacon from the trainer or a sweep executor
+    /// (steps/sec, loss EMA, progress counters, per-worker last-seen).
+    Heartbeat,
 }
 
 impl EventKind {
     /// Every kind, in rendering order for summaries.
-    pub const ALL: [EventKind; 13] = [
+    pub const ALL: [EventKind; 16] = [
         EventKind::Step,
         EventKind::InverseUpdate,
         EventKind::StabilizerTrigger,
@@ -79,6 +89,9 @@ impl EventKind {
         EventKind::Redispatch,
         EventKind::CellDone,
         EventKind::Eval,
+        EventKind::SpanBegin,
+        EventKind::SpanEnd,
+        EventKind::Heartbeat,
     ];
 
     /// Wire name (the `"kind"` field).
@@ -97,6 +110,9 @@ impl EventKind {
             EventKind::Redispatch => "redispatch",
             EventKind::CellDone => "cell_done",
             EventKind::Eval => "eval",
+            EventKind::SpanBegin => "span_begin",
+            EventKind::SpanEnd => "span_end",
+            EventKind::Heartbeat => "heartbeat",
         }
     }
 
@@ -174,6 +190,17 @@ impl TraceEvent {
     pub fn under(mut self, parent: u64) -> TraceEvent {
         self.parent = Some(parent);
         self
+    }
+
+    /// Builder: nest under `parent` when there is one. The idiom for
+    /// point events emitted from instrumented leaves — pass
+    /// [`crate::obs::span::current`] and the event lands under whatever
+    /// span happens to enclose the call site (or stays a root).
+    pub fn maybe_under(self, parent: Option<u64>) -> TraceEvent {
+        match parent {
+            Some(p) => self.under(p),
+            None => self,
+        }
     }
 
     /// `fields["secs"]`, the duration most kinds carry.

@@ -1,0 +1,200 @@
+//! Live trace following: the reader side of `mkor tail`.
+//!
+//! A running sim/sweep appends JSONL events to its `--trace` file; the
+//! follower re-reads the growth since its last poll, consuming only
+//! *complete* lines (through the last newline) so a torn tail — the
+//! writer mid-`write` — is simply left for the next poll, the same
+//! offset-tailing discipline the multi-process sweep coordinator uses
+//! on worker result files ([`crate::sweep::dispatch`]). Unlike the
+//! post-mortem [`super::summary::read_trace`], a malformed complete
+//! line is *skipped*, not fatal: a live view must keep rendering while
+//! a writer misbehaves.
+//!
+//! [`TailView`] is the aggregation the `mkor tail` screen shows: event
+//! counts, the latest step/loss, and the most recent heartbeat payload.
+
+use super::event::{EventKind, TraceEvent};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// Incremental reader over a growing trace file.
+pub struct TraceFollower {
+    path: PathBuf,
+    offset: u64,
+}
+
+impl TraceFollower {
+    pub fn new(path: &Path) -> TraceFollower {
+        TraceFollower { path: path.to_path_buf(), offset: 0 }
+    }
+
+    /// Bytes of the file consumed so far.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Decode every complete line appended since the last poll. A
+    /// missing file (the writer has not created it yet) and a torn tail
+    /// both yield an empty batch, never an error.
+    pub fn poll(&mut self) -> Vec<TraceEvent> {
+        let Ok(mut f) = std::fs::File::open(&self.path) else {
+            return Vec::new();
+        };
+        if f.seek(SeekFrom::Start(self.offset)).is_err() {
+            return Vec::new();
+        }
+        let mut buf = Vec::new();
+        if f.read_to_end(&mut buf).is_err() {
+            return Vec::new();
+        }
+        // Only whole lines are consumed; a torn tail stays unread so the
+        // next poll sees it completed.
+        let Some(last_nl) = buf.iter().rposition(|&b| b == b'\n') else {
+            return Vec::new();
+        };
+        let text = String::from_utf8_lossy(&buf[..=last_nl]);
+        let mut out = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            if let Ok(ev) = TraceEvent::from_jsonl(line) {
+                out.push(ev);
+            }
+        }
+        self.offset += last_nl as u64 + 1;
+        out
+    }
+}
+
+/// The aggregated live view `mkor tail` renders in place.
+#[derive(Default)]
+pub struct TailView {
+    counts: BTreeMap<EventKind, usize>,
+    first_t: Option<f64>,
+    last_t: f64,
+    /// Latest `(step, loss)` seen on a `step` event.
+    last_step: Option<(f64, f64)>,
+    /// Payload of the most recent heartbeat.
+    last_heartbeat: Option<BTreeMap<String, Json>>,
+}
+
+impl TailView {
+    pub fn events(&self) -> usize {
+        self.counts.values().sum()
+    }
+
+    pub fn absorb(&mut self, ev: &TraceEvent) {
+        *self.counts.entry(ev.kind).or_insert(0) += 1;
+        self.first_t.get_or_insert(ev.t_secs);
+        self.last_t = self.last_t.max(ev.t_secs);
+        match ev.kind {
+            EventKind::Step => {
+                let get = |k: &str| ev.fields.get(k).and_then(Json::as_f64);
+                if let (Some(step), Some(loss)) = (get("step"), get("loss")) {
+                    self.last_step = Some((step, loss));
+                }
+            }
+            EventKind::Heartbeat => self.last_heartbeat = Some(ev.fields.clone()),
+            _ => {}
+        }
+    }
+
+    /// The multi-line screen (fixed line count per content shape, so
+    /// the caller can redraw in place).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let span = (self.last_t - self.first_t.unwrap_or(self.last_t)).max(0.0);
+        out.push_str(&format!(
+            "trace: {} events over {}\n",
+            self.events(),
+            crate::bench_utils::fmt_secs(span)
+        ));
+        match self.last_step {
+            Some((step, loss)) => {
+                out.push_str(&format!("step {step}: loss {loss:.6}\n"));
+            }
+            None => out.push_str("step -: no step events yet\n"),
+        }
+        match &self.last_heartbeat {
+            Some(fields) => {
+                out.push_str("heartbeat:");
+                for (k, v) in fields {
+                    out.push_str(&format!(" {k}={v}"));
+                }
+                out.push('\n');
+            }
+            None => out.push_str("heartbeat: none yet\n"),
+        }
+        out.push_str("kinds:");
+        for (kind, count) in &self.counts {
+            out.push_str(&format!(" {}={count}", kind.as_str()));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn follower_tolerates_torn_tails_and_live_appends() {
+        let dir = std::env::temp_dir().join(format!("mkor-obs-follow-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("live.jsonl");
+
+        // Not created yet: the follower just waits.
+        let mut f = TraceFollower::new(&path);
+        assert!(f.poll().is_empty());
+
+        // One complete line plus a torn tail: only the complete line is
+        // consumed, and the torn bytes stay for later.
+        let a = TraceEvent::new(EventKind::Step).num("step", 0.0).num("loss", 1.5);
+        let b = TraceEvent::new(EventKind::Heartbeat).num("steps_per_sec", 12.0);
+        let b_line = b.to_jsonl();
+        let (b_head, b_rest) = b_line.split_at(10);
+        let mut w = std::fs::File::create(&path).unwrap();
+        write!(w, "{}\n{}", a.to_jsonl(), b_head).unwrap();
+        w.flush().unwrap();
+        let batch = f.poll();
+        assert_eq!(batch, vec![a.clone()]);
+        assert!(f.poll().is_empty(), "torn tail must not be consumed");
+
+        // The writer finishes the line and appends another: both arrive.
+        let c = TraceEvent::new(EventKind::Step).num("step", 1.0).num("loss", 1.25);
+        write!(w, "{}\n{}\n", b_rest, c.to_jsonl()).unwrap();
+        w.flush().unwrap();
+        let batch = f.poll();
+        assert_eq!(batch, vec![b.clone(), c.clone()]);
+        assert!(f.poll().is_empty());
+
+        // The view aggregated what the follower saw.
+        let mut view = TailView::default();
+        for ev in [&a, &b, &c] {
+            view.absorb(ev);
+        }
+        assert_eq!(view.events(), 3);
+        let screen = view.render();
+        assert!(screen.contains("step 1: loss 1.250000"), "{screen}");
+        assert!(screen.contains("steps_per_sec=12"), "{screen}");
+        assert!(screen.contains("step=2"), "{screen}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_complete_lines_are_skipped_live() {
+        let dir = std::env::temp_dir().join(format!("mkor-obs-follow2-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("live.jsonl");
+        let ok = TraceEvent::new(EventKind::Eval).num("loss", 0.5);
+        std::fs::write(&path, format!("garbage line\n{}\n", ok.to_jsonl())).unwrap();
+        let mut f = TraceFollower::new(&path);
+        assert_eq!(f.poll(), vec![ok]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

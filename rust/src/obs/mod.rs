@@ -20,13 +20,28 @@
 //! * [`summary`] — `mkor trace summarize` aggregation: per-kind
 //!   count/total/mean/p50/p99 and time-share of `step`;
 //! * [`log`] — the leveled, torn-line-free progress front end
-//!   (`MKOR_LOG=quiet|info|debug`).
+//!   (`MKOR_LOG=quiet|info|debug`);
+//! * [`span`] — RAII nested-span guards (`span_begin`/`span_end` pairs
+//!   over a thread-local current-span stack), making the trainer's
+//!   forward/backward/factor/precond/allreduce phases *children* of
+//!   their `step` and parenting leaf events (`gemm`, `allreduce`,
+//!   `inverse_update`) under whatever phase dispatched them;
+//! * [`chrome`] — `mkor trace export --chrome`: Chrome trace-event JSON
+//!   (Perfetto/speedscope-loadable B/E pairs);
+//! * [`tree`] — `--span-tree`: the nested breakdown as text;
+//! * [`follow`] — the `mkor tail` live follower (offset tailing with
+//!   torn-tail tolerance) and its aggregated screen;
+//! * [`diff`] — `mkor trace diff`: per-kind/per-phase median comparison
+//!   of two traces or two perf reports, CI's perf regression gate.
 //!
 //! Instrumented layers: the trainer (`step`/`allreduce`/`eval`), MKOR
 //! and MKOR-H (`inverse_update`/`stabilizer_trigger`/`mkorh_switch`),
 //! the parallel linalg engine (`gemm` per dispatch), the ring collective,
 //! the checkpoint subsystem (`ckpt_save`/`ckpt_restore`) and both sweep
 //! executors (`cell_done`, `worker_spawn`/`worker_dead`/`redispatch`).
+//! The trainer and both executors additionally emit periodic `heartbeat`
+//! events (steps/sec, loss EMA, state bytes, progress, per-worker
+//! last-seen) — the liveness signal `mkor tail` watches.
 //!
 //! **Invariant — telemetry never perturbs numerics.** Instrumentation
 //! only reads clocks and copies already-computed values; it takes no RNG
@@ -35,13 +50,22 @@
 //! off — asserted in `rust/tests/trace_obs.rs`, in the same spirit as the
 //! engine's threads-N ≡ threads-1 parity rule.
 
+pub mod chrome;
+pub mod diff;
 pub mod event;
+pub mod follow;
 pub mod log;
 pub mod registry;
 pub mod sink;
+pub mod span;
 pub mod summary;
+pub mod tree;
 
+pub use chrome::chrome_trace_json;
+pub use diff::{MetricDiff, TraceDiff};
 pub use event::{EventKind, TraceError, TraceEvent, TRACE_FORMAT_VERSION};
+pub use follow::{TailView, TraceFollower};
 pub use registry::{Hist, Registry};
 pub use sink::{emit, enabled, finish, install, TraceReceipt};
 pub use summary::{read_trace, TraceLog, TraceSummary};
+pub use tree::render_span_tree;

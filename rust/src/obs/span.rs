@@ -1,0 +1,145 @@
+//! RAII nested-span profiling: `span_begin`/`span_end` pairs with a
+//! thread-local current-span stack, so nesting is automatic.
+//!
+//! ```text
+//! let _step = obs::span::span("step");          // begin("step")
+//! {
+//!     let _f = obs::span::span("forward");      //   begin("forward") parent=step
+//!     // ... leaf events use .maybe_under(obs::span::current())
+//! }                                             //   end("forward")
+//! ```
+//!
+//! A guard emits one [`EventKind::SpanBegin`] when created and one
+//! [`EventKind::SpanEnd`] when dropped; **both markers share the same
+//! `span` id**, which is what makes the pair reconstructible by readers
+//! (the Chrome exporter, the span-tree renderer). The parent is captured
+//! at begin time — the top of this thread's stack, or an explicit handoff
+//! via [`span_under`] for work that runs on a freshly spawned thread
+//! (the trainer's per-shard forward/backward closures) — and reused at
+//! end time, so a guard that outlives its thread's stack discipline
+//! still closes with the right parent.
+//!
+//! Dropping guards out of creation order is allowed (it happens whenever
+//! two guards live in one scope): the stack removes the dropped span
+//! wherever it sits, and parent chains stay correct because they were
+//! resolved at begin time.
+//!
+//! Cost discipline matches the rest of the layer: when no sink is
+//! installed, [`span`] is one atomic load returning an inert guard — no
+//! clock read, no thread-local touch, no allocation.
+
+use crate::obs::event::{next_span, EventKind, TraceEvent};
+use crate::obs::sink;
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// Stable per-thread id for trace consumers that lay spans out on
+    /// virtual tracks (the Chrome exporter's `tid`).
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    /// Open spans on this thread, innermost last.
+    static STACK: RefCell<Vec<u64>> = RefCell::new(Vec::new());
+}
+
+/// This thread's stable trace-track id.
+pub fn thread_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// The innermost open span on this thread, if any.
+pub fn current() -> Option<u64> {
+    STACK.with(|s| s.borrow().last().copied())
+}
+
+struct Open {
+    span: u64,
+    name: &'static str,
+    parent: Option<u64>,
+    t0: Instant,
+}
+
+/// The RAII guard returned by [`span`] / [`span_under`]. Emits the end
+/// marker on drop; inert (`state: None`) when tracing is disabled.
+pub struct Span {
+    state: Option<Open>,
+}
+
+impl Span {
+    /// The open span's id — the parent to hand to [`span_under`] when
+    /// child work runs on another thread. `None` when tracing is off.
+    pub fn id(&self) -> Option<u64> {
+        self.state.as_ref().map(|o| o.span)
+    }
+}
+
+/// Open a span nested under this thread's innermost open span.
+pub fn span(name: &'static str) -> Span {
+    span_under(name, current())
+}
+
+/// Open a span with an explicit parent (cross-thread handoff: the
+/// spawning scope captures `guard.id()` and the spawned closure passes
+/// it here). `parent = None` opens a root span.
+pub fn span_under(name: &'static str, parent: Option<u64>) -> Span {
+    if !sink::enabled() {
+        return Span { state: None };
+    }
+    let id = next_span();
+    let mut ev = TraceEvent::new(EventKind::SpanBegin)
+        .label("name", name)
+        .num("tid", thread_tid() as f64);
+    ev.span = id;
+    ev.parent = parent;
+    sink::emit(ev);
+    STACK.with(|s| s.borrow_mut().push(id));
+    Span { state: Some(Open { span: id, name, parent, t0: Instant::now() }) }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(open) = self.state.take() else { return };
+        STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            if let Some(i) = stack.iter().rposition(|&id| id == open.span) {
+                stack.remove(i);
+            }
+        });
+        let mut ev = TraceEvent::new(EventKind::SpanEnd)
+            .label("name", open.name)
+            .num("secs", open.t0.elapsed().as_secs_f64())
+            .num("tid", thread_tid() as f64);
+        ev.span = open.span;
+        ev.parent = open.parent;
+        sink::emit(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global, so these tests only cover the
+    // disabled path and sink-free invariants; the armed begin/end
+    // semantics are pinned end to end in `rust/tests/span_nesting.rs`.
+
+    #[test]
+    fn disabled_guard_is_inert() {
+        assert!(!sink::enabled());
+        let g = span("anything");
+        assert_eq!(g.id(), None);
+        assert_eq!(current(), None);
+        drop(g);
+        assert_eq!(current(), None);
+    }
+
+    #[test]
+    fn thread_tids_are_stable_and_unique() {
+        let here = thread_tid();
+        assert_eq!(here, thread_tid(), "tid is stable within a thread");
+        let there = std::thread::spawn(thread_tid).join().unwrap();
+        assert_ne!(here, there, "each thread gets its own track");
+    }
+}

@@ -1,0 +1,144 @@
+//! Nested time breakdown: what `mkor trace export --span-tree` prints.
+//!
+//! Folds the `span_end` markers of a trace into a name-path tree
+//! (`step → allreduce → gemm`), aggregating count and total wall-clock
+//! per path, and hangs timed point events (`gemm`, `allreduce`,
+//! `inverse_update`…) off whatever span they were emitted under. The
+//! rendering is the text twin of the Chrome export: the same hierarchy,
+//! as an indented table with each row's share of its parent.
+//!
+//! Aggregation is by *name path*, not span id: a 50-step run has 50
+//! `step` spans but one `step` row, with `count=50` — the Anil-style
+//! breakdown, now nested.
+
+use super::event::{EventKind, TraceEvent};
+use crate::bench_utils::{fmt_secs, Table};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Parent-chain depth cap: a cycle in a (corrupt) trace must not hang
+/// the renderer.
+const MAX_DEPTH: usize = 64;
+
+struct SpanInfo {
+    name: String,
+    parent: Option<u64>,
+}
+
+/// The name path of span `id`, root first. `None` on a broken chain
+/// (missing parent or a cycle past [`MAX_DEPTH`]).
+fn path_of(spans: &BTreeMap<u64, SpanInfo>, id: u64) -> Option<Vec<String>> {
+    let mut path = Vec::new();
+    let mut cur = Some(id);
+    while let Some(c) = cur {
+        let info = spans.get(&c)?;
+        path.push(info.name.clone());
+        cur = info.parent;
+        if path.len() > MAX_DEPTH {
+            return None;
+        }
+    }
+    path.reverse();
+    Some(path)
+}
+
+/// Render the aggregated span tree of one decoded trace.
+pub fn render_span_tree(events: &[TraceEvent]) -> String {
+    let mut spans: BTreeMap<u64, SpanInfo> = BTreeMap::new();
+    for ev in events {
+        if ev.kind == EventKind::SpanEnd {
+            let name =
+                ev.fields.get("name").and_then(Json::as_str).unwrap_or("span").to_string();
+            spans.insert(ev.span, SpanInfo { name, parent: ev.parent });
+        }
+    }
+    // BTreeMap over name paths: a parent path sorts before every path it
+    // prefixes, so iteration order is exactly depth-first render order.
+    let mut agg: BTreeMap<Vec<String>, (usize, f64)> = BTreeMap::new();
+    for ev in events {
+        let entry = match ev.kind {
+            EventKind::SpanEnd => path_of(&spans, ev.span).map(|p| (p, ev.secs().unwrap_or(0.0))),
+            EventKind::SpanBegin => None,
+            // A timed leaf emitted under a known span hangs off its path.
+            _ => match (ev.secs(), ev.parent.and_then(|p| path_of(&spans, p))) {
+                (Some(secs), Some(mut path)) => {
+                    path.push(ev.kind.as_str().to_string());
+                    Some((path, secs))
+                }
+                _ => None,
+            },
+        };
+        if let Some((path, secs)) = entry {
+            let slot = agg.entry(path).or_insert((0, 0.0));
+            slot.0 += 1;
+            slot.1 += secs;
+        }
+    }
+    if agg.is_empty() {
+        return "no spans in trace (run with span instrumentation enabled)\n".to_string();
+    }
+    let mut t = Table::new(&["span", "count", "total", "mean", "% of parent"]);
+    for (path, &(count, total)) in &agg {
+        let depth = path.len() - 1;
+        let name = format!("{}{}", "  ".repeat(depth), path.last().unwrap());
+        let share = if depth == 0 {
+            "-".to_string()
+        } else {
+            match agg.get(&path[..depth]) {
+                Some(&(_, parent_total)) if parent_total > 0.0 => {
+                    format!("{:.1}%", total / parent_total * 100.0)
+                }
+                _ => "-".to_string(),
+            }
+        };
+        t.row(&[
+            name,
+            count.to_string(),
+            fmt_secs(total),
+            fmt_secs(total / count as f64),
+            share,
+        ]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span_end(span: u64, parent: Option<u64>, name: &str, secs: f64) -> TraceEvent {
+        let mut ev = TraceEvent::new(EventKind::SpanEnd).label("name", name).num("secs", secs);
+        ev.span = span;
+        ev.parent = parent;
+        ev
+    }
+
+    #[test]
+    fn tree_nests_and_shares_add_up() {
+        let mut gemm = TraceEvent::new(EventKind::Gemm).num("secs", 0.1);
+        gemm.parent = Some(2);
+        let events = vec![
+            span_end(1, None, "step", 1.0),
+            span_end(2, Some(1), "forward", 0.25),
+            span_end(3, Some(1), "forward", 0.25),
+            gemm,
+        ];
+        let out = render_span_tree(&events);
+        assert!(out.contains("| step"), "{out}");
+        assert!(out.contains("|   forward"), "nested indent missing:\n{out}");
+        assert!(out.contains("|     gemm"), "leaf indent missing:\n{out}");
+        // Two forward spans aggregate into one row at 50% of step.
+        assert!(out.contains("| 2"), "{out}");
+        assert!(out.contains("50.0%"), "{out}");
+        // The gemm leaf is 0.1 of 0.5 forward seconds.
+        assert!(out.contains("20.0%"), "{out}");
+    }
+
+    #[test]
+    fn orphan_leaves_and_empty_traces_are_tolerated() {
+        let mut orphan = TraceEvent::new(EventKind::Gemm).num("secs", 0.1);
+        orphan.parent = Some(999); // parent never closed in this trace
+        assert!(render_span_tree(&[orphan]).contains("no spans"));
+        assert!(render_span_tree(&[]).contains("no spans"));
+    }
+}

@@ -80,7 +80,8 @@ impl MkorH {
                             TraceEvent::new(EventKind::MkorhSwitch)
                                 .num("step", self.t as f64)
                                 .num("rate", rate)
-                                .num("peak_rate", self.peak_rate),
+                                .num("peak_rate", self.peak_rate)
+                                .maybe_under(obs::span::current()),
                         );
                         obs::registry::with_global(|r| {
                             r.gauge("mkorh.switched_at", self.t as f64)

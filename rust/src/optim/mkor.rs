@@ -249,6 +249,7 @@ impl Optimizer for Mkor {
             let second_order = self.second_order(idx);
             // ---- factor update (lines 2–8) -----------------------------
             if second_order && factor_step {
+                let _factor_span = obs::span::span("factor");
                 let t0 = std::time::Instant::now();
                 let (a, g) = self.rank1_vectors(cap);
                 let st = &mut self.layers[idx];
@@ -274,14 +275,16 @@ impl Optimizer for Mkor {
                                 .num("step", self.t as f64)
                                 .num("layer", idx as f64)
                                 .num("left", u8::from(r1.triggered) as f64)
-                                .num("right", u8::from(r2.triggered) as f64),
+                                .num("right", u8::from(r2.triggered) as f64)
+                                .maybe_under(obs::span::current()),
                         );
                     }
                     obs::emit(
                         TraceEvent::new(EventKind::InverseUpdate)
                             .num("step", self.t as f64)
                             .num("layer", idx as f64)
-                            .num("secs", factor_elapsed.as_secs_f64()),
+                            .num("secs", factor_elapsed.as_secs_f64())
+                            .maybe_under(obs::span::current()),
                     );
                     obs::registry::with_global(|r| {
                         r.inc("mkor.inverse_updates", 1);
@@ -296,6 +299,7 @@ impl Optimizer for Mkor {
             // ---- precondition + rescale (lines 9–10) -------------------
             let st = &mut self.layers[idx];
             let delta = if second_order {
+                let _precond_span = obs::span::span("precond");
                 let t0 = std::time::Instant::now();
                 ops::matmul_into(&cap.dw, &st.r_inv, &mut st.scratch_gr);
                 ops::matmul_into(&st.l_inv, &st.scratch_gr, &mut st.scratch_delta);
@@ -310,6 +314,7 @@ impl Optimizer for Mkor {
         }
 
         // ---- line 14: backend weight update ----------------------------
+        let _update_span = obs::span::span("update");
         let t0 = std::time::Instant::now();
         let dbs: Vec<Vec<f32>> = caps.iter().map(|c| c.db.clone()).collect();
         match &mut self.backend {

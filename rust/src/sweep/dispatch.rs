@@ -63,7 +63,7 @@ use std::io::Write;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Format version of the worker batch/result files.
 pub const WORKER_FORMAT_VERSION: usize = 1;
@@ -429,6 +429,9 @@ struct Running {
     attempt: usize,
     out: PathBuf,
     offset: usize,
+    /// When this worker last streamed a result (spawn time until then) —
+    /// the coordinator heartbeat reports the stalest worker's age.
+    last_seen: Instant,
 }
 
 /// Merge freshly streamed results into the done-map, printing one
@@ -566,6 +569,7 @@ pub fn run_sweep_mp(
     let pid = std::process::id();
     let mut running: Vec<Running> = Vec::new();
     let mut next_id = 0usize;
+    let mut last_hb = obs::enabled().then(Instant::now);
 
     // The dispatch loop runs in a closure so that any error path reaps
     // the still-running workers below — a failed coordinator must not
@@ -606,6 +610,7 @@ pub fn run_sweep_mp(
                     attempt,
                     out: out_path,
                     offset: 0,
+                    last_seen: Instant::now(),
                 });
             }
 
@@ -613,6 +618,9 @@ pub fn run_sweep_mp(
             let mut progressed = false;
             for r in &mut running {
                 let fresh = drain_results(&r.out, &mut r.offset);
+                if !fresh.is_empty() {
+                    r.last_seen = Instant::now();
+                }
                 progressed |= absorb(fresh, &mut done, &mut completed, n, opts.verbose);
             }
 
@@ -689,6 +697,26 @@ pub fn run_sweep_mp(
                 }
             }
             running = still;
+
+            // Run-health pulse (~1 Hz): progress, live worker count, and
+            // how long the quietest worker has been silent — the fields
+            // `mkor tail` renders to spot a stalled sweep.
+            if let Some(mark) = &mut last_hb {
+                if mark.elapsed() >= Duration::from_secs(1) {
+                    let stalest = running
+                        .iter()
+                        .map(|r| r.last_seen.elapsed().as_secs_f64())
+                        .fold(0.0f64, f64::max);
+                    obs::emit(
+                        TraceEvent::new(EventKind::Heartbeat)
+                            .num("completed", completed as f64)
+                            .num("cells", n as f64)
+                            .num("workers", running.len() as f64)
+                            .num("stalest_secs", stalest),
+                    );
+                    *mark = Instant::now();
+                }
+            }
 
             if !progressed && !running.is_empty() {
                 std::thread::sleep(Duration::from_millis(40));

@@ -199,6 +199,13 @@ pub fn run_sweep_resumed(
                 r.inc("sweep.cells_done", 1);
                 r.observe("sweep.cell_secs", t_cell.elapsed().as_secs_f64());
             });
+            // Run-health pulse: `mkor tail` renders the freshest one, so
+            // every completion refreshes the sweep's live progress.
+            obs::emit(
+                TraceEvent::new(EventKind::Heartbeat)
+                    .num("cells_done", k as f64)
+                    .num("cells", n as f64),
+            );
         }
         result
     });

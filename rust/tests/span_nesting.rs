@@ -1,0 +1,245 @@
+//! Nested-span acceptance: the begin/end guard semantics the whole
+//! profiling story rests on, asserted end to end.
+//!
+//! Part 1 pins the guard mechanics on hand-built spans: begin/end pairs
+//! share one `span` id, out-of-order drops leave siblings' parent chains
+//! intact, and cross-thread handoff via `span_under` parents work on a
+//! fresh thread under the spawner's span. Part 2 runs a real data-parallel
+//! MKOR trainer and asserts the structural claim the walkthrough makes:
+//! every `gemm` / `allreduce` / `inverse_update` leaf carries a `parent`
+//! resolving through a phase span (forward / backward / allreduce /
+//! factor / precond / update / broadcast) to a root `step` or `eval`
+//! span, and heartbeats fire on the 10-step cadence. Parts 3 and 4 feed
+//! the same trace through the Chrome exporter (balanced, deterministic
+//! B/E pairs) and the self-diff regression gate (clean at defaults, every
+//! row trips at `--max-regress -100`).
+//!
+//! One `#[test]` fn owns the whole flow: the sink is process-global, so
+//! splitting install → run → finish across tests in this binary would race.
+
+use mkor::coordinator::{Target, TrainerBuilder};
+use mkor::data::classification::{Dataset, TaskConfig};
+use mkor::model::{Activation, Mlp};
+use mkor::obs::{self, EventKind, TraceDiff, TraceEvent};
+use mkor::util::json::Json;
+use mkor::util::Rng;
+use std::collections::BTreeMap;
+
+/// Phase spans that may parent leaf events inside a step or eval.
+const PHASES: &[&str] =
+    &["forward", "backward", "allreduce", "factor", "precond", "update", "broadcast", "eval"];
+
+fn begins(events: &[TraceEvent]) -> BTreeMap<u64, &TraceEvent> {
+    events.iter().filter(|e| e.kind == EventKind::SpanBegin).map(|e| (e.span, e)).collect()
+}
+
+fn name_of(ev: &TraceEvent) -> &str {
+    ev.fields.get("name").and_then(Json::as_str).expect("span markers carry a name")
+}
+
+fn tid_of(ev: &TraceEvent) -> u64 {
+    ev.fields.get("tid").and_then(Json::as_f64).expect("span markers carry a tid") as u64
+}
+
+/// Walk `parent` links from a leaf event to the root span, returning the
+/// chain of span names outermost-last.
+fn parent_chain<'a>(
+    leaf: &TraceEvent,
+    spans: &BTreeMap<u64, &'a TraceEvent>,
+) -> Vec<&'a str> {
+    let mut chain = Vec::new();
+    let mut cursor = leaf.parent;
+    while let Some(id) = cursor {
+        let span =
+            spans.get(&id).copied().unwrap_or_else(|| panic!("dangling parent {id} on {leaf:?}"));
+        chain.push(name_of(span));
+        cursor = span.parent;
+        assert!(chain.len() <= 16, "parent cycle reached from {leaf:?}");
+    }
+    chain
+}
+
+#[test]
+fn spans_nest_across_drops_threads_and_a_real_training_run() {
+    let dir = std::env::temp_dir().join(format!("mkor-span-nesting-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // ---- part 1: guard semantics on hand-built spans -------------------
+    let guard_trace = dir.join("guards.jsonl");
+    obs::install(&guard_trace).unwrap();
+    let (a_id, b_id, c_id);
+    {
+        let a = obs::span::span("a");
+        a_id = a.id().expect("armed guards carry ids");
+        let b = obs::span::span("b");
+        b_id = b.id().unwrap();
+        assert_eq!(obs::span::current(), Some(b_id));
+        // Out-of-order drop: `a` closes while `b` stays open, and the
+        // stack removal must not disturb what nests next.
+        drop(a);
+        assert_eq!(obs::span::current(), Some(b_id), "b survives a's early close");
+        let c = obs::span::span("c");
+        c_id = c.id().unwrap();
+        // Cross-thread handoff: fresh threads start with empty stacks, so
+        // the parent is passed explicitly, as the trainer does per shard.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert_eq!(obs::span::current(), None, "fresh thread, empty stack");
+                let w = obs::span::span_under("w", Some(b_id));
+                let leaf = obs::span::span("leaf"); // nests under w via this thread's stack
+                assert_eq!(obs::span::current(), leaf.id());
+            });
+        });
+    }
+    obs::finish().unwrap().unwrap();
+
+    let log = obs::read_trace(&guard_trace).unwrap();
+    assert!(!log.torn_tail);
+    let opened = begins(&log.events);
+    let closed: BTreeMap<u64, &TraceEvent> =
+        log.events.iter().filter(|e| e.kind == EventKind::SpanEnd).map(|e| (e.span, e)).collect();
+    assert_eq!(opened.len(), 5, "a b c w leaf");
+    assert_eq!(
+        opened.keys().collect::<Vec<_>>(),
+        closed.keys().collect::<Vec<_>>(),
+        "every begin has exactly one end sharing its span id"
+    );
+    for (id, begin) in &opened {
+        let end = closed[id];
+        assert_eq!(name_of(begin), name_of(end));
+        assert_eq!(begin.parent, end.parent, "parent resolved at begin, reused at end");
+        let secs = end.secs().expect("span ends are timed");
+        assert!(secs.is_finite() && secs >= 0.0);
+    }
+    let by_name: BTreeMap<&str, &TraceEvent> =
+        opened.values().map(|e| (name_of(e), *e)).collect();
+    assert_eq!(by_name["a"].parent, None, "a is a root span");
+    assert_eq!(by_name["a"].span, a_id);
+    assert_eq!(by_name["b"].parent, Some(a_id));
+    assert_eq!(by_name["c"].parent, Some(b_id), "c parents under b, not the closed a");
+    assert_eq!(by_name["c"].span, c_id);
+    assert_eq!(by_name["w"].parent, Some(b_id), "explicit cross-thread handoff");
+    assert_eq!(by_name["leaf"].parent, Some(by_name["w"].span));
+    assert_eq!(tid_of(by_name["w"]), tid_of(by_name["leaf"]), "same spawned thread");
+    assert_ne!(tid_of(by_name["w"]), tid_of(by_name["a"]), "distinct trace track");
+
+    // ---- part 2: a real traced training run ----------------------------
+    // Layers wide enough that forward/backward/precond GEMMs cross the
+    // engine's dispatch threshold and emit `gemm` leaves; f=2 guarantees
+    // inverse updates; 2 workers make the ring collective run.
+    let mut cfg = TaskConfig::new("t", 128, 3);
+    cfg.train = 256;
+    cfg.test = 64;
+    cfg.seed = 11;
+    let ds = Dataset::generate(cfg);
+    let mut rng = Rng::new(11);
+    let model = Mlp::new(&[128, 160, 3], Activation::Relu, &mut rng);
+    let mut trainer = TrainerBuilder::new(model)
+        .optimizer_str("mkor:f=2")
+        .unwrap()
+        .constant_lr(0.01)
+        .workers(2)
+        .build();
+    let batches = ds.epoch_batches(256, 0);
+    assert_eq!(batches.len(), 1);
+    let batch = &batches[0];
+
+    let run_trace = dir.join("trainer.jsonl");
+    obs::install(&run_trace).unwrap();
+    for _ in 0..12 {
+        trainer.step(&batch.x, &Target::Labels(batch.labels.clone())).expect("diverged");
+    }
+    trainer.evaluate(&batch.x, &Target::Labels(batch.labels.clone()));
+    obs::finish().unwrap().unwrap();
+
+    let run = obs::read_trace(&run_trace).unwrap();
+    assert!(!run.torn_tail);
+    let spans = begins(&run.events);
+    let count = |k: EventKind| run.events.iter().filter(|e| e.kind == k).count();
+
+    // Every step event nests directly under its own `step` span.
+    let steps: Vec<&TraceEvent> =
+        run.events.iter().filter(|e| e.kind == EventKind::Step).collect();
+    assert_eq!(steps.len(), 12);
+    let mut step_roots = std::collections::BTreeSet::new();
+    for ev in &steps {
+        let parent = ev.parent.expect("step events nest under their step span");
+        assert_eq!(name_of(spans[&parent]), "step");
+        assert!(step_roots.insert(parent), "one step span per step");
+    }
+    // 12 steps × 2 workers, handed off onto fresh shard threads.
+    let spans_named = |n: &str| spans.values().filter(|e| name_of(e) == n).count();
+    assert_eq!(spans_named("step"), 12);
+    assert_eq!(spans_named("forward"), 24);
+    assert_eq!(spans_named("backward"), 24);
+    assert_eq!(spans_named("allreduce"), 12);
+    assert_eq!(spans_named("eval"), 1);
+    assert!(spans_named("factor") > 0, "f=2 over 12 steps must open factor spans");
+
+    // The acceptance walkthrough's claim: every leaf resolves through a
+    // phase span to a root `step` (or `eval`) span.
+    for kind in [EventKind::Gemm, EventKind::Allreduce, EventKind::InverseUpdate] {
+        assert!(count(kind) > 0, "{kind:?} must appear in this workload");
+        for leaf in run.events.iter().filter(|e| e.kind == kind) {
+            let chain = parent_chain(leaf, &spans);
+            let innermost = chain.first().copied().unwrap_or("<root>");
+            assert!(PHASES.contains(&innermost), "{kind:?} under {innermost:?}: {leaf:?}");
+            let root = chain.last().copied().unwrap();
+            assert!(root == "step" || root == "eval", "{kind:?} rooted at {root:?}");
+            match kind {
+                EventKind::Allreduce => assert_eq!(innermost, "allreduce"),
+                EventKind::InverseUpdate => assert_eq!(innermost, "factor"),
+                _ => {}
+            }
+        }
+    }
+
+    // Heartbeats on the 10-step cadence: t = 0 and t = 10, with the
+    // liveness fields `mkor tail` renders.
+    let beats: Vec<&TraceEvent> =
+        run.events.iter().filter(|e| e.kind == EventKind::Heartbeat).collect();
+    let beat_steps: Vec<f64> =
+        beats.iter().map(|e| e.fields.get("step").and_then(Json::as_f64).unwrap()).collect();
+    assert_eq!(beat_steps, vec![0.0, 10.0]);
+    for beat in &beats {
+        for key in ["steps_per_sec", "loss_ema", "state_bytes"] {
+            let v = beat.fields.get(key).and_then(Json::as_f64);
+            assert!(v.is_some_and(|v| v.is_finite()), "heartbeat missing {key}");
+        }
+    }
+    assert_eq!(
+        beats[0].fields.get("steps_per_sec").and_then(Json::as_f64),
+        Some(0.0),
+        "first beacon has no prior mark to rate against"
+    );
+
+    // ---- part 3: Chrome export over the same events --------------------
+    let chrome = obs::chrome_trace_json(&run.events);
+    assert_eq!(
+        chrome.to_string(),
+        obs::chrome_trace_json(&run.events).to_string(),
+        "export is deterministic over the same events"
+    );
+    let rows = chrome.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let ph_count = |ph: &str| {
+        rows.iter().filter(|r| r.get("ph").and_then(Json::as_str) == Some(ph)).count()
+    };
+    assert_eq!(ph_count("B"), ph_count("E"), "every duration slice opens and closes");
+    assert_eq!(ph_count("B"), spans.len());
+    let tree = obs::render_span_tree(&run.events);
+    for phase in ["step", "forward", "allreduce"] {
+        assert!(tree.contains(phase), "span tree missing {phase}:\n{tree}");
+    }
+
+    // ---- part 4: the self-diff regression gate -------------------------
+    let diff = TraceDiff::of_traces(&run.events, &run.events);
+    assert!(!diff.rows.is_empty());
+    assert!(diff.regressions(50.0).is_empty(), "a run never regresses against itself");
+    assert_eq!(
+        diff.regressions(-100.0).len(),
+        diff.rows.len(),
+        "an impossible threshold trips every row (the CI smoke's inverted gate)"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
