@@ -40,6 +40,7 @@ pub mod obs;
 pub mod optim;
 pub mod perf;
 pub mod runtime;
+pub mod serve;
 pub mod sweep;
 pub mod util;
 

@@ -2,8 +2,9 @@
 //!
 //! Subcommands:
 //!
-//! * `train`  — end-to-end transformer training through the AOT artifacts
-//!              (`make artifacts` first). Flags: `--preset tiny|small|base`,
+//! * `train`  — end-to-end transformer training through the artifact
+//!              runtime (`mkor artifacts` generates the preset bundles).
+//!              Flags: `--preset tiny|small|base`,
 //!              `--steps N`, `--workers W`, `--lr`, `--inv-freq`,
 //!              `--hybrid`, `--out results/e2e.json`.
 //! * `sim`    — proxy-model training with any optimizer spec
@@ -60,6 +61,21 @@
 //! * `tail`   — follow a live `--trace` file in place: latest step/loss,
 //!              freshest heartbeat, per-kind counts
 //!              (`--interval-ms N`, `--for-secs S`, `--once`).
+//! * `serve`  — training-as-a-service daemon: accept sweep jobs over a
+//!              versioned line-JSON TCP protocol, run them through the
+//!              crash-isolated subprocess dispatcher and keep a journaled
+//!              queue that survives daemon restarts (`--addr HOST:PORT`,
+//!              `--dir D`, `--capacity N`, `--runners N`). README
+//!              "Serving" has the protocol and operator guide.
+//! * `submit` — client: enqueue one sweep job on a daemon (`--addr`,
+//!              sweep-shaped flags, `--wait [--out F --json F]` to poll
+//!              to completion and save the byte-identical artifacts).
+//! * `jobs`   — client: list a daemon's jobs or `--cancel JOB` a queued
+//!              one.
+//! * `observe`— client: subscribe to a job's live state + trace stream
+//!              (`mkor observe JOB --addr ...`), rendered like `tail`.
+//! * `artifacts` — generate the sim-backend preset bundles under
+//!              `--out artifacts` (see `rust/src/runtime/sim.rs`).
 //! * `specs`  — print the paper-scale model specs and Table-1 complexity.
 //! * `version`
 //!
@@ -119,9 +135,15 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("trace") => cmd_trace(&args),
         Some("tail") => cmd_tail(&args),
+        Some("serve") => mkor::serve::commands::cmd_serve(&args),
+        Some("submit") => mkor::serve::commands::cmd_submit(&args),
+        Some("jobs") => mkor::serve::commands::cmd_jobs(&args),
+        Some("observe") => mkor::serve::commands::cmd_observe(&args),
+        Some("artifacts") => mkor::serve::commands::cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: mkor <train|sim|sweep|ckpt|perf|trace|tail|specs|version> [--flags]\n\
+                "usage: mkor <train|sim|sweep|ckpt|serve|submit|jobs|observe|artifacts|perf|\
+                 trace|tail|specs|version> [--flags]\n\
                  see README.md for details"
             );
             2

@@ -1,34 +1,63 @@
-//! Artifact loading: HLO text → compiled PJRT executable, plus the preset
-//! metadata (`meta.json`) that tells Rust the shapes/argument order the
-//! Python side lowered with.
+//! Artifact loading: preset metadata (`meta.json`) plus the three
+//! executables (`train_step`/`mkor_step`/`eval_step`) behind a uniform
+//! [`Executable::run`] interface.
+//!
+//! Two backends implement the contract:
+//!
+//! * **sim** (default, always available) — `meta.json` carries
+//!   `"backend": "sim"` and the executables are the pure-Rust reference
+//!   programs in [`crate::runtime::sim`]. Generate the fixture set with
+//!   `mkor artifacts`.
+//! * **pjrt** (feature `pjrt`, off by default) — the original path:
+//!   Python-lowered `*.hlo.txt` compiled through a PJRT CPU client. See
+//!   [`crate::runtime::pjrt`] for what enabling it requires.
 
+use crate::runtime::tensor::Literal;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Which of the three contract programs an [`Executable`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ProgramKind {
+    TrainStep,
+    MkorStep,
+    EvalStep,
+}
+
+enum Backend {
+    Sim(Arc<crate::runtime::sim::SimModel>),
+    #[cfg(feature = "pjrt")]
+    Pjrt(crate::runtime::pjrt::PjrtExecutable),
+}
 
 /// One compiled computation.
 pub struct Executable {
     pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+    kind: ProgramKind,
+    backend: Backend,
 }
 
 impl Executable {
     /// Execute on literals; returns the flattened tuple outputs.
-    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(args)
-            .with_context(|| format!("executing artifact `{}`", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching output of `{}`", self.name))?;
-        // aot.py lowers with return_tuple=True, so outputs are one tuple.
-        Ok(out.to_tuple()?)
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let out = match &self.backend {
+            Backend::Sim(model) => match self.kind {
+                ProgramKind::TrainStep => model.train_step(args),
+                ProgramKind::MkorStep => model.mkor_step(args),
+                ProgramKind::EvalStep => model.eval_step(args),
+            },
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(exe) => exe.run(args),
+        };
+        out.with_context(|| format!("executing artifact `{}`", self.name))
     }
 }
 
-/// Metadata for one model preset, mirrored from `python/compile/configs.py`
-/// by `aot.py` into `artifacts/<preset>/meta.json`.
+/// Metadata for one model preset (`artifacts/<preset>/meta.json`),
+/// written by `mkor artifacts` (sim) or mirrored from the Python lowering
+/// configs (pjrt).
 #[derive(Clone, Debug)]
 pub struct PresetMeta {
     pub preset: String,
@@ -40,7 +69,7 @@ pub struct PresetMeta {
     pub seq_len: usize,
     pub batch: usize,
     pub params: usize,
-    /// `(d_in, d_out)` of each preconditioned weight matrix (JAX `x @ W`
+    /// `(d_in, d_out)` of each preconditioned weight matrix (`x @ W`
     /// convention), in the order the `mkor_step` artifact consumes their
     /// factor inverses: `R⁻¹` is d_in×d_in, `L⁻¹` is d_out×d_out.
     pub factor_dims: Vec<(usize, usize)>,
@@ -92,70 +121,110 @@ impl PresetMeta {
     }
 }
 
-/// All artifacts of one preset: metadata + the compiled computations.
+/// All artifacts of one preset: metadata + the three executables.
 pub struct ArtifactBundle {
     pub meta: PresetMeta,
     pub dir: PathBuf,
-    client: xla::PjRtClient,
+    platform: String,
     /// `train_step`: (params…, tokens, targets, mask) → (loss, grads…, a_vecs…, g_vecs…)
     pub train_step: Executable,
-    /// `mkor_step`: (params…, grads…, linvs…, rinvs…, a…, g…, scalars) →
-    /// (new_params…, new_linvs…, new_rinvs…)
+    /// `mkor_step`: (grads…, linvs…, rinvs…, a…, g…, gamma, flag) →
+    /// (deltas…, new_linvs…, new_rinvs…)
     pub mkor_step: Executable,
     /// `eval_step`: (params…, tokens, targets, mask) → (loss,)
     pub eval_step: Executable,
 }
 
 impl ArtifactBundle {
-    /// Load and compile `artifacts/<preset>/` (run `make artifacts` first).
+    /// Load `artifacts/<preset>/` (generate with `mkor artifacts` first).
+    /// `meta.json`'s `backend` field selects the implementation; absent
+    /// means the legacy PJRT layout.
     pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Self> {
         let dir = artifacts_dir.join(preset);
         let meta_path = dir.join("meta.json");
-        let meta = PresetMeta::from_json(&Json::from_file(&meta_path)?)
+        let meta_json = Json::from_file(&meta_path)?;
+        let meta = PresetMeta::from_json(&meta_json)
             .with_context(|| format!("parsing {}", meta_path.display()))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let load = |name: &str| -> Result<Executable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-            Ok(Executable { name: name.to_string(), exe })
+        let backend = meta_json
+            .get("backend")
+            .and_then(Json::as_str)
+            .unwrap_or("pjrt")
+            .to_string();
+        match backend.as_str() {
+            crate::runtime::sim::SIM_BACKEND => {
+                let model = Arc::new(
+                    crate::runtime::sim::SimModel::new(meta.clone())
+                        .with_context(|| format!("validating {}", meta_path.display()))?,
+                );
+                let exe = |name: &str, kind: ProgramKind| Executable {
+                    name: name.to_string(),
+                    kind,
+                    backend: Backend::Sim(Arc::clone(&model)),
+                };
+                Ok(ArtifactBundle {
+                    train_step: exe("train_step", ProgramKind::TrainStep),
+                    mkor_step: exe("mkor_step", ProgramKind::MkorStep),
+                    eval_step: exe("eval_step", ProgramKind::EvalStep),
+                    meta,
+                    dir,
+                    platform: "sim-cpu".to_string(),
+                })
+            }
+            "pjrt" => Self::load_pjrt(meta, dir),
+            other => Err(anyhow!(
+                "{}: unknown artifact backend `{other}` (this build knows `sim`{}) — \
+                 regenerate with `mkor artifacts`",
+                meta_path.display(),
+                if cfg!(feature = "pjrt") { " and `pjrt`" } else { "" }
+            )),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn load_pjrt(meta: PresetMeta, dir: PathBuf) -> Result<Self> {
+        let loaded = crate::runtime::pjrt::load_bundle(&dir)?;
+        let exe = |name: &str, kind: ProgramKind, e: crate::runtime::pjrt::PjrtExecutable| {
+            Executable { name: name.to_string(), kind, backend: Backend::Pjrt(e) }
         };
         Ok(ArtifactBundle {
-            train_step: load("train_step")?,
-            mkor_step: load("mkor_step")?,
-            eval_step: load("eval_step")?,
+            train_step: exe("train_step", ProgramKind::TrainStep, loaded.train_step),
+            mkor_step: exe("mkor_step", ProgramKind::MkorStep, loaded.mkor_step),
+            eval_step: exe("eval_step", ProgramKind::EvalStep, loaded.eval_step),
             meta,
             dir,
-            client,
+            platform: loaded.platform,
         })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn load_pjrt(_meta: PresetMeta, dir: PathBuf) -> Result<Self> {
+        Err(anyhow!(
+            "{}: this bundle targets the PJRT backend (lowered HLO), but this build has no \
+             `pjrt` feature — run `mkor artifacts` to generate the pure-Rust sim bundle, or \
+             rebuild with `--features pjrt` in a PJRT-equipped environment \
+             (see rust/src/runtime/pjrt.rs)",
+            dir.display()
+        ))
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.clone()
     }
 }
 
 /// Build an f32 literal of the given shape from a flat slice.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    Ok(Literal::f32(data, dims)?)
 }
 
 /// Build an i32 literal of the given shape from a flat slice.
-pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
-    let n: i64 = dims.iter().product();
-    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
-    Ok(xla::Literal::vec1(data).reshape(dims)?)
+pub fn literal_i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+    Ok(Literal::i32(data, dims)?)
 }
 
 /// Scalar f32 literal.
-pub fn literal_scalar(x: f32) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(&[x]).reshape(&[])?)
+pub fn literal_scalar(x: f32) -> Result<Literal> {
+    Ok(Literal::scalar_f32(x))
 }
 
 #[cfg(test)]
@@ -181,5 +250,29 @@ mod tests {
     fn preset_meta_rejects_missing_fields() {
         let j = Json::parse(r#"{"preset":"x"}"#).unwrap();
         assert!(PresetMeta::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bundle_loads_generated_sim_preset_and_rejects_pjrt_without_feature() {
+        let dir = std::env::temp_dir().join(format!("mkor-artifact-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::runtime::sim::write_preset(&dir, "tiny").unwrap();
+        let bundle = ArtifactBundle::load(&dir, "tiny").unwrap();
+        assert_eq!(bundle.platform(), "sim-cpu");
+        assert_eq!(bundle.meta.preset, "tiny");
+
+        // A meta without the backend marker means legacy PJRT — without
+        // the feature that must be an actionable error, not a skip.
+        if cfg!(not(feature = "pjrt")) {
+            let pdir = dir.join("legacy");
+            std::fs::create_dir_all(&pdir).unwrap();
+            let mut j = crate::runtime::sim::preset_meta_json(&bundle.meta);
+            j.set("backend", Json::Str("pjrt".to_string()));
+            j.to_file(&pdir.join("meta.json")).unwrap();
+            let e = ArtifactBundle::load(&dir, "legacy").unwrap_err().to_string();
+            assert!(e.contains("pjrt"), "{e}");
+            assert!(e.contains("mkor artifacts"), "{e}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

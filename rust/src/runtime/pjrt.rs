@@ -1,0 +1,93 @@
+//! The native PJRT artifact backend (feature `pjrt`, **off by default**).
+//!
+//! This is the original loading path: Python-lowered `*.hlo.txt` compiled
+//! through a PJRT CPU client. It depends on the out-of-tree `xla` crate
+//! (a native XLA/PJRT binding), which is intentionally **not** declared in
+//! `Cargo.toml` — this repository builds offline, and an undeclared native
+//! toolchain must fail at feature-selection time with a clear message, not
+//! at link time deep in a build.
+//!
+//! To enable in a PJRT-equipped environment:
+//!
+//! 1. add the binding to `Cargo.toml` (e.g. `xla = "0.1"` or a vendored
+//!    path dependency) under `[dependencies]`, and
+//! 2. build with `cargo build --features pjrt`.
+//!
+//! Everything else — [`crate::runtime::ArtifactBundle`], the trainer, the
+//! tests — is backend-agnostic over [`Literal`]; this module only converts
+//! at the boundary.
+
+use crate::runtime::tensor::Literal;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// One PJRT-compiled computation.
+pub struct PjrtExecutable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The three compiled programs plus the client's platform name.
+pub struct LoadedBundle {
+    pub platform: String,
+    pub train_step: PjrtExecutable,
+    pub mkor_step: PjrtExecutable,
+    pub eval_step: PjrtExecutable,
+}
+
+fn to_xla(lit: &Literal) -> Result<xla::Literal> {
+    let dims = lit.dims().to_vec();
+    match lit {
+        Literal::F32 { data, .. } => Ok(xla::Literal::vec1(data).reshape(&dims)?),
+        Literal::I32 { data, .. } => Ok(xla::Literal::vec1(data).reshape(&dims)?),
+    }
+}
+
+fn from_xla(lit: &xla::Literal) -> Result<Literal> {
+    let shape = lit.shape()?;
+    let dims: Vec<i64> = match &shape {
+        xla::Shape::Array(a) => a.dims().to_vec(),
+        _ => anyhow::bail!("non-array literal in artifact output"),
+    };
+    match lit.to_vec::<f32>() {
+        Ok(v) => Ok(Literal::f32(&v, &dims)?),
+        Err(_) => Ok(Literal::i32(&lit.to_vec::<i32>()?, &dims)?),
+    }
+}
+
+impl PjrtExecutable {
+    /// Execute on literals; returns the flattened tuple outputs
+    /// (the lowering uses `return_tuple=True`).
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let xargs = args.iter().map(to_xla).collect::<Result<Vec<_>>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&xargs)
+            .context("executing PJRT artifact")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching PJRT artifact output")?;
+        out.to_tuple()?.iter().map(from_xla).collect()
+    }
+}
+
+/// Compile `dir/{train_step,mkor_step,eval_step}.hlo.txt` on the PJRT
+/// CPU client.
+pub fn load_bundle(dir: &Path) -> Result<LoadedBundle> {
+    let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+    let load = |name: &str| -> Result<PjrtExecutable> {
+        let path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+        Ok(PjrtExecutable { exe })
+    };
+    Ok(LoadedBundle {
+        platform: client.platform_name(),
+        train_step: load("train_step")?,
+        mkor_step: load("mkor_step")?,
+        eval_step: load("eval_step")?,
+    })
+}

@@ -1,0 +1,808 @@
+//! The pure-Rust artifact backend: reference executables for the
+//! `train_step` / `mkor_step` / `eval_step` contracts.
+//!
+//! The original artifact path compiled Python-lowered HLO through PJRT —
+//! a native toolchain this build cannot assume (see
+//! [`crate::runtime::pjrt`], feature-gated off by default). This module
+//! implements the same three executables directly against a small
+//! masked-LM proxy model, so `mkor artifacts` can generate a complete,
+//! dependency-free fixture set and the artifact-driven trainer
+//! ([`crate::runtime::XlaTrainer`]) runs end to end on any machine.
+//!
+//! The proxy model (all parameters 2-D, shapes published in `meta.json`):
+//!
+//! ```text
+//! h   = E[token] + P[position]                  embed [vocab,d] + pos [seq,d]
+//! ×L: h = h + relu(h·W1)·W2                     W1 [d,d_ff], W2 [d_ff,d]
+//! hn  = rmsnorm(h)                              (parameter-free, scale-stable)
+//! logits = hn·W_head                            head [d,vocab]
+//! loss = masked mean cross-entropy
+//! ```
+//!
+//! `mkor_step` is *literally* Algorithm 1: factor inverses advance via
+//! [`Mkor::sm_update`] (Eq. 5/6) and deltas are `rescale(R⁻¹ ∇ L⁻¹)`,
+//! the exact dense evaluation `rust/tests/xla_cross_check.rs` compares
+//! against — the cross-check validates the argument order, shape
+//! plumbing and rescale normalization of the executable contract.
+//!
+//! The embed/pos tables are params 0 and 1 and are never preconditioned;
+//! `factor_dims` lists every following 2-D matrix in order, matching the
+//! `precond_idx` alignment rule the cross-check asserts.
+
+use crate::linalg::{ops, Matrix};
+use crate::optim::Mkor;
+use crate::runtime::artifact::PresetMeta;
+use crate::runtime::tensor::Literal;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// `meta.json` marker selecting this backend (absent = legacy PJRT).
+pub const SIM_BACKEND: &str = "sim";
+
+/// RMS-norm epsilon (inside the sqrt, so the norm is exact-differentiable).
+const RMS_EPS: f32 = 1e-6;
+
+/// The preset catalog `mkor artifacts` can generate.
+pub const PRESETS: [&str; 2] = ["tiny", "small"];
+
+/// Build the [`PresetMeta`] of a named sim preset.
+pub fn preset_meta(preset: &str) -> Result<PresetMeta> {
+    let (vocab, d_model, n_layers, n_heads, d_ff, seq_len, batch) = match preset {
+        "tiny" => (64, 32, 2, 2, 64, 16, 8),
+        "small" => (256, 64, 4, 4, 128, 32, 16),
+        other => bail!(
+            "unknown artifact preset `{other}` (available: {})",
+            PRESETS.join(", ")
+        ),
+    };
+    let mut param_shapes = vec![vec![vocab, d_model], vec![seq_len, d_model]];
+    for _ in 0..n_layers {
+        param_shapes.push(vec![d_model, d_ff]);
+        param_shapes.push(vec![d_ff, d_model]);
+    }
+    param_shapes.push(vec![d_model, vocab]);
+    let factor_dims: Vec<(usize, usize)> =
+        param_shapes[2..].iter().map(|s| (s[0], s[1])).collect();
+    let params = param_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+    Ok(PresetMeta {
+        preset: preset.to_string(),
+        vocab,
+        d_model,
+        n_layers,
+        n_heads,
+        d_ff,
+        seq_len,
+        batch,
+        params,
+        factor_dims,
+        param_shapes,
+    })
+}
+
+/// Serialize a preset's `meta.json` (sorted keys — stable bytes).
+pub fn preset_meta_json(meta: &PresetMeta) -> Json {
+    let mut j = Json::obj();
+    j.set("backend", Json::Str(SIM_BACKEND.to_string()))
+        .set("preset", Json::Str(meta.preset.clone()))
+        .set("vocab", Json::Num(meta.vocab as f64))
+        .set("d_model", Json::Num(meta.d_model as f64))
+        .set("n_layers", Json::Num(meta.n_layers as f64))
+        .set("n_heads", Json::Num(meta.n_heads as f64))
+        .set("d_ff", Json::Num(meta.d_ff as f64))
+        .set("seq_len", Json::Num(meta.seq_len as f64))
+        .set("batch", Json::Num(meta.batch as f64))
+        .set("params", Json::Num(meta.params as f64))
+        .set(
+            "factor_dims",
+            Json::Arr(
+                meta.factor_dims
+                    .iter()
+                    .map(|&(a, b)| Json::from_usizes(&[a, b]))
+                    .collect(),
+            ),
+        )
+        .set(
+            "param_shapes",
+            Json::Arr(meta.param_shapes.iter().map(|s| Json::from_usizes(s)).collect()),
+        );
+    j
+}
+
+/// Write `dir/<preset>/meta.json` for a sim preset; returns the preset
+/// directory. This is the whole fixture set: the sim backend needs no
+/// lowered HLO files.
+pub fn write_preset(dir: &Path, preset: &str) -> Result<PathBuf> {
+    let meta = preset_meta(preset)?;
+    let pdir = dir.join(preset);
+    std::fs::create_dir_all(&pdir)
+        .map_err(|e| anyhow!("creating {}: {e}", pdir.display()))?;
+    let path = pdir.join("meta.json");
+    preset_meta_json(&meta)
+        .to_file(&path)
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(pdir)
+}
+
+/// The sim model: [`PresetMeta`] plus the derived preconditioning index.
+pub struct SimModel {
+    pub meta: PresetMeta,
+    /// For each factor pair j, the index of the param it preconditions.
+    precond_idx: Vec<usize>,
+}
+
+impl SimModel {
+    /// Validate the meta against the layout this backend implements.
+    pub fn new(meta: PresetMeta) -> Result<SimModel> {
+        let np = meta.param_shapes.len();
+        ensure!(
+            np == 3 + 2 * meta.n_layers,
+            "sim backend expects embed + pos + {}×(W1,W2) + head = {} params, meta lists {np}",
+            meta.n_layers,
+            3 + 2 * meta.n_layers
+        );
+        let d = meta.d_model;
+        let expect: Vec<Vec<usize>> = {
+            let mut v = vec![vec![meta.vocab, d], vec![meta.seq_len, d]];
+            for _ in 0..meta.n_layers {
+                v.push(vec![d, meta.d_ff]);
+                v.push(vec![meta.d_ff, d]);
+            }
+            v.push(vec![d, meta.vocab]);
+            v
+        };
+        ensure!(
+            meta.param_shapes == expect,
+            "sim backend param layout mismatch: meta has {:?}, expected {:?} — regenerate \
+             with `mkor artifacts`",
+            meta.param_shapes,
+            expect
+        );
+        let want_factors: Vec<(usize, usize)> =
+            expect[2..].iter().map(|s| (s[0], s[1])).collect();
+        ensure!(
+            meta.factor_dims == want_factors,
+            "sim backend factor_dims mismatch: meta has {:?}, expected {:?}",
+            meta.factor_dims,
+            want_factors
+        );
+        let precond_idx: Vec<usize> = (2..np).collect();
+        Ok(SimModel { meta, precond_idx })
+    }
+
+    fn np(&self) -> usize {
+        self.meta.param_shapes.len()
+    }
+
+    fn nm(&self) -> usize {
+        self.meta.factor_dims.len()
+    }
+
+    // ---- argument parsing ----------------------------------------------
+
+    fn want_f32(&self, args: &[Literal], k: usize, dims: &[i64], what: &str) -> Result<Vec<f32>> {
+        let lit = args
+            .get(k)
+            .ok_or_else(|| anyhow!("missing arg {k} (`{what}`)"))?;
+        ensure!(
+            lit.dims() == dims,
+            "arg {k} (`{what}`): expected f32{dims:?}, got {lit}"
+        );
+        lit.to_vec::<f32>()
+            .map_err(|e| anyhow!("arg {k} (`{what}`): {e}"))
+    }
+
+    fn want_i32(&self, args: &[Literal], k: usize, dims: &[i64], what: &str) -> Result<Vec<i32>> {
+        let lit = args
+            .get(k)
+            .ok_or_else(|| anyhow!("missing arg {k} (`{what}`)"))?;
+        ensure!(
+            lit.dims() == dims,
+            "arg {k} (`{what}`): expected i32{dims:?}, got {lit}"
+        );
+        lit.to_vec::<i32>()
+            .map_err(|e| anyhow!("arg {k} (`{what}`): {e}"))
+    }
+
+    fn parse_params(&self, args: &[Literal]) -> Result<Vec<Matrix>> {
+        self.meta
+            .param_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
+                let data = self.want_f32(args, i, &dims, &format!("param {i}"))?;
+                Ok(Matrix::from_vec(s[0], s[1], data))
+            })
+            .collect()
+    }
+
+    /// Parse the trailing (tokens, targets, mask) batch triple starting at
+    /// argument `at`; the leading (batch) dim is taken from the literal —
+    /// shards are smaller than `meta.batch`.
+    fn parse_batch(
+        &self,
+        args: &[Literal],
+        at: usize,
+    ) -> Result<(usize, Vec<i32>, Vec<i32>, Vec<f32>)> {
+        let s = self.meta.seq_len;
+        let tok_lit = args
+            .get(at)
+            .ok_or_else(|| anyhow!("missing arg {at} (`tokens`)"))?;
+        let dims = tok_lit.dims().to_vec();
+        ensure!(
+            dims.len() == 2 && dims[1] == s as i64 && dims[0] >= 1,
+            "arg {at} (`tokens`): expected i32[b,{s}], got {tok_lit}"
+        );
+        let b = dims[0] as usize;
+        let toks = self.want_i32(args, at, &dims, "tokens")?;
+        let tgts = self.want_i32(args, at + 1, &dims, "targets")?;
+        let mask = self.want_f32(args, at + 2, &dims, "mask")?;
+        let vocab = self.meta.vocab as i32;
+        for (r, &t) in toks.iter().enumerate() {
+            ensure!(
+                (0..vocab).contains(&t),
+                "tokens[{r}] = {t} out of range for vocab {vocab}"
+            );
+        }
+        for (r, (&g, &m)) in tgts.iter().zip(&mask).enumerate() {
+            ensure!(m.is_finite() && m >= 0.0, "mask[{r}] = {m} is not a weight");
+            if m > 0.0 {
+                ensure!(
+                    (0..vocab).contains(&g),
+                    "targets[{r}] = {g} out of range for vocab {vocab}"
+                );
+            }
+        }
+        Ok((b, toks, tgts, mask))
+    }
+
+    // ---- forward / backward --------------------------------------------
+
+    /// `train_step`: `(params…, tokens, targets, mask)` →
+    /// `(loss, grads…, a_vecs…, g_vecs…)`.
+    pub fn train_step(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let np = self.np();
+        ensure!(
+            args.len() == np + 3,
+            "train_step takes {} args ({np} params + tokens/targets/mask), got {}",
+            np + 3,
+            args.len()
+        );
+        let params = self.parse_params(args)?;
+        let (b, toks, tgts, mask) = self.parse_batch(args, np)?;
+        let fwd = self.forward(&params, b, &toks);
+        let (loss, dlogits) = self.loss_and_dlogits(&fwd.logits, &tgts, &mask);
+
+        let d = self.meta.d_model;
+        let nl = self.meta.n_layers;
+        let head = &params[np - 1];
+
+        // Backward through the head and the parameter-free RMS norm.
+        let g_head = ops::matmul_tn(&fwd.hn, &dlogits);
+        let dhn = ops::matmul_nt(&dlogits, head);
+        let mut dh = rmsnorm_backward(&fwd.hn, &fwd.rms, &dhn);
+
+        // Per-factor rank-1 statistics (batch means), factor order.
+        let nm = self.nm();
+        let mut a_vecs: Vec<Vec<f32>> = vec![Vec::new(); nm];
+        let mut g_vecs: Vec<Vec<f32>> = vec![Vec::new(); nm];
+        a_vecs[nm - 1] = mean_rows(&fwd.hn);
+        g_vecs[nm - 1] = mean_rows(&dlogits);
+
+        // Backward through the residual MLP stack.
+        let mut grads: Vec<Matrix> = Vec::with_capacity(np);
+        let mut layer_grads: Vec<(Matrix, Matrix)> = Vec::with_capacity(nl);
+        for l in (0..nl).rev() {
+            let w1 = &params[2 + 2 * l];
+            let w2 = &params[2 + 2 * l + 1];
+            let lf = &fwd.layers[l];
+            let dv = dh.clone(); // residual branch output grad
+            let g_w2 = ops::matmul_tn(&lf.act, &dv);
+            let da = ops::matmul_nt(&dv, w2);
+            let mut du = da;
+            relu_backward_inplace(&mut du, &lf.pre);
+            let g_w1 = ops::matmul_tn(&lf.input, &du);
+            // Rank-1 stats for this layer's two factor pairs.
+            a_vecs[2 * l] = mean_rows(&lf.input);
+            g_vecs[2 * l] = mean_rows(&du);
+            a_vecs[2 * l + 1] = mean_rows(&lf.act);
+            g_vecs[2 * l + 1] = mean_rows(&dv);
+            // dh flows through both the skip and the MLP branch.
+            let dskip = ops::matmul_nt(&du, w1);
+            add_inplace(&mut dh, &dskip);
+            layer_grads.push((g_w1, g_w2));
+        }
+        layer_grads.reverse();
+
+        // Embedding/position gradients: scatter dh rows.
+        let s = self.meta.seq_len;
+        let mut g_embed = Matrix::zeros(self.meta.vocab, d);
+        let mut g_pos = Matrix::zeros(s, d);
+        for i in 0..b {
+            for t in 0..s {
+                let r = i * s + t;
+                let tok = toks[r] as usize;
+                let row = &dh.data()[r * d..(r + 1) * d];
+                let e = &mut g_embed.data_mut()[tok * d..(tok + 1) * d];
+                for (ev, &rv) in e.iter_mut().zip(row) {
+                    *ev += rv;
+                }
+                let p = &mut g_pos.data_mut()[t * d..(t + 1) * d];
+                for (pv, &rv) in p.iter_mut().zip(row) {
+                    *pv += rv;
+                }
+            }
+        }
+        grads.push(g_embed);
+        grads.push(g_pos);
+        for (g1, g2) in layer_grads {
+            grads.push(g1);
+            grads.push(g2);
+        }
+        grads.push(g_head);
+
+        // Package: (loss, grads…, a_vecs…, g_vecs…).
+        let mut out = Vec::with_capacity(1 + np + 2 * nm);
+        out.push(Literal::scalar_f32(loss));
+        for (g, shape) in grads.iter().zip(&self.meta.param_shapes) {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            out.push(Literal::f32(g.data(), &dims)?);
+        }
+        for (a, &(din, _)) in a_vecs.iter().zip(&self.meta.factor_dims) {
+            out.push(Literal::f32(a, &[din as i64])?);
+        }
+        for (g, &(_, dout)) in g_vecs.iter().zip(&self.meta.factor_dims) {
+            out.push(Literal::f32(g, &[dout as i64])?);
+        }
+        Ok(out)
+    }
+
+    /// `eval_step`: `(params…, tokens, targets, mask)` → `(loss,)`.
+    pub fn eval_step(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let np = self.np();
+        ensure!(
+            args.len() == np + 3,
+            "eval_step takes {} args, got {}",
+            np + 3,
+            args.len()
+        );
+        let params = self.parse_params(args)?;
+        let (b, toks, tgts, mask) = self.parse_batch(args, np)?;
+        let fwd = self.forward(&params, b, &toks);
+        let (loss, _) = self.loss_and_dlogits(&fwd.logits, &tgts, &mask);
+        Ok(vec![Literal::scalar_f32(loss)])
+    }
+
+    /// `mkor_step`: `(grads…, linvs…, rinvs…, a…, g…, gamma, flag)` →
+    /// `(deltas…, new_linvs…, new_rinvs…)`. With `flag > 0.5` the factor
+    /// inverses advance by [`Mkor::sm_update`] first; either way the
+    /// preconditioned deltas are `rescale(R⁻¹ ∇ L⁻¹)` and the embed/pos
+    /// grads pass through untouched.
+    pub fn mkor_step(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let (np, nm) = (self.np(), self.nm());
+        let want = np + 4 * nm + 2;
+        ensure!(
+            args.len() == want,
+            "mkor_step takes {want} args ({np} grads + {nm}×(linv,rinv,a,g) + gamma + flag), \
+             got {}",
+            args.len()
+        );
+        let mut grads = Vec::with_capacity(np);
+        for (i, shape) in self.meta.param_shapes.iter().enumerate() {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            let data = self.want_f32(args, i, &dims, &format!("grad {i}"))?;
+            grads.push(Matrix::from_vec(shape[0], shape[1], data));
+        }
+        let mut linvs = Vec::with_capacity(nm);
+        let mut rinvs = Vec::with_capacity(nm);
+        for (j, &(_, dout)) in self.meta.factor_dims.iter().enumerate() {
+            let dims = [dout as i64, dout as i64];
+            let data = self.want_f32(args, np + j, &dims, &format!("linv {j}"))?;
+            linvs.push(Matrix::from_vec(dout, dout, data));
+        }
+        for (j, &(din, _)) in self.meta.factor_dims.iter().enumerate() {
+            let dims = [din as i64, din as i64];
+            let data = self.want_f32(args, np + nm + j, &dims, &format!("rinv {j}"))?;
+            rinvs.push(Matrix::from_vec(din, din, data));
+        }
+        let mut a_vecs = Vec::with_capacity(nm);
+        let mut g_vecs = Vec::with_capacity(nm);
+        for (j, &(din, _)) in self.meta.factor_dims.iter().enumerate() {
+            a_vecs.push(self.want_f32(args, np + 2 * nm + j, &[din as i64], &format!("a {j}"))?);
+        }
+        for (j, &(_, dout)) in self.meta.factor_dims.iter().enumerate() {
+            g_vecs.push(self.want_f32(args, np + 3 * nm + j, &[dout as i64], &format!("g {j}"))?);
+        }
+        let gamma = self.want_f32(args, np + 4 * nm, &[], "gamma")?[0];
+        let flag = self.want_f32(args, np + 4 * nm + 1, &[], "update flag")?[0];
+
+        // Factor update (Eq. 5/6) when the flag is raised.
+        if flag > 0.5 {
+            for j in 0..nm {
+                let (din, dout) = self.meta.factor_dims[j];
+                let mut scratch = vec![0.0f32; dout];
+                Mkor::sm_update(&mut linvs[j], &g_vecs[j], gamma, &mut scratch);
+                let mut scratch = vec![0.0f32; din];
+                Mkor::sm_update(&mut rinvs[j], &a_vecs[j], gamma, &mut scratch);
+            }
+        }
+
+        // Preconditioning + rescale; non-preconditioned grads pass through.
+        let mut deltas: Vec<Matrix> = grads.clone();
+        for (j, &i) in self.precond_idx.iter().enumerate() {
+            let raw = ops::matmul(&ops::matmul(&rinvs[j], &grads[i]), &linvs[j]);
+            let gn = grads[i].fro_norm();
+            let dn = raw.fro_norm();
+            let mut scaled = raw;
+            scaled.scale((gn / dn.max(1e-30)) as f32);
+            deltas[i] = scaled;
+        }
+
+        let mut out = Vec::with_capacity(np + 2 * nm);
+        for (d, shape) in deltas.iter().zip(&self.meta.param_shapes) {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            out.push(Literal::f32(d.data(), &dims)?);
+        }
+        for (l, &(_, dout)) in linvs.iter().zip(&self.meta.factor_dims) {
+            out.push(Literal::f32(l.data(), &[dout as i64, dout as i64])?);
+        }
+        for (r, &(din, _)) in rinvs.iter().zip(&self.meta.factor_dims) {
+            out.push(Literal::f32(r.data(), &[din as i64, din as i64])?);
+        }
+        Ok(out)
+    }
+
+    fn forward(&self, params: &[Matrix], b: usize, toks: &[i32]) -> Forward {
+        let d = self.meta.d_model;
+        let s = self.meta.seq_len;
+        let n = b * s;
+        let embed = &params[0];
+        let pos = &params[1];
+        let mut h = Matrix::zeros(n, d);
+        for i in 0..b {
+            for t in 0..s {
+                let r = i * s + t;
+                let tok = toks[r] as usize;
+                let e = &embed.data()[tok * d..(tok + 1) * d];
+                let p = &pos.data()[t * d..(t + 1) * d];
+                let row = &mut h.data_mut()[r * d..(r + 1) * d];
+                for (hv, (&ev, &pv)) in row.iter_mut().zip(e.iter().zip(p)) {
+                    *hv = ev + pv;
+                }
+            }
+        }
+        let mut layers = Vec::with_capacity(self.meta.n_layers);
+        for l in 0..self.meta.n_layers {
+            let w1 = &params[2 + 2 * l];
+            let w2 = &params[2 + 2 * l + 1];
+            let input = h.clone();
+            let pre = ops::matmul(&input, w1);
+            let mut act = pre.clone();
+            for v in act.data_mut() {
+                *v = v.max(0.0);
+            }
+            let out = ops::matmul(&act, w2);
+            add_inplace(&mut h, &out);
+            layers.push(LayerFwd { input, pre, act });
+        }
+        let (hn, rms) = rmsnorm_rows(&h);
+        let logits = ops::matmul(&hn, &params[params.len() - 1]);
+        Forward { layers, hn, rms, logits }
+    }
+
+    /// Masked mean cross-entropy over the logits, plus its gradient.
+    fn loss_and_dlogits(
+        &self,
+        logits: &Matrix,
+        tgts: &[i32],
+        mask: &[f32],
+    ) -> (f32, Matrix) {
+        let (n, v) = (logits.rows(), logits.cols());
+        let wsum: f64 = mask.iter().map(|&m| m as f64).sum();
+        let denom = wsum.max(1e-12);
+        let mut dlogits = Matrix::zeros(n, v);
+        let mut loss = 0.0f64;
+        for r in 0..n {
+            let row = &logits.data()[r * v..(r + 1) * v];
+            let m = mask[r];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z = 0.0f64;
+            for &x in row {
+                z += ((x - mx) as f64).exp();
+            }
+            let log_z = mx as f64 + z.ln();
+            if m > 0.0 {
+                let t = tgts[r] as usize;
+                loss += (m as f64) * (log_z - row[t] as f64);
+            }
+            let drow = &mut dlogits.data_mut()[r * v..(r + 1) * v];
+            if m > 0.0 {
+                let t = tgts[r] as usize;
+                let w = (m as f64 / denom) as f32;
+                for (c, dv) in drow.iter_mut().enumerate() {
+                    let p = (((row[c] - mx) as f64).exp() / z) as f32;
+                    *dv = w * (p - f32::from(c == t));
+                }
+            }
+        }
+        ((loss / denom) as f32, dlogits)
+    }
+}
+
+struct LayerFwd {
+    input: Matrix,
+    pre: Matrix,
+    act: Matrix,
+}
+
+struct Forward {
+    layers: Vec<LayerFwd>,
+    hn: Matrix,
+    rms: Vec<f32>,
+    logits: Matrix,
+}
+
+fn add_inplace(dst: &mut Matrix, src: &Matrix) {
+    debug_assert_eq!((dst.rows(), dst.cols()), (src.rows(), src.cols()));
+    for (d, &s) in dst.data_mut().iter_mut().zip(src.data()) {
+        *d += s;
+    }
+}
+
+fn relu_backward_inplace(grad: &mut Matrix, pre: &Matrix) {
+    for (g, &p) in grad.data_mut().iter_mut().zip(pre.data()) {
+        if p <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Row-wise RMS normalization: `y_r = x_r / sqrt(mean(x_r²) + ε)`.
+fn rmsnorm_rows(x: &Matrix) -> (Matrix, Vec<f32>) {
+    let (n, d) = (x.rows(), x.cols());
+    let mut y = Matrix::zeros(n, d);
+    let mut rms = vec![0.0f32; n];
+    for r in 0..n {
+        let row = &x.data()[r * d..(r + 1) * d];
+        let ms: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / d as f64;
+        let rv = (ms + RMS_EPS as f64).sqrt() as f32;
+        rms[r] = rv;
+        let yr = &mut y.data_mut()[r * d..(r + 1) * d];
+        for (yv, &xv) in yr.iter_mut().zip(row) {
+            *yv = xv / rv;
+        }
+    }
+    (y, rms)
+}
+
+/// Exact backward of [`rmsnorm_rows`], per row:
+/// `dx_j = (dy_j − y_j · Σ_k dy_k y_k / d) / r`.
+fn rmsnorm_backward(y: &Matrix, rms: &[f32], dy: &Matrix) -> Matrix {
+    let (n, d) = (y.rows(), y.cols());
+    let mut dx = Matrix::zeros(n, d);
+    for r in 0..n {
+        let yr = &y.data()[r * d..(r + 1) * d];
+        let dyr = &dy.data()[r * d..(r + 1) * d];
+        let s: f64 = yr.iter().zip(dyr).map(|(&a, &b)| (a as f64) * (b as f64)).sum();
+        let s = (s / d as f64) as f32;
+        let rv = rms[r];
+        let dxr = &mut dx.data_mut()[r * d..(r + 1) * d];
+        for ((dv, &yv), &dyv) in dxr.iter_mut().zip(yr).zip(dyr) {
+            *dv = (dyv - yv * s) / rv;
+        }
+    }
+    dx
+}
+
+/// Mean over the rows of an `n×d` matrix → length-`d` vector.
+fn mean_rows(m: &Matrix) -> Vec<f32> {
+    let (n, d) = (m.rows(), m.cols());
+    let mut out = vec![0.0f64; d];
+    for r in 0..n {
+        for (o, &v) in out.iter_mut().zip(&m.data()[r * d..(r + 1) * d]) {
+            *o += v as f64;
+        }
+    }
+    out.iter().map(|&v| (v / n.max(1) as f64) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::xla_trainer::init_params;
+    use crate::util::Rng;
+
+    fn mini_model() -> SimModel {
+        let mut meta = preset_meta("tiny").unwrap();
+        meta.preset = "mini".into();
+        meta.vocab = 7;
+        meta.d_model = 4;
+        meta.n_layers = 1;
+        meta.n_heads = 1;
+        meta.d_ff = 5;
+        meta.seq_len = 3;
+        meta.batch = 2;
+        meta.param_shapes = vec![
+            vec![7, 4],
+            vec![3, 4],
+            vec![4, 5],
+            vec![5, 4],
+            vec![4, 7],
+        ];
+        meta.factor_dims = vec![(4, 5), (5, 4), (4, 7)];
+        meta.params = meta.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum();
+        SimModel::new(meta).unwrap()
+    }
+
+    fn lit_args(model: &SimModel, params: &[Vec<f32>], b: usize, seed: u64) -> Vec<Literal> {
+        let meta = &model.meta;
+        let mut rng = Rng::new(seed);
+        let s = meta.seq_len;
+        let mut toks = Vec::new();
+        let mut tgts = Vec::new();
+        let mut mask = Vec::new();
+        for _ in 0..b * s {
+            toks.push((rng.next_u64() % meta.vocab as u64) as i32);
+            tgts.push((rng.next_u64() % meta.vocab as u64) as i32);
+            mask.push(if rng.next_u64() % 3 == 0 { 0.0 } else { 1.0 });
+        }
+        mask[0] = 1.0; // at least one supervised position, whatever the seed
+
+        let mut args: Vec<Literal> = params
+            .iter()
+            .zip(&meta.param_shapes)
+            .map(|(p, sh)| {
+                let dims: Vec<i64> = sh.iter().map(|&d| d as i64).collect();
+                Literal::f32(p, &dims).unwrap()
+            })
+            .collect();
+        let dims = [b as i64, s as i64];
+        args.push(Literal::i32(&toks, &dims).unwrap());
+        args.push(Literal::i32(&tgts, &dims).unwrap());
+        args.push(Literal::f32(&mask, &dims).unwrap());
+        args
+    }
+
+    #[test]
+    fn presets_generate_consistent_meta() {
+        for name in PRESETS {
+            let meta = preset_meta(name).unwrap();
+            let model = SimModel::new(meta.clone()).unwrap();
+            assert_eq!(model.nm(), meta.param_shapes.len() - 2);
+            // The cross-check's alignment rule must hold: factor j maps to
+            // param j+2, and embed/pos (params 0/1) are never factored.
+            assert_eq!(model.precond_idx, (2..meta.param_shapes.len()).collect::<Vec<_>>());
+            let j = preset_meta_json(&meta);
+            let back = PresetMeta::from_json(&j).unwrap();
+            assert_eq!(back.factor_dims, meta.factor_dims);
+            assert_eq!(back.param_shapes, meta.param_shapes);
+        }
+        assert!(preset_meta("bogus").is_err());
+    }
+
+    #[test]
+    fn train_step_gradients_match_finite_differences() {
+        let model = mini_model();
+        let mut rng = Rng::new(11);
+        let mut params = init_params(&model.meta, &mut rng);
+        // Non-degenerate magnitudes so finite differences are well-scaled.
+        for p in &mut params {
+            for v in p.iter_mut() {
+                *v *= 10.0;
+            }
+        }
+        let args = lit_args(&model, &params, 2, 3);
+        let out = model.train_step(&args).unwrap();
+        let np = model.meta.param_shapes.len();
+        assert_eq!(out.len(), 1 + np + 2 * model.meta.factor_dims.len());
+        let loss = out[0].to_vec::<f32>().unwrap()[0];
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+
+        let eval_loss = |params: &[Vec<f32>]| -> f32 {
+            let args = lit_args(&model, params, 2, 3);
+            model.eval_step(&args).unwrap()[0].to_vec::<f32>().unwrap()[0]
+        };
+        assert!((eval_loss(&params) - loss).abs() < 1e-6, "eval/train forward agree");
+
+        let h = 1e-2f32;
+        for pi in 0..np {
+            let grad = out[1 + pi].to_vec::<f32>().unwrap();
+            let n = grad.len();
+            for &k in &[0usize, n / 2, n - 1] {
+                let mut up = params.to_vec();
+                up[pi][k] += h;
+                let mut dn = params.to_vec();
+                dn[pi][k] -= h;
+                let fd = (eval_loss(&up) - eval_loss(&dn)) / (2.0 * h);
+                let g = grad[k];
+                assert!(
+                    (fd - g).abs() < 5e-3 + 0.02 * g.abs(),
+                    "param {pi}[{k}]: analytic {g} vs finite-diff {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mkor_step_with_identity_factors_passes_grads_through() {
+        let model = mini_model();
+        let meta = &model.meta;
+        let (np, nm) = (meta.param_shapes.len(), meta.factor_dims.len());
+        let mut rng = Rng::new(5);
+        let mut args = Vec::new();
+        let mut grads = Vec::new();
+        for sh in &meta.param_shapes {
+            let n: usize = sh.iter().product();
+            let mut v = vec![0.0f32; n];
+            rng.fill_gaussian(&mut v, 1.0);
+            let dims: Vec<i64> = sh.iter().map(|&d| d as i64).collect();
+            args.push(Literal::f32(&v, &dims).unwrap());
+            grads.push(v);
+        }
+        for &(_, dout) in &meta.factor_dims {
+            let m = Matrix::identity(dout);
+            args.push(Literal::f32(m.data(), &[dout as i64, dout as i64]).unwrap());
+        }
+        for &(din, _) in &meta.factor_dims {
+            let m = Matrix::identity(din);
+            args.push(Literal::f32(m.data(), &[din as i64, din as i64]).unwrap());
+        }
+        for &(din, _) in &meta.factor_dims {
+            args.push(Literal::f32(&vec![0.5f32; din], &[din as i64]).unwrap());
+        }
+        for &(_, dout) in &meta.factor_dims {
+            args.push(Literal::f32(&vec![0.5f32; dout], &[dout as i64]).unwrap());
+        }
+        args.push(Literal::scalar_f32(0.9));
+        args.push(Literal::scalar_f32(0.0)); // flag off: factors frozen
+        let out = model.mkor_step(&args).unwrap();
+        assert_eq!(out.len(), np + 2 * nm);
+        // Identity factors + rescale ⇒ deltas equal the grads (scale 1).
+        for i in 0..np {
+            let d = out[i].to_vec::<f32>().unwrap();
+            for (a, b) in d.iter().zip(&grads[i]) {
+                assert!((a - b).abs() < 1e-5, "param {i}: {a} vs {b}");
+            }
+        }
+        // flag = 0: identity in, identity out.
+        for (j, &(_, dout)) in meta.factor_dims.iter().enumerate() {
+            let got = out[np + j].to_vec::<f32>().unwrap();
+            assert_eq!(got, Matrix::identity(dout).data().to_vec(), "linv {j}");
+        }
+    }
+
+    #[test]
+    fn executables_reject_malformed_arguments() {
+        let model = mini_model();
+        let e = model.train_step(&[]).unwrap_err().to_string();
+        assert!(e.contains("train_step takes"), "{e}");
+        let mut rng = Rng::new(2);
+        let params = init_params(&model.meta, &mut rng);
+        let mut args = lit_args(&model, &params, 2, 3);
+        // Token out of vocab range.
+        let s = model.meta.seq_len as i64;
+        args[5] = Literal::i32(&vec![99; 2 * s as usize], &[2, s]).unwrap();
+        let e = model.train_step(&args).unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        // Wrong element type where f32 is expected.
+        let mut args = lit_args(&model, &params, 2, 3);
+        let last = args.len() - 1;
+        args[last] = Literal::i32(&vec![1; 2 * s as usize], &[2, s]).unwrap();
+        let e = model.train_step(&args).unwrap_err().to_string();
+        assert!(e.contains("mask"), "{e}");
+    }
+
+    #[test]
+    fn write_preset_round_trips_through_meta_json() {
+        let dir = std::env::temp_dir().join(format!("mkor-sim-preset-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let pdir = write_preset(&dir, "tiny").unwrap();
+        let j = Json::from_file(&pdir.join("meta.json")).unwrap();
+        assert_eq!(j.get("backend").and_then(Json::as_str), Some(SIM_BACKEND));
+        let meta = PresetMeta::from_json(&j).unwrap();
+        SimModel::new(meta).unwrap();
+        assert!(write_preset(&dir, "nope").is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,186 @@
+//! The backend-neutral tensor value the runtime layer traffics in.
+//!
+//! Historically the artifact path used the PJRT crate's `Literal`
+//! directly, which welded the whole runtime module to an out-of-tree
+//! native dependency. [`Literal`] is the in-crate replacement: a flat
+//! host buffer plus dims, dense row-major, exactly the shapes the
+//! `train_step`/`mkor_step`/`eval_step` artifact contracts exchange
+//! (f32 tensors, i32 token grids, scalars). The sim backend
+//! ([`crate::runtime::sim`]) consumes it natively; the optional PJRT
+//! backend converts at its boundary.
+
+use std::fmt;
+
+/// What can be wrong with building or reading a literal.
+#[derive(Debug, thiserror::Error)]
+pub enum TensorError {
+    #[error("literal shape/data mismatch: dims {dims:?} hold {want} elements, got {got}")]
+    ShapeMismatch { dims: Vec<i64>, want: usize, got: usize },
+    #[error("literal holds {found} elements, expected {expected}")]
+    WrongElementType { found: &'static str, expected: &'static str },
+    #[error("negative dimension {0} in literal shape")]
+    NegativeDim(i64),
+}
+
+/// A dense row-major host tensor: the value type artifact executables
+/// accept and return.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Literal {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    I32 { data: Vec<i32>, dims: Vec<i64> },
+}
+
+fn checked_len(dims: &[i64]) -> Result<usize, TensorError> {
+    let mut n = 1usize;
+    for &d in dims {
+        if d < 0 {
+            return Err(TensorError::NegativeDim(d));
+        }
+        n = n.saturating_mul(d as usize);
+    }
+    Ok(n)
+}
+
+impl Literal {
+    /// Build an f32 literal of the given shape from a flat slice.
+    pub fn f32(data: &[f32], dims: &[i64]) -> Result<Literal, TensorError> {
+        let want = checked_len(dims)?;
+        if want != data.len() {
+            return Err(TensorError::ShapeMismatch {
+                dims: dims.to_vec(),
+                want,
+                got: data.len(),
+            });
+        }
+        Ok(Literal::F32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Build an i32 literal of the given shape from a flat slice.
+    pub fn i32(data: &[i32], dims: &[i64]) -> Result<Literal, TensorError> {
+        let want = checked_len(dims)?;
+        if want != data.len() {
+            return Err(TensorError::ShapeMismatch {
+                dims: dims.to_vec(),
+                want,
+                got: data.len(),
+            });
+        }
+        Ok(Literal::I32 { data: data.to_vec(), dims: dims.to_vec() })
+    }
+
+    /// Rank-0 f32 scalar.
+    pub fn scalar_f32(x: f32) -> Literal {
+        Literal::F32 { data: vec![x], dims: Vec::new() }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        match self {
+            Literal::F32 { dims, .. } | Literal::I32 { dims, .. } => dims,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            Literal::F32 { data, .. } => data.len(),
+            Literal::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Literal::F32 { .. } => "f32",
+            Literal::I32 { .. } => "i32",
+        }
+    }
+
+    /// Borrow the f32 buffer, or `None` for an i32 literal.
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Literal::F32 { data, .. } => Some(data),
+            Literal::I32 { .. } => None,
+        }
+    }
+
+    /// Borrow the i32 buffer, or `None` for an f32 literal.
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Literal::I32 { data, .. } => Some(data),
+            Literal::F32 { .. } => None,
+        }
+    }
+
+    /// Copy the buffer out as `Vec<T>` — the accessor the trainer uses
+    /// (`out[k].to_vec::<f32>()?`), mirroring the PJRT literal API it
+    /// replaced. Asking an i32 literal for f32 (or vice versa) is a typed
+    /// error, never a silent cast.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, TensorError> {
+        T::extract(self)
+    }
+}
+
+impl fmt::Display for Literal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{:?} ({} elems)", self.type_name(), self.dims(), self.len())
+    }
+}
+
+/// Element types a [`Literal`] can yield via [`Literal::to_vec`].
+pub trait Element: Sized + Copy {
+    fn extract(lit: &Literal) -> Result<Vec<Self>, TensorError>;
+}
+
+impl Element for f32 {
+    fn extract(lit: &Literal) -> Result<Vec<f32>, TensorError> {
+        match lit {
+            Literal::F32 { data, .. } => Ok(data.clone()),
+            Literal::I32 { .. } => Err(TensorError::WrongElementType {
+                found: "i32",
+                expected: "f32",
+            }),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn extract(lit: &Literal) -> Result<Vec<i32>, TensorError> {
+        match lit {
+            Literal::I32 { data, .. } => Ok(data.clone()),
+            Literal::F32 { .. } => Err(TensorError::WrongElementType {
+                found: "f32",
+                expected: "i32",
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trips_and_checks_shapes() {
+        let l = Literal::f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.dims(), &[2, 2]);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.to_vec::<i32>().is_err(), "no silent casts");
+        assert!(Literal::f32(&[1.0], &[2, 2]).is_err());
+        assert!(Literal::i32(&[1], &[-1]).is_err());
+        let s = Literal::scalar_f32(0.5);
+        assert!(s.dims().is_empty());
+        assert_eq!(s.to_vec::<f32>().unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn i32_literal_holds_token_grids() {
+        let l = Literal::i32(&[1, 2, 3, 4, 5, 6], &[2, 3]).unwrap();
+        assert_eq!(l.as_i32().unwrap().len(), 6);
+        assert!(l.as_f32().is_none());
+        let c = l.clone();
+        assert_eq!(c, l);
+    }
+}

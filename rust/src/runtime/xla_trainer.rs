@@ -22,6 +22,7 @@ use crate::linalg::half::HalfKind;
 use crate::optim::hybrid::SwitchConfig;
 use crate::optim::{MkorConfig, OptimizerSpec};
 use crate::runtime::artifact::{literal_f32, literal_i32, literal_scalar, ArtifactBundle};
+use crate::runtime::tensor::Literal;
 use crate::util::stats::Ema;
 use anyhow::{Context, Result};
 
@@ -188,7 +189,7 @@ impl XlaTrainer {
         out
     }
 
-    fn param_literals(&self) -> Result<Vec<xla::Literal>> {
+    fn param_literals(&self) -> Result<Vec<Literal>> {
         self.params
             .iter()
             .zip(&self.bundle.meta.param_shapes)
@@ -199,7 +200,7 @@ impl XlaTrainer {
             .collect()
     }
 
-    fn batch_literals(&self, shard: &TokenBatch) -> Result<Vec<xla::Literal>> {
+    fn batch_literals(&self, shard: &TokenBatch) -> Result<Vec<Literal>> {
         let b = shard.tokens.len();
         let s = self.bundle.meta.seq_len;
         let (toks, tgts, mask) = shard.to_flat();
@@ -228,10 +229,7 @@ impl XlaTrainer {
             if shard.tokens.is_empty() {
                 continue;
             }
-            let mut args = params_lit
-                .iter()
-                .map(clone_literal)
-                .collect::<Result<Vec<_>>>()?;
+            let mut args = params_lit.clone();
             args.extend(self.batch_literals(shard)?);
             let out = self.bundle.train_step.run(&args)?;
             anyhow::ensure!(
@@ -307,7 +305,7 @@ impl XlaTrainer {
             mean_grads.clone()
         } else {
             self.stabilize_factors();
-            let mut args: Vec<xla::Literal> = Vec::new();
+            let mut args: Vec<Literal> = Vec::new();
             for (g, s) in mean_grads.iter().zip(&self.bundle.meta.param_shapes) {
                 let dims: Vec<i64> = s.iter().map(|&d| d as i64).collect();
                 args.push(literal_f32(g, &dims)?);
@@ -461,17 +459,6 @@ fn stabilize_flat(buf: &mut [f32], n: usize, eps: f64, zeta: f32) {
             buf[i * n + i] += 1.0 - zeta;
         }
     }
-}
-
-/// Clone a literal via reshape-to-same-dims (the crate's Literal is not
-/// `Clone`; reshape copies).
-fn clone_literal(l: &xla::Literal) -> Result<xla::Literal> {
-    let shape = l.shape()?;
-    let dims: Vec<i64> = match &shape {
-        xla::Shape::Array(a) => a.dims().to_vec(),
-        _ => anyhow::bail!("cannot clone non-array literal"),
-    };
-    Ok(l.reshape(&dims)?)
 }
 
 #[cfg(test)]

@@ -1,0 +1,145 @@
+//! Client side of the serve protocol: one TCP connection, typed helpers
+//! over the line framing. Used by the `mkor submit|jobs|observe` CLI and
+//! by the integration tests (which also speak raw bytes through
+//! [`Client::raw_roundtrip`] to probe the daemon's error handling).
+
+use crate::serve::protocol::{JobSpec, JobView, Request, PROTOCOL_VERSION};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to mkor serve at {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone().context("cloning client socket")?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Connect with retries — for clients racing a daemon that is still
+    /// binding its listener.
+    pub fn connect_retry(addr: &str, timeout: Duration) -> Result<Client> {
+        let t0 = Instant::now();
+        loop {
+            match Client::connect(addr) {
+                Ok(c) => return Ok(c),
+                Err(e) if t0.elapsed() >= timeout => return Err(e),
+                Err(_) => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
+
+    /// Send one raw line (no trailing `\n` needed) and read one response
+    /// line. The raw form exists so tests can send deliberately broken
+    /// bytes; normal callers use the typed helpers.
+    pub fn raw_roundtrip(&mut self, line: &[u8]) -> Result<Json> {
+        self.writer.write_all(line).context("sending request")?;
+        self.writer.write_all(b"\n").context("sending request")?;
+        self.read_json_line()?.ok_or_else(|| anyhow!("daemon closed the connection"))
+    }
+
+    /// Read one line and parse it as JSON; `None` on a clean EOF.
+    pub fn read_json_line(&mut self) -> Result<Option<Json>> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).context("reading response")?;
+        if n == 0 {
+            return Ok(None);
+        }
+        let trimmed = line.trim_end();
+        Ok(Some(Json::parse(trimmed).map_err(|e| anyhow!("bad response line `{trimmed}`: {e}"))?))
+    }
+
+    /// Typed request → verified-`ok` response object. Error responses
+    /// surface as `code: message` anyhow errors.
+    pub fn roundtrip(&mut self, req: &Request) -> Result<Json> {
+        let resp = self.raw_roundtrip(req.to_line().as_bytes())?;
+        expect_ok(resp)
+    }
+
+    pub fn ping(&mut self) -> Result<String> {
+        Ok(self.roundtrip(&Request::Ping)?.require_str("server")?.to_string())
+    }
+
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<String> {
+        let resp = self.roundtrip(&Request::Submit { spec: spec.clone() })?;
+        Ok(resp.require_str("job")?.to_string())
+    }
+
+    pub fn jobs(&mut self) -> Result<Vec<JobView>> {
+        let resp = self.roundtrip(&Request::Jobs)?;
+        let arr = resp.get("jobs").and_then(Json::as_arr).unwrap_or(&[]);
+        arr.iter().map(JobView::from_json).collect()
+    }
+
+    pub fn status(&mut self, job: &str) -> Result<JobView> {
+        let resp = self.roundtrip(&Request::Status { job: job.into() })?;
+        JobView::from_json(resp.get("job").ok_or_else(|| anyhow!("status response lacks `job`"))?)
+    }
+
+    pub fn cancel(&mut self, job: &str) -> Result<()> {
+        self.roundtrip(&Request::Cancel { job: job.into() }).map(|_| ())
+    }
+
+    /// Fetch a done job's merged artifacts as `(csv, json)` — the exact
+    /// bytes the daemon wrote, suitable for byte-for-byte comparison with
+    /// a direct `mkor sweep --jobs 1 --deterministic` run.
+    pub fn result(&mut self, job: &str) -> Result<(String, String)> {
+        let resp = self.roundtrip(&Request::Result { job: job.into() })?;
+        Ok((resp.require_str("csv")?.to_string(), resp.require_str("json")?.to_string()))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.roundtrip(&Request::Shutdown).map(|_| ())
+    }
+
+    /// Poll `status` until the job reaches a terminal state.
+    pub fn wait(&mut self, job: &str, timeout: Duration) -> Result<JobView> {
+        let t0 = Instant::now();
+        loop {
+            let view = self.status(job)?;
+            if matches!(view.state.as_str(), "done" | "failed" | "cancelled") {
+                return Ok(view);
+            }
+            if t0.elapsed() >= timeout {
+                bail!("timed out after {:?} waiting for {job} (state: {})", timeout, view.state);
+            }
+            std::thread::sleep(Duration::from_millis(150));
+        }
+    }
+
+    /// Start a subscription stream. Returns once the `subscribed` ack is
+    /// verified; subsequent [`Client::read_json_line`] calls yield stream
+    /// lines until a terminal `state` line.
+    pub fn subscribe(&mut self, job: &str) -> Result<()> {
+        self.roundtrip(&Request::Subscribe { job: job.into() }).map(|_| ())
+    }
+}
+
+/// Check the envelope of a response object: version match and `ok:true`,
+/// or a decoded typed error.
+pub fn expect_ok(resp: Json) -> Result<Json> {
+    let v = resp.require_usize("v")? as u64;
+    if v != PROTOCOL_VERSION {
+        bail!("daemon speaks protocol v{v}, this client v{PROTOCOL_VERSION}");
+    }
+    match resp.get("ok").and_then(Json::as_bool) {
+        Some(true) => Ok(resp),
+        Some(false) => {
+            let err = resp.get("error").ok_or_else(|| anyhow!("error response lacks `error`"))?;
+            bail!(
+                "{}: {}",
+                err.require_str("code").unwrap_or("unknown"),
+                err.require_str("message").unwrap_or("(no message)")
+            )
+        }
+        None => bail!("response lacks `ok`: {resp}"),
+    }
+}

@@ -1,0 +1,295 @@
+//! CLI front-ends for the serving stack: `mkor serve`, `mkor submit`,
+//! `mkor jobs`, `mkor observe` and the artifact generator `mkor
+//! artifacts`. `main.rs` only dispatches here.
+
+use crate::cli::Args;
+use crate::obs;
+use crate::runtime::sim;
+use crate::serve::client::Client;
+use crate::serve::daemon::{self, ServeOptions};
+use crate::serve::protocol::JobSpec;
+use crate::util::json::Json;
+use std::io::{IsTerminal, Write};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+const DEFAULT_ADDR: &str = "127.0.0.1:7070";
+
+/// `mkor serve --addr HOST:PORT --dir D [--capacity N] [--runners N]
+/// [--job-workers N]`: run the training-as-a-service daemon until
+/// SIGTERM/SIGINT or a `shutdown` op.
+pub fn cmd_serve(args: &Args) -> i32 {
+    let dir = PathBuf::from(args.get_or("dir", "serve-data"));
+    let mut opts = ServeOptions::new(args.get_or("addr", DEFAULT_ADDR), dir.clone());
+    opts.capacity = args.usize_or("capacity", 64);
+    opts.runners = args.usize_or("runners", 1);
+    // The daemon always runs with a trace sink so subscriptions have a
+    // live feed: the session-wide `--trace PATH` if one was installed,
+    // else its own `<dir>/trace.jsonl`.
+    opts.trace_path = if obs::enabled() {
+        args.get("trace")
+            .map(str::to_string)
+            .or_else(|| std::env::var("MKOR_TRACE").ok())
+            .map(PathBuf::from)
+    } else {
+        let path = dir.join("trace.jsonl");
+        if let Err(e) = std::fs::create_dir_all(&dir) {
+            eprintln!("error: creating {}: {e}", dir.display());
+            return 1;
+        }
+        match obs::install(&path) {
+            Ok(()) => Some(path),
+            Err(e) => {
+                obs::log::warn(&format!("serve: no trace sink ({e:#}); streams carry states only"));
+                None
+            }
+        }
+    };
+    match daemon::serve(&opts) {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("error: serve: {e:#}");
+            1
+        }
+    }
+}
+
+/// Build a [`JobSpec`] from `submit`'s CLI flags (defaults mirror
+/// `mkor sweep`).
+fn spec_from_args(args: &Args) -> Result<JobSpec, String> {
+    let specs = args.get("specs").ok_or_else(|| {
+        "usage: mkor submit --addr HOST:PORT --specs \"kfac:f={5,10};lamb\" \
+         [--task glue] [--steps N] [--lr LR] [--cell-workers W] [--batch B] \
+         [--seed S] [--eval-every N] [--hidden 96,48] [--job-workers N] \
+         [--wait [--out sweep.csv] [--json sweep.json]]"
+            .to_string()
+    })?;
+    let mut spec = JobSpec::new(specs, args.get_or("task", "glue"));
+    spec.steps = args.usize_or("steps", spec.steps);
+    spec.lr = args.f32_or("lr", spec.lr);
+    spec.cell_workers = args.usize_or("cell-workers", spec.cell_workers);
+    spec.batch = args.usize_or("batch", spec.batch);
+    spec.seed = args.u64_or("seed", spec.seed);
+    spec.eval_every = args.usize_or("eval-every", spec.eval_every);
+    spec.job_workers = args.usize_or("job-workers", spec.job_workers);
+    if let Some(h) = args.get("hidden") {
+        spec.hidden = h
+            .split(',')
+            .map(|w| w.trim().parse::<usize>().map_err(|_| ()))
+            .collect::<Result<Vec<_>, ()>>()
+            .map_err(|()| format!("bad --hidden `{h}`: expected widths like `96,48`"))?;
+    }
+    Ok(spec)
+}
+
+/// `mkor submit --addr A --specs "..." [...] [--wait]`: enqueue one sweep
+/// job; with `--wait`, poll to completion and optionally save the
+/// artifacts locally (byte-identical to a direct `mkor sweep` run).
+pub fn cmd_submit(args: &Args) -> i32 {
+    let spec = match spec_from_args(args) {
+        Ok(spec) => spec,
+        Err(usage) => {
+            eprintln!("{usage}");
+            return 2;
+        }
+    };
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let mut client = match Client::connect_retry(addr, Duration::from_secs(5)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    let job = match client.submit(&spec) {
+        Ok(job) => job,
+        Err(e) => {
+            eprintln!("error: submit: {e:#}");
+            return 1;
+        }
+    };
+    println!("submitted {job}");
+    if !args.flag("wait") {
+        return 0;
+    }
+    let timeout = Duration::from_secs_f64(args.f64_or("timeout-secs", 3600.0));
+    let view = match client.wait(&job, timeout) {
+        Ok(view) => view,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    println!("{job}: {}", view.state);
+    if view.state != "done" {
+        if let Some(d) = &view.detail {
+            eprintln!("{d}");
+        }
+        return 1;
+    }
+    if args.get("out").is_some() || args.get("json").is_some() {
+        let (csv, json) = match client.result(&job) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: result: {e:#}");
+                return 1;
+            }
+        };
+        for (flag, payload) in [("out", csv), ("json", json)] {
+            if let Some(path) = args.get(flag) {
+                if let Err(e) = std::fs::write(path, payload) {
+                    eprintln!("error: saving {path}: {e}");
+                    return 1;
+                }
+                println!("wrote {path}");
+            }
+        }
+    }
+    0
+}
+
+/// `mkor jobs --addr A [--cancel JOB]`: list the daemon's jobs or cancel
+/// a queued one.
+pub fn cmd_jobs(args: &Args) -> i32 {
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let mut client = match Client::connect_retry(addr, Duration::from_secs(5)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    if let Some(job) = args.get("cancel") {
+        return match client.cancel(job) {
+            Ok(()) => {
+                println!("cancelled {job}");
+                0
+            }
+            Err(e) => {
+                eprintln!("error: cancel: {e:#}");
+                1
+            }
+        };
+    }
+    let jobs = match client.jobs() {
+        Ok(jobs) => jobs,
+        Err(e) => {
+            eprintln!("error: jobs: {e:#}");
+            return 1;
+        }
+    };
+    if jobs.is_empty() {
+        println!("no jobs");
+        return 0;
+    }
+    let mut t = crate::bench_utils::Table::new(&["job", "state", "task", "steps", "specs"]);
+    for j in &jobs {
+        let state = match &j.detail {
+            Some(d) => format!("{} ({d})", j.state),
+            None => j.state.clone(),
+        };
+        t.row(&[j.id.clone(), state, j.task.clone(), j.steps.to_string(), j.specs.clone()]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+/// `mkor observe JOB --addr A`: subscribe to a job and follow its live
+/// feed — the same aggregated view as `mkor tail` on a terminal, one
+/// rendered event line per trace event under a pipe.
+pub fn cmd_observe(args: &Args) -> i32 {
+    let Some(job) = args.positional.get(1) else {
+        eprintln!("usage: mkor observe JOB --addr HOST:PORT");
+        return 2;
+    };
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let mut client = match Client::connect_retry(addr, Duration::from_secs(5)) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            return 1;
+        }
+    };
+    if let Err(e) = client.subscribe(job) {
+        eprintln!("error: subscribe: {e:#}");
+        return 1;
+    }
+    let ansi = std::io::stdout().is_terminal();
+    let mut view = obs::TailView::default();
+    let mut drawn_lines = 0usize;
+    loop {
+        let line = match client.read_json_line() {
+            Ok(Some(line)) => line,
+            Ok(None) => {
+                eprintln!("error: daemon closed the stream");
+                return 1;
+            }
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return 1;
+            }
+        };
+        match line.get("stream").and_then(Json::as_str) {
+            Some("state") => {
+                let state = line.get("state").and_then(Json::as_str).unwrap_or("?");
+                let detail = line.get("detail").and_then(Json::as_str);
+                println!("{job}: {state}{}", detail.map(|d| format!(" ({d})")).unwrap_or_default());
+                match state {
+                    "done" => return 0,
+                    "failed" | "cancelled" => return 1,
+                    _ => {}
+                }
+            }
+            Some("event") => {
+                let Some(ev) = line.get("event") else { continue };
+                match obs::TraceEvent::from_json(ev) {
+                    Ok(ev) => {
+                        if ansi {
+                            view.absorb(&ev);
+                            let screen = view.render();
+                            let mut out = std::io::stdout().lock();
+                            if drawn_lines > 0 {
+                                let _ = write!(out, "\x1b[{drawn_lines}A\x1b[J");
+                            }
+                            let _ = out.write_all(screen.as_bytes());
+                            let _ = out.flush();
+                            drawn_lines = screen.lines().count();
+                        } else {
+                            println!("{}", ev.render());
+                        }
+                    }
+                    Err(e) => obs::log::warn(&format!("observe: bad event: {e}")),
+                }
+            }
+            _ => obs::log::warn(&format!("observe: unexpected line: {line}")),
+        }
+    }
+}
+
+/// `mkor artifacts [--out artifacts] [--preset tiny|small]`: generate the
+/// sim-backend preset bundles that `mkor train` and the artifact-driven
+/// tests load. Writing them is cheap and deterministic; CI runs this
+/// before the test suite so `e2e_smoke`/`xla_cross_check` never skip.
+pub fn cmd_artifacts(args: &Args) -> i32 {
+    let out = PathBuf::from(args.get_or("out", "artifacts"));
+    let presets: Vec<&str> = match args.get("preset") {
+        Some(p) => vec![p],
+        None => sim::PRESETS.to_vec(),
+    };
+    for preset in presets {
+        match sim::write_preset(&out, preset) {
+            Ok(path) => println!("wrote {}", path.display()),
+            Err(e) => {
+                eprintln!("error: generating `{preset}`: {e:#}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// Shared by tests: the default artifacts directory relative to the repo
+/// root (cargo runs tests with the package root as cwd).
+pub fn default_artifacts_dir() -> &'static Path {
+    Path::new("artifacts")
+}

@@ -1,0 +1,308 @@
+//! The `mkor serve` daemon: accept loop, runner threads and the trace
+//! pump that feeds live subscriptions.
+//!
+//! Thread layout:
+//!
+//! * **accept loop** (caller thread) — non-blocking `accept` + 25 ms poll,
+//!   one `session::handle_conn` thread per connection;
+//! * **runners** (`--runners N`, default 1) — claim queued jobs in FIFO
+//!   order and run them through the same `run_sweep_mp` fan-out the
+//!   `mkor sweep --workers` CLI uses, always with `recover = true` so a
+//!   job interrupted by a daemon crash resumes from its scratch files;
+//! * **trace pump** — follows the daemon's own `--trace` sink with
+//!   [`obs::TraceFollower`] and relays each event to subscribers of the
+//!   currently running job.
+//!
+//! Shutdown (SIGTERM, SIGINT or the `shutdown` op) stops accepting
+//! connections and submits, lets the running job finish — its transitions
+//! keep journaling — and exits 0 with a flushed journal.
+
+use crate::experiments::convergence::RunOpts;
+use crate::obs;
+use crate::serve::protocol::{stream_state_line, JobSpec};
+use crate::serve::queue::{JobQueue, JobRecord};
+use crate::serve::{session, signal};
+use crate::sweep::{run_sweep_mp, task_by_name, MpOptions, SweepGrid, SweepOptions};
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Test hook: hold each claimed job in `running` for this many
+/// milliseconds before executing it, giving tests a deterministic window
+/// to observe `running`/`queue_full` states. Unset in normal operation.
+pub const RUN_DELAY_ENV: &str = "MKOR_SERVE_RUN_DELAY_MS";
+
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port 0 picks a free port (printed on stdout).
+    pub addr: String,
+    /// Daemon state directory: journal, per-job artifacts, default trace.
+    pub dir: PathBuf,
+    /// Max *queued* jobs before `submit` answers `queue_full`.
+    pub capacity: usize,
+    /// Concurrent runner threads.
+    pub runners: usize,
+    /// Trace file the pump follows for subscription streams (the daemon's
+    /// own obs sink); `None` disables streaming of trace events.
+    pub trace_path: Option<PathBuf>,
+}
+
+impl ServeOptions {
+    pub fn new(addr: impl Into<String>, dir: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions {
+            addr: addr.into(),
+            dir: dir.into(),
+            capacity: 64,
+            runners: 1,
+            trace_path: None,
+        }
+    }
+}
+
+/// One live subscription: stream lines queue onto an unbounded channel
+/// drained by the subscriber's session thread.
+struct Sub {
+    id: u64,
+    job: String,
+    tx: mpsc::Sender<String>,
+}
+
+/// Registry of live subscriptions, shared by runners (state transitions),
+/// the trace pump (events) and sessions (register/unregister).
+#[derive(Default)]
+pub struct Subscribers {
+    inner: Mutex<(u64, Vec<Sub>)>,
+}
+
+impl Subscribers {
+    pub fn subscribe(&self, job: &str) -> (u64, mpsc::Receiver<String>) {
+        let (tx, rx) = mpsc::channel();
+        let mut inner = self.inner.lock().unwrap();
+        inner.0 += 1;
+        let id = inner.0;
+        inner.1.push(Sub { id, job: job.to_string(), tx });
+        (id, rx)
+    }
+
+    pub fn unsubscribe(&self, id: u64) {
+        self.inner.lock().unwrap().1.retain(|s| s.id != id);
+    }
+
+    /// Send one line to every subscriber of `job`, dropping subscribers
+    /// whose session is gone (a killed client never blocks the sender:
+    /// the channel is unbounded and send-errors just unregister).
+    pub fn send_to(&self, job: &str, line: &str) {
+        self.inner
+            .lock()
+            .unwrap()
+            .1
+            .retain(|s| s.job != job || s.tx.send(line.to_string()).is_ok());
+    }
+
+    pub fn broadcast_state(&self, job: &JobRecord) {
+        self.send_to(
+            &job.id,
+            &stream_state_line(&job.id, job.state.as_str(), job.detail.as_deref()),
+        );
+    }
+}
+
+/// State shared by every daemon thread.
+pub struct Ctx {
+    pub queue: JobQueue,
+    pub subs: Subscribers,
+    pub dir: PathBuf,
+}
+
+/// Run the daemon until a stop is requested; returns the process exit
+/// code (0 on a clean shutdown).
+pub fn serve(opts: &ServeOptions) -> Result<i32> {
+    std::fs::create_dir_all(&opts.dir)
+        .with_context(|| format!("creating serve dir {}", opts.dir.display()))?;
+    let queue = JobQueue::open(&opts.dir, opts.capacity.max(1))?;
+    let ctx = Arc::new(Ctx { queue, subs: Subscribers::default(), dir: opts.dir.clone() });
+    signal::install_stop_handler();
+
+    let listener = TcpListener::bind(&opts.addr)
+        .with_context(|| format!("binding {}", opts.addr))?;
+    let local = listener.local_addr().context("reading bound address")?;
+    // The one contractual stdout line: scripts and tests parse the port
+    // from it (`--addr 127.0.0.1:0` binds an ephemeral port).
+    println!("mkor serve: listening on {local}");
+    std::io::stdout().flush().ok();
+    listener.set_nonblocking(true).context("setting the listener non-blocking")?;
+    obs::log::note(&format!(
+        "serve: dir {}, capacity {}, {} runner(s), protocol v{}",
+        opts.dir.display(),
+        opts.capacity.max(1),
+        opts.runners.max(1),
+        crate::serve::protocol::PROTOCOL_VERSION,
+    ));
+
+    let mut runners = Vec::new();
+    for i in 0..opts.runners.max(1) {
+        let ctx = ctx.clone();
+        runners.push(
+            std::thread::Builder::new()
+                .name(format!("mkor-serve-runner-{i}"))
+                .spawn(move || runner_loop(&ctx))
+                .context("spawning runner thread")?,
+        );
+    }
+    if let Some(trace) = &opts.trace_path {
+        let ctx = ctx.clone();
+        let trace = trace.clone();
+        std::thread::Builder::new()
+            .name("mkor-serve-pump".into())
+            .spawn(move || pump_loop(&ctx, &trace))
+            .context("spawning trace pump thread")?;
+    }
+
+    while !signal::stop_requested() {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let ctx = ctx.clone();
+                let name = format!("mkor-serve-conn-{peer}");
+                let spawned = std::thread::Builder::new().name(name).spawn(move || {
+                    // A session error is one client's problem (dropped
+                    // socket, bad pipe) — never the daemon's.
+                    if let Err(e) = session::handle_conn(stream, &ctx) {
+                        obs::log::note(&format!("serve: session {peer}: {e:#}"));
+                    }
+                });
+                if let Err(e) = spawned {
+                    obs::log::warn(&format!("serve: spawning session thread: {e}"));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => obs::log::warn(&format!("serve: accept failed: {e}")),
+        }
+    }
+
+    // Clean shutdown: no new jobs, wake idle runners, wait out the
+    // in-flight job so its terminal transition reaches the journal.
+    obs::log::note("serve: stop requested; draining runners");
+    ctx.queue.shutdown();
+    for handle in runners {
+        let _ = handle.join();
+    }
+    obs::log::note("serve: shut down cleanly");
+    Ok(0)
+}
+
+fn runner_loop(ctx: &Ctx) {
+    loop {
+        if signal::stop_requested() {
+            // Make sure claim waiters (including this one) fall through.
+            ctx.queue.shutdown();
+        }
+        let Some(job) = ctx.queue.claim_next(Duration::from_millis(100)) else {
+            if signal::stop_requested() {
+                return;
+            }
+            continue;
+        };
+        ctx.subs.broadcast_state(&job);
+        if let Some(ms) =
+            std::env::var(RUN_DELAY_ENV).ok().and_then(|v| v.parse::<u64>().ok())
+        {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        obs::log::progress(&format!(
+            "serve: {} running `{}` on {} ({} steps)",
+            job.id, job.spec.specs, job.spec.task, job.spec.steps
+        ));
+        let outcome = run_job(ctx, &job);
+        if let Err(msg) = &outcome {
+            obs::log::warn(&format!("serve: {} failed: {msg}"));
+        }
+        match ctx.queue.finish(&job.id, outcome) {
+            Ok(done) => ctx.subs.broadcast_state(&done),
+            Err(e) => obs::log::warn(&format!("serve: recording outcome: {e:#}")),
+        }
+    }
+}
+
+/// Where a job's merged artifacts live: `<dir>/jobs/<id>/sweep.{csv,json}`.
+pub fn job_dir(dir: &std::path::Path, id: &str) -> PathBuf {
+    dir.join("jobs").join(id)
+}
+
+/// Execute one job through the subprocess sweep dispatcher. Artifacts are
+/// saved deterministic, so they are byte-identical to
+/// `mkor sweep --jobs 1 --deterministic` with the same parameters.
+fn run_job(ctx: &Ctx, job: &JobRecord) -> std::result::Result<(), String> {
+    let spec = &job.spec;
+    let (grid, opts) = plan_job(spec).map_err(|e| format!("{e:#}"))?;
+    let dir = job_dir(&ctx.dir, &job.id);
+    std::fs::create_dir_all(&dir).map_err(|e| format!("creating {}: {e}", dir.display()))?;
+    let mut mp = MpOptions::new(dir.join("workers"), spec.job_workers.max(1));
+    // Always recover: on a fresh job the scratch scan is a no-op; after a
+    // daemon crash it reuses every cell the workers already finished.
+    mp.recover = true;
+    let report = run_sweep_mp(&grid, &opts, &mp, None).map_err(|e| format!("{e:#}"))?;
+    report
+        .save_csv_with(&dir.join("sweep.csv"), true)
+        .and_then(|()| report.save_json_with(&dir.join("sweep.json"), true))
+        .map_err(|e| format!("saving artifacts: {e:#}"))?;
+    let (ok, diverged, panicked) = report.counts();
+    obs::log::progress(&format!(
+        "serve: {} finished: {ok} ok, {diverged} diverged, {panicked} panicked",
+        job.id
+    ));
+    if panicked > 0 {
+        return Err(format!("{panicked} of {} cells panicked", report.cells.len()));
+    }
+    Ok(())
+}
+
+/// Expand a [`JobSpec`] into the grid + options `mkor sweep` would build
+/// from the same flags. Shared by the submit-time validator (sessions
+/// reject a spec that cannot plan) and the runner (which plans again to
+/// execute), so nothing unrunnable ever enters the queue.
+pub fn plan_job(spec: &JobSpec) -> Result<(SweepGrid, SweepOptions)> {
+    let task = task_by_name(&spec.task).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let grid = SweepGrid::parse(&spec.specs, &task, spec.seed)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let mut run = RunOpts {
+        lr: spec.lr,
+        steps: spec.steps,
+        workers: spec.cell_workers,
+        batch: spec.batch,
+        seed: spec.seed,
+        eval_every: spec.eval_every,
+        ..Default::default()
+    };
+    if !spec.hidden.is_empty() {
+        run.hidden = spec.hidden.clone();
+    }
+    Ok((grid, SweepOptions { jobs: 1, run, verbose: false }))
+}
+
+/// Follow the daemon's own trace sink and fan events out to subscribers
+/// of whatever job is running. Events between jobs (daemon housekeeping)
+/// have no audience and are skipped.
+fn pump_loop(ctx: &Ctx, trace: &std::path::Path) {
+    let mut follower = obs::TraceFollower::new(trace);
+    loop {
+        let events = follower.poll();
+        if !events.is_empty() {
+            if let Some(job) = ctx.queue.running_job() {
+                for ev in &events {
+                    ctx.subs.send_to(&job, &crate::serve::protocol::stream_event_line(&job, ev));
+                }
+            }
+        }
+        if signal::stop_requested() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}

@@ -1,0 +1,45 @@
+//! Training-as-a-service: the `mkor serve` daemon and its clients.
+//!
+//! A long-running daemon accepts sweep jobs over a versioned line-JSON
+//! TCP protocol and runs them through the existing crash-isolated
+//! subprocess dispatcher, so a job's merged artifacts are byte-identical
+//! to a direct `mkor sweep --jobs 1 --deterministic` run:
+//!
+//! ```text
+//! mkor serve --addr 127.0.0.1:7070 --dir serve-data &
+//! mkor submit --addr 127.0.0.1:7070 --specs "kfac:f={5,10};lamb" \
+//!     --task images --steps 50 --wait --out sweep.csv
+//! mkor jobs --addr 127.0.0.1:7070
+//! mkor observe j1 --addr 127.0.0.1:7070
+//! ```
+//!
+//! The layers, bottom-up:
+//!
+//! * [`protocol`] — the wire format: one JSON object per line, `"v":1`
+//!   everywhere, every malformed/oversized/skewed input mapped to a typed
+//!   error (the daemon never dies or desyncs on untrusted bytes);
+//! * [`queue`] — bounded FIFO of [`queue::JobRecord`]s behind a
+//!   crash-safe JSONL journal; a restarted daemon replays it and
+//!   re-queues interrupted jobs;
+//! * [`session`] — one thread per connection: ordered request/response
+//!   plus inline subscription streams fed by the daemon's trace sink;
+//! * [`daemon`] — accept loop, runner threads, trace pump, clean
+//!   SIGTERM/SIGINT shutdown ([`signal`]);
+//! * [`client`] / [`commands`] — the typed client and the
+//!   `serve|submit|jobs|observe|artifacts` CLI front-ends.
+
+pub mod client;
+pub mod commands;
+pub mod daemon;
+pub mod protocol;
+pub mod queue;
+pub mod session;
+pub mod signal;
+
+pub use client::Client;
+pub use daemon::{ServeOptions, Subscribers};
+pub use protocol::{
+    parse_request, ErrorCode, JobSpec, JobView, ProtoError, Request, Response, MAX_LINE_BYTES,
+    PROTOCOL_VERSION,
+};
+pub use queue::{JobQueue, JobRecord, JobState};

@@ -1,0 +1,673 @@
+//! The `mkor serve` wire protocol: versioned line-JSON over TCP.
+//!
+//! Every request and response is exactly one JSON object per `\n`-terminated
+//! line, and every line carries `"v": 1` ([`PROTOCOL_VERSION`]). Requests
+//! select an operation with `"op"`; responses answer with `"ok": true` plus
+//! op-specific fields, or `"ok": false` plus a typed error:
+//!
+//! ```text
+//! -> {"v":1,"op":"submit","spec":{"specs":"lamb","task":"glue","steps":4}}
+//! <- {"v":1,"ok":true,"op":"submit","job":"j1"}
+//! -> {"v":1,"op":"status","job":"j9"}
+//! <- {"v":1,"ok":false,"error":{"code":"unknown_job","message":"no job `j9`"}}
+//! ```
+//!
+//! The parser is strict and total: any byte sequence a client can send maps
+//! to either a [`Request`] or a [`ProtoError`] with an [`ErrorCode`] and an
+//! actionable message — the daemon never disconnects, panics or desyncs on
+//! bad input. Lines longer than [`MAX_LINE_BYTES`] are discarded to the next
+//! newline by [`read_line_capped`] (keeping the stream framed) and answered
+//! with `oversized`. Blank lines are ignored, as in most line protocols.
+//!
+//! Subscription streams reuse the same framing with `"stream"` instead of
+//! `"ok"`: `{"v":1,"stream":"event","job":..,"event":{..}}` lines relay the
+//! live trace feed and a final `{"v":1,"stream":"state",..}` line reports
+//! the terminal state (see `session`).
+
+use crate::obs::TraceEvent;
+use crate::util::json::Json;
+use std::io::{self, BufRead};
+
+/// Wire schema version; bumped on any incompatible change. Both sides send
+/// it on every line and reject a mismatch with `version_skew`.
+pub const PROTOCOL_VERSION: u64 = 1;
+
+/// Hard cap on one request line. Anything longer is drained and rejected
+/// with an `oversized` error; the connection stays framed and usable.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Typed error classes. The code is machine-readable (tests match on it);
+/// the accompanying message is for humans and always names what to fix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Not UTF-8, not JSON, not an object, or missing a required envelope
+    /// field (`op`).
+    Malformed,
+    /// Line exceeded [`MAX_LINE_BYTES`].
+    Oversized,
+    /// Missing or mismatched `"v"`.
+    VersionSkew,
+    /// Well-formed envelope, but `op` names no known operation.
+    UnknownOp,
+    /// Known op with missing/invalid arguments (bad spec, bad types).
+    BadRequest,
+    /// `job` names no job the daemon has ever seen.
+    UnknownJob,
+    /// Submit refused: the queue already holds `capacity` queued jobs.
+    QueueFull,
+    /// Cancel refused: the job is running or already terminal.
+    NotCancellable,
+    /// Result requested before the job reached `done`.
+    NotDone,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::VersionSkew => "version_skew",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownJob => "unknown_job",
+            ErrorCode::QueueFull => "queue_full",
+            ErrorCode::NotCancellable => "not_cancellable",
+            ErrorCode::NotDone => "not_done",
+        }
+    }
+}
+
+/// A rejected line: the typed code plus an actionable message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProtoError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl ProtoError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> ProtoError {
+        ProtoError { code, message: message.into() }
+    }
+
+    pub fn malformed(message: impl Into<String>) -> ProtoError {
+        ProtoError::new(ErrorCode::Malformed, message)
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> ProtoError {
+        ProtoError::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn unknown_job(id: &str) -> ProtoError {
+        ProtoError::new(ErrorCode::UnknownJob, format!("no job `{id}` (see op `jobs`)"))
+    }
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code.as_str(), self.message)
+    }
+}
+
+/// Everything needed to run one sweep job — the daemon-side mirror of the
+/// `mkor sweep` CLI flags, so a job's artifacts are byte-identical to a
+/// direct `mkor sweep --jobs 1 --deterministic` run with the same values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Sweep grid string (`"kfac:f={5,10},damping=0.01;lamb"` …).
+    pub specs: String,
+    /// Task name as accepted by `task_by_name`.
+    pub task: String,
+    pub steps: usize,
+    pub lr: f32,
+    /// Simulated data-parallel workers inside each cell.
+    pub cell_workers: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// MLP hidden widths; empty selects the task default.
+    pub hidden: Vec<usize>,
+    /// Crash-isolated worker subprocesses fanned out while the job runs.
+    pub job_workers: usize,
+}
+
+impl JobSpec {
+    /// Defaults mirror the `mkor sweep` CLI (except `job_workers`, which
+    /// defaults to a single subprocess per job).
+    pub fn new(specs: impl Into<String>, task: impl Into<String>) -> JobSpec {
+        JobSpec {
+            specs: specs.into(),
+            task: task.into(),
+            steps: 300,
+            lr: 0.1,
+            cell_workers: 2,
+            batch: 64,
+            seed: 0,
+            eval_every: 10,
+            hidden: Vec::new(),
+            job_workers: 1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("specs", Json::Str(self.specs.clone()))
+            .set("task", Json::Str(self.task.clone()))
+            .set("steps", Json::Num(self.steps as f64))
+            .set("lr", Json::Num(self.lr as f64))
+            .set("cell_workers", Json::Num(self.cell_workers as f64))
+            .set("batch", Json::Num(self.batch as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("eval_every", Json::Num(self.eval_every as f64))
+            .set("job_workers", Json::Num(self.job_workers as f64));
+        if !self.hidden.is_empty() {
+            o.set("hidden", Json::from_usizes(&self.hidden));
+        }
+        o
+    }
+
+    /// Decode and validate. `specs` and `task` are required; every other
+    /// field is optional with CLI defaults, but present fields must have
+    /// the right type and sane values.
+    pub fn from_json(v: &Json) -> Result<JobSpec, ProtoError> {
+        let obj = match v {
+            Json::Obj(_) => v,
+            _ => return Err(ProtoError::bad_request("`spec` must be a JSON object")),
+        };
+        let req_str = |key: &str| -> Result<String, ProtoError> {
+            obj.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| ProtoError::bad_request(format!("`spec.{key}` (string) is required")))
+        };
+        let opt_usize = |key: &str, default: usize| -> Result<usize, ProtoError> {
+            match obj.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    ProtoError::bad_request(format!("`spec.{key}` must be a non-negative integer"))
+                }),
+            }
+        };
+        let mut spec = JobSpec::new(req_str("specs")?, req_str("task")?);
+        spec.steps = opt_usize("steps", spec.steps)?;
+        spec.cell_workers = opt_usize("cell_workers", spec.cell_workers)?;
+        spec.batch = opt_usize("batch", spec.batch)?;
+        spec.seed = opt_usize("seed", spec.seed as usize)? as u64;
+        spec.eval_every = opt_usize("eval_every", spec.eval_every)?;
+        spec.job_workers = opt_usize("job_workers", spec.job_workers)?;
+        if let Some(v) = obj.get("lr") {
+            spec.lr = v
+                .as_f64()
+                .filter(|x| x.is_finite())
+                .ok_or_else(|| ProtoError::bad_request("`spec.lr` must be a finite number"))?
+                as f32;
+        }
+        if let Some(v) = obj.get("hidden") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| ProtoError::bad_request("`spec.hidden` must be an array"))?;
+            spec.hidden = arr
+                .iter()
+                .map(|w| w.as_usize().filter(|&w| w > 0))
+                .collect::<Option<Vec<usize>>>()
+                .ok_or_else(|| {
+                    ProtoError::bad_request("`spec.hidden` must hold positive integer widths")
+                })?;
+        }
+        if spec.steps == 0 {
+            return Err(ProtoError::bad_request("`spec.steps` must be at least 1"));
+        }
+        if spec.batch == 0 || spec.cell_workers == 0 || spec.job_workers == 0 {
+            return Err(ProtoError::bad_request(
+                "`spec.batch`, `spec.cell_workers` and `spec.job_workers` must be at least 1",
+            ));
+        }
+        Ok(spec)
+    }
+}
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Submit { spec: JobSpec },
+    Jobs,
+    Status { job: String },
+    Cancel { job: String },
+    Result { job: String },
+    Subscribe { job: String },
+    Shutdown,
+}
+
+/// The operation names, for error messages and docs.
+pub const OPS: &[&str] =
+    &["ping", "submit", "jobs", "status", "cancel", "result", "subscribe", "shutdown"];
+
+/// Parse one raw line (sans `\n`) into a [`Request`]. Every failure mode
+/// maps to a typed [`ProtoError`]; this function never panics on untrusted
+/// bytes.
+pub fn parse_request(raw: &[u8]) -> Result<Request, ProtoError> {
+    let text = std::str::from_utf8(raw)
+        .map_err(|_| ProtoError::malformed("request line is not valid UTF-8"))?;
+    let v = Json::parse(text).map_err(|e| ProtoError::malformed(format!("bad JSON: {e}")))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err(ProtoError::malformed("request must be a JSON object"));
+    }
+    match v.get("v").and_then(Json::as_usize) {
+        Some(got) if got as u64 == PROTOCOL_VERSION => {}
+        Some(got) => {
+            return Err(ProtoError::new(
+                ErrorCode::VersionSkew,
+                format!("protocol version {got} not supported; this daemon speaks v{PROTOCOL_VERSION}"),
+            ))
+        }
+        None => {
+            return Err(ProtoError::new(
+                ErrorCode::VersionSkew,
+                format!("missing `v`: every request must carry \"v\":{PROTOCOL_VERSION}"),
+            ))
+        }
+    }
+    let op = v
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| ProtoError::malformed("missing `op` (string)"))?;
+    let job_arg = || -> Result<String, ProtoError> {
+        v.get("job")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| ProtoError::bad_request(format!("op `{op}` requires `job` (string)")))
+    };
+    match op {
+        "ping" => Ok(Request::Ping),
+        "jobs" => Ok(Request::Jobs),
+        "shutdown" => Ok(Request::Shutdown),
+        "status" => Ok(Request::Status { job: job_arg()? }),
+        "cancel" => Ok(Request::Cancel { job: job_arg()? }),
+        "result" => Ok(Request::Result { job: job_arg()? }),
+        "subscribe" => Ok(Request::Subscribe { job: job_arg()? }),
+        "submit" => {
+            let spec = v
+                .get("spec")
+                .ok_or_else(|| ProtoError::bad_request("op `submit` requires `spec` (object)"))?;
+            Ok(Request::Submit { spec: JobSpec::from_json(spec)? })
+        }
+        _ => Err(ProtoError::new(
+            ErrorCode::UnknownOp,
+            format!("unknown op `{op}`; known ops: {}", OPS.join(", ")),
+        )),
+    }
+}
+
+impl Request {
+    /// Encode back to one wire line (used by the client front-end).
+    pub fn to_line(&self) -> String {
+        let mut o = Json::obj();
+        o.set("v", Json::Num(PROTOCOL_VERSION as f64));
+        match self {
+            Request::Ping => o.set("op", Json::Str("ping".into())),
+            Request::Jobs => o.set("op", Json::Str("jobs".into())),
+            Request::Shutdown => o.set("op", Json::Str("shutdown".into())),
+            Request::Submit { spec } => {
+                o.set("op", Json::Str("submit".into())).set("spec", spec.to_json())
+            }
+            Request::Status { job } => {
+                o.set("op", Json::Str("status".into())).set("job", Json::Str(job.clone()))
+            }
+            Request::Cancel { job } => {
+                o.set("op", Json::Str("cancel".into())).set("job", Json::Str(job.clone()))
+            }
+            Request::Result { job } => {
+                o.set("op", Json::Str("result".into())).set("job", Json::Str(job.clone()))
+            }
+            Request::Subscribe { job } => {
+                o.set("op", Json::Str("subscribe".into())).set("job", Json::Str(job.clone()))
+            }
+        };
+        format!("{o}")
+    }
+}
+
+/// A queue-level job summary, as shipped to clients by `jobs`/`status`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobView {
+    pub id: String,
+    /// `queued|running|done|failed|cancelled`.
+    pub state: String,
+    pub specs: String,
+    pub task: String,
+    pub steps: usize,
+    /// Failure message, for `failed` jobs.
+    pub detail: Option<String>,
+}
+
+impl JobView {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", Json::Str(self.id.clone()))
+            .set("state", Json::Str(self.state.clone()))
+            .set("specs", Json::Str(self.specs.clone()))
+            .set("task", Json::Str(self.task.clone()))
+            .set("steps", Json::Num(self.steps as f64));
+        if let Some(d) = &self.detail {
+            o.set("detail", Json::Str(d.clone()));
+        }
+        o
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<JobView> {
+        Ok(JobView {
+            id: v.require_str("id")?.to_string(),
+            state: v.require_str("state")?.to_string(),
+            specs: v.require_str("specs")?.to_string(),
+            task: v.require_str("task")?.to_string(),
+            steps: v.require_usize("steps")?,
+            detail: v.get("detail").and_then(Json::as_str).map(str::to_string),
+        })
+    }
+}
+
+/// One response line. Every variant encodes with `"v"` and `"ok"`, plus
+/// `"op"` echoing what it answers, so pipelined clients can sanity-check
+/// ordering.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong { server: String },
+    Submitted { job: String },
+    Jobs { jobs: Vec<JobView> },
+    Status { job: JobView },
+    Cancelled { job: String },
+    ResultPayload { job: String, csv: String, json: String },
+    Subscribed { job: String },
+    ShuttingDown,
+    Error(ProtoError),
+}
+
+impl Response {
+    pub fn to_line(&self) -> String {
+        let mut o = Json::obj();
+        o.set("v", Json::Num(PROTOCOL_VERSION as f64));
+        match self {
+            Response::Error(e) => {
+                let mut err = Json::obj();
+                err.set("code", Json::Str(e.code.as_str().into()))
+                    .set("message", Json::Str(e.message.clone()));
+                o.set("ok", Json::Bool(false)).set("error", err);
+            }
+            Response::Pong { server } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("ping".into()))
+                    .set("server", Json::Str(server.clone()));
+            }
+            Response::Submitted { job } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("submit".into()))
+                    .set("job", Json::Str(job.clone()));
+            }
+            Response::Jobs { jobs } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("jobs".into()))
+                    .set("jobs", Json::Arr(jobs.iter().map(JobView::to_json).collect()));
+            }
+            Response::Status { job } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("status".into()))
+                    .set("job", job.to_json());
+            }
+            Response::Cancelled { job } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("cancel".into()))
+                    .set("job", Json::Str(job.clone()));
+            }
+            Response::ResultPayload { job, csv, json } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("result".into()))
+                    .set("job", Json::Str(job.clone()))
+                    .set("csv", Json::Str(csv.clone()))
+                    .set("json", Json::Str(json.clone()));
+            }
+            Response::Subscribed { job } => {
+                o.set("ok", Json::Bool(true))
+                    .set("op", Json::Str("subscribe".into()))
+                    .set("job", Json::Str(job.clone()));
+            }
+            Response::ShuttingDown => {
+                o.set("ok", Json::Bool(true)).set("op", Json::Str("shutdown".into()));
+            }
+        }
+        format!("{o}")
+    }
+}
+
+/// One `{"stream":"event",...}` line relaying a trace event to a
+/// subscriber.
+pub fn stream_event_line(job: &str, event: &TraceEvent) -> String {
+    let mut o = Json::obj();
+    o.set("v", Json::Num(PROTOCOL_VERSION as f64))
+        .set("stream", Json::Str("event".into()))
+        .set("job", Json::Str(job.into()))
+        .set("event", event.to_json());
+    format!("{o}")
+}
+
+/// One `{"stream":"state",...}` line reporting a job state transition; a
+/// terminal state ends the subscription.
+pub fn stream_state_line(job: &str, state: &str, detail: Option<&str>) -> String {
+    let mut o = Json::obj();
+    o.set("v", Json::Num(PROTOCOL_VERSION as f64))
+        .set("stream", Json::Str("state".into()))
+        .set("job", Json::Str(job.into()))
+        .set("state", Json::Str(state.into()));
+    if let Some(d) = detail {
+        o.set("detail", Json::Str(d.into()));
+    }
+    format!("{o}")
+}
+
+/// Outcome of one framed read.
+#[derive(Debug, PartialEq, Eq)]
+pub enum ReadLine {
+    /// One complete line (without the terminator, `\r\n` tolerated).
+    Line(Vec<u8>),
+    /// The line exceeded [`MAX_LINE_BYTES`]; `discarded` bytes were drained
+    /// up to (not including) the next `\n`, so the stream stays framed.
+    Oversized { discarded: usize },
+    Eof,
+}
+
+/// Read one `\n`-terminated line without ever buffering more than
+/// [`MAX_LINE_BYTES`] — the reason `BufRead::read_line` is not used: a
+/// hostile client could otherwise grow the buffer without bound.
+pub fn read_line_capped<R: BufRead>(r: &mut R) -> io::Result<ReadLine> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut discarding = false;
+    let mut discarded = 0usize;
+    loop {
+        let chunk = match r.fill_buf() {
+            Ok(c) => c,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if chunk.is_empty() {
+            // EOF. A truncated trailing line (no terminator) still parses —
+            // clients that close after their last request stay valid.
+            return Ok(match (discarding, buf.is_empty()) {
+                (true, _) => ReadLine::Oversized { discarded },
+                (false, true) => ReadLine::Eof,
+                (false, false) => ReadLine::Line(strip_cr(buf)),
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                if discarding {
+                    discarded += pos;
+                } else {
+                    buf.extend_from_slice(&chunk[..pos]);
+                }
+                r.consume(pos + 1);
+                if discarding || buf.len() > MAX_LINE_BYTES {
+                    return Ok(ReadLine::Oversized { discarded: discarded.max(buf.len()) });
+                }
+                return Ok(ReadLine::Line(strip_cr(buf)));
+            }
+            None => {
+                let n = chunk.len();
+                if discarding {
+                    discarded += n;
+                } else {
+                    buf.extend_from_slice(chunk);
+                    if buf.len() > MAX_LINE_BYTES {
+                        discarding = true;
+                        discarded = buf.len();
+                        buf = Vec::new();
+                    }
+                }
+                r.consume(n);
+            }
+        }
+    }
+}
+
+fn strip_cr(mut buf: Vec<u8>) -> Vec<u8> {
+    if buf.last() == Some(&b'\r') {
+        buf.pop();
+    }
+    buf
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn err_code(raw: &str) -> ErrorCode {
+        parse_request(raw.as_bytes()).unwrap_err().code
+    }
+
+    #[test]
+    fn requests_round_trip_through_the_wire_form() {
+        let mut spec = JobSpec::new("kfac:f={5,10}", "images");
+        spec.steps = 4;
+        spec.hidden = vec![16];
+        spec.seed = 3;
+        let reqs = [
+            Request::Ping,
+            Request::Jobs,
+            Request::Shutdown,
+            Request::Submit { spec },
+            Request::Status { job: "j1".into() },
+            Request::Cancel { job: "j2".into() },
+            Request::Result { job: "j3".into() },
+            Request::Subscribe { job: "j4".into() },
+        ];
+        for req in reqs {
+            let line = req.to_line();
+            assert!(!line.contains('\n'), "wire form must be one line: {line}");
+            assert_eq!(parse_request(line.as_bytes()).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn every_rejection_class_maps_to_its_typed_code() {
+        assert_eq!(err_code("not json at all"), ErrorCode::Malformed);
+        assert_eq!(err_code("[1,2,3]"), ErrorCode::Malformed);
+        assert_eq!(err_code("{\"v\":1"), ErrorCode::Malformed);
+        assert_eq!(err_code("{}"), ErrorCode::VersionSkew);
+        assert_eq!(err_code("{\"v\":99,\"op\":\"ping\"}"), ErrorCode::VersionSkew);
+        assert_eq!(err_code("{\"v\":\"one\",\"op\":\"ping\"}"), ErrorCode::VersionSkew);
+        assert_eq!(err_code("{\"v\":1}"), ErrorCode::Malformed);
+        assert_eq!(err_code("{\"v\":1,\"op\":\"frobnicate\"}"), ErrorCode::UnknownOp);
+        assert_eq!(err_code("{\"v\":1,\"op\":\"status\"}"), ErrorCode::BadRequest);
+        assert_eq!(err_code("{\"v\":1,\"op\":\"submit\"}"), ErrorCode::BadRequest);
+        assert_eq!(err_code("{\"v\":1,\"op\":\"submit\",\"spec\":{}}"), ErrorCode::BadRequest);
+        assert_eq!(
+            err_code("{\"v\":1,\"op\":\"submit\",\"spec\":{\"specs\":\"lamb\",\"task\":\"glue\",\"steps\":-4}}"),
+            ErrorCode::BadRequest
+        );
+        assert_eq!(
+            parse_request(&[0x80, 0xff, b'{', b'}']).unwrap_err().code,
+            ErrorCode::Malformed
+        );
+        // Messages must be actionable, not bare codes.
+        let e = parse_request(b"{\"v\":1,\"op\":\"frobnicate\"}").unwrap_err();
+        assert!(e.message.contains("ping"), "unknown_op should list ops: {}", e.message);
+    }
+
+    #[test]
+    fn job_spec_defaults_and_validation() {
+        let v = Json::parse("{\"specs\":\"lamb\",\"task\":\"glue\"}").unwrap();
+        let spec = JobSpec::from_json(&v).unwrap();
+        assert_eq!(spec, JobSpec::new("lamb", "glue"));
+        let decoded = JobSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(decoded, spec);
+        for bad in [
+            "{\"task\":\"glue\"}",
+            "{\"specs\":\"lamb\"}",
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"hidden\":[0]}",
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"lr\":\"fast\"}",
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"batch\":0}",
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert_eq!(JobSpec::from_json(&v).unwrap_err().code, ErrorCode::BadRequest, "{bad}");
+        }
+    }
+
+    #[test]
+    fn responses_are_single_parseable_lines() {
+        let view = JobView {
+            id: "j1".into(),
+            state: "done".into(),
+            specs: "lamb".into(),
+            task: "glue".into(),
+            steps: 4,
+            detail: None,
+        };
+        let responses = [
+            Response::Pong { server: "mkor 0.2.0".into() },
+            Response::Submitted { job: "j1".into() },
+            Response::Jobs { jobs: vec![view.clone()] },
+            Response::Status { job: view },
+            Response::Cancelled { job: "j1".into() },
+            Response::ResultPayload {
+                job: "j1".into(),
+                csv: "a,b\n1,2\n".into(),
+                json: "{\n}".into(),
+            },
+            Response::Subscribed { job: "j1".into() },
+            Response::ShuttingDown,
+            Response::Error(ProtoError::unknown_job("j9")),
+        ];
+        for resp in responses {
+            let line = resp.to_line();
+            assert!(!line.contains('\n'), "embedded newline leaked: {line}");
+            let v = Json::parse(&line).unwrap();
+            assert_eq!(v.require_usize("v").unwrap() as u64, PROTOCOL_VERSION);
+            let ok = v.get("ok").and_then(Json::as_bool).unwrap();
+            assert_eq!(ok, !matches!(resp, Response::Error(_)));
+            if let Response::ResultPayload { csv, .. } = &resp {
+                // Payload bytes survive the line framing exactly.
+                assert_eq!(v.get("csv").and_then(Json::as_str).unwrap(), csv);
+            }
+        }
+    }
+
+    #[test]
+    fn capped_reader_keeps_the_stream_framed() {
+        let huge = "x".repeat(MAX_LINE_BYTES + 100);
+        let input = format!("{huge}\n{{\"v\":1,\"op\":\"ping\"}}\nshort");
+        let mut r = Cursor::new(input.into_bytes());
+        match read_line_capped(&mut r).unwrap() {
+            ReadLine::Oversized { discarded } => assert!(discarded > MAX_LINE_BYTES),
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+        // The next line is intact: no desync after discarding.
+        match read_line_capped(&mut r).unwrap() {
+            ReadLine::Line(bytes) => {
+                assert_eq!(parse_request(&bytes).unwrap(), Request::Ping);
+            }
+            other => panic!("expected Line, got {other:?}"),
+        }
+        // Unterminated trailing line still arrives, then EOF.
+        assert_eq!(read_line_capped(&mut r).unwrap(), ReadLine::Line(b"short".to_vec()));
+        assert_eq!(read_line_capped(&mut r).unwrap(), ReadLine::Eof);
+    }
+}

@@ -1,0 +1,515 @@
+//! The daemon's job queue: a bounded FIFO of sweep jobs with a
+//! crash-safe JSONL journal.
+//!
+//! Job lifecycle is a one-way state machine:
+//!
+//! ```text
+//!              claim_next            finish(Ok)
+//!   queued ───────────────▶ running ───────────▶ done
+//!     │                        │    finish(Err)
+//!     │ cancel                 └───────────────▶ failed
+//!     └──────▶ cancelled
+//! ```
+//!
+//! Every transition appends one line to `journal.jsonl` and flushes before
+//! the transition is visible to anyone, so a daemon killed at any instant
+//! can be restarted on the same directory and [`JobQueue::open`] replays
+//! the journal back into memory. Jobs that were `running` when the daemon
+//! died are re-queued (recorded with an explicit `requeued` line) — the
+//! job's own worker-level progress is recovered separately by
+//! `run_sweep_mp`'s scratch-file scan, so a re-run resumes rather than
+//! repeats. A torn final line (the daemon died mid-write) is dropped with
+//! a warning; garbage anywhere else in the journal is a hard error, never
+//! a silent skip.
+
+use crate::obs;
+use crate::serve::protocol::{ErrorCode, JobSpec, JobView, ProtoError};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Journal line schema version (independent of the wire protocol's).
+pub const JOURNAL_FORMAT_VERSION: u64 = 1;
+
+/// The journal file inside the daemon directory.
+pub const JOURNAL_FILE: &str = "journal.jsonl";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<JobState> {
+        Some(match s {
+            "queued" => JobState::Queued,
+            "running" => JobState::Running,
+            "done" => JobState::Done,
+            "failed" => JobState::Failed,
+            "cancelled" => JobState::Cancelled,
+            _ => return None,
+        })
+    }
+
+    /// Terminal states never transition again (and end subscriptions).
+    pub fn terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One job: submission order (`seq`), wire id (`j<seq>`), the full spec,
+/// and where it is in the state machine.
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub seq: u64,
+    pub id: String,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Failure message for `failed` jobs.
+    pub detail: Option<String>,
+}
+
+impl JobRecord {
+    pub fn view(&self) -> JobView {
+        JobView {
+            id: self.id.clone(),
+            state: self.state.as_str().to_string(),
+            specs: self.spec.specs.clone(),
+            task: self.spec.task.clone(),
+            steps: self.spec.steps,
+            detail: self.detail.clone(),
+        }
+    }
+}
+
+struct Inner {
+    jobs: BTreeMap<u64, JobRecord>,
+    next_seq: u64,
+    journal: File,
+    /// Cleared by [`JobQueue::shutdown`]: submits are refused and
+    /// [`JobQueue::claim_next`] returns `None` once the queue drains.
+    accepting: bool,
+}
+
+impl Inner {
+    fn append(&mut self, line: &Json) -> Result<()> {
+        // One line per transition, flushed before the new state is
+        // observable — a crash may lose at most the line being written,
+        // which replay tolerates as a torn tail.
+        writeln!(self.journal, "{line}").context("appending to job journal")?;
+        self.journal.flush().context("flushing job journal")
+    }
+
+    fn append_state(&mut self, seq: u64, kind: &str) -> Result<()> {
+        let (id, state, detail) = {
+            let job = &self.jobs[&seq];
+            (job.id.clone(), job.state.as_str(), job.detail.clone())
+        };
+        let mut o = Json::obj();
+        o.set("v", Json::Num(JOURNAL_FORMAT_VERSION as f64))
+            .set("kind", Json::Str(kind.into()))
+            .set("id", Json::Str(id))
+            .set("state", Json::Str(state.into()));
+        if let Some(d) = detail {
+            o.set("detail", Json::Str(d));
+        }
+        self.append(&o)
+    }
+}
+
+/// The bounded, journaled FIFO shared by sessions (producers) and runner
+/// threads (consumers).
+pub struct JobQueue {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+    capacity: usize,
+    path: PathBuf,
+}
+
+impl JobQueue {
+    /// Open (or create) the queue journaled at `dir/journal.jsonl`,
+    /// replaying any prior state. `capacity` bounds *queued* jobs only —
+    /// running and terminal jobs don't count against it.
+    pub fn open(dir: &Path, capacity: usize) -> Result<JobQueue> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating daemon dir {}", dir.display()))?;
+        let path = dir.join(JOURNAL_FILE);
+        let mut jobs = BTreeMap::new();
+        if path.is_file() {
+            replay(&path, &mut jobs)?;
+        }
+        let next_seq = jobs.keys().next_back().map_or(1, |&s| s + 1);
+        let journal = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening job journal {}", path.display()))?;
+        let mut inner = Inner { jobs, next_seq, journal, accepting: true };
+        // Re-queue interrupted jobs, recording the transition so a second
+        // replay sees the same state this process now holds.
+        let interrupted: Vec<u64> = inner
+            .jobs
+            .iter()
+            .filter(|(_, j)| j.state == JobState::Running)
+            .map(|(&s, _)| s)
+            .collect();
+        for seq in interrupted {
+            let job = inner.jobs.get_mut(&seq).unwrap();
+            obs::log::note(&format!("serve: re-queueing interrupted job {}", job.id));
+            job.state = JobState::Queued;
+            inner.append_state(seq, "requeued")?;
+        }
+        Ok(JobQueue { inner: Mutex::new(inner), cv: Condvar::new(), capacity, path })
+    }
+
+    pub fn journal_path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Enqueue a validated spec; returns the new job's id. Refuses with
+    /// `queue_full` when `capacity` jobs are already queued and with
+    /// `bad_request` after shutdown began.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobRecord, ProtoError> {
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.accepting {
+            return Err(ProtoError::bad_request("daemon is shutting down; not accepting jobs"));
+        }
+        let queued = inner.jobs.values().filter(|j| j.state == JobState::Queued).count();
+        if queued >= self.capacity {
+            return Err(ProtoError::new(
+                ErrorCode::QueueFull,
+                format!(
+                    "queue holds {queued}/{} queued jobs; retry after one starts or cancel one",
+                    self.capacity
+                ),
+            ));
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        let job = JobRecord {
+            seq,
+            id: format!("j{seq}"),
+            spec,
+            state: JobState::Queued,
+            detail: None,
+        };
+        let mut line = Json::obj();
+        line.set("v", Json::Num(JOURNAL_FORMAT_VERSION as f64))
+            .set("kind", Json::Str("submit".into()))
+            .set("seq", Json::Num(seq as f64))
+            .set("id", Json::Str(job.id.clone()))
+            .set("spec", job.spec.to_json());
+        inner.jobs.insert(seq, job.clone());
+        if let Err(e) = inner.append(&line) {
+            // A job the journal can't record must not exist: a crash would
+            // silently forget it.
+            inner.jobs.remove(&seq);
+            return Err(ProtoError::bad_request(format!("journal write failed: {e:#}")));
+        }
+        self.cv.notify_all();
+        Ok(job)
+    }
+
+    /// Block up to `timeout` for the oldest queued job, marking it running.
+    /// Returns `None` on timeout or once the queue is shut down — callers
+    /// loop, re-checking their stop condition between claims.
+    pub fn claim_next(&self, timeout: Duration) -> Option<JobRecord> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let next = inner
+                .jobs
+                .iter()
+                .find(|(_, j)| j.state == JobState::Queued)
+                .map(|(&s, _)| s);
+            if let Some(seq) = next {
+                let job = inner.jobs.get_mut(&seq).unwrap();
+                job.state = JobState::Running;
+                let claimed = job.clone();
+                if let Err(e) = inner.append_state(seq, "state") {
+                    obs::log::warn(&format!("serve: journal write failed: {e:#}"));
+                }
+                return Some(claimed);
+            }
+            if !inner.accepting {
+                return None;
+            }
+            let (guard, wait) = self.cv.wait_timeout(inner, timeout).unwrap();
+            inner = guard;
+            if wait.timed_out() {
+                return None;
+            }
+        }
+    }
+
+    /// Record a running job's outcome; returns the terminal record.
+    pub fn finish(&self, id: &str, outcome: Result<(), String>) -> Result<JobRecord> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = seq_of(id, &inner.jobs).ok_or_else(|| anyhow!("finish: no job `{id}`"))?;
+        let job = inner.jobs.get_mut(&seq).unwrap();
+        if job.state != JobState::Running {
+            bail!("finish: job `{id}` is {}, not running", job.state.as_str());
+        }
+        match outcome {
+            Ok(()) => job.state = JobState::Done,
+            Err(msg) => {
+                job.state = JobState::Failed;
+                job.detail = Some(msg);
+            }
+        }
+        let done = job.clone();
+        inner.append_state(seq, "state")?;
+        self.cv.notify_all();
+        Ok(done)
+    }
+
+    /// Cancel a *queued* job. Running jobs are single-owner (a subprocess
+    /// fan-out mid-flight) and terminal jobs are history; both refuse with
+    /// `not_cancellable` naming the actual state.
+    pub fn cancel(&self, id: &str) -> Result<JobRecord, ProtoError> {
+        let mut inner = self.inner.lock().unwrap();
+        let seq = seq_of(id, &inner.jobs).ok_or_else(|| ProtoError::unknown_job(id))?;
+        let job = inner.jobs.get_mut(&seq).unwrap();
+        if job.state != JobState::Queued {
+            return Err(ProtoError::new(
+                ErrorCode::NotCancellable,
+                format!("job `{id}` is {}; only queued jobs can be cancelled", job.state.as_str()),
+            ));
+        }
+        job.state = JobState::Cancelled;
+        let cancelled = job.clone();
+        if let Err(e) = inner.append_state(seq, "state") {
+            obs::log::warn(&format!("serve: journal write failed: {e:#}"));
+        }
+        self.cv.notify_all();
+        Ok(cancelled)
+    }
+
+    pub fn get(&self, id: &str) -> Option<JobRecord> {
+        let inner = self.inner.lock().unwrap();
+        seq_of(id, &inner.jobs).map(|s| inner.jobs[&s].clone())
+    }
+
+    /// All jobs in submission order.
+    pub fn list(&self) -> Vec<JobRecord> {
+        self.inner.lock().unwrap().jobs.values().cloned().collect()
+    }
+
+    /// The id of the currently running job, if any (used to attribute
+    /// trace events to subscriptions; the daemon runs jobs one at a time
+    /// per runner).
+    pub fn running_job(&self) -> Option<String> {
+        let inner = self.inner.lock().unwrap();
+        inner.jobs.values().find(|j| j.state == JobState::Running).map(|j| j.id.clone())
+    }
+
+    /// Stop accepting submits and wake all claim waiters; idle runners see
+    /// `claim_next() == None` and exit.
+    pub fn shutdown(&self) {
+        self.inner.lock().unwrap().accepting = false;
+        self.cv.notify_all();
+    }
+}
+
+fn seq_of(id: &str, jobs: &BTreeMap<u64, JobRecord>) -> Option<u64> {
+    id.strip_prefix('j')
+        .and_then(|n| n.parse::<u64>().ok())
+        .filter(|seq| jobs.contains_key(seq))
+}
+
+/// Rebuild queue state from the journal. The only tolerated defect is a
+/// torn *final* line (killed mid-write); anything else malformed is a
+/// hard error naming the line.
+fn replay(path: &Path, jobs: &mut BTreeMap<u64, JobRecord>) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading job journal {}", path.display()))?;
+    let lines: Vec<&str> = text.lines().collect();
+    for (i, raw) in lines.iter().enumerate() {
+        if raw.trim().is_empty() {
+            continue;
+        }
+        let last = i + 1 == lines.len();
+        let entry = match Json::parse(raw).map_err(|e| anyhow!("{e}")).and_then(|v| {
+            apply_entry(&v, jobs)?;
+            Ok(())
+        }) {
+            Ok(()) => continue,
+            Err(e) => e,
+        };
+        if last {
+            obs::log::warn(&format!(
+                "serve: dropping torn final journal line (daemon died mid-write): {entry:#}"
+            ));
+            return Ok(());
+        }
+        bail!("corrupt job journal {} line {}: {entry:#}", path.display(), i + 1);
+    }
+    Ok(())
+}
+
+fn apply_entry(v: &Json, jobs: &mut BTreeMap<u64, JobRecord>) -> Result<()> {
+    let ver = v.require_usize("v")? as u64;
+    if ver != JOURNAL_FORMAT_VERSION {
+        bail!("journal format v{ver} unsupported (this build reads v{JOURNAL_FORMAT_VERSION})");
+    }
+    match v.require_str("kind")? {
+        "submit" => {
+            let seq = v.require_usize("seq")? as u64;
+            let id = v.require_str("id")?.to_string();
+            let spec = v.get("spec").ok_or_else(|| anyhow!("submit entry missing `spec`"))?;
+            let spec = JobSpec::from_json(spec).map_err(|e| anyhow!("{e}"))?;
+            if jobs.insert(seq, JobRecord { seq, id, spec, state: JobState::Queued, detail: None })
+                .is_some()
+            {
+                bail!("duplicate submit for seq {seq}");
+            }
+            Ok(())
+        }
+        "state" | "requeued" => {
+            let id = v.require_str("id")?;
+            let state = JobState::parse(v.require_str("state")?)
+                .ok_or_else(|| anyhow!("unknown job state in journal"))?;
+            let seq =
+                seq_of(id, jobs).ok_or_else(|| anyhow!("state entry for unknown job `{id}`"))?;
+            let job = jobs.get_mut(&seq).unwrap();
+            job.state = state;
+            job.detail = v.get("detail").and_then(Json::as_str).map(str::to_string);
+            Ok(())
+        }
+        other => bail!("unknown journal entry kind `{other}`"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn scratch(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "mkor-queue-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn spec() -> JobSpec {
+        JobSpec::new("lamb", "glue")
+    }
+
+    #[test]
+    fn lifecycle_survives_reopen_at_every_stage() {
+        let dir = scratch("lifecycle");
+        let q = JobQueue::open(&dir, 8).unwrap();
+        let a = q.submit(spec()).unwrap();
+        let b = q.submit(spec()).unwrap();
+        assert_eq!((a.id.as_str(), b.id.as_str()), ("j1", "j2"));
+        let claimed = q.claim_next(Duration::from_millis(10)).unwrap();
+        assert_eq!(claimed.id, "j1");
+        q.finish("j1", Err("boom".into())).unwrap();
+        drop(q);
+
+        // Reopen: j1 failed with its detail, j2 still queued, ids continue.
+        let q = JobQueue::open(&dir, 8).unwrap();
+        let jobs = q.list();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].state, JobState::Failed);
+        assert_eq!(jobs[0].detail.as_deref(), Some("boom"));
+        assert_eq!(jobs[1].state, JobState::Queued);
+        let c = q.submit(spec()).unwrap();
+        assert_eq!(c.id, "j3");
+
+        // A job left running is re-queued on the next open, once.
+        assert_eq!(q.claim_next(Duration::from_millis(10)).unwrap().id, "j2");
+        drop(q);
+        let q = JobQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.get("j2").unwrap().state, JobState::Queued);
+        assert_eq!(q.claim_next(Duration::from_millis(10)).unwrap().id, "j2");
+        assert_eq!(q.running_job().as_deref(), Some("j2"));
+    }
+
+    #[test]
+    fn capacity_counts_only_queued_jobs() {
+        let dir = scratch("capacity");
+        let q = JobQueue::open(&dir, 1).unwrap();
+        q.submit(spec()).unwrap();
+        assert_eq!(q.submit(spec()).unwrap_err().code, ErrorCode::QueueFull);
+        // Claiming frees the slot: running jobs don't count.
+        q.claim_next(Duration::from_millis(10)).unwrap();
+        let b = q.submit(spec()).unwrap();
+        // Cancel frees it again.
+        q.cancel(&b.id).unwrap();
+        q.submit(spec()).unwrap();
+    }
+
+    #[test]
+    fn cancel_is_queued_only_and_typed() {
+        let dir = scratch("cancel");
+        let q = JobQueue::open(&dir, 8).unwrap();
+        let a = q.submit(spec()).unwrap();
+        assert_eq!(q.cancel("j99").unwrap_err().code, ErrorCode::UnknownJob);
+        q.claim_next(Duration::from_millis(10)).unwrap();
+        let e = q.cancel(&a.id).unwrap_err();
+        assert_eq!(e.code, ErrorCode::NotCancellable);
+        assert!(e.message.contains("running"), "{}", e.message);
+        q.finish(&a.id, Ok(())).unwrap();
+        assert_eq!(q.cancel(&a.id).unwrap_err().code, ErrorCode::NotCancellable);
+        assert_eq!(q.get(&a.id).unwrap().state, JobState::Done);
+    }
+
+    #[test]
+    fn torn_tail_is_dropped_but_mid_file_garbage_is_fatal() {
+        let dir = scratch("torn");
+        {
+            let q = JobQueue::open(&dir, 8).unwrap();
+            q.submit(spec()).unwrap();
+        }
+        let journal = dir.join(JOURNAL_FILE);
+        let mut text = std::fs::read_to_string(&journal).unwrap();
+        // Simulate dying mid-append: a half-written line with no close.
+        text.push_str("{\"v\":1,\"kind\":\"state\",\"id\":\"j1\",\"sta");
+        std::fs::write(&journal, &text).unwrap();
+        let q = JobQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.get("j1").unwrap().state, JobState::Queued);
+        drop(q);
+
+        let broken = format!("not json\n{}", std::fs::read_to_string(&journal).unwrap());
+        std::fs::write(&journal, broken).unwrap();
+        let err = JobQueue::open(&dir, 8).unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_unblocks_claimers_and_refuses_submits() {
+        let dir = scratch("shutdown");
+        let q = std::sync::Arc::new(JobQueue::open(&dir, 8).unwrap());
+        let q2 = q.clone();
+        let waiter = std::thread::spawn(move || q2.claim_next(Duration::from_secs(30)));
+        std::thread::sleep(Duration::from_millis(50));
+        q.shutdown();
+        assert!(waiter.join().unwrap().is_none());
+        assert!(q.submit(spec()).unwrap_err().message.contains("shutting down"));
+    }
+}

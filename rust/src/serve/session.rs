@@ -1,0 +1,204 @@
+//! One connection, one thread: read framed request lines, answer each in
+//! order, stream subscriptions inline.
+//!
+//! The handler is written so that no client behavior can take the daemon
+//! down or desync the stream: every line gets exactly one response (typed
+//! error included), oversized lines are drained to the next newline, and
+//! a dead socket ends only this session. Pipelined requests are answered
+//! strictly in arrival order.
+
+use crate::serve::daemon::{job_dir, plan_job, Ctx};
+use crate::serve::protocol::{
+    parse_request, read_line_capped, stream_state_line, ErrorCode, ProtoError, ReadLine, Request,
+    Response, MAX_LINE_BYTES,
+};
+use crate::serve::queue::JobState;
+use crate::serve::signal;
+use anyhow::{Context as _, Result};
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+pub fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone().context("cloning session socket")?);
+    let mut writer = stream;
+    loop {
+        match read_line_capped(&mut reader).context("reading request line")? {
+            ReadLine::Eof => return Ok(()),
+            ReadLine::Oversized { discarded } => {
+                let e = ProtoError::new(
+                    ErrorCode::Oversized,
+                    format!(
+                        "request line of {discarded} bytes exceeds the {MAX_LINE_BYTES}-byte cap"
+                    ),
+                );
+                write_line(&mut writer, &Response::Error(e).to_line())?;
+            }
+            ReadLine::Line(bytes) => {
+                if bytes.iter().all(u8::is_ascii_whitespace) {
+                    continue; // blank keep-alive lines are not an error
+                }
+                match parse_request(&bytes) {
+                    Err(e) => write_line(&mut writer, &Response::Error(e).to_line())?,
+                    Ok(Request::Subscribe { job }) => {
+                        // Streams write multiple lines; handled apart from
+                        // the one-line request/response ops.
+                        run_subscription(&mut writer, ctx, &job)?;
+                    }
+                    Ok(req) => {
+                        let resp = answer(req, ctx);
+                        write_line(&mut writer, &resp.to_line())?;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn write_line(w: &mut TcpStream, line: &str) -> Result<()> {
+    w.write_all(line.as_bytes())
+        .and_then(|()| w.write_all(b"\n"))
+        .context("writing response")
+}
+
+/// Answer every non-streaming op. Infallible by construction: failures
+/// become `Response::Error`.
+fn answer(req: Request, ctx: &Ctx) -> Response {
+    match req {
+        Request::Ping => Response::Pong { server: format!("mkor {}", crate::VERSION) },
+        Request::Jobs => {
+            Response::Jobs { jobs: ctx.queue.list().iter().map(|j| j.view()).collect() }
+        }
+        Request::Status { job } => match ctx.queue.get(&job) {
+            Some(rec) => Response::Status { job: rec.view() },
+            None => Response::Error(ProtoError::unknown_job(&job)),
+        },
+        Request::Cancel { job } => match ctx.queue.cancel(&job) {
+            Ok(rec) => {
+                ctx.subs.broadcast_state(&rec);
+                Response::Cancelled { job: rec.id }
+            }
+            Err(e) => Response::Error(e),
+        },
+        Request::Submit { spec } => {
+            // Validate end-to-end *before* enqueueing: a spec that cannot
+            // plan (unknown task, bad grid) must never occupy the queue or
+            // the journal.
+            if let Err(e) = plan_job(&spec) {
+                return Response::Error(ProtoError::bad_request(format!("{e:#}")));
+            }
+            match ctx.queue.submit(spec) {
+                Ok(rec) => Response::Submitted { job: rec.id },
+                Err(e) => Response::Error(e),
+            }
+        }
+        Request::Result { job } => result_payload(ctx, &job),
+        Request::Shutdown => {
+            signal::request_stop();
+            ctx.queue.shutdown();
+            Response::ShuttingDown
+        }
+        // Handled by the caller before `answer`.
+        Request::Subscribe { job } => Response::Error(ProtoError::bad_request(format!(
+            "internal: subscribe for `{job}` reached answer()"
+        ))),
+    }
+}
+
+fn result_payload(ctx: &Ctx, job: &str) -> Response {
+    let Some(rec) = ctx.queue.get(job) else {
+        return Response::Error(ProtoError::unknown_job(job));
+    };
+    if rec.state != JobState::Done {
+        let detail = rec.detail.as_deref().map(|d| format!(": {d}")).unwrap_or_default();
+        return Response::Error(ProtoError::new(
+            ErrorCode::NotDone,
+            format!("job `{job}` is {}{detail}; results exist only for done jobs", rec.state.as_str()),
+        ));
+    }
+    let dir = job_dir(&ctx.dir, job);
+    let read = |name: &str| {
+        std::fs::read_to_string(dir.join(name))
+            .map_err(|e| format!("reading {}: {e}", dir.join(name).display()))
+    };
+    match (read("sweep.csv"), read("sweep.json")) {
+        (Ok(csv), Ok(json)) => Response::ResultPayload { job: job.to_string(), csv, json },
+        (Err(e), _) | (_, Err(e)) => Response::Error(ProtoError::bad_request(format!(
+            "artifacts missing for done job `{job}` ({e})"
+        ))),
+    }
+}
+
+/// Stream a job's live state + trace feed until it reaches a terminal
+/// state, then return to request/response mode on the same connection.
+///
+/// A subscriber killed mid-stream surfaces here as a write error; the
+/// subscription is unregistered and only this session ends. The terminal
+/// `state` line is detected either from the broadcast itself or — to
+/// close the race where a job finishes between `subscribe` and register —
+/// by polling the queue on receive timeouts.
+fn run_subscription(writer: &mut TcpStream, ctx: &Ctx, job: &str) -> Result<()> {
+    let Some(rec) = ctx.queue.get(job) else {
+        return write_line(writer, &Response::Error(ProtoError::unknown_job(job)).to_line());
+    };
+    write_line(writer, &Response::Subscribed { job: job.to_string() }.to_line())?;
+    // Opening state frame; for terminal jobs it is also the final one.
+    write_line(
+        writer,
+        &stream_state_line(&rec.id, rec.state.as_str(), rec.detail.as_deref()),
+    )?;
+    if rec.state.terminal() {
+        return Ok(());
+    }
+    let (sid, rx) = ctx.subs.subscribe(job);
+    let streamed = (|| -> Result<()> {
+        loop {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(line) => {
+                    write_line(writer, &line)?;
+                    if is_terminal_state_line(&line) {
+                        return Ok(());
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if let Some(now) = ctx.queue.get(job) {
+                        if now.state.terminal() {
+                            write_line(
+                                writer,
+                                &stream_state_line(
+                                    &now.id,
+                                    now.state.as_str(),
+                                    now.detail.as_deref(),
+                                ),
+                            )?;
+                            return Ok(());
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    // Daemon-side teardown; report where the job stands.
+                    if let Some(now) = ctx.queue.get(job) {
+                        write_line(
+                            writer,
+                            &stream_state_line(&now.id, now.state.as_str(), now.detail.as_deref()),
+                        )?;
+                    }
+                    return Ok(());
+                }
+            }
+        }
+    })();
+    ctx.subs.unsubscribe(sid);
+    streamed
+}
+
+fn is_terminal_state_line(line: &str) -> bool {
+    crate::util::json::Json::parse(line).ok().is_some_and(|v| {
+        v.get("stream").and_then(crate::util::json::Json::as_str) == Some("state")
+            && v.get("state")
+                .and_then(crate::util::json::Json::as_str)
+                .and_then(JobState::parse)
+                .is_some_and(|s| s.terminal())
+    })
+}

@@ -1,0 +1,47 @@
+//! Process stop flag for the daemon: SIGTERM/SIGINT (and the `shutdown`
+//! op) set one [`AtomicBool`] that the accept and runner loops poll.
+//!
+//! The handler is installed through the raw libc `signal` symbol — the
+//! crate has no libc dependency, and the handler body is a single atomic
+//! store, which is async-signal-safe. On non-unix targets installation is
+//! a no-op and only the `shutdown` op can stop the daemon.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static STOP: AtomicBool = AtomicBool::new(false);
+
+/// True once a stop was requested by signal or by the `shutdown` op.
+pub fn stop_requested() -> bool {
+    STOP.load(Ordering::SeqCst)
+}
+
+/// Programmatic stop (the `shutdown` op): same effect as SIGTERM.
+pub fn request_stop() {
+    STOP.store(true, Ordering::SeqCst)
+}
+
+/// Reset the flag — test-only, for in-process daemon harnesses that start
+/// more than one serve loop per process.
+pub fn reset_for_tests() {
+    STOP.store(false, Ordering::SeqCst)
+}
+
+#[cfg(unix)]
+pub fn install_stop_handler() {
+    extern "C" fn on_signal(_sig: i32) {
+        STOP.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    let handler = on_signal as extern "C" fn(i32);
+    unsafe {
+        signal(SIGINT, handler as usize);
+        signal(SIGTERM, handler as usize);
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_stop_handler() {}

@@ -73,7 +73,17 @@ pub const WORKER_FORMAT_VERSION: usize = 1;
 /// retries alive), so tests can prove re-dispatch without flaky timing.
 pub const WORKER_EXIT_AFTER_ENV: &str = "MKOR_SWEEP_WORKER_EXIT_AFTER";
 
+/// Crash-injection env var for the **coordinator**: the dispatch loop of
+/// [`run_sweep_mp`] exits hard (code 101) once it has absorbed this many
+/// cell results — once per scratch directory (`coord-died.once` sentinel),
+/// the same first-come-first-die discipline as [`WORKER_EXIT_AFTER_ENV`].
+/// This is how `rust/tests/serve_recovery.rs` kills the serve daemon
+/// mid-job at a deterministic point; restarting with
+/// [`MpOptions::recover`] then resumes from the worker result files.
+pub const COORD_EXIT_AFTER_ENV: &str = "MKOR_SWEEP_COORD_EXIT_AFTER";
+
 const DIED_SENTINEL: &str = "worker-died.once";
+const COORD_DIED_SENTINEL: &str = "coord-died.once";
 
 /// How the multi-process coordinator runs.
 #[derive(Clone, Debug)]
@@ -295,6 +305,25 @@ fn claim_injected_death(out: &Path, cells_done: usize) -> bool {
         .is_ok()
 }
 
+/// The coordinator-side twin of [`claim_injected_death`]: should the
+/// dispatch loop die now? Claimed at most once per scratch directory.
+fn claim_coordinator_death(scratch: &Path, completed: usize) -> bool {
+    let Some(after) = std::env::var(COORD_EXIT_AFTER_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+    else {
+        return false;
+    };
+    if completed < after {
+        return false;
+    }
+    std::fs::OpenOptions::new()
+        .write(true)
+        .create_new(true)
+        .open(scratch.join(COORD_DIED_SENTINEL))
+        .is_ok()
+}
+
 /// The body of the hidden `mkor sweep-worker` subcommand: run every cell
 /// of the batch file sequentially, appending one compact JSON result line
 /// per completed cell to `out` (flushed per line, so a killed worker
@@ -413,7 +442,8 @@ fn clear_scratch(dir: &Path) {
         let name = entry.file_name().to_string_lossy().into_owned();
         let ours = (name.starts_with("cells-") && name.ends_with(".json"))
             || (name.starts_with("out-") && name.ends_with(".jsonl"))
-            || name == DIED_SENTINEL;
+            || name == DIED_SENTINEL
+            || name == COORD_DIED_SENTINEL;
         if ours {
             let _ = std::fs::remove_file(entry.path());
         }
@@ -622,6 +652,13 @@ pub fn run_sweep_mp(
                     r.last_seen = Instant::now();
                 }
                 progressed |= absorb(fresh, &mut done, &mut completed, n, opts.verbose);
+            }
+
+            // Crash injection: die mid-dispatch at a deterministic point.
+            // Workers keep streaming into the scratch files, which is
+            // exactly what a recover-mode restart picks back up.
+            if claim_coordinator_death(&mp.scratch, completed) {
+                std::process::exit(101);
             }
 
             // Reap exited workers; re-dispatch whatever a dead one left undone.

@@ -1,5 +1,8 @@
-//! End-to-end smoke: a few full training steps through the AOT artifacts
-//! (tiny preset). Skipped with a notice when `make artifacts` hasn't run.
+//! End-to-end smoke: a few full training steps through the artifact
+//! runtime (tiny preset). Never skipped: when `artifacts/` is absent the
+//! tiny sim preset is generated into a temp dir (with an explicit NOTE);
+//! set `MKOR_REQUIRE_ARTIFACTS=1` — CI does — to fail instead, proving
+//! the committed generator ran.
 
 use mkor::data::text::{MlmBatchGen, TextConfig};
 use mkor::runtime::xla_trainer::{init_params, XlaTrainer, XlaTrainerConfig};
@@ -7,18 +10,35 @@ use mkor::runtime::ArtifactBundle;
 use mkor::util::Rng;
 use std::path::Path;
 
-fn load_tiny() -> Option<ArtifactBundle> {
+fn load_tiny() -> ArtifactBundle {
+    // Cargo runs tests with the package root as cwd, so this is the
+    // checked-in `artifacts/` directory `mkor artifacts` writes.
     let dir = Path::new("artifacts");
-    if !dir.join("tiny/meta.json").exists() {
-        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
-        return None;
+    if dir.join("tiny/meta.json").is_file() {
+        return ArtifactBundle::load(dir, "tiny").expect("artifacts/tiny exists but failed to load");
     }
-    Some(ArtifactBundle::load(dir, "tiny").expect("loading tiny artifacts"))
+    if std::env::var("MKOR_REQUIRE_ARTIFACTS").ok().as_deref() == Some("1") {
+        panic!(
+            "MKOR_REQUIRE_ARTIFACTS=1 but artifacts/tiny is missing — \
+             run `mkor artifacts` (target/release/mkor artifacts --out artifacts) first"
+        );
+    }
+    eprintln!(
+        "NOTE: artifacts/ missing; generating the tiny sim preset in a temp dir \
+         (run `mkor artifacts` to use a persistent bundle)"
+    );
+    // Unique per call: tests in one binary run in parallel and must not
+    // race each other's half-written preset files.
+    static GEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = GEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = std::env::temp_dir().join(format!("mkor-artifacts-{}-{n}", std::process::id()));
+    mkor::runtime::sim::write_preset(&tmp, "tiny").expect("generating tiny preset");
+    ArtifactBundle::load(&tmp, "tiny").expect("loading generated tiny preset")
 }
 
 #[test]
 fn tiny_preset_trains_and_improves() {
-    let Some(bundle) = load_tiny() else { return };
+    let bundle = load_tiny();
     let vocab = bundle.meta.vocab;
     let seq = bundle.meta.seq_len;
     let per_worker = bundle.meta.batch;
@@ -63,7 +83,7 @@ fn tiny_preset_trains_and_improves() {
 
 #[test]
 fn hybrid_switch_engages_on_plateau() {
-    let Some(bundle) = load_tiny() else { return };
+    let bundle = load_tiny();
     let vocab = bundle.meta.vocab;
     let seq = bundle.meta.seq_len;
     let per_worker = bundle.meta.batch;

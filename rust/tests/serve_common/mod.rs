@@ -1,0 +1,162 @@
+//! Shared harness for the `serve_*` integration tests: spawn the real
+//! `mkor serve` daemon on an ephemeral port, parse the advertised
+//! address, and build the reference artifacts jobs are compared against.
+#![allow(dead_code)] // each test binary uses a different subset
+
+use mkor::serve::JobSpec;
+use std::io::{BufRead, BufReader};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
+use std::time::{Duration, Instant};
+
+pub const BIN: &str = env!("CARGO_BIN_EXE_mkor");
+
+/// The acceptance grid shared with `sweep_mp.rs`: 3×3 (f × damping).
+pub const SPECS: &str = "kfac:f={5,10,50},damping={0.01,0.03,0.1}";
+
+pub fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mkor-serve-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The job every serve test submits: tiny cells, deterministic-friendly,
+/// flag-for-flag identical to [`reference_artifacts`]'s direct CLI run.
+pub fn acceptance_job() -> JobSpec {
+    let mut spec = JobSpec::new(SPECS, "images");
+    spec.steps = 4;
+    spec.lr = 0.1;
+    spec.cell_workers = 1;
+    spec.batch = 16;
+    spec.seed = 0;
+    spec.eval_every = 2;
+    spec.hidden = vec![16];
+    spec.job_workers = 1;
+    spec
+}
+
+/// Reference bytes from `mkor sweep --jobs 1 --deterministic` with the
+/// same parameters as [`acceptance_job`]: `(csv, json)`.
+pub fn reference_artifacts(dir: &Path) -> (String, String) {
+    let csv = dir.join("ref.csv");
+    let json = dir.join("ref.json");
+    let mut cmd = Command::new(BIN);
+    cmd.args([
+        "sweep",
+        "--specs",
+        SPECS,
+        "--task",
+        "images",
+        "--steps",
+        "4",
+        "--lr",
+        "0.1",
+        "--cell-workers",
+        "1",
+        "--batch",
+        "16",
+        "--seed",
+        "0",
+        "--eval-every",
+        "2",
+        "--hidden",
+        "16",
+        "--jobs",
+        "1",
+        "--deterministic",
+        "--quiet",
+    ]);
+    cmd.arg("--out").arg(&csv).arg("--json").arg(&json);
+    let out = cmd.output().expect("spawning mkor sweep");
+    assert!(
+        out.status.success(),
+        "reference sweep failed:\n{}\n{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (read(&csv), read(&json))
+}
+
+pub fn read(path: &Path) -> String {
+    std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+/// A live `mkor serve` child process bound to an ephemeral port.
+pub struct Daemon {
+    pub child: Child,
+    pub addr: String,
+    pub dir: PathBuf,
+}
+
+/// Spawn `mkor serve --addr 127.0.0.1:0 --dir <dir> <extra_args>` with
+/// `envs`, wait for the advertised address on stdout, and keep the rest
+/// of stdout drained so the daemon can never block on a full pipe.
+pub fn spawn_daemon(dir: &Path, extra_args: &[&str], envs: &[(&str, &str)]) -> Daemon {
+    let mut cmd = Command::new(BIN);
+    cmd.args(["serve", "--addr", "127.0.0.1:0", "--dir"]).arg(dir);
+    cmd.args(extra_args);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.stdout(Stdio::piped()).stderr(Stdio::inherit());
+    let mut child = cmd.spawn().expect("spawning mkor serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let mut line = String::new();
+    let addr = loop {
+        line.clear();
+        let n = reader.read_line(&mut line).expect("reading daemon stdout");
+        assert!(n > 0, "daemon exited before advertising its address");
+        if let Some(rest) = line.trim().strip_prefix("mkor serve: listening on ") {
+            break rest.to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while reader.read_line(&mut sink).map(|n| n > 0).unwrap_or(false) {
+            sink.clear();
+        }
+    });
+    Daemon { child, addr, dir: dir.to_path_buf() }
+}
+
+impl Daemon {
+    /// Wait for the daemon to exit on its own (after `shutdown` or an
+    /// injected crash); panics past `timeout`.
+    pub fn wait_exit(&mut self, timeout: Duration) -> ExitStatus {
+        let t0 = Instant::now();
+        loop {
+            if let Some(status) = self.child.try_wait().expect("polling daemon") {
+                return status;
+            }
+            assert!(t0.elapsed() < timeout, "daemon did not exit within {timeout:?}");
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Every journal line must parse and carry the journal schema version —
+/// the crash-safety contract tests assert after abuse.
+pub fn assert_journal_valid(dir: &Path) {
+    let path = dir.join("journal.jsonl");
+    let text = read(&path);
+    for (i, line) in text.lines().enumerate() {
+        let v = mkor::util::json::Json::parse(line)
+            .unwrap_or_else(|e| panic!("journal line {}: {e}\n{line}", i + 1));
+        assert_eq!(
+            v.require_usize("v").unwrap() as u64,
+            mkor::serve::queue::JOURNAL_FORMAT_VERSION,
+            "journal line {}",
+            i + 1
+        );
+    }
+}

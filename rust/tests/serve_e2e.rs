@@ -1,0 +1,84 @@
+//! Concurrency e2e against a live daemon: N clients submit the same
+//! 3×3 acceptance sweep concurrently, every job's artifacts must be
+//! byte-identical to a direct `mkor sweep --jobs 1 --deterministic` run,
+//! and a client killed mid-subscription must not disturb anyone else.
+
+mod serve_common;
+
+use mkor::serve::Client;
+use mkor::util::json::Json;
+use serve_common::{acceptance_job, assert_journal_valid, reference_artifacts, spawn_daemon, tmp};
+use std::time::Duration;
+
+#[test]
+fn concurrent_clients_get_reference_identical_artifacts() {
+    let dir = tmp("e2e");
+    let (ref_csv, ref_json) = reference_artifacts(&dir);
+    assert_eq!(ref_csv.trim().lines().count(), 1 + 9, "{ref_csv}");
+
+    let serve_dir = dir.join("daemon");
+    let mut daemon = spawn_daemon(&serve_dir, &[], &[]);
+    let addr = daemon.addr.clone();
+
+    // Three clients race the same submission; the daemon runs the jobs
+    // FIFO on one runner.
+    let submitters: Vec<_> = (0..3)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> (usize, String, String) {
+                let mut client =
+                    Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+                let job = client.submit(&acceptance_job()).unwrap();
+                let view = client.wait(&job, Duration::from_secs(300)).unwrap();
+                assert_eq!(view.state, "done", "client {i}, {job}: {:?}", view.detail);
+                let (csv, json) = client.result(&job).unwrap();
+                (i, csv, json)
+            })
+        })
+        .collect();
+
+    // A fourth client subscribes to the earliest job, reads at least one
+    // stream line, then vanishes without saying goodbye.
+    let killer = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+            // j1 exists as soon as any submitter got its ack; retry until.
+            let t0 = std::time::Instant::now();
+            while client.status("j1").is_err() {
+                assert!(t0.elapsed() < Duration::from_secs(30), "j1 never appeared");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            client.subscribe("j1").unwrap();
+            let first = client.read_json_line().unwrap().expect("at least one stream line");
+            assert_eq!(
+                first.get("stream").and_then(Json::as_str),
+                Some("state"),
+                "stream opens with the current state: {first}"
+            );
+            // Hard drop: no unsubscribe, no shutdown — the socket just dies.
+            drop(client);
+        })
+    };
+    killer.join().unwrap();
+
+    for handle in submitters {
+        let (i, csv, json) = handle.join().unwrap();
+        assert_eq!(csv, ref_csv, "client {i}: CSV differs from the direct CLI run");
+        assert_eq!(json, ref_json, "client {i}: JSON differs from the direct CLI run");
+    }
+
+    // Exactly the three submitted jobs exist, all done — the killed
+    // subscriber neither added nor broke anything.
+    let mut client = Client::connect_retry(&addr, Duration::from_secs(10)).unwrap();
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs.len(), 3, "{jobs:?}");
+    for job in &jobs {
+        assert_eq!(job.state, "done", "{job:?}");
+    }
+
+    client.shutdown().unwrap();
+    assert_eq!(daemon.wait_exit(Duration::from_secs(60)).code(), Some(0));
+    assert_journal_valid(&serve_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,195 @@
+//! Adversarial protocol suite against a live `mkor serve` daemon: every
+//! malformed, truncated, oversized, version-skewed or interleaved input
+//! must map to a typed error on that line — and the daemon must keep
+//! serving, never leak a job into the queue, and never corrupt its
+//! journal.
+
+mod serve_common;
+
+use mkor::serve::JobSpec;
+use mkor::serve::{Client, MAX_LINE_BYTES};
+use mkor::util::json::Json;
+use serve_common::{assert_journal_valid, spawn_daemon, tmp};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// A fast, valid job for health checks (sub-second to run).
+fn tiny_job() -> JobSpec {
+    let mut spec = JobSpec::new("lamb", "glue");
+    spec.steps = 2;
+    spec.cell_workers = 1;
+    spec.batch = 16;
+    spec.eval_every = 0;
+    spec
+}
+
+fn error_code(resp: &Json) -> &str {
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "expected an error: {resp}");
+    resp.get("error").and_then(|e| e.get("code")).and_then(Json::as_str).unwrap()
+}
+
+#[test]
+fn malformed_corpus_gets_typed_errors_and_daemon_survives() {
+    let dir = tmp("corpus");
+    let mut daemon = spawn_daemon(&dir, &[], &[]);
+    let mut client = Client::connect_retry(&daemon.addr, Duration::from_secs(5)).unwrap();
+
+    let corpus: Vec<(Vec<u8>, &str)> = vec![
+        (b"not json at all".to_vec(), "malformed"),
+        (b"[1,2,3]".to_vec(), "malformed"),
+        (b"{\"v\":1,\"op\":\"ping\"".to_vec(), "malformed"), // truncated JSON
+        (b"{}".to_vec(), "version_skew"),
+        (b"{\"op\":\"ping\"}".to_vec(), "version_skew"),
+        (b"{\"v\":99,\"op\":\"ping\"}".to_vec(), "version_skew"),
+        (b"{\"v\":1}".to_vec(), "malformed"),
+        (b"{\"v\":1,\"op\":42}".to_vec(), "malformed"),
+        (b"{\"v\":1,\"op\":\"frobnicate\"}".to_vec(), "unknown_op"),
+        (b"{\"v\":1,\"op\":\"status\"}".to_vec(), "bad_request"),
+        (b"{\"v\":1,\"op\":\"cancel\",\"job\":17}".to_vec(), "bad_request"),
+        (b"{\"v\":1,\"op\":\"status\",\"job\":\"j999\"}".to_vec(), "unknown_job"),
+        (b"{\"v\":1,\"op\":\"result\",\"job\":\"nope\"}".to_vec(), "unknown_job"),
+        (b"{\"v\":1,\"op\":\"subscribe\",\"job\":\"j999\"}".to_vec(), "unknown_job"),
+        (b"{\"v\":1,\"op\":\"submit\"}".to_vec(), "bad_request"),
+        (b"{\"v\":1,\"op\":\"submit\",\"spec\":{\"task\":\"glue\"}}".to_vec(), "bad_request"),
+        // Well-typed spec that cannot plan: unknown task / broken grid.
+        (
+            b"{\"v\":1,\"op\":\"submit\",\"spec\":{\"specs\":\"lamb\",\"task\":\"nope\"}}".to_vec(),
+            "bad_request",
+        ),
+        (
+            b"{\"v\":1,\"op\":\"submit\",\"spec\":{\"specs\":\"kfac:f={\",\"task\":\"glue\"}}"
+                .to_vec(),
+            "bad_request",
+        ),
+        (
+            b"{\"v\":1,\"op\":\"submit\",\"spec\":{\"specs\":\"lamb\",\"task\":\"glue\",\"steps\":0}}"
+                .to_vec(),
+            "bad_request",
+        ),
+        (vec![0xff, 0xfe, b'{', b'}'], "malformed"), // invalid UTF-8
+        ("x".repeat(MAX_LINE_BYTES + 100).into_bytes(), "oversized"),
+    ];
+    for (line, want) in &corpus {
+        let resp = client.raw_roundtrip(line).unwrap_or_else(|e| {
+            panic!("daemon died on {:?}...: {e:#}", String::from_utf8_lossy(&line[..line.len().min(60)]))
+        });
+        assert_eq!(&error_code(&resp), want, "for line {:?}", String::from_utf8_lossy(&line[..line.len().min(80)]));
+        let msg = resp.get("error").unwrap().require_str("message").unwrap();
+        assert!(!msg.is_empty(), "errors must carry an actionable message");
+    }
+
+    // No bad submit leaked into the queue...
+    assert_eq!(client.jobs().unwrap().len(), 0, "corpus must not enqueue anything");
+    // ...and the same connection still serves real work end to end.
+    assert!(client.ping().unwrap().starts_with("mkor "));
+    let job = client.submit(&tiny_job()).unwrap();
+    assert_eq!(job, "j1");
+    let done = client.wait(&job, Duration::from_secs(60)).unwrap();
+    assert_eq!(done.state, "done", "detail: {:?}", done.detail);
+    let (csv, json) = client.result(&job).unwrap();
+    assert!(csv.starts_with("cell,"), "csv header missing: {csv}");
+    assert!(json.contains("\"n_cells\""), "{json}");
+
+    client.shutdown().unwrap();
+    let status = daemon.wait_exit(Duration::from_secs(30));
+    assert_eq!(status.code(), Some(0), "shutdown must exit cleanly");
+    assert_journal_valid(&dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn pipelined_and_interleaved_requests_answer_in_order() {
+    let dir = tmp("pipeline");
+    let mut daemon = spawn_daemon(&dir, &[], &[]);
+
+    // Raw socket: one write carrying good, blank, bad and good lines.
+    let mut stream = TcpStream::connect(&daemon.addr).unwrap();
+    stream
+        .write_all(
+            b"{\"v\":1,\"op\":\"ping\"}\n\
+              \n\
+              {\"v\":1,\"op\":\"frobnicate\"}\n\
+              {\"v\":1,\"op\":\"jobs\"}\n",
+        )
+        .unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut text = String::new();
+    stream.read_to_string(&mut text).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "blank lines are skipped, all else answered:\n{text}");
+    let parsed: Vec<Json> = lines.iter().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(parsed[0].get("op").and_then(Json::as_str), Some("ping"));
+    assert_eq!(error_code(&parsed[1]), "unknown_op");
+    assert_eq!(parsed[2].get("op").and_then(Json::as_str), Some("jobs"));
+
+    // A second client interleaved with the first sees its own ordering.
+    let mut a = Client::connect_retry(&daemon.addr, Duration::from_secs(5)).unwrap();
+    let mut b = Client::connect_retry(&daemon.addr, Duration::from_secs(5)).unwrap();
+    assert!(a.ping().is_ok());
+    assert!(b.ping().is_ok());
+
+    b.shutdown().unwrap();
+    assert_eq!(daemon.wait_exit(Duration::from_secs(30)).code(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn queue_discipline_capacity_cancel_and_restart() {
+    let dir = tmp("queue");
+    // capacity 1 *queued* job; each claimed job is held in `running` for
+    // 3 s (test hook), giving a deterministic window to observe the
+    // full/cancel/not_done behaviors.
+    let mut daemon =
+        spawn_daemon(&dir, &["--capacity", "1"], &[("MKOR_SERVE_RUN_DELAY_MS", "3000")]);
+    let mut client = Client::connect_retry(&daemon.addr, Duration::from_secs(5)).unwrap();
+
+    let j1 = client.submit(&tiny_job()).unwrap();
+    // Wait until the runner claims it: the queued slot is free again.
+    let t0 = std::time::Instant::now();
+    while client.status(&j1).unwrap().state != "running" {
+        assert!(t0.elapsed() < Duration::from_secs(10), "j1 never started");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    let j2 = client.submit(&tiny_job()).unwrap();
+    let full = client.submit(&tiny_job()).unwrap_err().to_string();
+    assert!(full.contains("queue_full"), "{full}");
+
+    // result before done → not_done; cancel running → not_cancellable.
+    let e = client.result(&j1).unwrap_err().to_string();
+    assert!(e.contains("not_done"), "{e}");
+    let e = client.cancel(&j1).unwrap_err().to_string();
+    assert!(e.contains("not_cancellable"), "{e}");
+
+    // Queued jobs cancel cleanly — once.
+    client.cancel(&j2).unwrap();
+    assert_eq!(client.status(&j2).unwrap().state, "cancelled");
+    let e = client.cancel(&j2).unwrap_err().to_string();
+    assert!(e.contains("not_cancellable"), "{e}");
+
+    // Subscribing to a terminal job yields its state immediately, and the
+    // connection then keeps serving requests.
+    client.subscribe(&j2).unwrap();
+    let state = client.read_json_line().unwrap().unwrap();
+    assert_eq!(state.get("stream").and_then(Json::as_str), Some("state"));
+    assert_eq!(state.get("state").and_then(Json::as_str), Some("cancelled"));
+    assert!(client.ping().is_ok(), "stream must hand the connection back");
+
+    assert_eq!(client.wait(&j1, Duration::from_secs(60)).unwrap().state, "done");
+    client.shutdown().unwrap();
+    assert_eq!(daemon.wait_exit(Duration::from_secs(30)).code(), Some(0));
+    assert_journal_valid(&dir);
+
+    // Restart on the same dir: terminal states and results survive.
+    let mut daemon = spawn_daemon(&dir, &[], &[]);
+    let mut client = Client::connect_retry(&daemon.addr, Duration::from_secs(5)).unwrap();
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs.len(), 2);
+    assert_eq!((jobs[0].id.as_str(), jobs[0].state.as_str()), ("j1", "done"));
+    assert_eq!((jobs[1].id.as_str(), jobs[1].state.as_str()), ("j2", "cancelled"));
+    let (csv, _) = client.result("j1").unwrap();
+    assert!(csv.starts_with("cell,"));
+    client.shutdown().unwrap();
+    assert_eq!(daemon.wait_exit(Duration::from_secs(30)).code(), Some(0));
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,72 @@
+//! Crash-recovery e2e: kill the daemon mid-job (deterministic coordinator
+//! crash injection), restart it on the same directory, and require the
+//! job to complete with artifacts byte-identical to a direct CLI run —
+//! no lost jobs, no duplicated jobs.
+
+mod serve_common;
+
+use mkor::serve::Client;
+use mkor::sweep::dispatch::COORD_EXIT_AFTER_ENV;
+use mkor::util::json::Json;
+use serve_common::{acceptance_job, assert_journal_valid, read, reference_artifacts, spawn_daemon, tmp};
+use std::time::Duration;
+
+#[test]
+fn daemon_killed_mid_job_resumes_after_restart_with_identical_bytes() {
+    let dir = tmp("recovery");
+    let (ref_csv, ref_json) = reference_artifacts(&dir);
+    let serve_dir = dir.join("daemon");
+
+    // Daemon A: the sweep coordinator (the runner thread) hard-exits the
+    // whole process once 2 of the 9 cells have streamed back.
+    let mut daemon_a = spawn_daemon(&serve_dir, &[], &[(COORD_EXIT_AFTER_ENV, "2")]);
+    let job = {
+        let mut client = Client::connect_retry(&daemon_a.addr, Duration::from_secs(10)).unwrap();
+        client.submit(&acceptance_job()).unwrap()
+    };
+    assert_eq!(job, "j1");
+    let status = daemon_a.wait_exit(Duration::from_secs(120));
+    assert_eq!(status.code(), Some(101), "the injected crash must fire, not a clean exit");
+    assert!(
+        serve_dir.join("jobs/j1/workers/coord-died.once").exists(),
+        "crash sentinel missing: the daemon died for some other reason"
+    );
+    // Mid-job death: results were never merged.
+    assert!(!serve_dir.join("jobs/j1/sweep.csv").exists());
+
+    // Daemon B on the same directory: replays the journal, re-queues j1,
+    // recovers the finished cells from the worker scratch files and runs
+    // only the rest.
+    let mut daemon_b = spawn_daemon(&serve_dir, &[], &[]);
+    let mut client = Client::connect_retry(&daemon_b.addr, Duration::from_secs(10)).unwrap();
+    let view = client.wait("j1", Duration::from_secs(300)).unwrap();
+    assert_eq!(view.state, "done", "detail: {:?}", view.detail);
+
+    // Exactly one job — restarting must not duplicate or drop it.
+    let jobs = client.jobs().unwrap();
+    assert_eq!(jobs.len(), 1, "{jobs:?}");
+    let (csv, json) = client.result("j1").unwrap();
+    assert_eq!(csv, ref_csv, "recovered artifacts must match the direct CLI run");
+    assert_eq!(json, ref_json);
+
+    client.shutdown().unwrap();
+    assert_eq!(daemon_b.wait_exit(Duration::from_secs(60)).code(), Some(0));
+    assert_journal_valid(&serve_dir);
+
+    // The journal tells the whole story: one submit, an interrupted
+    // `running`, a `requeued` marker from daemon B, and a final `done`.
+    let journal = read(&serve_dir.join("journal.jsonl"));
+    let kinds: Vec<String> = journal
+        .lines()
+        .map(|l| Json::parse(l).unwrap().require_str("kind").unwrap().to_string())
+        .collect();
+    assert_eq!(kinds.iter().filter(|k| *k == "submit").count(), 1, "{kinds:?}");
+    assert!(kinds.contains(&"requeued".to_string()), "{kinds:?}");
+    let states: Vec<String> = journal
+        .lines()
+        .map(|l| Json::parse(l).unwrap())
+        .filter_map(|v| v.get("state").and_then(Json::as_str).map(str::to_string))
+        .collect();
+    assert_eq!(states.last().map(String::as_str), Some("done"), "{states:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

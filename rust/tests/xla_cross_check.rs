@@ -2,9 +2,11 @@
 //! Algorithm 1 (`optim::mkor`) against the AOT artifacts whose factor
 //! update and preconditioning are the L1 Pallas kernels.
 //!
-//! These tests need `make artifacts` (the `tiny` preset); they are skipped
-//! with a notice when the artifacts are missing so `cargo test` stays green
-//! on a fresh checkout.
+//! These tests use the `tiny` artifact preset and never skip: a checked-in
+//! `artifacts/` bundle (from `mkor artifacts`) is preferred, and when it is
+//! missing the sim preset is generated into a temp dir with an explicit
+//! NOTE. `MKOR_REQUIRE_ARTIFACTS=1` (set in CI) turns the fallback into a
+//! hard failure so the generator path is actually exercised.
 
 use mkor::linalg::{ops, Matrix};
 use mkor::optim::Mkor;
@@ -12,20 +14,35 @@ use mkor::runtime::artifact::{literal_f32, literal_scalar, ArtifactBundle};
 use mkor::util::Rng;
 use std::path::Path;
 
-fn load_tiny() -> Option<ArtifactBundle> {
+fn load_tiny() -> ArtifactBundle {
     let dir = Path::new("artifacts");
-    if !dir.join("tiny/meta.json").exists() {
-        eprintln!("SKIP: artifacts/tiny missing — run `make artifacts`");
-        return None;
+    if dir.join("tiny/meta.json").is_file() {
+        return ArtifactBundle::load(dir, "tiny").expect("artifacts/tiny exists but failed to load");
     }
-    Some(ArtifactBundle::load(dir, "tiny").expect("loading tiny artifacts"))
+    if std::env::var("MKOR_REQUIRE_ARTIFACTS").ok().as_deref() == Some("1") {
+        panic!(
+            "MKOR_REQUIRE_ARTIFACTS=1 but artifacts/tiny is missing — \
+             run `mkor artifacts` (target/release/mkor artifacts --out artifacts) first"
+        );
+    }
+    eprintln!(
+        "NOTE: artifacts/ missing; generating the tiny sim preset in a temp dir \
+         (run `mkor artifacts` to use a persistent bundle)"
+    );
+    // Unique per call: tests in one binary run in parallel and must not
+    // race each other's half-written preset files.
+    static GEN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+    let n = GEN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    let tmp = std::env::temp_dir().join(format!("mkor-artifacts-{}-{n}", std::process::id()));
+    mkor::runtime::sim::write_preset(&tmp, "tiny").expect("generating tiny preset");
+    ArtifactBundle::load(&tmp, "tiny").expect("loading generated tiny preset")
 }
 
 /// Drive the mkor_step artifact with crafted inputs and compare the factor
 /// updates + deltas against the Rust implementation, element by element.
 #[test]
 fn mkor_step_artifact_matches_rust_algorithm() {
-    let Some(bundle) = load_tiny() else { return };
+    let bundle = load_tiny();
     let meta = &bundle.meta;
     let np = meta.param_shapes.len();
     let nm = meta.factor_dims.len();
@@ -162,7 +179,7 @@ fn mkor_step_artifact_matches_rust_algorithm() {
 /// not re-updated) deltas.
 #[test]
 fn mkor_step_flag_zero_freezes_factors() {
-    let Some(bundle) = load_tiny() else { return };
+    let bundle = load_tiny();
     let meta = &bundle.meta;
     let np = meta.param_shapes.len();
     let nm = meta.factor_dims.len();

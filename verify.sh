@@ -16,6 +16,10 @@ cd "$(dirname "$0")"
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== mkor artifacts (generate artifacts/, then require them in tests) =="
+target/release/mkor artifacts --out artifacts
+export MKOR_REQUIRE_ARTIFACTS=1
+
 echo "== cargo test -q =="
 cargo test -q
 
@@ -51,13 +55,14 @@ if bad:
 print(f"checked {len(files)} markdown files, all relative links resolve")
 EOF
 
-echo "== rustfmt --check rust/src/{sweep,checkpoint,linalg/engine,perf,obs,model/transformer.rs} (fmt-strict modules) =="
+echo "== rustfmt --check rust/src/{sweep,checkpoint,linalg/engine,perf,obs,serve,model/transformer.rs} (fmt-strict modules) =="
 if command -v rustfmt >/dev/null 2>&1; then
     # These subsystems postdate rustfmt adoption and stay fmt-clean
     # unconditionally — even under FMT=soft.
     rustfmt --edition 2021 --check \
         rust/src/sweep/*.rs rust/src/checkpoint/*.rs \
         rust/src/linalg/engine/*.rs rust/src/perf/*.rs rust/src/obs/*.rs \
+        rust/src/serve/*.rs \
         rust/src/model/transformer.rs
 else
     echo "warning: rustfmt not installed; skipping strict-module format check" >&2
