@@ -11,11 +11,17 @@
 //!   job interrupted by a daemon crash resumes from its scratch files;
 //! * **trace pump** — follows the daemon's own `--trace` sink with
 //!   [`obs::TraceFollower`] and relays each event to subscribers of the
-//!   currently running job.
+//!   currently running job. The sink is daemon-wide, so events can only
+//!   be attributed to a job when exactly one is running: with
+//!   `--runners > 1` the pump skips ambiguous windows (and `serve` warns
+//!   at startup) rather than interleave one job's events into another
+//!   job's stream.
 //!
 //! Shutdown (SIGTERM, SIGINT or the `shutdown` op) stops accepting
-//! connections and submits, lets the running job finish — its transitions
-//! keep journaling — and exits 0 with a flushed journal.
+//! connections, submits and claims, lets the in-flight job finish — its
+//! transitions keep journaling — and exits 0 with a flushed journal.
+//! Queued jobs are not drained: they stay journaled and run on the next
+//! start.
 
 use crate::experiments::convergence::RunOpts;
 use crate::obs;
@@ -47,7 +53,10 @@ pub struct ServeOptions {
     /// Concurrent runner threads.
     pub runners: usize,
     /// Trace file the pump follows for subscription streams (the daemon's
-    /// own obs sink); `None` disables streaming of trace events.
+    /// own obs sink); `None` disables streaming of trace events. The sink
+    /// is shared daemon-wide, so live event streaming is only attributable
+    /// with `runners == 1`; with more runners the pump drops events while
+    /// several jobs run concurrently.
     pub trace_path: Option<PathBuf>,
 }
 
@@ -154,6 +163,14 @@ pub fn serve(opts: &ServeOptions) -> Result<i32> {
         );
     }
     if let Some(trace) = &opts.trace_path {
+        if opts.runners.max(1) > 1 {
+            obs::log::warn(&format!(
+                "serve: trace streaming attributes events to the single running job; \
+                 with --runners {} events are dropped whenever several jobs run \
+                 concurrently (use --runners 1 for complete live feeds)",
+                opts.runners
+            ));
+        }
         let ctx = ctx.clone();
         let trace = trace.clone();
         std::thread::Builder::new()
@@ -288,15 +305,19 @@ pub fn plan_job(spec: &JobSpec) -> Result<(SweepGrid, SweepOptions)> {
 
 /// Follow the daemon's own trace sink and fan events out to subscribers
 /// of whatever job is running. Events between jobs (daemon housekeeping)
-/// have no audience and are skipped.
+/// have no audience and are skipped — and so are events while *several*
+/// jobs run concurrently (`--runners > 1`): the shared sink cannot say
+/// which job emitted them, and misattributing one job's sweep into
+/// another job's stream is worse than a gap.
 fn pump_loop(ctx: &Ctx, trace: &std::path::Path) {
     let mut follower = obs::TraceFollower::new(trace);
     loop {
         let events = follower.poll();
         if !events.is_empty() {
-            if let Some(job) = ctx.queue.running_job() {
+            let running = ctx.queue.running_jobs();
+            if let [job] = running.as_slice() {
                 for ev in &events {
-                    ctx.subs.send_to(&job, &crate::serve::protocol::stream_event_line(&job, ev));
+                    ctx.subs.send_to(job, &crate::serve::protocol::stream_event_line(job, ev));
                 }
             }
         }

@@ -156,7 +156,10 @@ impl JobSpec {
             .set("lr", Json::Num(self.lr as f64))
             .set("cell_workers", Json::Num(self.cell_workers as f64))
             .set("batch", Json::Num(self.batch as f64))
-            .set("seed", Json::Num(self.seed as f64))
+            // A string, not a number: JSON numbers travel as f64, which
+            // silently rounds seeds above 2^53 and would break the
+            // byte-identical determinism contract for such seeds.
+            .set("seed", Json::Str(self.seed.to_string()))
             .set("eval_every", Json::Num(self.eval_every as f64))
             .set("job_workers", Json::Num(self.job_workers as f64));
         if !self.hidden.is_empty() {
@@ -191,7 +194,27 @@ impl JobSpec {
         spec.steps = opt_usize("steps", spec.steps)?;
         spec.cell_workers = opt_usize("cell_workers", spec.cell_workers)?;
         spec.batch = opt_usize("batch", spec.batch)?;
-        spec.seed = opt_usize("seed", spec.seed as usize)? as u64;
+        spec.seed = match obj.get("seed") {
+            None => spec.seed,
+            // Canonical form: a decimal string, exact for the full u64
+            // range (see `to_json`).
+            Some(Json::Str(s)) => s.parse::<u64>().map_err(|_| {
+                ProtoError::bad_request("`spec.seed` must be a u64 (decimal string or integer)")
+            })?,
+            // Numeric form, for hand-written clients and v1 journals:
+            // exact only below 2^53, so larger values are rejected rather
+            // than silently rounded.
+            Some(v) => v
+                .as_f64()
+                .filter(|x| x.fract() == 0.0 && *x >= 0.0 && *x <= (1u64 << 53) as f64)
+                .map(|x| x as u64)
+                .ok_or_else(|| {
+                    ProtoError::bad_request(
+                        "`spec.seed` must be a non-negative integer; values above 2^53 \
+                         must be sent as a decimal string to avoid float rounding",
+                    )
+                })?,
+        };
         spec.eval_every = opt_usize("eval_every", spec.eval_every)?;
         spec.job_workers = opt_usize("job_workers", spec.job_workers)?;
         if let Some(v) = obj.get("lr") {
@@ -472,12 +495,28 @@ pub enum ReadLine {
     /// up to (not including) the next `\n`, so the stream stays framed.
     Oversized { discarded: usize },
     Eof,
+    /// `keep_waiting` said to stop during a read timeout (only from
+    /// [`read_line_capped_idle`] on sockets with a read timeout set).
+    Idle,
 }
 
 /// Read one `\n`-terminated line without ever buffering more than
 /// [`MAX_LINE_BYTES`] — the reason `BufRead::read_line` is not used: a
 /// hostile client could otherwise grow the buffer without bound.
 pub fn read_line_capped<R: BufRead>(r: &mut R) -> io::Result<ReadLine> {
+    read_line_capped_idle(r, || true)
+}
+
+/// [`read_line_capped`] for sockets with a read timeout: each time the
+/// underlying read times out (`WouldBlock`/`TimedOut`), `keep_waiting` is
+/// consulted — `true` resumes the read with any partial line intact (no
+/// desync for a client pausing mid-line), `false` returns
+/// [`ReadLine::Idle`] so the session can close instead of pinning its
+/// thread forever.
+pub fn read_line_capped_idle<R: BufRead>(
+    r: &mut R,
+    mut keep_waiting: impl FnMut() -> bool,
+) -> io::Result<ReadLine> {
     let mut buf: Vec<u8> = Vec::new();
     let mut discarding = false;
     let mut discarded = 0usize;
@@ -485,6 +524,12 @@ pub fn read_line_capped<R: BufRead>(r: &mut R) -> io::Result<ReadLine> {
         let chunk = match r.fill_buf() {
             Ok(c) => c,
             Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if keep_waiting() {
+                    continue;
+                }
+                return Ok(ReadLine::Idle);
+            }
             Err(e) => return Err(e),
         };
         if chunk.is_empty() {
@@ -612,6 +657,28 @@ mod tests {
     }
 
     #[test]
+    fn seeds_survive_the_wire_exactly_for_the_full_u64_range() {
+        // Encoded as a decimal string: no f64 rounding above 2^53.
+        let mut spec = JobSpec::new("lamb", "glue");
+        spec.seed = u64::MAX;
+        assert_eq!(JobSpec::from_json(&spec.to_json()).unwrap().seed, u64::MAX);
+        // Legacy numeric form (v1 journals, hand-written clients) still
+        // decodes while exact...
+        let v = Json::parse("{\"specs\":\"lamb\",\"task\":\"glue\",\"seed\":7}").unwrap();
+        assert_eq!(JobSpec::from_json(&v).unwrap().seed, 7);
+        // ...but seeds a float would round are refused, never truncated.
+        for bad in [
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"seed\":18446744073709551615}",
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"seed\":-1}",
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"seed\":1.5}",
+            "{\"specs\":\"lamb\",\"task\":\"glue\",\"seed\":\"abc\"}",
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert_eq!(JobSpec::from_json(&v).unwrap_err().code, ErrorCode::BadRequest, "{bad}");
+        }
+    }
+
+    #[test]
     fn responses_are_single_parseable_lines() {
         let view = JobView {
             id: "j1".into(),
@@ -669,5 +736,48 @@ mod tests {
         // Unterminated trailing line still arrives, then EOF.
         assert_eq!(read_line_capped(&mut r).unwrap(), ReadLine::Line(b"short".to_vec()));
         assert_eq!(read_line_capped(&mut r).unwrap(), ReadLine::Eof);
+    }
+
+    /// A scripted reader: `None` entries yield one `WouldBlock` (a socket
+    /// read timeout), `Some(bytes)` yield data, exhaustion yields EOF.
+    struct Scripted {
+        parts: std::collections::VecDeque<Option<Vec<u8>>>,
+    }
+
+    impl std::io::Read for Scripted {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            match self.parts.pop_front() {
+                None => Ok(0),
+                Some(None) => Err(io::ErrorKind::WouldBlock.into()),
+                Some(Some(bytes)) => {
+                    out[..bytes.len()].copy_from_slice(&bytes);
+                    Ok(bytes.len())
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idle_reader_preserves_partial_lines_across_timeouts() {
+        // A client pausing mid-line must not desync the stream: the
+        // partial prefix survives the timeout and the line completes.
+        let parts = vec![Some(b"{\"v\":1,\"op\":\"pi".to_vec()), None, Some(b"ng\"}\n".to_vec())];
+        let mut r = std::io::BufReader::new(Scripted { parts: parts.into() });
+        let mut waits = 0;
+        let line = read_line_capped_idle(&mut r, || {
+            waits += 1;
+            true
+        })
+        .unwrap();
+        assert_eq!(waits, 1);
+        match line {
+            ReadLine::Line(bytes) => assert_eq!(parse_request(&bytes).unwrap(), Request::Ping),
+            other => panic!("expected Line, got {other:?}"),
+        }
+
+        // `keep_waiting() == false` (stop requested / idle budget spent)
+        // surfaces as Idle instead of blocking forever.
+        let mut r = std::io::BufReader::new(Scripted { parts: vec![None].into() });
+        assert_eq!(read_line_capped_idle(&mut r, || false).unwrap(), ReadLine::Idle);
     }
 }

@@ -19,8 +19,10 @@
 //! job's own worker-level progress is recovered separately by
 //! `run_sweep_mp`'s scratch-file scan, so a re-run resumes rather than
 //! repeats. A torn final line (the daemon died mid-write) is dropped with
-//! a warning; garbage anywhere else in the journal is a hard error, never
-//! a silent skip.
+//! a warning *and truncated off the file*, so post-recovery appends start
+//! on a clean line boundary instead of concatenating onto the fragment;
+//! garbage anywhere else in the journal is a hard error, never a silent
+//! skip.
 
 use crate::obs;
 use crate::serve::protocol::{ErrorCode, JobSpec, JobView, ProtoError};
@@ -106,7 +108,8 @@ struct Inner {
     next_seq: u64,
     journal: File,
     /// Cleared by [`JobQueue::shutdown`]: submits are refused and
-    /// [`JobQueue::claim_next`] returns `None` once the queue drains.
+    /// [`JobQueue::claim_next`] immediately returns `None` — queued jobs
+    /// are NOT drained; they stay journaled for the next start.
     accepting: bool,
 }
 
@@ -154,15 +157,40 @@ impl JobQueue {
             .with_context(|| format!("creating daemon dir {}", dir.display()))?;
         let path = dir.join(JOURNAL_FILE);
         let mut jobs = BTreeMap::new();
+        let mut truncate_to = None;
+        let mut add_terminator = false;
         if path.is_file() {
-            replay(&path, &mut jobs)?;
+            let (good, terminated) = replay(&path, &mut jobs)?;
+            let len = std::fs::metadata(&path)
+                .with_context(|| format!("stat of job journal {}", path.display()))?
+                .len();
+            if good < len {
+                truncate_to = Some(good);
+            } else {
+                add_terminator = !terminated && len > 0;
+            }
         }
         let next_seq = jobs.keys().next_back().map_or(1, |&s| s + 1);
-        let journal = OpenOptions::new()
+        let mut journal = OpenOptions::new()
             .create(true)
             .append(true)
             .open(&path)
             .with_context(|| format!("opening job journal {}", path.display()))?;
+        if let Some(good) = truncate_to {
+            // Cut the torn tail off the file: the next append must start
+            // on a fresh line, or it would concatenate onto the fragment —
+            // poisoning the journal for the restart after this one, where
+            // the merged garbage would sit mid-file and be a hard error.
+            journal
+                .set_len(good)
+                .with_context(|| format!("truncating torn journal tail {}", path.display()))?;
+        } else if add_terminator {
+            // A crash that lost only the final '\n' of a valid line: keep
+            // the entry, restore the framing.
+            journal
+                .write_all(b"\n")
+                .with_context(|| format!("re-terminating job journal {}", path.display()))?;
+        }
         let mut inner = Inner { jobs, next_seq, journal, accepting: true };
         // Re-queue interrupted jobs, recording the transition so a second
         // replay sees the same state this process now holds.
@@ -230,11 +258,16 @@ impl JobQueue {
     }
 
     /// Block up to `timeout` for the oldest queued job, marking it running.
-    /// Returns `None` on timeout or once the queue is shut down — callers
-    /// loop, re-checking their stop condition between claims.
+    /// Returns `None` on timeout or as soon as the queue is shut down —
+    /// even with jobs still queued, so shutdown waits only for the
+    /// in-flight job and queued work stays journaled for the next start.
+    /// Callers loop, re-checking their stop condition between claims.
     pub fn claim_next(&self, timeout: Duration) -> Option<JobRecord> {
         let mut inner = self.inner.lock().unwrap();
         loop {
+            if !inner.accepting {
+                return None;
+            }
             let next = inner
                 .jobs
                 .iter()
@@ -248,9 +281,6 @@ impl JobQueue {
                     obs::log::warn(&format!("serve: journal write failed: {e:#}"));
                 }
                 return Some(claimed);
-            }
-            if !inner.accepting {
-                return None;
             }
             let (guard, wait) = self.cv.wait_timeout(inner, timeout).unwrap();
             inner = guard;
@@ -313,16 +343,23 @@ impl JobQueue {
         self.inner.lock().unwrap().jobs.values().cloned().collect()
     }
 
-    /// The id of the currently running job, if any (used to attribute
-    /// trace events to subscriptions; the daemon runs jobs one at a time
-    /// per runner).
-    pub fn running_job(&self) -> Option<String> {
+    /// Ids of all currently running jobs, in submission order. The trace
+    /// pump uses this to attribute events to subscriptions — attribution
+    /// is only unambiguous when exactly one job is running (`--runners 1`).
+    pub fn running_jobs(&self) -> Vec<String> {
         let inner = self.inner.lock().unwrap();
-        inner.jobs.values().find(|j| j.state == JobState::Running).map(|j| j.id.clone())
+        inner
+            .jobs
+            .values()
+            .filter(|j| j.state == JobState::Running)
+            .map(|j| j.id.clone())
+            .collect()
     }
 
-    /// Stop accepting submits and wake all claim waiters; idle runners see
-    /// `claim_next() == None` and exit.
+    /// Stop accepting submits *and claims*, and wake all claim waiters:
+    /// runners see `claim_next() == None` and exit after at most their
+    /// current in-flight job. Queued jobs are left untouched — the journal
+    /// re-queues them on the next start.
     pub fn shutdown(&self) {
         self.inner.lock().unwrap().accepting = false;
         self.cv.notify_all();
@@ -337,32 +374,46 @@ fn seq_of(id: &str, jobs: &BTreeMap<u64, JobRecord>) -> Option<u64> {
 
 /// Rebuild queue state from the journal. The only tolerated defect is a
 /// torn *final* line (killed mid-write); anything else malformed is a
-/// hard error naming the line.
-fn replay(path: &Path, jobs: &mut BTreeMap<u64, JobRecord>) -> Result<()> {
+/// hard error naming the line. Returns `(good, terminated)`: the byte
+/// length of the replayed prefix — shorter than the file exactly when a
+/// torn tail was dropped — and whether that prefix ends on a `\n`
+/// boundary, so [`JobQueue::open`] can restore clean framing before any
+/// post-recovery append.
+fn replay(path: &Path, jobs: &mut BTreeMap<u64, JobRecord>) -> Result<(u64, bool)> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading job journal {}", path.display()))?;
-    let lines: Vec<&str> = text.lines().collect();
-    for (i, raw) in lines.iter().enumerate() {
+    let segments: Vec<&str> = text.split_inclusive('\n').collect();
+    let mut good = 0u64;
+    let mut terminated = true;
+    for (i, &seg) in segments.iter().enumerate() {
+        let raw = seg.strip_suffix('\n').unwrap_or(seg);
         if raw.trim().is_empty() {
+            good += seg.len() as u64;
+            terminated = seg.ends_with('\n');
             continue;
         }
-        let last = i + 1 == lines.len();
         let entry = match Json::parse(raw).map_err(|e| anyhow!("{e}")).and_then(|v| {
             apply_entry(&v, jobs)?;
             Ok(())
         }) {
-            Ok(()) => continue,
+            Ok(()) => {
+                good += seg.len() as u64;
+                terminated = seg.ends_with('\n');
+                continue;
+            }
             Err(e) => e,
         };
-        if last {
+        if i + 1 == segments.len() {
             obs::log::warn(&format!(
                 "serve: dropping torn final journal line (daemon died mid-write): {entry:#}"
             ));
-            return Ok(());
+            // `good` stops at the previous segment, which (being non-final)
+            // necessarily ended with '\n'.
+            return Ok((good, true));
         }
         bail!("corrupt job journal {} line {}: {entry:#}", path.display(), i + 1);
     }
-    Ok(())
+    Ok((good, terminated))
 }
 
 fn apply_entry(v: &Json, jobs: &mut BTreeMap<u64, JobRecord>) -> Result<()> {
@@ -447,7 +498,7 @@ mod tests {
         let q = JobQueue::open(&dir, 8).unwrap();
         assert_eq!(q.get("j2").unwrap().state, JobState::Queued);
         assert_eq!(q.claim_next(Duration::from_millis(10)).unwrap().id, "j2");
-        assert_eq!(q.running_job().as_deref(), Some("j2"));
+        assert_eq!(q.running_jobs(), vec!["j2".to_string()]);
     }
 
     #[test]
@@ -493,12 +544,46 @@ mod tests {
         std::fs::write(&journal, &text).unwrap();
         let q = JobQueue::open(&dir, 8).unwrap();
         assert_eq!(q.get("j1").unwrap().state, JobState::Queued);
+        // Recovery must truncate the torn fragment so post-recovery
+        // appends start on a fresh line — otherwise the NEXT restart sees
+        // merged garbage mid-file and refuses to start.
+        let q2_id = q.submit(spec()).unwrap().id;
+        drop(q);
+        let q = JobQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.get("j1").unwrap().state, JobState::Queued);
+        assert_eq!(q.get(&q2_id).unwrap().state, JobState::Queued);
+        for line in std::fs::read_to_string(&journal).unwrap().lines() {
+            Json::parse(line)
+                .unwrap_or_else(|e| panic!("corrupt post-recovery line `{line}`: {e}"));
+        }
         drop(q);
 
         let broken = format!("not json\n{}", std::fs::read_to_string(&journal).unwrap());
         std::fs::write(&journal, broken).unwrap();
         let err = JobQueue::open(&dir, 8).unwrap_err().to_string();
         assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn missing_final_newline_keeps_the_entry_and_restores_framing() {
+        let dir = scratch("terminator");
+        {
+            let q = JobQueue::open(&dir, 8).unwrap();
+            q.submit(spec()).unwrap();
+            q.claim_next(Duration::from_millis(10)).unwrap();
+            q.finish("j1", Ok(())).unwrap();
+        }
+        let journal = dir.join(JOURNAL_FILE);
+        let text = std::fs::read_to_string(&journal).unwrap();
+        // A crash that lost exactly the trailing '\n' of a valid line.
+        std::fs::write(&journal, text.trim_end_matches('\n')).unwrap();
+        let q = JobQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.get("j1").unwrap().state, JobState::Done);
+        q.submit(spec()).unwrap();
+        drop(q);
+        let q = JobQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.get("j1").unwrap().state, JobState::Done);
+        assert_eq!(q.get("j2").unwrap().state, JobState::Queued);
     }
 
     #[test]
@@ -511,5 +596,23 @@ mod tests {
         q.shutdown();
         assert!(waiter.join().unwrap().is_none());
         assert!(q.submit(spec()).unwrap_err().message.contains("shutting down"));
+    }
+
+    #[test]
+    fn shutdown_leaves_queued_jobs_for_the_next_start() {
+        let dir = scratch("shutdown-queue");
+        let q = JobQueue::open(&dir, 8).unwrap();
+        q.submit(spec()).unwrap();
+        q.submit(spec()).unwrap();
+        assert_eq!(q.claim_next(Duration::from_millis(10)).unwrap().id, "j1");
+        q.shutdown();
+        // Shutdown must not drain the queue: j2 stays queued, unclaimed.
+        assert!(q.claim_next(Duration::from_millis(10)).is_none());
+        q.finish("j1", Ok(())).unwrap();
+        drop(q);
+        let q = JobQueue::open(&dir, 8).unwrap();
+        assert_eq!(q.get("j1").unwrap().state, JobState::Done);
+        assert_eq!(q.get("j2").unwrap().state, JobState::Queued);
+        assert_eq!(q.claim_next(Duration::from_millis(10)).unwrap().id, "j2");
     }
 }

@@ -4,28 +4,46 @@
 //! The handler is written so that no client behavior can take the daemon
 //! down or desync the stream: every line gets exactly one response (typed
 //! error included), oversized lines are drained to the next newline, and
-//! a dead socket ends only this session. Pipelined requests are answered
-//! strictly in arrival order.
+//! a dead socket ends only this session. A silent client is disconnected
+//! after [`IDLE_LIMIT`] (reads poll every [`READ_POLL`], so sessions also
+//! notice daemon shutdown instead of blocking forever), and a client
+//! pausing mid-line keeps its partial bytes across timeouts — no desync.
+//! Pipelined requests are answered strictly in arrival order.
 
 use crate::serve::daemon::{job_dir, plan_job, Ctx};
 use crate::serve::protocol::{
-    parse_request, read_line_capped, stream_state_line, ErrorCode, ProtoError, ReadLine, Request,
-    Response, MAX_LINE_BYTES,
+    parse_request, read_line_capped_idle, stream_state_line, ErrorCode, ProtoError, ReadLine,
+    Request, Response, MAX_LINE_BYTES,
 };
 use crate::serve::queue::JobState;
 use crate::serve::signal;
 use anyhow::{Context as _, Result};
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
+
+/// Socket read timeout: how often an idle read wakes to re-check the
+/// stop flag and the idle budget.
+const READ_POLL: Duration = Duration::from_secs(1);
+
+/// A session that sends nothing for this long is closed — a silent
+/// client must not pin a daemon thread forever. The clock resets on
+/// every received line, so any active client is unaffected.
+const IDLE_LIMIT: Duration = Duration::from_secs(10 * 60);
 
 pub fn handle_conn(stream: TcpStream, ctx: &Ctx) -> Result<()> {
     stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(READ_POLL)).context("setting session read timeout")?;
     let mut reader = BufReader::new(stream.try_clone().context("cloning session socket")?);
     let mut writer = stream;
     loop {
-        match read_line_capped(&mut reader).context("reading request line")? {
+        let idle_since = Instant::now();
+        let keep_waiting = || !signal::stop_requested() && idle_since.elapsed() < IDLE_LIMIT;
+        match read_line_capped_idle(&mut reader, keep_waiting).context("reading request line")? {
             ReadLine::Eof => return Ok(()),
+            // Daemon shutting down, or the client went silent past the
+            // idle budget: end this session cleanly.
+            ReadLine::Idle => return Ok(()),
             ReadLine::Oversized { discarded } => {
                 let e = ProtoError::new(
                     ErrorCode::Oversized,
